@@ -1,0 +1,8 @@
+"""Pytest root conftest: make `compile.*` importable when running
+`pytest python/tests/` from the repository root (tests live under
+python/ and import the build-path package directly)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

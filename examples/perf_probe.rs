@@ -1,0 +1,23 @@
+// perf probe: breakdown of a real decode step (literal build vs execute vs copy-out)
+use std::time::Instant;
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    let mut rt = xllm::runtime::Runtime::load(dir)?;
+    let dims = rt.model_dims("tiny")?;
+    let b = 8;
+    let mut kv = xllm::runtime::BatchKv::zeros(dims, b);
+    let tokens = vec![1i32; b];
+    // warm
+    rt.decode("tiny", &mut kv, &tokens, &vec![1i32; b])?;
+    let n = 50;
+    let t0 = Instant::now();
+    for i in 0..n {
+        let pos = vec![(2 + i) as i32; b];
+        rt.decode("tiny", &mut kv, &tokens, &pos)?;
+    }
+    let per = t0.elapsed().as_secs_f64() / n as f64;
+    println!("decode b=8 full step: {:.3} ms ({:.0} tok/s)", per*1e3, 8.0/per);
+    let cache_elems = kv.k.len();
+    println!("cache elems per tensor: {} ({:.2} MB)", cache_elems, cache_elems as f64*4.0/1e6);
+    Ok(())
+}

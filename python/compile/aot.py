@@ -1,0 +1,255 @@
+"""AOT: lower every L2 graph to HLO *text* + dump weights for the rust side.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --outdir ../artifacts
+
+Produces:
+  artifacts/<graph>.hlo.txt   — one XLA HLO module per (graph, shape bucket)
+  artifacts/weights.bin       — all weight tensors (binary, see format below)
+  artifacts/manifest.txt      — graph index the rust runtime parses
+
+Interchange is HLO TEXT, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the published ``xla`` 0.1.6 crate links) rejects (``proto.id() <=
+INT_MAX``).  The text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md.
+
+weights.bin format (little-endian):
+  magic   b"XLLMW001"
+  u32     n_tensors
+  per tensor:
+    u32   name_len;  name (utf-8, e.g. "tiny/embed")
+    u32   ndim;  u32 dims[ndim]
+    f32   data[prod(dims)]
+
+The manifest is line-oriented ``key=value`` records:
+  model  name=tiny vocab=256 d_model=64 ...
+  graph  name=decode_b4 file=decode_b4.hlo.txt weights=tiny kind=decode b=4 ...
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import struct
+import sys
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+PREFILL_BUCKETS = [16, 32, 64, 128]
+DECODE_BUCKETS = [1, 2, 4, 8]
+VERIFY_BUCKETS = [(1, 4), (4, 4)]
+DRAFT_DECODE_BUCKETS = [1, 4]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_weights(path: str, sets: Sequence[Tuple[str, M.Weights]]) -> int:
+    """Dump all weight sets to weights.bin; returns tensor count."""
+    tensors: List[Tuple[str, np.ndarray]] = []
+    for set_name, ws in sets:
+        for name, arr in ws:
+            tensors.append((f"{set_name}/{name}", np.asarray(arr, np.float32)))
+    with open(path, "wb") as f:
+        f.write(b"XLLMW001")
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype("<f4").tobytes())
+    return len(tensors)
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def cache_spec(cfg: M.ModelConfig, b: int):
+    return spec((cfg.n_layers, b, cfg.n_heads, cfg.max_seq, cfg.d_head))
+
+
+def lower_graph(fn: Callable, ws: M.Weights, arg_specs) -> str:
+    """Lower fn(weight_arrays..., *args) with weights as leading params."""
+    names = [n for n, _ in ws]
+    w_specs = [spec(a.shape) for _, a in ws]
+
+    def wrapper(wlist, *args):
+        return fn(list(zip(names, wlist)), *args)
+
+    lowered = jax.jit(wrapper).lower(w_specs, *arg_specs)
+    return to_hlo_text(lowered)
+
+
+def model_manifest_line(cfg: M.ModelConfig) -> str:
+    return (
+        f"model name={cfg.name} vocab={cfg.vocab} d_model={cfg.d_model} "
+        f"n_layers={cfg.n_layers} n_heads={cfg.n_heads} d_head={cfg.d_head} "
+        f"d_ff={cfg.d_ff} max_seq={cfg.max_seq} n_params={cfg.n_params}"
+    )
+
+
+def build_all(outdir: str, quick: bool = False) -> List[str]:
+    os.makedirs(outdir, exist_ok=True)
+    tiny_w = M.init_weights(M.TINY)
+    draft_w = M.init_weights(M.DRAFT, seed=7)
+    enc_w = M.init_encoder_weights(M.ENC)
+    moe_w = M.init_moe_weights(M.MOE)
+
+    n = write_weights(
+        os.path.join(outdir, "weights.bin"),
+        [("tiny", tiny_w), ("draft", draft_w), ("enc", enc_w), ("moe", moe_w)],
+    )
+
+    manifest: List[str] = [
+        model_manifest_line(M.TINY),
+        model_manifest_line(M.DRAFT),
+        f"model name=enc n_patches={M.ENC.n_patches} d_patch={M.ENC.d_patch} "
+        f"d_model={M.ENC.d_model}",
+        f"model name=moe n_experts={M.MOE.n_experts} d_model={M.MOE.d_model} "
+        f"d_ff={M.MOE.d_ff} n_tokens={M.MOE.n_tokens}",
+        f"weights file=weights.bin n_tensors={n}",
+    ]
+
+    jobs: List[Tuple[str, Callable[[], str], str]] = []
+
+    prefill_buckets = PREFILL_BUCKETS[:1] if quick else PREFILL_BUCKETS
+    decode_buckets = DECODE_BUCKETS[:1] if quick else DECODE_BUCKETS
+    verify_buckets = VERIFY_BUCKETS[:1] if quick else VERIFY_BUCKETS
+    draft_buckets = DRAFT_DECODE_BUCKETS[:1] if quick else DRAFT_DECODE_BUCKETS
+
+    for s in prefill_buckets:
+        name = f"prefill_s{s}"
+        jobs.append(
+            (
+                name,
+                lambda s=s: lower_graph(
+                    lambda ws, t: M.prefill(ws, M.TINY, t),
+                    tiny_w,
+                    [spec((s,), jnp.int32)],
+                ),
+                f"weights=tiny kind=prefill s={s}",
+            )
+        )
+    for b in decode_buckets:
+        name = f"decode_b{b}"
+        jobs.append(
+            (
+                name,
+                lambda b=b: lower_graph(
+                    lambda ws, t, p, k, v: M.decode(ws, M.TINY, t, p, k, v),
+                    tiny_w,
+                    [
+                        spec((b,), jnp.int32),
+                        spec((b,), jnp.int32),
+                        cache_spec(M.TINY, b),
+                        cache_spec(M.TINY, b),
+                    ],
+                ),
+                f"weights=tiny kind=decode b={b} smax={M.TINY.max_seq}",
+            )
+        )
+    for b, m in verify_buckets:
+        name = f"verify_b{b}_m{m}"
+        jobs.append(
+            (
+                name,
+                lambda b=b, m=m: lower_graph(
+                    lambda ws, t, p, k, v: M.verify(ws, M.TINY, t, p, k, v),
+                    tiny_w,
+                    [
+                        spec((b, m), jnp.int32),
+                        spec((b,), jnp.int32),
+                        cache_spec(M.TINY, b),
+                        cache_spec(M.TINY, b),
+                    ],
+                ),
+                f"weights=tiny kind=verify b={b} m={m} smax={M.TINY.max_seq}",
+            )
+        )
+    for b in draft_buckets:
+        name = f"draft_decode_b{b}"
+        jobs.append(
+            (
+                name,
+                lambda b=b: lower_graph(
+                    lambda ws, t, p, k, v: M.decode(ws, M.DRAFT, t, p, k, v),
+                    draft_w,
+                    [
+                        spec((b,), jnp.int32),
+                        spec((b,), jnp.int32),
+                        cache_spec(M.DRAFT, b),
+                        cache_spec(M.DRAFT, b),
+                    ],
+                ),
+                f"weights=draft kind=decode b={b} smax={M.DRAFT.max_seq}",
+            )
+        )
+    jobs.append(
+        (
+            "encode",
+            lambda: lower_graph(
+                lambda ws, p: M.encode(ws, M.ENC, p),
+                enc_w,
+                [spec((M.ENC.n_patches, M.ENC.d_patch))],
+            ),
+            f"weights=enc kind=encode np={M.ENC.n_patches} dp={M.ENC.d_patch}",
+        )
+    )
+    jobs.append(
+        (
+            "moe",
+            lambda: lower_graph(
+                lambda ws, x: M.moe_block(ws, M.MOE, x),
+                moe_w,
+                [spec((M.MOE.n_tokens, M.MOE.d_model))],
+            ),
+            f"weights=moe kind=moe t={M.MOE.n_tokens} d={M.MOE.d_model}",
+        )
+    )
+
+    written = []
+    for name, build, extra in jobs:
+        fname = f"{name}.hlo.txt"
+        text = build()
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        manifest.append(f"graph name={name} file={fname} {extra}")
+        written.append(fname)
+        print(f"  lowered {name}: {len(text)} chars", file=sys.stderr)
+
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--quick", action="store_true", help="only first bucket per graph (tests)"
+    )
+    args = ap.parse_args()
+    written = build_all(args.outdir, quick=args.quick)
+    print(f"wrote {len(written)} HLO modules + weights.bin + manifest.txt to {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""L1 Pallas grouped-expert MoE FFN kernel.
+
+Implements the expert-parallel compute primitive behind the paper's dynamic
+EPLB (§4.4.2): tokens are routed (top-1) to E experts and each expert
+applies its own 2-layer GELU FFN.  The kernel iterates the grid over
+experts; each program applies its expert's weights to the *whole* token
+block under a routing mask and accumulates into the shared output tile.
+This is the dense-masked formulation (every expert touches every token tile
+with a 0/1 mask) — the standard Pallas/TPU idiom replacing the GPU
+gather/scatter formulation, and the one whose per-expert token counts the
+rust EPLB layer balances.
+
+interpret=True only (see attention.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _moe_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, expert_ref, o_ref):
+    """Grid over experts; accumulate masked expert FFN outputs.
+
+    Blocks: x = [T, D], w1 = [D, F], b1 = [F], w2 = [F, D], b2 = [D],
+    expert = [T] int32 routing decisions, o = [T, D].
+    """
+    e = pl.program_id(0)
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    h = jax.nn.gelu(x @ w1_ref[...].astype(jnp.float32) + b1_ref[...])
+    y = h @ w2_ref[...].astype(jnp.float32) + b2_ref[...]
+    mask = (expert_ref[...] == e).astype(jnp.float32)[:, None]
+    o_ref[...] += (y * mask).astype(o_ref.dtype)
+
+
+def moe_ffn(
+    x: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+    expert: jax.Array,
+) -> jax.Array:
+    """Top-1 routed mixture-of-experts FFN.
+
+    Args:
+      x: [T, D] token activations.
+      w1: [E, D, F]; b1: [E, F]; w2: [E, F, D]; b2: [E, D] per-expert FFN.
+      expert: [T] int32 in [0, E) — routing decision per token.
+    Returns:
+      [T, D].
+    """
+    e, d, f = w1.shape
+    t = x.shape[0]
+    x_spec = pl.BlockSpec((t, d), lambda i: (0, 0))
+    w1_spec = pl.BlockSpec((1, d, f), lambda i: (i, 0, 0))
+    b1_spec = pl.BlockSpec((1, f), lambda i: (i, 0))
+    w2_spec = pl.BlockSpec((1, f, d), lambda i: (i, 0, 0))
+    b2_spec = pl.BlockSpec((1, d), lambda i: (i, 0))
+    r_spec = pl.BlockSpec((t,), lambda i: (0,))
+
+    def kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, expert_ref, o_ref):
+        _moe_kernel(
+            x_ref,
+            w1_ref.at[0],
+            b1_ref.at[0],
+            w2_ref.at[0],
+            b2_ref.at[0],
+            expert_ref,
+            o_ref,
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(e,),
+        in_specs=[x_spec, w1_spec, b1_spec, w2_spec, b2_spec, r_spec],
+        out_specs=x_spec,
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2, expert)
+
+
+def route_top1(x: jax.Array, w_gate: jax.Array) -> jax.Array:
+    """Top-1 router: argmax of the gating logits. x: [T, D], w_gate: [D, E]."""
+    return jnp.argmax(x @ w_gate, axis=-1).astype(jnp.int32)

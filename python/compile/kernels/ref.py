@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: simple, obviously-right einsum
+formulations with no tiling, no pallas, no tricks.  pytest + hypothesis
+(python/tests/test_kernels.py) sweeps shapes and checks allclose against the
+kernels in attention.py / moe.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal MHA. q/k/v: [H, S, Dh] -> [H, S, Dh]."""
+    h, s, dh = q.shape
+    scale = 1.0 / (dh ** 0.5)
+    logits = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    row = jnp.arange(s)[:, None]
+    col = jnp.arange(s)[None, :]
+    logits = jnp.where(col <= row, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array
+) -> jax.Array:
+    """Decode attention. q: [B,H,Dh], k/v: [B,H,S,Dh], pos: [B] -> [B,H,Dh]."""
+    b, h, s, dh = k.shape
+    scale = 1.0 / (dh ** 0.5)
+    logits = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    idx = jnp.arange(s)[None, None, :]
+    logits = jnp.where(idx <= pos[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def spec_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array
+) -> jax.Array:
+    """Speculative multi-Q attention.
+
+    q: [B,M,H,Dh], k/v: [B,H,S,Dh], pos: [B] -> [B,M,H,Dh].
+    Token j attends to cache slots [0, pos+j].
+    """
+    b, mm, h, dh = q.shape
+    s = k.shape[2]
+    scale = 1.0 / (dh ** 0.5)
+    logits = (
+        jnp.einsum("bmhd,bhsd->bmhs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    )
+    sidx = jnp.arange(s)[None, None, None, :]
+    limit = (pos[:, None] + jnp.arange(mm)[None, :])[:, :, None, None]
+    logits = jnp.where(sidx <= limit, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bmhs,bhsd->bmhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def moe_ffn_ref(
+    x: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+    expert: jax.Array,
+) -> jax.Array:
+    """Top-1 MoE FFN oracle. Shapes as in moe.moe_ffn."""
+    xf = x.astype(jnp.float32)
+    h = jax.nn.gelu(jnp.einsum("td,edf->tef", xf, w1.astype(jnp.float32)) + b1[None])
+    y = jnp.einsum("tef,efd->ted", h, w2.astype(jnp.float32)) + b2[None]
+    onehot = jax.nn.one_hot(expert, w1.shape[0], dtype=jnp.float32)  # [T, E]
+    return jnp.einsum("ted,te->td", y, onehot).astype(x.dtype)

@@ -1,0 +1,288 @@
+"""L2: JAX transformer model for the xLLM reproduction (build-time only).
+
+A tiny Qwen-style decoder-only transformer (RMSNorm, GELU MLP, learned
+positional embeddings) whose attention hot-spots are the L1 Pallas kernels
+in ``kernels/attention.py``.  ``aot.py`` lowers the graphs below ONCE to
+HLO text; the rust runtime loads and executes them — Python never appears
+on the request path.
+
+Graphs (all pure functions of (weights, inputs), all returning tuples):
+
+* ``prefill(w, tokens[S])``                    -> (logits[S,V], k, v)
+* ``decode(w, tokens[B], pos[B], k, v)``       -> (logits[B,V], k', v')
+* ``verify(w, tokens[B,M], pos[B], k, v)``     -> (logits[B,M,V], k', v')
+* ``encode(ew, patches[Np,Dp])``               -> (emb[Np,D],)
+* ``moe_block(mw, x[T,D])``                    -> (y[T,D],)
+
+KV cache layout is [L, B, H, Smax, Dh] — the *contiguous view* the xTensor
+manager (rust, §4.3) presents to kernels.  Cache updates use one-hot
+scatter so every graph stays shape-static per (S or B) bucket, which is
+what the rust Adaptive Graph Mode caches one executable for.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import attention as ka
+from .kernels import moe as km
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Configuration of the tiny serving model."""
+
+    vocab: int = 256
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    d_head: int = 16
+    d_ff: int = 256
+    max_seq: int = 160  # Smax: prompt bucket (<=128) + decode budget (32)
+    name: str = "tiny"
+
+    @property
+    def params_per_layer(self) -> int:
+        d = self.d_model
+        return 4 * d * d + 2 * d * self.d_ff + 2 * d
+
+    @property
+    def n_params(self) -> int:
+        return (
+            2 * self.vocab * self.d_model
+            + self.max_seq * self.d_model
+            + self.n_layers * self.params_per_layer
+            + self.d_model
+        )
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Tiny 'vision' encoder: 2-layer MLP patch embedder (EPD experiments)."""
+
+    n_patches: int = 16
+    d_patch: int = 32
+    d_hidden: int = 128
+    d_model: int = 64
+    name: str = "enc"
+
+
+@dataclass(frozen=True)
+class MoeConfig:
+    """Standalone MoE block (EPLB experiments)."""
+
+    n_experts: int = 4
+    d_model: int = 64
+    d_ff: int = 128
+    n_tokens: int = 32
+    name: str = "moe"
+
+
+TINY = ModelConfig()
+DRAFT = ModelConfig(n_layers=1, d_model=32, n_heads=2, d_head=16, d_ff=128, name="draft")
+ENC = EncoderConfig()
+MOE = MoeConfig()
+
+# A weight set is an ordered list of (name, array); order defines the HLO
+# parameter order that the rust runtime must follow (see manifest).
+Weights = List[Tuple[str, jax.Array]]
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0) -> Weights:
+    """Deterministic (seeded) init of all model weights, as an ordered list."""
+    rng = np.random.default_rng(seed)
+    d, v = cfg.d_model, cfg.vocab
+
+    def w(*shape, scale=None):
+        scale = scale if scale is not None else (1.0 / np.sqrt(shape[0]))
+        return jnp.asarray(rng.normal(0.0, scale, shape), jnp.float32)
+
+    ws: Weights = [
+        ("embed", w(v, d, scale=0.02)),
+        ("pos_embed", w(cfg.max_seq, d, scale=0.02)),
+    ]
+    for i in range(cfg.n_layers):
+        ws += [
+            (f"l{i}.wq", w(d, d)),
+            (f"l{i}.wk", w(d, d)),
+            (f"l{i}.wv", w(d, d)),
+            (f"l{i}.wo", w(d, d)),
+            (f"l{i}.ln1", jnp.ones((d,), jnp.float32)),
+            (f"l{i}.ln2", jnp.ones((d,), jnp.float32)),
+            (f"l{i}.w1", w(d, cfg.d_ff)),
+            (f"l{i}.w2", w(cfg.d_ff, d)),
+        ]
+    ws += [
+        ("ln_f", jnp.ones((d,), jnp.float32)),
+        ("unembed", w(d, v, scale=0.02)),
+    ]
+    return ws
+
+
+def init_encoder_weights(cfg: EncoderConfig, seed: int = 1) -> Weights:
+    rng = np.random.default_rng(seed)
+
+    def w(*shape):
+        return jnp.asarray(rng.normal(0.0, 1.0 / np.sqrt(shape[0]), shape), jnp.float32)
+
+    return [
+        ("enc.w1", w(cfg.d_patch, cfg.d_hidden)),
+        ("enc.b1", jnp.zeros((cfg.d_hidden,), jnp.float32)),
+        ("enc.w2", w(cfg.d_hidden, cfg.d_model)),
+        ("enc.b2", jnp.zeros((cfg.d_model,), jnp.float32)),
+    ]
+
+
+def init_moe_weights(cfg: MoeConfig, seed: int = 2) -> Weights:
+    rng = np.random.default_rng(seed)
+
+    def w(*shape, scale=0.1):
+        return jnp.asarray(rng.normal(0.0, scale, shape), jnp.float32)
+
+    return [
+        ("moe.gate", w(cfg.d_model, cfg.n_experts)),
+        ("moe.w1", w(cfg.n_experts, cfg.d_model, cfg.d_ff)),
+        ("moe.b1", jnp.zeros((cfg.n_experts, cfg.d_ff), jnp.float32)),
+        ("moe.w2", w(cfg.n_experts, cfg.d_ff, cfg.d_model)),
+        ("moe.b2", jnp.zeros((cfg.n_experts, cfg.d_model), jnp.float32)),
+    ]
+
+
+def _wd(ws: Weights) -> Dict[str, jax.Array]:
+    return dict(ws)
+
+
+def rms_norm(x: jax.Array, g: jax.Array) -> jax.Array:
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * g
+
+
+def _split_heads(x: jax.Array, h: int, dh: int) -> jax.Array:
+    """[..., D] -> [..., H, Dh]."""
+    return x.reshape(x.shape[:-1] + (h, dh))
+
+
+def prefill(ws: Weights, cfg: ModelConfig, tokens: jax.Array):
+    """Prefill a single prompt of (padded) length S.
+
+    Args:
+      tokens: int32[S], padded with anything past the true length; padded
+        positions never influence earlier positions under the causal mask.
+    Returns:
+      (logits f32[S, V]  — per-position logits (caller picks length-1),
+       k f32[L, H, S, Dh], v f32[L, H, S, Dh]).
+    """
+    w = _wd(ws)
+    h, dh = cfg.n_heads, cfg.d_head
+    s = tokens.shape[0]
+    x = w["embed"][tokens] + w["pos_embed"][:s]
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        xa = rms_norm(x, w[f"l{i}.ln1"])
+        q = _split_heads(xa @ w[f"l{i}.wq"], h, dh).transpose(1, 0, 2)  # [H,S,Dh]
+        k = _split_heads(xa @ w[f"l{i}.wk"], h, dh).transpose(1, 0, 2)
+        v = _split_heads(xa @ w[f"l{i}.wv"], h, dh).transpose(1, 0, 2)
+        o = ka.mha_prefill(q, k, v)  # [H,S,Dh]  (L1 Pallas kernel)
+        x = x + o.transpose(1, 0, 2).reshape(s, -1) @ w[f"l{i}.wo"]
+        xm = rms_norm(x, w[f"l{i}.ln2"])
+        x = x + jax.nn.gelu(xm @ w[f"l{i}.w1"]) @ w[f"l{i}.w2"]
+        ks.append(k)
+        vs.append(v)
+    logits = rms_norm(x, w["ln_f"]) @ w["unembed"]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def _write_cache(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Scatter new KV rows at per-sequence positions via one-hot.
+
+    cache: [B, H, Smax, Dh]; new: [B, H, Dh]; pos: [B] -> updated cache.
+    """
+    smax = cache.shape[2]
+    onehot = jax.nn.one_hot(pos, smax, dtype=cache.dtype)  # [B, Smax]
+    oh = onehot[:, None, :, None]
+    return cache * (1.0 - oh) + new[:, :, None, :] * oh
+
+
+def decode(ws: Weights, cfg: ModelConfig, tokens, pos, k_cache, v_cache):
+    """One decode step for a batch of B sequences.
+
+    Args:
+      tokens: int32[B] current token ids.
+      pos: int32[B] cache position of the current token.
+      k_cache, v_cache: f32[L, B, H, Smax, Dh].
+    Returns:
+      (logits f32[B, V], k', v').
+    """
+    w = _wd(ws)
+    h, dh = cfg.n_heads, cfg.d_head
+    x = w["embed"][tokens] + w["pos_embed"][pos]  # [B, D]
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        xa = rms_norm(x, w[f"l{i}.ln1"])
+        q = _split_heads(xa @ w[f"l{i}.wq"], h, dh)  # [B,H,Dh]
+        kn = _split_heads(xa @ w[f"l{i}.wk"], h, dh)
+        vn = _split_heads(xa @ w[f"l{i}.wv"], h, dh)
+        kc = _write_cache(k_cache[i], kn, pos)
+        vc = _write_cache(v_cache[i], vn, pos)
+        o = ka.decode_attention(q, kc, vc, pos)  # [B,H,Dh]  (L1 kernel)
+        x = x + o.reshape(x.shape[0], -1) @ w[f"l{i}.wo"]
+        xm = rms_norm(x, w[f"l{i}.ln2"])
+        x = x + jax.nn.gelu(xm @ w[f"l{i}.w1"]) @ w[f"l{i}.w2"]
+        new_k.append(kc)
+        new_v.append(vc)
+    logits = rms_norm(x, w["ln_f"]) @ w["unembed"]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def verify(ws: Weights, cfg: ModelConfig, tokens, pos, k_cache, v_cache):
+    """Speculative verify: score M candidate tokens per sequence in one pass.
+
+    Args:
+      tokens: int32[B, M] candidate tokens (token j sits at cache pos+j).
+      pos: int32[B] cache position of candidate 0.
+      k_cache, v_cache: f32[L, B, H, Smax, Dh].
+    Returns:
+      (logits f32[B, M, V], k', v') — caches updated at pos..pos+M-1.
+    """
+    w = _wd(ws)
+    h, dh = cfg.n_heads, cfg.d_head
+    b, m = tokens.shape
+    positions = pos[:, None] + jnp.arange(m)[None, :]  # [B, M]
+    x = w["embed"][tokens] + w["pos_embed"][positions]  # [B, M, D]
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        xa = rms_norm(x, w[f"l{i}.ln1"])
+        q = _split_heads(xa @ w[f"l{i}.wq"], h, dh)  # [B,M,H,Dh]
+        kn = _split_heads(xa @ w[f"l{i}.wk"], h, dh)
+        vn = _split_heads(xa @ w[f"l{i}.wv"], h, dh)
+        kc, vc = k_cache[i], v_cache[i]
+        for j in range(m):  # M is small (<=4); unrolled scatter
+            kc = _write_cache(kc, kn[:, j], pos + j)
+            vc = _write_cache(vc, vn[:, j], pos + j)
+        o = ka.spec_attention(q, kc, vc, pos)  # [B,M,H,Dh]  (L1 kernel)
+        x = x + o.reshape(b, m, -1) @ w[f"l{i}.wo"]
+        xm = rms_norm(x, w[f"l{i}.ln2"])
+        x = x + jax.nn.gelu(xm @ w[f"l{i}.w1"]) @ w[f"l{i}.w2"]
+        new_k.append(kc)
+        new_v.append(vc)
+    logits = rms_norm(x, w["ln_f"]) @ w["unembed"]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def encode(ws: Weights, cfg: EncoderConfig, patches: jax.Array):
+    """Tiny vision encoder: patches [Np, Dp] -> (embeddings [Np, D],)."""
+    w = _wd(ws)
+    hdn = jax.nn.gelu(patches @ w["enc.w1"] + w["enc.b1"])
+    return (hdn @ w["enc.w2"] + w["enc.b2"],)
+
+
+def moe_block(ws: Weights, cfg: MoeConfig, x: jax.Array):
+    """Standalone top-1 MoE FFN block: x [T, D] -> (y [T, D],)."""
+    w = _wd(ws)
+    expert = km.route_top1(x, w["moe.gate"])
+    y = km.moe_ffn(x, w["moe.w1"], w["moe.b1"], w["moe.w2"], w["moe.b2"], expert)
+    return (y,)

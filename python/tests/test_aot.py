@@ -1,0 +1,111 @@
+"""AOT pipeline tests: lowering produces parseable HLO text + valid weights.
+
+These tests exercise the build path the rust runtime consumes.  They use
+--quick mode (one bucket per graph) to keep CI time bounded; `make
+artifacts` builds the full bucket set.
+"""
+
+import os
+import struct
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def outdir(tmp_path_factory):
+    d = tmp_path_factory.mktemp("artifacts")
+    aot.build_all(str(d), quick=True)
+    return str(d)
+
+
+def test_manifest_exists_and_parses(outdir):
+    path = os.path.join(outdir, "manifest.txt")
+    assert os.path.exists(path)
+    graphs, models = [], []
+    with open(path) as f:
+        for line in f:
+            parts = line.split()
+            if not parts:
+                continue
+            kind = parts[0]
+            kv = dict(p.split("=", 1) for p in parts[1:])
+            if kind == "graph":
+                graphs.append(kv)
+            elif kind == "model":
+                models.append(kv)
+    assert {g["name"] for g in graphs} >= {
+        "prefill_s16",
+        "decode_b1",
+        "verify_b1_m4",
+        "draft_decode_b1",
+        "encode",
+        "moe",
+    }
+    assert {m["name"] for m in models} == {"tiny", "draft", "enc", "moe"}
+    for g in graphs:
+        assert os.path.exists(os.path.join(outdir, g["file"]))
+
+
+def test_hlo_text_is_hlo(outdir):
+    with open(os.path.join(outdir, "decode_b1.hlo.txt")) as f:
+        text = f.read()
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # return_tuple=True -> root is a tuple
+    assert "tuple(" in text or "ROOT" in text
+
+
+def test_weights_bin_roundtrip(outdir):
+    path = os.path.join(outdir, "weights.bin")
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:8] == b"XLLMW001"
+    (n,) = struct.unpack_from("<I", data, 8)
+    off = 12
+    names = []
+    for _ in range(n):
+        (nl,) = struct.unpack_from("<I", data, off)
+        off += 4
+        name = data[off : off + nl].decode()
+        off += nl
+        (nd,) = struct.unpack_from("<I", data, off)
+        off += 4
+        dims = struct.unpack_from(f"<{nd}I", data, off)
+        off += 4 * nd
+        count = 1
+        for d in dims:
+            count *= d
+        off += 4 * count
+        names.append(name)
+    assert off == len(data), "weights.bin has trailing bytes"
+    assert "tiny/embed" in names
+    assert "draft/embed" in names
+    assert "enc/enc.w1" in names
+    assert "moe/moe.gate" in names
+    # parameter order of the tiny set must match init_weights order
+    tiny_names = [f"tiny/{k}" for k, _ in M.init_weights(M.TINY)]
+    assert [x for x in names if x.startswith("tiny/")] == tiny_names
+
+
+def test_weight_tensor_count_matches_manifest(outdir):
+    with open(os.path.join(outdir, "manifest.txt")) as f:
+        for line in f:
+            if line.startswith("weights "):
+                kv = dict(p.split("=", 1) for p in line.split()[1:])
+                declared = int(kv["n_tensors"])
+    with open(os.path.join(outdir, "weights.bin"), "rb") as f:
+        f.seek(8)
+        (n,) = struct.unpack("<I", f.read(4))
+    assert n == declared
+
+
+def test_hlo_has_no_serialized_proto_markers(outdir):
+    """Guard: interchange must be text, never .serialize() output."""
+    for fname in os.listdir(outdir):
+        if fname.endswith(".hlo.txt"):
+            with open(os.path.join(outdir, fname), "rb") as f:
+                head = f.read(64)
+            assert b"HloModule" in head, f"{fname} does not start with HLO text"

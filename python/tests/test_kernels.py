@@ -1,0 +1,190 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes and dtypes; assert_allclose against ref.py.
+This is the CORE numeric correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as ka
+from compile.kernels import moe as km
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=3e-5, atol=3e-5)
+
+
+@st.composite
+def prefill_shapes(draw):
+    h = draw(st.sampled_from([1, 2, 4]))
+    s = draw(st.sampled_from([4, 8, 16, 32, 64]))
+    dh = draw(st.sampled_from([4, 8, 16]))
+    dtype = draw(st.sampled_from([jnp.float32, jnp.bfloat16]))
+    return h, s, dh, dtype
+
+
+@given(prefill_shapes())
+@settings(**SETTINGS)
+def test_mha_prefill_matches_ref(shape):
+    h, s, dh, dtype = shape
+    q, k, v = (rand(i, (h, s, dh), dtype) for i in range(3))
+    out = ka.mha_prefill(q, k, v)
+    want = ref.mha_prefill_ref(q, k, v)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), want.astype(jnp.float32), **tol(dtype)
+    )
+
+
+@st.composite
+def decode_shapes(draw):
+    b = draw(st.sampled_from([1, 2, 4, 8]))
+    h = draw(st.sampled_from([1, 2, 4]))
+    s = draw(st.sampled_from([8, 16, 64]))
+    dh = draw(st.sampled_from([4, 16]))
+    dtype = draw(st.sampled_from([jnp.float32, jnp.bfloat16]))
+    pos = draw(st.lists(st.integers(0, s - 1), min_size=b, max_size=b))
+    return b, h, s, dh, dtype, pos
+
+
+@given(decode_shapes())
+@settings(**SETTINGS)
+def test_decode_attention_matches_ref(shape):
+    b, h, s, dh, dtype, pos = shape
+    q = rand(0, (b, h, dh), dtype)
+    k = rand(1, (b, h, s, dh), dtype)
+    v = rand(2, (b, h, s, dh), dtype)
+    pos = jnp.asarray(pos, jnp.int32)
+    out = ka.decode_attention(q, k, v, pos)
+    want = ref.decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), want.astype(jnp.float32), **tol(dtype)
+    )
+
+
+@st.composite
+def spec_shapes(draw):
+    b = draw(st.sampled_from([1, 2, 4]))
+    m = draw(st.sampled_from([1, 2, 4]))
+    h = draw(st.sampled_from([1, 4]))
+    s = draw(st.sampled_from([16, 64]))
+    dh = draw(st.sampled_from([8, 16]))
+    dtype = draw(st.sampled_from([jnp.float32, jnp.bfloat16]))
+    pos = draw(st.lists(st.integers(0, s - m), min_size=b, max_size=b))
+    return b, m, h, s, dh, dtype, pos
+
+
+@given(spec_shapes())
+@settings(**SETTINGS)
+def test_spec_attention_matches_ref(shape):
+    b, m, h, s, dh, dtype, pos = shape
+    q = rand(0, (b, m, h, dh), dtype)
+    k = rand(1, (b, h, s, dh), dtype)
+    v = rand(2, (b, h, s, dh), dtype)
+    pos = jnp.asarray(pos, jnp.int32)
+    out = ka.spec_attention(q, k, v, pos)
+    want = ref.spec_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), want.astype(jnp.float32), **tol(dtype)
+    )
+
+
+def test_spec_m1_equals_decode():
+    """spec_attention with M=1 must agree with decode_attention."""
+    b, h, s, dh = 3, 4, 32, 16
+    q = rand(0, (b, h, dh), jnp.float32)
+    k = rand(1, (b, h, s, dh), jnp.float32)
+    v = rand(2, (b, h, s, dh), jnp.float32)
+    pos = jnp.asarray([0, 7, 31], jnp.int32)
+    dec = ka.decode_attention(q, k, v, pos)
+    sp = ka.spec_attention(q[:, None], k, v, pos)[:, 0]
+    np.testing.assert_allclose(dec, sp, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_masks_future_slots():
+    """Entries past pos must not influence the output."""
+    b, h, s, dh = 2, 2, 16, 8
+    q = rand(0, (b, h, dh), jnp.float32)
+    k = rand(1, (b, h, s, dh), jnp.float32)
+    v = rand(2, (b, h, s, dh), jnp.float32)
+    pos = jnp.asarray([3, 9], jnp.int32)
+    out1 = ka.decode_attention(q, k, v, pos)
+    # poison everything after pos
+    idx = jnp.arange(s)[None, None, :, None]
+    poison = jnp.where(idx > pos[:, None, None, None], 1e6, 0.0)
+    out2 = ka.decode_attention(q, k + poison, v + poison, pos)
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_causality():
+    """Perturbing token t must not change outputs at positions < t."""
+    h, s, dh = 2, 16, 8
+    q = rand(0, (h, s, dh), jnp.float32)
+    k = rand(1, (h, s, dh), jnp.float32)
+    v = rand(2, (h, s, dh), jnp.float32)
+    out1 = ka.mha_prefill(q, k, v)
+    k2 = k.at[:, 10:].add(100.0)
+    v2 = v.at[:, 10:].add(100.0)
+    out2 = ka.mha_prefill(q, k2, v2)
+    np.testing.assert_allclose(out1[:, :10], out2[:, :10], rtol=1e-5, atol=1e-5)
+
+
+@st.composite
+def moe_shapes(draw):
+    t = draw(st.sampled_from([1, 4, 8, 32]))
+    d = draw(st.sampled_from([8, 16]))
+    f = draw(st.sampled_from([16, 32]))
+    e = draw(st.sampled_from([1, 2, 4, 8]))
+    experts = draw(st.lists(st.integers(0, e - 1), min_size=t, max_size=t))
+    return t, d, f, e, experts
+
+
+@given(moe_shapes())
+@settings(**SETTINGS)
+def test_moe_ffn_matches_ref(shape):
+    t, d, f, e, experts = shape
+    x = rand(0, (t, d), jnp.float32)
+    w1 = rand(1, (e, d, f), jnp.float32) * 0.2
+    b1 = rand(2, (e, f), jnp.float32) * 0.1
+    w2 = rand(3, (e, f, d), jnp.float32) * 0.2
+    b2 = rand(4, (e, d), jnp.float32) * 0.1
+    expert = jnp.asarray(experts, jnp.int32)
+    out = km.moe_ffn(x, w1, b1, w2, b2, expert)
+    want = ref.moe_ffn_ref(x, w1, b1, w2, b2, expert)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+def test_moe_routing_partition():
+    """Every token's output equals its own expert's FFN applied alone."""
+    t, d, f, e = 8, 8, 16, 4
+    x = rand(0, (t, d), jnp.float32)
+    w1 = rand(1, (e, d, f), jnp.float32) * 0.2
+    b1 = jnp.zeros((e, f))
+    w2 = rand(3, (e, f, d), jnp.float32) * 0.2
+    b2 = jnp.zeros((e, d))
+    expert = jnp.asarray([0, 1, 2, 3, 3, 2, 1, 0], jnp.int32)
+    out = km.moe_ffn(x, w1, b1, w2, b2, expert)
+    for i in range(t):
+        ei = int(expert[i])
+        want = jax.nn.gelu(x[i] @ w1[ei]) @ w2[ei]
+        np.testing.assert_allclose(out[i], want, rtol=1e-4, atol=1e-4)
+
+
+def test_route_top1_bounds():
+    x = rand(0, (16, 8), jnp.float32)
+    g = rand(1, (8, 4), jnp.float32)
+    r = km.route_top1(x, g)
+    assert r.dtype == jnp.int32
+    assert int(r.min()) >= 0 and int(r.max()) < 4

@@ -1,0 +1,178 @@
+"""L2 model correctness: prefill/decode/verify consistency + shape contracts.
+
+The key invariant for a serving stack: batched, cache-carrying decode must
+produce exactly the logits that a from-scratch full prefill over the same
+token history produces.  If this holds, the rust coordinator can freely mix
+prefill/decode scheduling without changing model semantics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(max_seq=32)  # small Smax to keep tests fast
+WS = M.init_weights(CFG)
+
+
+def greedy(logits):
+    return int(jnp.argmax(logits))
+
+
+def make_cache(b):
+    shape = (CFG.n_layers, b, CFG.n_heads, CFG.max_seq, CFG.d_head)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def seed_cache_from_prefill(kc, vc, slot, k, v, length):
+    """Copy a prefill [L,H,S,Dh] KV into batch slot ``slot`` of the cache."""
+    kc = kc.at[:, slot, :, :length].set(k[:, :, :length].transpose(0, 1, 2, 3))
+    vc = vc.at[:, slot, :, :length].set(v[:, :, :length])
+    return kc, vc
+
+
+def test_prefill_shapes():
+    tokens = jnp.arange(16, dtype=jnp.int32) % CFG.vocab
+    logits, k, v = M.prefill(WS, CFG, tokens)
+    assert logits.shape == (16, CFG.vocab)
+    assert k.shape == (CFG.n_layers, CFG.n_heads, 16, CFG.d_head)
+    assert v.shape == k.shape
+
+
+def test_prefill_padding_is_harmless():
+    """Positions before the true length are unaffected by pad tokens."""
+    base = jnp.asarray([5, 17, 200, 3, 90, 41, 7, 9], jnp.int32)
+    l1, _, _ = M.prefill(WS, CFG, base)
+    padded = jnp.concatenate([base, jnp.full((8,), 99, jnp.int32)])
+    l2, _, _ = M.prefill(WS, CFG, padded)
+    np.testing.assert_allclose(l1, l2[:8], rtol=1e-5, atol=1e-5)
+
+
+def test_decode_matches_prefill():
+    """Prefill(n) + decode steps == prefill(n+k) at every step."""
+    prompt = jnp.asarray([1, 2, 3, 4, 5, 6, 7, 8], jnp.int32)
+    n = prompt.shape[0]
+    logits_p, k, v = M.prefill(WS, CFG, prompt)
+    kc, vc = make_cache(1)
+    kc, vc = seed_cache_from_prefill(kc, vc, 0, k, v, n)
+
+    token = greedy(logits_p[n - 1])
+    history = list(map(int, prompt)) + [token]
+    for step in range(4):
+        pos = jnp.asarray([n + step], jnp.int32)
+        logits_d, kc, vc = M.decode(WS, CFG, jnp.asarray([token], jnp.int32), pos, kc, vc)
+        # oracle: full prefill over the whole history
+        full_logits, _, _ = M.prefill(WS, CFG, jnp.asarray(history, jnp.int32))
+        np.testing.assert_allclose(
+            logits_d[0], full_logits[-1], rtol=2e-4, atol=2e-4
+        )
+        token = greedy(logits_d[0])
+        history.append(token)
+
+
+def test_decode_batch_equals_individual():
+    """Batch decode must equal per-sequence decode (no cross-talk)."""
+    prompts = [
+        jnp.asarray([1, 2, 3, 4], jnp.int32),
+        jnp.asarray([9, 8, 7, 6, 5, 4], jnp.int32),
+    ]
+    kc, vc = make_cache(2)
+    lengths, next_tokens = [], []
+    for i, p in enumerate(prompts):
+        logits, k, v = M.prefill(WS, CFG, p)
+        kc, vc = seed_cache_from_prefill(kc, vc, i, k, v, p.shape[0])
+        lengths.append(p.shape[0])
+        next_tokens.append(greedy(logits[p.shape[0] - 1]))
+
+    pos = jnp.asarray(lengths, jnp.int32)
+    toks = jnp.asarray(next_tokens, jnp.int32)
+    batched, _, _ = M.decode(WS, CFG, toks, pos, kc, vc)
+
+    for i, p in enumerate(prompts):
+        kci, vci = make_cache(1)
+        _, k, v = M.prefill(WS, CFG, p)
+        kci, vci = seed_cache_from_prefill(kci, vci, 0, k, v, p.shape[0])
+        single, _, _ = M.decode(
+            WS,
+            CFG,
+            jnp.asarray([next_tokens[i]], jnp.int32),
+            jnp.asarray([lengths[i]], jnp.int32),
+            kci,
+            vci,
+        )
+        np.testing.assert_allclose(batched[i], single[0], rtol=1e-4, atol=1e-4)
+
+
+def test_verify_matches_sequential_decode():
+    """verify(M tokens) logits == M sequential decode steps' logits."""
+    prompt = jnp.asarray([3, 1, 4, 1, 5, 9], jnp.int32)
+    n = prompt.shape[0]
+    cand = jnp.asarray([[2, 6, 5, 3]], jnp.int32)  # candidates to score
+    m = cand.shape[1]
+
+    _, k, v = M.prefill(WS, CFG, prompt)
+    kc, vc = make_cache(1)
+    kc, vc = seed_cache_from_prefill(kc, vc, 0, k, v, n)
+    vlogits, _, _ = M.verify(WS, CFG, cand, jnp.asarray([n], jnp.int32), kc, vc)
+
+    kc2, vc2 = make_cache(1)
+    kc2, vc2 = seed_cache_from_prefill(kc2, vc2, 0, k, v, n)
+    for j in range(m):
+        dl, kc2, vc2 = M.decode(
+            WS,
+            CFG,
+            cand[:, j],
+            jnp.asarray([n + j], jnp.int32),
+            kc2,
+            vc2,
+        )
+        np.testing.assert_allclose(vlogits[0, j], dl[0], rtol=2e-4, atol=2e-4)
+
+
+def test_verify_updates_cache_like_decode():
+    prompt = jnp.asarray([10, 20, 30], jnp.int32)
+    n = prompt.shape[0]
+    cand = jnp.asarray([[7, 8, 9, 11]], jnp.int32)
+    _, k, v = M.prefill(WS, CFG, prompt)
+    kc, vc = make_cache(1)
+    kc, vc = seed_cache_from_prefill(kc, vc, 0, k, v, n)
+    _, kv1, vv1 = M.verify(WS, CFG, cand, jnp.asarray([n], jnp.int32), kc, vc)
+
+    kc2, vc2 = make_cache(1)
+    kc2, vc2 = seed_cache_from_prefill(kc2, vc2, 0, k, v, n)
+    for j in range(4):
+        _, kc2, vc2 = M.decode(WS, CFG, cand[:, j], jnp.asarray([n + j], jnp.int32), kc2, vc2)
+    np.testing.assert_allclose(kv1, kc2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(vv1, vc2, rtol=2e-4, atol=2e-4)
+
+
+def test_encoder_shapes_and_determinism():
+    ew = M.init_encoder_weights(M.ENC)
+    patches = jnp.ones((M.ENC.n_patches, M.ENC.d_patch), jnp.float32)
+    (emb,) = M.encode(ew, M.ENC, patches)
+    assert emb.shape == (M.ENC.n_patches, M.ENC.d_model)
+    (emb2,) = M.encode(ew, M.ENC, patches)
+    np.testing.assert_array_equal(emb, emb2)
+
+
+def test_moe_block_runs():
+    mw = M.init_moe_weights(M.MOE)
+    x = jax.random.normal(jax.random.PRNGKey(0), (M.MOE.n_tokens, M.MOE.d_model))
+    (y,) = M.moe_block(mw, M.MOE, x)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_weights_deterministic():
+    w1 = M.init_weights(CFG)
+    w2 = M.init_weights(CFG)
+    for (n1, a1), (n2, a2) in zip(w1, w2):
+        assert n1 == n2
+        np.testing.assert_array_equal(a1, a2)
+
+
+def test_param_count_matches_config():
+    total = sum(int(np.prod(a.shape)) for _, a in M.init_weights(M.TINY))
+    assert total == M.TINY.n_params

@@ -1,0 +1,1163 @@
+//! Paper-figure/table bench harness (criterion substitute; harness=false).
+//!
+//! One sub-bench per table AND figure of the xLLM paper's evaluation
+//! (§5): run `cargo bench` for everything, or `cargo bench -- fig14` for
+//! one.  Each bench regenerates the paper's rows/series on this testbed:
+//! calibrated simulator + real CPU-PJRT microbenches.  We claim *shape*
+//! fidelity (who wins, rough factors, crossovers) — see DESIGN.md §5.
+//!
+//! Output: human tables on stdout; EXPERIMENTS.md records paper-vs-ours.
+
+use std::time::Instant;
+
+use xllm::coordinator::DispatchPolicy;
+use xllm::engine::dpbalance;
+use xllm::engine::genrec::BeamSearcher;
+use xllm::engine::pipeline::{simulate_dual_stream, simulate_single_stream};
+use xllm::engine::specdecode::{expected_tokens_per_round, verify_cost_multiplier, SpecConfig};
+use xllm::metrics::Slo;
+use xllm::model::{ascend_910b, ascend_910c, catalog, HardwareSpec, ModelSpec};
+use xllm::service::colocation::ColocationConfig;
+use xllm::service::epd::EpdStrategy;
+use xllm::sim::cluster::{run as sim_run, ClusterConfig, ColocationMode, ServingMode};
+use xllm::sim::{CostModel, EngineFeatures, GraphMode};
+use xllm::util::Rng;
+use xllm::workload::scenario;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with("--")).collect();
+    let all = args.is_empty();
+    let want = |name: &str| all || args.iter().any(|a| a == name);
+
+    println!("# xLLM paper benches ({} mode)", if all { "full" } else { "selected" });
+    let t0 = Instant::now();
+    if want("calibrate") {
+        bench_calibrate();
+    }
+    if want("fig14") {
+        bench_fig14();
+    }
+    if want("fig15") {
+        bench_fig15();
+    }
+    if want("table3") {
+        bench_table3();
+    }
+    if want("fig16") {
+        bench_fig16();
+    }
+    if want("table4") {
+        bench_table4();
+    }
+    if want("fig17") {
+        bench_fig17();
+    }
+    if want("fig18") {
+        bench_fig18();
+    }
+    if want("table5") {
+        bench_table5();
+    }
+    if want("fig19") {
+        bench_fig19();
+    }
+    if want("fig20") {
+        bench_fig20();
+    }
+    if want("fig21") {
+        bench_fig21();
+    }
+    if want("fig22") {
+        bench_fig22();
+    }
+    if want("fig23") {
+        bench_fig23();
+    }
+    if want("table6") {
+        bench_table6();
+    }
+    if want("table7") {
+        bench_table7();
+    }
+    if want("table8") {
+        bench_table8();
+    }
+    if want("dpbal") {
+        bench_dpbal();
+    }
+    if want("perf") {
+        bench_perf();
+    }
+    println!("\n# total bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}
+
+// ---------------------------------------------------------------------
+// shared machinery
+// ---------------------------------------------------------------------
+
+fn features_for(framework: &str, tp: u32) -> EngineFeatures {
+    match framework {
+        "xllm" => EngineFeatures::xllm(tp),
+        "mindie" => EngineFeatures::mindie(tp),
+        "vllm" => EngineFeatures::vllm(tp),
+        _ => unreachable!(),
+    }
+}
+
+struct SloSearch {
+    scenario: &'static str,
+    model: ModelSpec,
+    hw: HardwareSpec,
+    features: EngineFeatures,
+    instances: usize,
+    slo: Slo,
+    horizon: f64,
+    attainment_target: f64,
+    prefix_cache: bool,
+    pd: Option<(usize, bool)>,
+}
+
+/// The paper's methodology: fixed lengths, request rate adjusted to the
+/// highest value at which the SLO holds; report throughput at that rate.
+///
+/// The search window comes from the roofline capacity estimate (saturated
+/// decode tokens/s divided by mean request tokens), so the simulator
+/// never runs at pathological overload.
+fn max_tput_under_slo(s: &SloSearch) -> (f64, f64, f64) {
+    let eval = |rate: f64| -> (f64, f64) {
+        let mut cfg =
+            ClusterConfig::new(s.instances, s.hw.clone(), s.model.clone(), s.features.clone());
+        cfg.slo = s.slo;
+        cfg.prefix_cache = s.prefix_cache;
+        if let Some((np, dynamic)) = s.pd {
+            cfg.mode = ServingMode::Disaggregated { n_prefill: np, dynamic };
+        }
+        let mut rng = Rng::new(1234);
+        let w = scenario(s.scenario).unwrap().generate(s.horizon, rate, &mut rng);
+        if w.is_empty() {
+            return (0.0, 1.0);
+        }
+        let res = sim_run(cfg, w);
+        (res.report.output_throughput(), res.report.slo_attainment(&s.slo))
+    };
+    // capacity estimate: saturated decode throughput / mean request size
+    let cost = CostModel::new(s.hw.clone(), s.model.clone(), s.features.clone());
+    let mut rng = Rng::new(99);
+    let (mean_in, mean_out) = scenario(s.scenario).unwrap().mean_tokens(&mut rng);
+    let b = 64u64;
+    let sat_tok_s = b as f64 / cost.decode_step_s(b, b * (mean_in + mean_out / 2.0) as u64);
+    let prefill_tok_s = mean_in / cost.prefill_s(mean_in as u64, 0);
+    // per-request service mixes decode (dominant) + prefill
+    let per_req_s = mean_out / sat_tok_s + mean_in / prefill_tok_s;
+    let capacity_rate = s.instances as f64 / per_req_s.max(1e-9);
+
+    let mut lo = 0.0;
+    let mut hi = (capacity_rate * 2.0).max(0.1);
+    let mut best = (0.0, 0.0, 1.0);
+    // 6-step bisection within the bounded window
+    for _ in 0..6 {
+        let mid = 0.5 * (lo + hi);
+        let (tput, att) = eval(mid);
+        if att >= s.attainment_target {
+            best = (mid, tput, att);
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    best
+}
+
+fn header(title: &str) {
+    println!("\n== {title} ==");
+}
+
+// ---------------------------------------------------------------------
+// calibrate: real CPU-PJRT step costs for the tiny model
+// ---------------------------------------------------------------------
+
+fn bench_calibrate() {
+    header("calibrate — real PJRT step costs (tiny model), online factor learning");
+    let artifacts = std::path::Path::new("artifacts");
+    if !artifacts.join("manifest.txt").exists() {
+        println!("artifacts/ missing — run `make artifacts`; skipping");
+        return;
+    }
+    let mut rt = xllm::runtime::Runtime::load(artifacts).expect("runtime");
+    let dims = rt.model_dims("tiny").unwrap();
+
+    println!("{:<16} {:>12} {:>14}", "graph", "mean ms", "tok/s equiv");
+    for s in [16usize, 32, 64, 128] {
+        let prompt: Vec<i32> = (0..s as i32).map(|i| (i % 250) + 1).collect();
+        rt.prefill("tiny", &prompt).unwrap(); // warm compile
+        let t0 = Instant::now();
+        let iters = 8;
+        for _ in 0..iters {
+            rt.prefill("tiny", &prompt).unwrap();
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+        println!("{:<16} {:>12.2} {:>14.0}", format!("prefill_s{s}"), ms, s as f64 / ms * 1e3);
+    }
+    for b in [1usize, 2, 4, 8] {
+        let mut kv = xllm::runtime::BatchKv::zeros(dims, b);
+        let tokens = vec![1i32; b];
+        rt.decode("tiny", &mut kv, &tokens, &vec![4i32; b]).unwrap();
+        let t0 = Instant::now();
+        let iters = 16;
+        for i in 0..iters {
+            let pos = vec![(5 + i) as i32; b];
+            rt.decode("tiny", &mut kv, &tokens, &pos).unwrap();
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+        println!("{:<16} {:>12.2} {:>14.0}", format!("decode_b{b}"), ms, b as f64 / ms * 1e3);
+    }
+    // online factor learning demonstration on the cpu-host cost model
+    let mut cm = CostModel::new(
+        xllm::model::cpu_host(),
+        xllm::model::tiny(),
+        EngineFeatures::xllm(1),
+    );
+    let before = cm.decode_step_s(8, 8 * 64);
+    for _ in 0..60 {
+        cm.learn_decode(8, 8 * 64, before * 1.5);
+    }
+    println!(
+        "factor learning: decode_step(8) prediction {:.3}ms -> {:.3}ms after observing 1.5x",
+        before * 1e3,
+        cm.decode_step_s(8, 8 * 64) * 1e3
+    );
+}
+
+// ---------------------------------------------------------------------
+// fig14: Qwen3-series throughput, ShareGPT, TPOT=50ms, io=2048
+// ---------------------------------------------------------------------
+
+fn bench_fig14() {
+    header("fig14 — Qwen3-series max throughput @ TPOT=50ms, io=2048 (ShareGPT)");
+    println!(
+        "{:<12} {:>3} {:>5} | {:>10} {:>10} {:>10} | {:>10} {:>10}",
+        "model", "tp", "hw", "xllm", "mindie", "vllm", "x/mindie", "x/vllm"
+    );
+    let models = [
+        ("Qwen3-0.6B", 1u32),
+        ("Qwen3-1.7B", 1),
+        ("Qwen3-4B", 1),
+        ("Qwen3-8B", 2),
+        ("Qwen3-14B", 2),
+        ("Qwen3-32B", 4),
+    ];
+    for hw_name in ["910B", "910C"] {
+        let hw = if hw_name == "910B" { ascend_910b() } else { ascend_910c() };
+        for (m, tp) in models {
+            let mut tputs = Vec::new();
+            for fw in ["xllm", "mindie", "vllm"] {
+                let s = SloSearch {
+                    scenario: "sharegpt-2048",
+                    model: catalog(m).unwrap(),
+                    hw: hw.clone(),
+                    features: features_for(fw, tp),
+                    instances: 2,
+                    slo: Slo::tpot(0.050),
+                    horizon: 25.0,
+                    attainment_target: 0.90,
+                    prefix_cache: false,
+                    pd: None,
+                };
+                let (_, tput, _) = max_tput_under_slo(&s);
+                tputs.push(tput);
+            }
+            println!(
+                "{:<12} {:>3} {:>5} | {:>10.0} {:>10.0} {:>10.0} | {:>9.2}x {:>9.2}x",
+                m,
+                tp,
+                hw_name,
+                tputs[0],
+                tputs[1],
+                tputs[2],
+                tputs[0] / tputs[1].max(1e-9),
+                tputs[0] / tputs[2].max(1e-9)
+            );
+        }
+    }
+    println!("(paper: xLLM up to 1.7x MindIE, 1.9-2.2x vLLM-Ascend)");
+}
+
+// ---------------------------------------------------------------------
+// fig15: DeepSeek-R1 throughput under TPOT + io-length variants
+// ---------------------------------------------------------------------
+
+fn bench_fig15() {
+    header("fig15 — DeepSeek-R1 max throughput (MoE, EP/DP), io variants");
+    println!(
+        "{:<26} {:>5} | {:>10} {:>10} {:>10} | {:>9} {:>9}",
+        "setting", "hw", "xllm", "mindie", "vllm", "x/mindie", "x/vllm"
+    );
+    for (scen, tpot, hw_name, tp) in [
+        ("sharegpt-2500-1500", 0.05, "910B", 16u32),
+        ("sharegpt-1500-2500", 0.05, "910B", 16),
+        ("sharegpt-2048", 0.10, "910B", 16),
+        ("sharegpt-2500-1500", 0.05, "910C", 8),
+        ("sharegpt-1500-2500", 0.05, "910C", 8),
+    ] {
+        let hw = if hw_name == "910B" { ascend_910b() } else { ascend_910c() };
+        let mut tputs = Vec::new();
+        for fw in ["xllm", "mindie", "vllm"] {
+            let mut features = features_for(fw, tp);
+            features.dp_groups = 4;
+            let s = SloSearch {
+                scenario: scen,
+                model: catalog("DeepSeek-R1").unwrap(),
+                hw: hw.clone(),
+                features,
+                instances: 1,
+                slo: Slo::tpot(tpot),
+                horizon: 25.0,
+                attainment_target: 0.90,
+                prefix_cache: false,
+                pd: None,
+            };
+            let (_, tput, _) = max_tput_under_slo(&s);
+            tputs.push(tput);
+        }
+        println!(
+            "{:<26} {:>5} | {:>10.0} {:>10.0} {:>10.0} | {:>8.2}x {:>8.2}x",
+            format!("{scen} tpot={}ms", (tpot * 1e3) as u32),
+            hw_name,
+            tputs[0],
+            tputs[1],
+            tputs[2],
+            tputs[0] / tputs[1].max(1e-9),
+            tputs[0] / tputs[2].max(1e-9)
+        );
+    }
+    println!("(paper: ~1.7x MindIE avg, ~12x vLLM-Ascend; 910C ~1.4x MindIE)");
+}
+
+// ---------------------------------------------------------------------
+// table3: DS-R1 PD disaggregation, TPOT=100ms, 2048/2048
+// ---------------------------------------------------------------------
+
+fn bench_table3() {
+    header("table3 — DeepSeek-R1 with PD disaggregation @ TPOT=100ms, 2048/2048");
+    println!(
+        "{:<8} {:>14} {:>14} {:>12}",
+        "method", "tput (tok/s)", "req rate /s", "SLO att."
+    );
+    for fw in ["mindie", "xllm"] {
+        let mut features = features_for(fw, 16);
+        features.dp_groups = 4;
+        let s = SloSearch {
+            scenario: "sharegpt-2048",
+            model: catalog("DeepSeek-R1").unwrap(),
+            hw: ascend_910b(),
+            features,
+            instances: 3,
+            slo: Slo::tpot(0.100),
+            horizon: 30.0,
+            attainment_target: 0.90,
+            prefix_cache: false,
+            pd: Some((1, fw == "xllm")),
+        };
+        let (rate, tput, att) = max_tput_under_slo(&s);
+        println!("{:<8} {:>14.2} {:>14.2} {:>11.1}%", fw, tput, rate, att * 100.0);
+    }
+    println!("(paper: xLLM 11351.58 vs MindIE 8476.44 tok/s, ~1.34x)");
+}
+
+// ---------------------------------------------------------------------
+// fig16 / table4: JingYan business scenario
+// ---------------------------------------------------------------------
+
+fn bench_fig16() {
+    header("fig16 — JingYan scenario throughput (Qwen2/Qwen3 series)");
+    println!(
+        "{:<12} {:>3} | {:>10} {:>10} {:>10} | {:>9} {:>9}",
+        "model", "tp", "xllm", "mindie", "vllm", "x/mindie", "x/vllm"
+    );
+    for (m, tp) in [("Qwen2-7B", 1u32), ("Qwen3-8B", 2), ("Qwen3-32B", 4)] {
+        let mut tputs = Vec::new();
+        for fw in ["xllm", "mindie", "vllm"] {
+            let s = SloSearch {
+                scenario: "jingyan",
+                model: catalog(m).unwrap(),
+                hw: ascend_910b(),
+                features: features_for(fw, tp),
+                instances: 2,
+                slo: Slo::tpot(0.05),
+                horizon: 25.0,
+                attainment_target: 0.90,
+                prefix_cache: fw == "xllm",
+                pd: None,
+            };
+            let (_, tput, _) = max_tput_under_slo(&s);
+            tputs.push(tput);
+        }
+        println!(
+            "{:<12} {:>3} | {:>10.0} {:>10.0} {:>10.0} | {:>8.2}x {:>8.2}x",
+            m,
+            tp,
+            tputs[0],
+            tputs[1],
+            tputs[2],
+            tputs[0] / tputs[1].max(1e-9),
+            tputs[0] / tputs[2].max(1e-9)
+        );
+    }
+    println!("(paper: e.g. Qwen3-8B@4acc xLLM ~1.6x vLLM-Ascend)");
+}
+
+fn bench_table4() {
+    header("table4 — DeepSeek-V3, JingYan 6800/400 @ TPOT=80ms");
+    println!("{:<8} {:>14} {:>12}", "method", "tput (tok/s)", "req rate /s");
+    for fw in ["vllm", "mindie", "xllm"] {
+        let mut features = features_for(fw, 16);
+        features.dp_groups = 4;
+        let s = SloSearch {
+            scenario: "jingyan-6800-400",
+            model: catalog("DeepSeek-V3").unwrap(),
+            hw: ascend_910b(),
+            features,
+            instances: 1,
+            slo: Slo::tpot(0.080),
+            horizon: 30.0,
+            attainment_target: 0.90,
+            prefix_cache: false,
+            pd: None,
+        };
+        let (rate, tput, _) = max_tput_under_slo(&s);
+        println!("{:<8} {:>14.2} {:>12.2}", fw, tput, rate);
+    }
+    println!("(paper: vLLM 21.17, MindIE 144.40, xLLM 196.45 tok/s)");
+}
+
+// ---------------------------------------------------------------------
+// fig17: customer service, E2E=10s, scaling with accelerators
+// ---------------------------------------------------------------------
+
+fn bench_fig17() {
+    header("fig17 — customer service @ E2E=10s (accelerator scaling)");
+    println!(
+        "{:<12} {:>4} | {:>10} {:>10} {:>10} | {:>9} {:>9}",
+        "model", "tp", "xllm", "mindie", "vllm", "x/mindie", "x/vllm"
+    );
+    for (m, tps) in [("Qwen3-8B", vec![1u32, 2, 4]), ("Qwen3-32B", vec![4u32, 8])] {
+        for tp in tps {
+            let mut tputs = Vec::new();
+            for fw in ["xllm", "mindie", "vllm"] {
+                let s = SloSearch {
+                    scenario: "customer-service",
+                    model: catalog(m).unwrap(),
+                    hw: ascend_910b(),
+                    features: features_for(fw, tp),
+                    instances: 1,
+                    slo: Slo::e2e(10.0),
+                    horizon: 25.0,
+                    attainment_target: 0.90,
+                    prefix_cache: fw == "xllm",
+                    pd: None,
+                };
+                let (_, tput, _) = max_tput_under_slo(&s);
+                tputs.push(tput);
+            }
+            println!(
+                "{:<12} {:>4} | {:>10.0} {:>10.0} {:>10.0} | {:>8.2}x {:>8.2}x",
+                m,
+                tp,
+                tputs[0],
+                tputs[1],
+                tputs[2],
+                tputs[0] / tputs[1].max(1e-9),
+                tputs[0] / tputs[2].max(1e-9)
+            );
+        }
+    }
+    println!("(paper: Qwen3-32B@8acc xLLM 3.1x vLLM, 1.2x MindIE; vLLM scaling flattens)");
+}
+
+// ---------------------------------------------------------------------
+// fig18 / table5: merchant assistant + product understanding
+// ---------------------------------------------------------------------
+
+fn bench_fig18() {
+    header("fig18 — merchant assistant tasks @ E2E=1s");
+    println!(
+        "{:<24} | {:>10} {:>10} {:>10} | {:>9} {:>9}",
+        "task", "xllm", "mindie", "vllm", "x/mindie", "x/vllm"
+    );
+    for task in ["merchant-search-terms", "merchant-arrangement", "merchant-intent"] {
+        let mut tputs = Vec::new();
+        for fw in ["xllm", "mindie", "vllm"] {
+            let s = SloSearch {
+                scenario: task,
+                model: catalog("Qwen2-7B").unwrap(),
+                hw: ascend_910b(),
+                features: features_for(fw, 2),
+                instances: 2,
+                slo: Slo::e2e(1.0),
+                horizon: 25.0,
+                attainment_target: 0.90,
+                prefix_cache: fw == "xllm",
+                pd: None,
+            };
+            let (_, tput, _) = max_tput_under_slo(&s);
+            tputs.push(tput);
+        }
+        let ratio = |x: f64, y: f64| {
+            if y < 1.0 {
+                "inf".to_string()
+            } else {
+                format!("{:.2}x", x / y)
+            }
+        };
+        println!(
+            "{:<24} | {:>10.0} {:>10.0} {:>10.0} | {:>9} {:>9}",
+            task,
+            tputs[0],
+            tputs[1],
+            tputs[2],
+            ratio(tputs[0], tputs[1]),
+            ratio(tputs[0], tputs[2])
+        );
+    }
+    println!("(paper: search-terms@4acc xLLM 1.34x MindIE, ~3.4x vLLM)");
+}
+
+fn bench_table5() {
+    header("table5 — product understanding, Qwen2-7B 1200/40 (accelerator sweep)");
+    println!("{:<8} {:>12} {:>12} {:>12}", "method", "#acc=1", "#acc=2", "#acc=4");
+    for fw in ["vllm", "mindie", "xllm"] {
+        let mut row = Vec::new();
+        for tp in [1u32, 2, 4] {
+            let s = SloSearch {
+                scenario: "product-understanding",
+                model: catalog("Qwen2-7B").unwrap(),
+                hw: ascend_910b(),
+                features: features_for(fw, tp),
+                instances: 1,
+                slo: Slo::e2e(5.0),
+                horizon: 25.0,
+                attainment_target: 0.90,
+                prefix_cache: fw == "xllm",
+                pd: None,
+            };
+            let (_, tput, _) = max_tput_under_slo(&s);
+            row.push(tput);
+        }
+        println!("{:<8} {:>12.0} {:>12.0} {:>12.0}", fw, row[0], row[1], row[2]);
+    }
+    println!("(paper: xLLM beats MindIE by ~25% and vLLM by ~56% on average)");
+}
+
+// ---------------------------------------------------------------------
+// fig19: generative recommendation E2E vs beam width & rate
+// ---------------------------------------------------------------------
+
+fn bench_fig19() {
+    header("fig19 — genrec mean E2E vs beam width x request rate");
+    // The host bottleneck at large beam_width x top_k (paper §4.5.1) is
+    // candidate generation + partial sorting.  We measure the REAL host
+    // cost both ways on this machine: naive = full sort over the vocab
+    // per beam, every step, fresh allocations; xllm = heap-based partial
+    // top-k + min-heap beam selection + buffer reuse, overlapped with the
+    // device (§4.5 host-kernel overlap).  Device step from the roofline
+    // model for Qwen3-8B.
+    let cost = CostModel::new(ascend_910b(), catalog("Qwen3-8B").unwrap(), EngineFeatures::xllm(1));
+    let vocab = 152_064usize; // Qwen vocab
+    let steps = 64u64;
+    println!(
+        "{:<6} {:>6} | {:>12} {:>12} | {:>8}",
+        "beam", "rate", "xllm E2E s", "naive E2E s", "saving"
+    );
+    let mut rng = Rng::new(3);
+    let logits: Vec<f64> = (0..vocab).map(|_| rng.f64() * -20.0).collect();
+    for beam in [4usize, 16, 64, 128] {
+        let top_k = beam; // paper: large beam_width and top_k together
+        // naive host path: full sort of the vocab per beam, no reuse
+        let reps = 3.max(200 / beam);
+        // naive host: per-beam partial top-k (fair baseline) but flat-sort
+        // beam selection, fresh allocations, and NO host-device overlap
+        let mut naive_sel = BeamSearcher::new(beam);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let mut expansions: Vec<Vec<(u32, f64)>> = Vec::new();
+            for _ in 0..beam {
+                expansions.push(xllm::engine::genrec::topk_desc_partial(&logits, top_k));
+            }
+            std::hint::black_box(naive_sel.step_naive(&expansions));
+        }
+        let naive_host_s = t0.elapsed().as_secs_f64() / reps as f64;
+
+        // xllm host path: heap partial top-k per beam + min-heap selection
+        let t1 = Instant::now();
+        let mut searcher = BeamSearcher::new(beam);
+        for _ in 0..reps {
+            let mut expansions: Vec<Vec<(u32, f64)>> = Vec::with_capacity(beam);
+            for _ in 0..beam {
+                expansions.push(xllm::engine::genrec::topk_desc_partial(&logits, top_k));
+            }
+            std::hint::black_box(searcher.step_optimized(&expansions));
+        }
+        let opt_host_s = t1.elapsed().as_secs_f64() / reps as f64;
+
+        for rate in [1.0f64, 4.0, 8.0] {
+            let concurrent = (rate * 2.0).max(1.0);
+            let bsz = (beam as f64 * concurrent) as u64;
+            let device = cost.decode_step_s(bsz.max(1), bsz.max(1) * 256);
+            // xllm overlaps the host work with the device (§4.5); naive
+            // runs serially after the logits land
+            let xllm_step = device.max(opt_host_s) + 0.2 * opt_host_s;
+            let naive_step = device + naive_host_s;
+            let xllm_e2e = xllm_step * steps as f64 * concurrent.sqrt();
+            let naive_e2e = naive_step * steps as f64 * concurrent.sqrt();
+            println!(
+                "{:<6} {:>6.0} | {:>12.3} {:>12.3} | {:>7.1}%",
+                beam,
+                rate,
+                xllm_e2e,
+                naive_e2e,
+                (1.0 - xllm_e2e / naive_e2e) * 100.0
+            );
+        }
+    }
+    println!("(paper: ~23% lower E2E at beam=128, rate=8; gap grows with beam width)");
+}
+
+// ---------------------------------------------------------------------
+// fig20: MTP (speculative decoding) ablation
+// ---------------------------------------------------------------------
+
+fn bench_fig20() {
+    header("fig20 — MTP impact on DeepSeek-R1 (1500 in / 2500 out)");
+    let mut features = EngineFeatures::xllm(16);
+    features.dp_groups = 4;
+    let cost = CostModel::new(ascend_910b(), catalog("DeepSeek-R1").unwrap(), features);
+    let spec = SpecConfig { m: 1, acceptance: 0.8 }; // MTP-1 (R1's MTP head)
+    println!(
+        "{:<12} | {:>10} {:>12} | {:>10} {:>12}",
+        "concurrency", "TPOT off", "tput off", "TPOT mtp", "tput mtp"
+    );
+    for conc in [1u64, 4, 16, 32, 64, 128] {
+        let kv = conc * 2750;
+        let base_step = cost.decode_step_s(conc, kv);
+        let base_tput = conc as f64 / base_step;
+        let tokens = expected_tokens_per_round(spec.m, spec.acceptance);
+        let mtp_step = base_step * verify_cost_multiplier(spec.m) * 1.05;
+        let mtp_tpot = mtp_step / tokens;
+        let mtp_tput = conc as f64 * tokens / mtp_step;
+        println!(
+            "{:<12} | {:>9.1}ms {:>10.0}/s | {:>9.1}ms {:>10.0}/s",
+            conc,
+            base_step * 1e3,
+            base_tput,
+            mtp_tpot * 1e3,
+            mtp_tput
+        );
+    }
+    println!("(paper: MTP lowers TPOT and raises throughput, biggest gain >32 concurrency)");
+}
+
+// ---------------------------------------------------------------------
+// fig21: dynamic PD policy vs MinimalLoad vs RoundRobin
+// ---------------------------------------------------------------------
+
+fn bench_fig21() {
+    header("fig21 — Dynamic PD disaggregation policy ablation");
+    println!(
+        "{:<12} {:<12} | {:>12} {:>12} {:>10}",
+        "trace", "policy", "max rate /s", "tput tok/s", "SLO att."
+    );
+    for trace in ["azure-code", "azure-conv"] {
+        for (name, dispatch, dynamic) in [
+            ("slo-aware", DispatchPolicy::SloAware, true),
+            ("min-load", DispatchPolicy::MinimalLoad, false),
+            ("round-robin", DispatchPolicy::RoundRobin, false),
+        ] {
+            let eval = |rate: f64| -> (f64, f64) {
+                let mut cfg = ClusterConfig::new(
+                    4,
+                    ascend_910b(),
+                    catalog("Qwen3-8B").unwrap(),
+                    EngineFeatures::xllm(1),
+                );
+                cfg.slo = Slo::interactive(2.0, 0.05);
+                // all policies start from the same 1P/3D split; only the
+                // SLO-aware policy may flip roles at runtime
+                cfg.mode = ServingMode::Disaggregated { n_prefill: 1, dynamic };
+                cfg.dispatch = dispatch;
+                let slo = cfg.slo;
+                let mut rng = Rng::new(77);
+                let w = scenario(trace).unwrap().generate(40.0, rate, &mut rng);
+                if w.is_empty() {
+                    return (0.0, 1.0);
+                }
+                let res = sim_run(cfg, w);
+                (res.report.output_throughput(), res.report.slo_attainment(&slo))
+            };
+            let mut lo = 0.1;
+            let mut hi = 0.2;
+            let mut best = (0.0, 0.0, 0.0);
+            for _ in 0..20 {
+                let (t, a) = eval(hi);
+                if a >= 0.90 {
+                    best = (hi, t, a);
+                    lo = hi;
+                    hi *= 2.0;
+                } else {
+                    break;
+                }
+            }
+            for _ in 0..6 {
+                let mid = 0.5 * (lo + hi);
+                let (t, a) = eval(mid);
+                if a >= 0.90 {
+                    best = (mid, t, a);
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            println!(
+                "{:<12} {:<12} | {:>12.2} {:>12.0} {:>9.1}%",
+                trace,
+                name,
+                best.0,
+                best.1,
+                best.2 * 100.0
+            );
+        }
+    }
+    println!("(paper: SLO-aware 1.67x MinimalLoad on Azure Code, 1.1x on Conversation)");
+}
+
+// ---------------------------------------------------------------------
+// fig22: hybrid EPD disaggregation ablation
+// ---------------------------------------------------------------------
+
+fn bench_fig22() {
+    header("fig22 — hybrid EPD disaggregation ablation (TextCaps-like)");
+    // Interference experiment at fixed load on a small cluster with a
+    // tight TPOT SLO: fused instances expose encode time inside decode
+    // iterations; the hybrid strategy isolates phases; naive batching
+    // (no stage-level budgets) lets giant prefill/encode batches stall
+    // decode steps.
+    let slo = Slo::interactive(2.0, 0.018);
+    println!("{:<28} | {:>10} {:>12} {:>10}", "config", "goodput", "mean TPOT", "SLO att.");
+    for (name, strategy, stage_sched) in [
+        ("xllm (hybrid EPD + stages)", Some(EpdStrategy::EpD), true),
+        ("w/o hybrid EPD", None, true),
+        ("w/o stage-level scheduling", None, false),
+    ] {
+        let mut cfg = ClusterConfig::new(
+            2,
+            ascend_910b(),
+            catalog("Qwen2-7B").unwrap(),
+            EngineFeatures::xllm(1),
+        );
+        cfg.slo = slo;
+        cfg.epd = strategy.or(Some(EpdStrategy::Fused));
+        cfg.n_encode = if strategy.is_some() { 1 } else { 0 };
+        cfg.mode = if strategy.is_some() {
+            ServingMode::Disaggregated { n_prefill: 1, dynamic: false }
+        } else {
+            ServingMode::Colocated
+        };
+        if stage_sched {
+            // stage-level scheduling: profiler-style per-phase budgets
+            // keep every iteration under the TPOT SLO (the fused config
+            // must throttle encode hard; the disaggregated one can batch
+            // encode freely on its dedicated pool)
+            cfg.batch.token_budget = if strategy.is_some() { 1024 } else { 128 };
+            cfg.batch.max_encode_batch = if strategy.is_some() { 8 } else { 1 };
+        } else {
+            cfg.batch.token_budget = 1 << 20; // unbounded prefill per iter
+            cfg.batch.max_encode_batch = 64; // giant encode batches
+        }
+        let mut rng = Rng::new(5);
+        let w = scenario("textcaps").unwrap().generate(20.0, 60.0, &mut rng);
+        let res = sim_run(cfg, w);
+        let mut report = res.report;
+        println!(
+            "{:<28} | {:>8.2}/s {:>10.1}ms {:>9.1}%",
+            name,
+            report.goodput(&slo),
+            report.tpot_summary().mean() * 1e3,
+            report.slo_attainment(&slo) * 100.0
+        );
+    }
+    println!("(paper: 9.5 -> 7.2 -> 5.1 req/s goodput)");
+}
+
+// ---------------------------------------------------------------------
+// fig23: online-offline co-location
+// ---------------------------------------------------------------------
+
+fn bench_fig23() {
+    header("fig23 — online-offline co-location: max offline tput w/ online SLO held");
+    let tpot = 0.08;
+    let slo = Slo::interactive(2.0, tpot); // online SLO: TTFT 2s + TPOT 80ms
+    println!("{:<16} | {:>14} {:>16}", "policy", "max offl qps", "offl tok/s @max");
+    for (name, mode) in [
+        ("baseline-pd", ColocationMode::BaselinePd),
+        ("online-priority", ColocationMode::OnlinePriority),
+        ("xllm-ooc", ColocationMode::XllmOoc),
+    ] {
+        let eval = |offline_rate: f64| -> (f64, f64) {
+            let mut cfg = ClusterConfig::new(
+                4,
+                ascend_910b(),
+                catalog("Qwen3-8B").unwrap(),
+                EngineFeatures::xllm(1),
+            );
+            cfg.slo = slo;
+            cfg.mode = ServingMode::Disaggregated { n_prefill: 1, dynamic: true };
+            cfg.colocation =
+                Some((mode, ColocationConfig { online_tpot_s: tpot, ..Default::default() }));
+            let mut rng = Rng::new(31);
+            let mut w = scenario("sharegpt").unwrap().generate(20.0, 6.0, &mut rng);
+            w.extend(scenario("offline-docs").unwrap().generate(20.0, offline_rate, &mut rng));
+            w.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+            let res = sim_run(cfg, w);
+            let online: Vec<_> = res
+                .report
+                .outcomes
+                .iter()
+                .filter(|o| o.input_tokens < 2048 && o.output_tokens < 1024)
+                .collect();
+            let online_att = online.iter().filter(|o| o.meets(&slo)).count() as f64
+                / online.len().max(1) as f64;
+            let offline_tok: u64 = res
+                .report
+                .outcomes
+                .iter()
+                .filter(|o| o.input_tokens >= 2048 || o.output_tokens >= 1024)
+                .map(|o| o.output_tokens)
+                .sum();
+            (online_att, offline_tok as f64 / 20.0)
+        };
+        let mut best = (0.0f64, 0.0f64);
+        let mut rate = 0.5;
+        while rate <= 32.0 {
+            let (att, tok) = eval(rate);
+            if att >= 0.90 {
+                best = (rate, tok);
+            } else {
+                break;
+            }
+            rate *= 2.0;
+        }
+        println!("{:<16} | {:>14.2} {:>16.0}", name, best.0, best.1);
+    }
+    println!("(paper: xLLM-OOC sustains ~3x the offline throughput of both baselines)");
+}
+
+// ---------------------------------------------------------------------
+// table6: async scheduling ablation
+// ---------------------------------------------------------------------
+
+fn bench_table6() {
+    header("table6 — async scheduling (framework-layer pipeline) ablation, 1000/1000");
+    println!(
+        "{:<24} | {:>12} {:>12} {:>8}",
+        "model", "sync tok/s", "async tok/s", "gain"
+    );
+    for m in [
+        "DS-Distill-Qwen-1.5B",
+        "DS-Distill-Qwen-7B",
+        "DS-Distill-Qwen-14B",
+        "DS-Distill-Qwen-32B",
+    ] {
+        let mut tputs = Vec::new();
+        for async_sched in [false, true] {
+            let mut features = EngineFeatures::xllm(1);
+            features.async_sched = async_sched;
+            let cost = CostModel::new(ascend_910b(), catalog(m).unwrap(), features);
+            let b = 64u64;
+            let step = cost.decode_step_s(b, b * 1500);
+            tputs.push(b as f64 / step);
+        }
+        println!(
+            "{:<24} | {:>12.0} {:>12.0} {:>7.1}%",
+            m,
+            tputs[0],
+            tputs[1],
+            (tputs[1] / tputs[0] - 1.0) * 100.0
+        );
+    }
+    println!("(paper: +17.4% @1.5B, +0.6% @7B, +3.7% @14B, +6.6% @32B)");
+}
+
+// ---------------------------------------------------------------------
+// table7: dual-stream comm/comp overlap
+// ---------------------------------------------------------------------
+
+fn bench_table7() {
+    header("table7 — dual-stream micro-batch overlap, DeepSeek-R1 decoder layer");
+    let layers = 61;
+    let single = simulate_single_stream(layers, 13.0e-3, 9.3e-3);
+    let dual = simulate_dual_stream(layers, 13.0e-3, 9.3e-3, 2, 17.0 / 13.0, 12.4 / 9.3);
+    let per_layer_single = single.total_s / layers as f64;
+    let per_layer_dual = dual.total_s / layers as f64;
+    println!("{:<34} {:>14} {:>14}", "metric", "single-stream", "dual-stream");
+    println!(
+        "{:<34} {:>12.1}ms {:>12.1}ms",
+        "total comm (per layer)",
+        single.total_comm_s / layers as f64 * 1e3,
+        dual.total_comm_s / layers as f64 * 1e3
+    );
+    println!(
+        "{:<34} {:>13.0}% {:>13.0}%",
+        "overlapped comm ratio",
+        single.overlap_ratio() * 100.0,
+        dual.overlap_ratio() * 100.0
+    );
+    println!(
+        "{:<34} {:>12.1}ms {:>12.1}ms",
+        "exposed comm (per layer)",
+        single.exposed_comm_s / layers as f64 * 1e3,
+        dual.exposed_comm_s / layers as f64 * 1e3
+    );
+    println!(
+        "{:<34} {:>12.1}ms {:>12.1}ms",
+        "total compute (per layer)",
+        single.total_compute_s / layers as f64 * 1e3,
+        dual.total_compute_s / layers as f64 * 1e3
+    );
+    println!(
+        "{:<34} {:>14} {:>12.1}ms",
+        "reduced time per layer",
+        "-",
+        (per_layer_single - per_layer_dual) * 1e3
+    );
+    println!(
+        "{:<34} {:>14} {:>11.1}ms",
+        "total reduced (61 layers)",
+        "-",
+        (single.total_s - dual.total_s) * 1e3
+    );
+    println!("(paper: 80% overlap, exposed 9.3->2.5ms, 172ms total reduction)");
+}
+
+// ---------------------------------------------------------------------
+// table8: adaptive graph mode
+// ---------------------------------------------------------------------
+
+fn bench_table8() {
+    header("table8 — adaptive graph mode, 2048/2048");
+    println!(
+        "{:<12} {:<6} | {:>12} {:>12} | {:>10} {:>10}",
+        "model", "graph", "tput tok/s", "mean TPOT", "d tput", "d TPOT"
+    );
+    for m in ["Qwen3-1.7B", "Qwen3-4B"] {
+        let mut rows = Vec::new();
+        for graph in [GraphMode::Eager, GraphMode::Adaptive] {
+            let mut features = EngineFeatures::xllm(1);
+            features.graph_mode = graph;
+            let cost = CostModel::new(ascend_910b(), catalog(m).unwrap(), features);
+            let b = 48u64;
+            let step = cost.decode_step_s(b, b * 3072);
+            rows.push((b as f64 / step, step));
+        }
+        println!(
+            "{:<12} {:<6} | {:>12.0} {:>10.2}ms | {:>10} {:>10}",
+            m,
+            "eager",
+            rows[0].0,
+            rows[0].1 * 1e3,
+            "-",
+            "-"
+        );
+        println!(
+            "{:<12} {:<6} | {:>12.0} {:>10.2}ms | {:>+9.1}% {:>+9.1}%",
+            m,
+            "adapt",
+            rows[1].0,
+            rows[1].1 * 1e3,
+            (rows[1].0 / rows[0].0 - 1.0) * 100.0,
+            (rows[1].1 / rows[0].1 - 1.0) * 100.0
+        );
+    }
+    println!("(paper: 1.7B +27.4% tput, -22.0% TPOT; 4B +8.5% tput, -8.8% TPOT)");
+}
+
+// ---------------------------------------------------------------------
+// dpbal: hierarchical DP load balance (§5.2 last ablation)
+// ---------------------------------------------------------------------
+
+fn bench_dpbal() {
+    header("dpbal — hierarchical DP load balance ablation");
+    // layer 3: kernel-level reorder+split (paper: 32k -> ~1.3k tokens/core)
+    let mut reqs = vec![32_000u64];
+    reqs.extend(std::iter::repeat(200).take(23));
+    let rr = dpbalance::round_robin_cores(&reqs, 24);
+    let bal = dpbalance::balanced_cores(&reqs, 24, 1_500);
+    println!(
+        "layer3 kernel-level: max core load {} -> {} tokens ({} splits)",
+        rr.makespan_tokens(),
+        bal.makespan_tokens(),
+        bal.splits
+    );
+
+    // layer 2: 20k-token inter-group gap
+    let mut groups: Vec<dpbalance::DpGroup> = vec![
+        dpbalance::DpGroup { id: 0, kv_tokens: 60_000, kv_capacity: 1 << 20, n_requests: 8 },
+        dpbalance::DpGroup { id: 1, kv_tokens: 40_000, kv_capacity: 1 << 20, n_requests: 8 },
+    ];
+    let before = dpbalance::straggler_factor(&groups);
+    let m = dpbalance::plan_migrations(&groups, 0.05, 8, 2000);
+    dpbalance::apply_migrations(&mut groups, &m);
+    println!(
+        "layer2 inter-DP: straggler {:.3} -> {:.3} via {} migrations",
+        before,
+        dpbalance::straggler_factor(&groups),
+        m.len()
+    );
+
+    // end-to-end: DP-balanced vs static DP on the MoE cost model
+    for dp_balance in [false, true] {
+        let mut features = EngineFeatures::xllm(16);
+        features.dp_groups = 80;
+        features.dp_balance = dp_balance;
+        let cost = CostModel::new(ascend_910b(), catalog("DeepSeek-R1").unwrap(), features);
+        let b = 128u64;
+        let step = cost.decode_step_s(b, b * 2048);
+        println!(
+            "end-to-end decode tput (dp_balance={}): {:.0} tok/s",
+            dp_balance,
+            b as f64 / step
+        );
+    }
+    println!("(paper: ~5% total throughput from hierarchical balancing)");
+}
+
+// ---------------------------------------------------------------------
+// perf: hot-path microbenchmarks (criterion substitute)
+// ---------------------------------------------------------------------
+
+fn bench_perf() {
+    header("perf — hot-path microbenchmarks");
+    let mut rng = Rng::new(17);
+
+    // event queue throughput
+    {
+        let mut q = xllm::sim::EventQueue::new();
+        let n = 1_000_000u64;
+        let t0 = Instant::now();
+        for i in 0..n {
+            q.schedule_at(rng.f64() * 1e6, i);
+        }
+        while q.next().is_some() {}
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "event queue        : {:.2}M events/s ({:.0} ns/event)",
+            n as f64 / dt / 1e6,
+            dt / n as f64 * 1e9
+        );
+    }
+
+    // xtensor map/extend/close cycle
+    {
+        let mut m = xllm::engine::XTensorManager::new(4096, 16, 4096);
+        let n = 200_000u64;
+        let t0 = Instant::now();
+        for i in 0..n {
+            m.open_with_reuse(i, 64);
+            m.extend(i, 64);
+            m.close(i);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "xtensor open/close : {:.2}M cycles/s ({:.0} ns/cycle)",
+            n as f64 / dt / 1e6,
+            dt / n as f64 * 1e9
+        );
+    }
+
+    // beam search step (beam 64)
+    {
+        let beam = 64;
+        let expansions: Vec<Vec<(u32, f64)>> = (0..beam)
+            .map(|_| {
+                let mut v: Vec<(u32, f64)> =
+                    (0..beam).map(|t| (t as u32, rng.f64() * -10.0)).collect();
+                v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                v
+            })
+            .collect();
+        let mut s = BeamSearcher::new(beam);
+        let n = 2000;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            s.step_optimized(&expansions);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "beam step (w=64)   : {:.0} steps/s ({:.1} us/step)",
+            n as f64 / dt,
+            dt / n as f64 * 1e6
+        );
+    }
+
+    // cost model decode step
+    {
+        let cost =
+            CostModel::new(ascend_910b(), catalog("Qwen3-8B").unwrap(), EngineFeatures::xllm(1));
+        let n = 2_000_000u64;
+        let t0 = Instant::now();
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += cost.decode_step_s(1 + (i % 64), 1024 * (i % 64 + 1));
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "cost model step    : {:.2}M evals/s ({:.0} ns/eval, checksum {:.1})",
+            n as f64 / dt / 1e6,
+            dt / n as f64 * 1e9,
+            acc
+        );
+    }
+
+    // cluster sim iteration rate
+    {
+        let cfg = ClusterConfig::new(
+            4,
+            ascend_910b(),
+            catalog("Qwen3-8B").unwrap(),
+            EngineFeatures::xllm(1),
+        );
+        let mut wrng = Rng::new(9);
+        let w = scenario("sharegpt").unwrap().generate(30.0, 8.0, &mut wrng);
+        let t0 = Instant::now();
+        let res = sim_run(cfg, w);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "cluster sim        : {:.0} events/s wall ({} events, {} iters, {:.2}s)",
+            res.events as f64 / dt,
+            res.events,
+            res.iterations,
+            dt
+        );
+    }
+
+    // real PJRT decode step (if artifacts present)
+    let artifacts = std::path::Path::new("artifacts");
+    if artifacts.join("manifest.txt").exists() {
+        let mut rt = xllm::runtime::Runtime::load(artifacts).expect("runtime");
+        let dims = rt.model_dims("tiny").unwrap();
+        let mut kv = xllm::runtime::BatchKv::zeros(dims, 8);
+        let tokens = vec![1i32; 8];
+        rt.decode("tiny", &mut kv, &tokens, &vec![1i32; 8]).unwrap();
+        let n = 24;
+        let t0 = Instant::now();
+        for i in 0..n {
+            let pos = vec![(2 + i) as i32; 8];
+            rt.decode("tiny", &mut kv, &tokens, &pos).unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "real decode (b=8)  : {:.1} steps/s, {:.0} tok/s ({:.2} ms/step)",
+            n as f64 / dt,
+            8.0 * n as f64 / dt,
+            dt / n as f64 * 1e3
+        );
+    }
+}

@@ -1,0 +1,133 @@
+//! Serving configuration and a tiny CLI argument parser.
+//!
+//! No `clap` in the offline crate set; `Args` implements the small subset
+//! needed by the launcher and benches: `--key value`, `--key=value`, and
+//! bare subcommands.
+
+use std::collections::HashMap;
+
+use crate::metrics::Slo;
+
+/// Parsed command-line arguments: one subcommand + `--key value` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.opts.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.flags.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Positional arguments after the subcommand.
+    pub fn positional(&self) -> &[String] {
+        &self.flags
+    }
+}
+
+/// Top-level serving configuration for the real (PJRT) server.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Directory holding the AOT artifacts (HLO text + weights + manifest).
+    pub artifacts_dir: String,
+    /// Max sequences per decode batch (must match an AOT decode bucket).
+    pub max_batch: usize,
+    /// Token budget per iteration for chunked prefill.
+    pub prefill_chunk_tokens: usize,
+    /// Max output tokens per request.
+    pub max_output_tokens: usize,
+    /// SLO attached to online requests.
+    pub slo: Slo,
+    /// Enable speculative decoding with the draft model.
+    pub speculative: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts_dir: "artifacts".to_string(),
+            max_batch: 8,
+            prefill_chunk_tokens: 128,
+            max_output_tokens: 32,
+            slo: Slo::interactive(2.0, 0.5),
+            speculative: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("serve --model tiny --rate 2.5 --max-batch=8 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.get_f64("rate", 0.0), 2.5);
+        assert_eq!(a.get_u64("max-batch", 0), 8);
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("bench");
+        assert_eq!(a.get_or("model", "tiny"), "tiny");
+        assert_eq!(a.get_f64("rate", 1.5), 1.5);
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = parse("");
+        assert!(a.subcommand.is_none());
+    }
+}

@@ -1,0 +1,256 @@
+//! Iteration planning: continuous batching + chunked prefill (paper §3.2
+//! local scheduler, §3.3 optimized batch processing).
+//!
+//! Per iteration the local scheduler builds a batch under a token budget:
+//! (i) all running decode requests join first; (ii) then partially
+//! computed chunked-prefill requests; (iii) then new prefill chunks;
+//! (iv) encode tasks only when no prefill work is pending (the §3.3 rule
+//! "new requests' encoding phases are processed only when no requests are
+//! in the prefill phase").  Online requests may preempt offline ones.
+
+use crate::coordinator::request::{Phase, Request, RequestId};
+
+/// Batch limits for one instance.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchConfig {
+    /// Max sequences decoded per iteration.
+    pub max_decode_seqs: usize,
+    /// Prefill token budget per iteration (chunked prefill).
+    pub token_budget: u64,
+    /// Max encode images per iteration (from the EPD profiler).
+    pub max_encode_batch: usize,
+    /// Instance KV capacity in tokens.
+    pub kv_capacity_tokens: u64,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            max_decode_seqs: 64,
+            token_budget: 1024,
+            max_encode_batch: 8,
+            kv_capacity_tokens: 2_000_000,
+        }
+    }
+}
+
+/// The work selected for one forward iteration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct IterationPlan {
+    pub decode_ids: Vec<RequestId>,
+    /// (request, tokens to prefill this iteration, existing context)
+    pub prefill_chunks: Vec<(RequestId, u64, u64)>,
+    pub encode_ids: Vec<RequestId>,
+    /// Offline requests evicted to make room for online ones.
+    pub preempted: Vec<RequestId>,
+}
+
+impl IterationPlan {
+    pub fn is_empty(&self) -> bool {
+        self.decode_ids.is_empty() && self.prefill_chunks.is_empty() && self.encode_ids.is_empty()
+    }
+
+    pub fn prefill_tokens(&self) -> u64 {
+        self.prefill_chunks.iter().map(|(_, t, _)| t).sum()
+    }
+}
+
+/// Assemble the next iteration from an instance's work set.
+///
+/// `running` — requests in Decode on this instance (insertion order);
+/// `queued`  — requests in Prefill (FCFS order, online before offline
+///             enforced here);
+/// `encodes` — multimodal requests in Encode.
+pub fn plan_iteration(
+    running: &[&Request],
+    queued: &[&Request],
+    encodes: &[&Request],
+    cfg: &BatchConfig,
+) -> IterationPlan {
+    let mut plan = IterationPlan::default();
+    let mut kv_tokens: u64 = running.iter().map(|r| r.context_len()).sum();
+
+    // (i) running decodes first, preferring online when over capacity
+    let mut decode_order: Vec<&&Request> = running.iter().collect();
+    decode_order.sort_by_key(|r| (!r.is_online(), r.id));
+    for r in decode_order {
+        debug_assert!(matches!(r.phase, Phase::Decode));
+        if plan.decode_ids.len() < cfg.max_decode_seqs {
+            plan.decode_ids.push(r.id);
+        } else if !r.is_online() {
+            plan.preempted.push(r.id);
+        } else {
+            // online overflow: preempt the last offline decode if any
+            if let Some(pos) = plan
+                .decode_ids
+                .iter()
+                .rposition(|id| running.iter().any(|q| q.id == *id && !q.is_online()))
+            {
+                let evicted = plan.decode_ids.remove(pos);
+                plan.preempted.push(evicted);
+                plan.decode_ids.push(r.id);
+            }
+        }
+    }
+
+    // (ii)+(iii) chunked prefill under the token budget: online FCFS first,
+    // then offline; partially computed requests keep priority by arrival.
+    let mut budget = cfg.token_budget;
+    let mut queue_order: Vec<&&Request> = queued.iter().collect();
+    queue_order.sort_by_key(|r| {
+        (
+            !r.is_online(),
+            // partially-prefilled requests first within a class
+            r.prefilled == 0 && r.prefix_hit_tokens == 0,
+            r.id,
+        )
+    });
+    for r in queue_order {
+        debug_assert!(matches!(r.phase, Phase::Prefill));
+        if budget == 0 {
+            break;
+        }
+        let want = r.prefill_remaining();
+        if want == 0 {
+            continue;
+        }
+        // KV admission: the chunk's tokens must fit
+        let chunk = want.min(budget);
+        if kv_tokens + chunk > cfg.kv_capacity_tokens {
+            continue;
+        }
+        let ctx = r.context_len();
+        plan.prefill_chunks.push((r.id, chunk, ctx));
+        kv_tokens += chunk;
+        budget -= chunk;
+    }
+
+    // (iv) encode only when no prefill work was scheduled or pending
+    if plan.prefill_chunks.is_empty() && queued.iter().all(|r| r.prefill_remaining() == 0) {
+        for r in encodes.iter().take(cfg.max_encode_batch) {
+            debug_assert!(matches!(r.phase, Phase::Encode));
+            plan.encode_ids.push(r.id);
+        }
+    }
+
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Slo;
+    use crate::workload::RequestSpec;
+
+    fn online(id: RequestId, input: u64, output: u64) -> Request {
+        Request::new(id, RequestSpec::text(0.0, input, output), Slo::UNCONSTRAINED)
+    }
+
+    fn offline(id: RequestId, input: u64, output: u64) -> Request {
+        Request::new(id, RequestSpec::text(0.0, input, output).offline(), Slo::UNCONSTRAINED)
+    }
+
+    fn decoding(mut r: Request) -> Request {
+        let inp = r.spec.input_tokens;
+        r.advance_prefill(inp, 0.0);
+        r
+    }
+
+    #[test]
+    fn decodes_join_first_then_prefill_chunks() {
+        let d1 = decoding(online(1, 10, 5));
+        let d2 = decoding(online(2, 10, 5));
+        let p1 = online(3, 500, 5);
+        let cfg = BatchConfig { token_budget: 256, ..Default::default() };
+        let plan = plan_iteration(&[&d1, &d2], &[&p1], &[], &cfg);
+        assert_eq!(plan.decode_ids, vec![1, 2]);
+        assert_eq!(plan.prefill_chunks, vec![(3, 256, 0)]);
+    }
+
+    #[test]
+    fn chunk_respects_budget_across_requests() {
+        let p1 = online(1, 100, 5);
+        let p2 = online(2, 300, 5);
+        let cfg = BatchConfig { token_budget: 250, ..Default::default() };
+        let plan = plan_iteration(&[], &[&p1, &p2], &[], &cfg);
+        assert_eq!(plan.prefill_chunks, vec![(1, 100, 0), (2, 150, 0)]);
+        assert_eq!(plan.prefill_tokens(), 250);
+    }
+
+    #[test]
+    fn partial_prefill_has_priority() {
+        let mut p1 = online(1, 400, 5);
+        p1.advance_prefill(100, 0.0); // partially computed
+        let p2 = online(2, 100, 5);
+        let cfg = BatchConfig { token_budget: 200, ..Default::default() };
+        let plan = plan_iteration(&[], &[&p2, &p1], &[], &cfg);
+        assert_eq!(plan.prefill_chunks[0].0, 1, "partially-computed chunk must resume first");
+        assert_eq!(plan.prefill_chunks[0].2, 100, "context carried");
+    }
+
+    #[test]
+    fn online_prefill_precedes_offline() {
+        let off = offline(1, 200, 5);
+        let on = online(2, 200, 5);
+        let cfg = BatchConfig { token_budget: 200, ..Default::default() };
+        let plan = plan_iteration(&[], &[&off, &on], &[], &cfg);
+        assert_eq!(plan.prefill_chunks[0].0, 2);
+    }
+
+    #[test]
+    fn encode_only_when_no_prefill_pending() {
+        let mut spec = RequestSpec::text(0.0, 10, 5);
+        spec.image_patches = 64;
+        let e = Request::new(1, spec, Slo::UNCONSTRAINED);
+        let p = online(2, 100, 5);
+        let cfg = BatchConfig::default();
+        let with_prefill = plan_iteration(&[], &[&p], &[&e], &cfg);
+        assert!(with_prefill.encode_ids.is_empty());
+        let without = plan_iteration(&[], &[], &[&e], &cfg);
+        assert_eq!(without.encode_ids, vec![1]);
+    }
+
+    #[test]
+    fn online_decode_preempts_offline_when_full() {
+        let cfg = BatchConfig { max_decode_seqs: 2, ..Default::default() };
+        let d_off = decoding(offline(1, 10, 5));
+        let d_on1 = decoding(online(2, 10, 5));
+        let d_on2 = decoding(online(3, 10, 5));
+        let plan = plan_iteration(&[&d_off, &d_on1, &d_on2], &[], &[], &cfg);
+        assert_eq!(plan.decode_ids.len(), 2);
+        assert!(plan.decode_ids.contains(&2) && plan.decode_ids.contains(&3));
+        assert_eq!(plan.preempted, vec![1]);
+    }
+
+    #[test]
+    fn kv_capacity_gates_admission() {
+        let d = decoding(online(1, 1000, 5));
+        let p = online(2, 500, 5);
+        let cfg = BatchConfig { kv_capacity_tokens: 1100, token_budget: 500, ..Default::default() };
+        let plan = plan_iteration(&[&d], &[&p], &[], &cfg);
+        assert!(plan.prefill_chunks.is_empty(), "chunk would exceed KV capacity");
+    }
+
+    #[test]
+    fn property_budget_never_exceeded() {
+        crate::testutil::quickcheck("budget-bound", |rng| {
+            let budget = rng.range(1, 512);
+            let cfg = BatchConfig { token_budget: budget, ..Default::default() };
+            let reqs: Vec<Request> = (0..rng.range(1, 10))
+                .map(|i| online(i, rng.range(1, 1000), 5))
+                .collect();
+            let refs: Vec<&Request> = reqs.iter().collect();
+            let plan = plan_iteration(&[], &refs, &[], &cfg);
+            crate::prop_assert!(
+                plan.prefill_tokens() <= budget,
+                "tokens {} > budget {}",
+                plan.prefill_tokens(),
+                budget
+            );
+            for (_, t, _) in &plan.prefill_chunks {
+                crate::prop_assert!(*t > 0, "empty chunk scheduled");
+            }
+            Ok(())
+        });
+    }
+}

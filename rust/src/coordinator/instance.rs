@@ -1,0 +1,227 @@
+//! Stateless serving instance + runtime monitor (paper §3.2).
+//!
+//! An instance is "stateless" in the paper's sense: prefill/decode is an
+//! attribute of the *request*, so the same instance can serve either phase
+//! and switches roles by pool membership alone.  The instance tracks its
+//! work sets, KV occupancy, and a runtime monitor collecting the metrics
+//! the paper lists: number/length of prefill and decode requests, memory
+//! usage, TTFT, TPOT, and token generation intervals.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::batcher::BatchConfig;
+use crate::coordinator::pools::InstanceId;
+use crate::coordinator::request::RequestId;
+use crate::sim::CostModel;
+
+/// EMA-based runtime monitor (the paper's "Runtime Instance Monitor").
+#[derive(Debug, Clone)]
+pub struct Monitor {
+    /// EMA of observed per-token decode interval (s).
+    pub ema_token_interval: f64,
+    /// EMA of observed TTFT on this instance (s).
+    pub ema_ttft: f64,
+    /// Iterations executed.
+    pub iterations: u64,
+    /// Tokens generated.
+    pub tokens_generated: u64,
+    alpha: f64,
+    seeded_tpot: bool,
+    seeded_ttft: bool,
+}
+
+impl Default for Monitor {
+    fn default() -> Self {
+        Monitor {
+            ema_token_interval: 0.0,
+            ema_ttft: 0.0,
+            iterations: 0,
+            tokens_generated: 0,
+            alpha: 0.2,
+            seeded_tpot: false,
+            seeded_ttft: false,
+        }
+    }
+}
+
+impl Monitor {
+    pub fn observe_token_interval(&mut self, dt: f64) {
+        if !self.seeded_tpot {
+            self.ema_token_interval = dt;
+            self.seeded_tpot = true;
+        } else {
+            self.ema_token_interval =
+                (1.0 - self.alpha) * self.ema_token_interval + self.alpha * dt;
+        }
+    }
+
+    pub fn observe_ttft(&mut self, ttft: f64) {
+        if !self.seeded_ttft {
+            self.ema_ttft = ttft;
+            self.seeded_ttft = true;
+        } else {
+            self.ema_ttft = (1.0 - self.alpha) * self.ema_ttft + self.alpha * ttft;
+        }
+    }
+
+    pub fn observe_iteration(&mut self, tokens: u64) {
+        self.iterations += 1;
+        self.tokens_generated += tokens;
+    }
+}
+
+/// One serving instance's mutable state in the cluster simulation.
+#[derive(Debug, Clone)]
+pub struct InstanceState {
+    pub id: InstanceId,
+    pub cost: CostModel,
+    pub batch: BatchConfig,
+    /// FCFS prefill queue (request ids).
+    pub prefill_queue: VecDeque<RequestId>,
+    /// Running decode set.
+    pub running: Vec<RequestId>,
+    /// Multimodal encode queue.
+    pub encode_queue: VecDeque<RequestId>,
+    /// KV transfers arriving (request, ready time) — FCFS migration queue.
+    pub migrations: VecDeque<(RequestId, f64)>,
+    /// Currently executing an iteration.
+    pub busy: bool,
+    /// Instance is down (fault injection).
+    pub failed: bool,
+    /// KV tokens resident (decode requests' contexts + finished prefills).
+    pub kv_tokens: u64,
+    pub monitor: Monitor,
+}
+
+impl InstanceState {
+    pub fn new(id: InstanceId, cost: CostModel, batch: BatchConfig) -> InstanceState {
+        InstanceState {
+            id,
+            cost,
+            batch,
+            prefill_queue: VecDeque::new(),
+            running: Vec::new(),
+            encode_queue: VecDeque::new(),
+            migrations: VecDeque::new(),
+            busy: false,
+            failed: false,
+            kv_tokens: 0,
+            monitor: Monitor::default(),
+        }
+    }
+
+    /// Any work pending?
+    pub fn has_work(&self) -> bool {
+        !self.prefill_queue.is_empty()
+            || !self.running.is_empty()
+            || !self.encode_queue.is_empty()
+    }
+
+    /// Is the instance idle with nothing queued (role-flip candidate)?
+    pub fn is_drained(&self) -> bool {
+        !self.busy && !self.has_work() && self.migrations.is_empty()
+    }
+
+    /// KV capacity remaining.
+    pub fn kv_free(&self) -> u64 {
+        self.batch.kv_capacity_tokens.saturating_sub(self.kv_tokens)
+    }
+
+    /// Remove a request id from every queue (fault recovery / migration).
+    pub fn evict(&mut self, id: RequestId) {
+        self.prefill_queue.retain(|&r| r != id);
+        self.running.retain(|&r| r != id);
+        self.encode_queue.retain(|&r| r != id);
+        self.migrations.retain(|&(r, _)| r != id);
+    }
+
+    /// All request ids owned by this instance.
+    pub fn owned_requests(&self) -> Vec<RequestId> {
+        let mut out: Vec<RequestId> = self.prefill_queue.iter().copied().collect();
+        out.extend(self.running.iter().copied());
+        out.extend(self.encode_queue.iter().copied());
+        out.extend(self.migrations.iter().map(|(r, _)| *r));
+        out
+    }
+}
+
+/// Immutable load snapshot used by the global scheduler.
+#[derive(Debug, Clone, Copy)]
+pub struct InstanceView {
+    pub id: InstanceId,
+    /// Prompt tokens waiting in the prefill queue.
+    pub queued_prefill_tokens: u64,
+    /// Total context tokens of running decodes.
+    pub running_tokens: u64,
+    pub n_running: usize,
+    pub n_queued: usize,
+    pub kv_used: u64,
+    pub kv_capacity: u64,
+    pub failed: bool,
+    /// Monitor readings.
+    pub ema_token_interval: f64,
+    pub ema_ttft: f64,
+}
+
+impl InstanceView {
+    pub fn kv_free(&self) -> u64 {
+        self.kv_capacity.saturating_sub(self.kv_used)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ascend_910b, catalog};
+    use crate::sim::EngineFeatures;
+
+    fn inst() -> InstanceState {
+        let cost = CostModel::new(
+            ascend_910b(),
+            catalog("Qwen3-8B").unwrap(),
+            EngineFeatures::xllm(1),
+        );
+        InstanceState::new(0, cost, BatchConfig::default())
+    }
+
+    #[test]
+    fn monitor_ema_tracks() {
+        let mut m = Monitor::default();
+        m.observe_token_interval(0.05);
+        assert!((m.ema_token_interval - 0.05).abs() < 1e-12);
+        for _ in 0..100 {
+            m.observe_token_interval(0.10);
+        }
+        assert!((m.ema_token_interval - 0.10).abs() < 0.005);
+    }
+
+    #[test]
+    fn drained_and_work_flags() {
+        let mut i = inst();
+        assert!(i.is_drained());
+        i.prefill_queue.push_back(7);
+        assert!(i.has_work());
+        assert!(!i.is_drained());
+        i.prefill_queue.clear();
+        i.migrations.push_back((3, 1.0));
+        assert!(!i.is_drained(), "in-flight migration blocks draining");
+    }
+
+    #[test]
+    fn evict_removes_everywhere() {
+        let mut i = inst();
+        i.prefill_queue.push_back(1);
+        i.running.push(1);
+        i.encode_queue.push_back(1);
+        i.migrations.push_back((1, 0.5));
+        i.evict(1);
+        assert!(i.owned_requests().is_empty());
+    }
+
+    #[test]
+    fn kv_free_saturates() {
+        let mut i = inst();
+        i.kv_tokens = i.batch.kv_capacity_tokens + 10;
+        assert_eq!(i.kv_free(), 0);
+    }
+}

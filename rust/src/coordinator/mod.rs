@@ -1,0 +1,23 @@
+//! Coordinator: the shared request/batch/instance machinery under both
+//! xLLM-Service policies (service/) and the engine optimizations (engine/).
+//!
+//! * [`request`]   — request lifecycle (Encode/Prefill/Decode phases).
+//! * [`batcher`]   — continuous batching + chunked prefill planning.
+//! * [`instance`]  — stateless instance state + runtime monitor.
+//! * [`pools`]     — the four elastic pools (P, D, P→D, D→P) + Encode.
+//! * [`predictor`] — online-calibrated TTFT predictor.
+//! * [`scheduler`] — global dispatch policies + SLO-aware role switching.
+
+pub mod batcher;
+pub mod instance;
+pub mod pools;
+pub mod predictor;
+pub mod request;
+pub mod scheduler;
+
+pub use batcher::{plan_iteration, BatchConfig, IterationPlan};
+pub use instance::{InstanceState, InstanceView, Monitor};
+pub use pools::{ElasticPools, InstanceId, PoolKind};
+pub use predictor::TtftPredictor;
+pub use request::{Phase, Request, RequestId};
+pub use scheduler::{plan_role_switches, DispatchPolicy, GlobalScheduler, Placement, RoleFlip};

@@ -1,0 +1,234 @@
+//! Elastic instance pools (paper §3.2).
+//!
+//! Four pools — P, D, P→D, D→P — of *stateless* instances.  Flipping a
+//! role only moves the instance id between pools ("zero-wait-time instance
+//! scheduling": no restart, no model reload).  Transitional pools hold
+//! instances that have been retargeted but still drain work of their old
+//! role; the scheduler prefers them when flipping back (§3.2: prioritize
+//! the lightest-load instance from the P→D pool when converting to
+//! prefill, and vice versa).
+
+pub type InstanceId = usize;
+
+/// Pool membership of an instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PoolKind {
+    Prefill,
+    Decode,
+    /// Converting Prefill -> Decode (still draining prefill work).
+    PrefillToDecode,
+    /// Converting Decode -> Prefill (still draining decode work).
+    DecodeToPrefill,
+    /// Multimodal encode pool (§3.3 EPD).
+    Encode,
+}
+
+impl PoolKind {
+    /// Which phases this pool currently serves (transitional pools serve
+    /// both their old and new roles while draining).
+    pub fn serves_prefill(&self) -> bool {
+        matches!(self, PoolKind::Prefill | PoolKind::PrefillToDecode | PoolKind::DecodeToPrefill)
+    }
+
+    pub fn serves_decode(&self) -> bool {
+        matches!(self, PoolKind::Decode | PoolKind::PrefillToDecode | PoolKind::DecodeToPrefill)
+    }
+
+    pub fn serves_encode(&self) -> bool {
+        matches!(self, PoolKind::Encode)
+    }
+
+    /// Target role the pool is headed to.
+    pub fn target_is_decode(&self) -> bool {
+        matches!(self, PoolKind::Decode | PoolKind::PrefillToDecode)
+    }
+}
+
+/// The four (plus encode) elastic pools.
+#[derive(Debug, Clone, Default)]
+pub struct ElasticPools {
+    membership: Vec<PoolKind>, // indexed by InstanceId
+    pub flips: u64,
+}
+
+impl ElasticPools {
+    /// Create with `n_prefill` P instances, `n_decode` D instances and
+    /// `n_encode` E instances (ids assigned in that order).
+    pub fn new(n_prefill: usize, n_decode: usize, n_encode: usize) -> ElasticPools {
+        let mut membership = Vec::new();
+        membership.extend(std::iter::repeat(PoolKind::Prefill).take(n_prefill));
+        membership.extend(std::iter::repeat(PoolKind::Decode).take(n_decode));
+        membership.extend(std::iter::repeat(PoolKind::Encode).take(n_encode));
+        ElasticPools { membership, flips: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.membership.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.membership.is_empty()
+    }
+
+    pub fn kind(&self, id: InstanceId) -> PoolKind {
+        self.membership[id]
+    }
+
+    pub fn of_kind(&self, kind: PoolKind) -> Vec<InstanceId> {
+        self.membership
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| **k == kind)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Instances that can take new prefill work right now.
+    pub fn prefill_capable(&self) -> Vec<InstanceId> {
+        self.membership
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| k.serves_prefill() && !k.target_is_decode())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Instances that can take new decode work right now.
+    pub fn decode_capable(&self) -> Vec<InstanceId> {
+        self.membership
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| k.serves_decode() && k.target_is_decode())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn encode_capable(&self) -> Vec<InstanceId> {
+        self.of_kind(PoolKind::Encode)
+    }
+
+    /// Count of instances whose *target* role is decode.
+    pub fn decode_target_count(&self) -> usize {
+        self.membership.iter().filter(|k| k.target_is_decode()).count()
+    }
+
+    pub fn prefill_target_count(&self) -> usize {
+        self.membership
+            .iter()
+            .filter(|k| matches!(k, PoolKind::Prefill | PoolKind::DecodeToPrefill))
+            .count()
+    }
+
+    /// Retarget an instance toward decode (P -> P→D).  Returns false if it
+    /// already targets decode or is an encode instance.
+    pub fn flip_to_decode(&mut self, id: InstanceId) -> bool {
+        match self.membership[id] {
+            PoolKind::Prefill | PoolKind::DecodeToPrefill => {
+                self.membership[id] = PoolKind::PrefillToDecode;
+                self.flips += 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Retarget an instance toward prefill (D -> D→P), keeping at least
+    /// `min_decode` instances targeting decode (§3.2: "always ensures that
+    /// at least two decode instances are available").
+    pub fn flip_to_prefill(&mut self, id: InstanceId, min_decode: usize) -> bool {
+        if !self.membership[id].target_is_decode() {
+            return false;
+        }
+        if self.decode_target_count() <= min_decode {
+            return false;
+        }
+        self.membership[id] = PoolKind::DecodeToPrefill;
+        self.flips += 1;
+        true
+    }
+
+    /// Finalize a transitional instance that has drained its old work.
+    pub fn settle(&mut self, id: InstanceId) {
+        self.membership[id] = match self.membership[id] {
+            PoolKind::PrefillToDecode => PoolKind::Decode,
+            PoolKind::DecodeToPrefill => PoolKind::Prefill,
+            k => k,
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_partition() {
+        let p = ElasticPools::new(2, 3, 1);
+        assert_eq!(p.of_kind(PoolKind::Prefill), vec![0, 1]);
+        assert_eq!(p.of_kind(PoolKind::Decode), vec![2, 3, 4]);
+        assert_eq!(p.of_kind(PoolKind::Encode), vec![5]);
+        assert_eq!(p.decode_target_count(), 3);
+    }
+
+    #[test]
+    fn flip_cycle_with_settle() {
+        let mut p = ElasticPools::new(2, 2, 0);
+        assert!(p.flip_to_decode(0));
+        assert_eq!(p.kind(0), PoolKind::PrefillToDecode);
+        assert_eq!(p.decode_target_count(), 3);
+        // transitional instance still serves prefill while draining
+        assert!(p.kind(0).serves_prefill());
+        assert!(p.kind(0).serves_decode());
+        p.settle(0);
+        assert_eq!(p.kind(0), PoolKind::Decode);
+        assert!(!p.kind(0).serves_prefill());
+    }
+
+    #[test]
+    fn min_decode_floor_enforced() {
+        let mut p = ElasticPools::new(1, 2, 0);
+        assert!(!p.flip_to_prefill(1, 2), "would drop below 2 decode targets");
+        assert!(p.flip_to_decode(0));
+        assert!(p.flip_to_prefill(1, 2), "now 3 targets, can spare one");
+        assert_eq!(p.decode_target_count(), 2);
+    }
+
+    #[test]
+    fn encode_instances_never_flip() {
+        let mut p = ElasticPools::new(1, 1, 1);
+        assert!(!p.flip_to_decode(2));
+        assert!(!p.flip_to_prefill(2, 0));
+        assert_eq!(p.kind(2), PoolKind::Encode);
+    }
+
+    #[test]
+    fn capable_sets_respect_transitions() {
+        let mut p = ElasticPools::new(2, 2, 0);
+        p.flip_to_decode(0); // 0: P->D — no NEW prefill work
+        assert_eq!(p.prefill_capable(), vec![1]);
+        let dec = p.decode_capable();
+        assert!(dec.contains(&0) && dec.contains(&2) && dec.contains(&3));
+    }
+
+    #[test]
+    fn property_flip_count_and_membership_conservation() {
+        crate::testutil::quickcheck("pools-conserve", |rng| {
+            let n = rng.range(3, 10) as usize;
+            let mut p = ElasticPools::new(n / 2, n - n / 2, 0);
+            for _ in 0..50 {
+                let id = rng.index(n);
+                if rng.chance(0.5) {
+                    p.flip_to_decode(id);
+                } else {
+                    p.flip_to_prefill(id, 1);
+                }
+                if rng.chance(0.3) {
+                    p.settle(rng.index(n));
+                }
+                crate::prop_assert!(p.decode_target_count() >= 1, "decode floor violated");
+                crate::prop_assert!(p.len() == n, "membership size changed");
+            }
+            Ok(())
+        });
+    }
+}

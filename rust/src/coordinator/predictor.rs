@@ -1,0 +1,130 @@
+//! TTFT predictor (paper §2.1 / §3.2).
+//!
+//! "A TTFT prediction model built for text requests. It evaluates SLO
+//! fulfillment by analyzing queueing delays from each prefill instance
+//! queue and request input lengths."  TTFT is predictable because prefill
+//! compute is ~quadratic in input length (§3.2); TPOT is *not* reliably
+//! predictable, which is why the runtime monitor (instance.rs) exists.
+//!
+//! Model: `ttft = queue_delay + scale * (a2·L² + a1·L + a0)` where the
+//! polynomial comes from the roofline cost model and `scale` is learned
+//! online from (predicted, observed) pairs — the paper's "online factor
+//! learning" applied at the service layer.
+
+use crate::sim::CostModel;
+
+/// Online-calibrated TTFT predictor.
+#[derive(Debug, Clone)]
+pub struct TtftPredictor {
+    /// Multiplicative correction learned from observations.
+    scale: f64,
+    /// EMA smoothing for the correction.
+    alpha: f64,
+    pub observations: u64,
+}
+
+impl Default for TtftPredictor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TtftPredictor {
+    pub fn new() -> TtftPredictor {
+        TtftPredictor { scale: 1.0, alpha: 0.1, observations: 0 }
+    }
+
+    /// Raw prefill-time estimate for `input_tokens` on `cost`'s instance.
+    pub fn prefill_estimate(&self, cost: &CostModel, input_tokens: u64) -> f64 {
+        self.scale * cost.prefill_s(input_tokens, 0)
+    }
+
+    /// Predict TTFT = queueing delay + own prefill time.
+    ///
+    /// `queued_tokens` — prompt tokens already waiting in the instance's
+    /// prefill queue (each must run before this request).
+    pub fn predict(&self, cost: &CostModel, queued_tokens: u64, input_tokens: u64) -> f64 {
+        let queue_delay = if queued_tokens > 0 {
+            self.scale * cost.prefill_s(queued_tokens, 0)
+        } else {
+            0.0
+        };
+        queue_delay + self.prefill_estimate(cost, input_tokens)
+    }
+
+    /// Feed back an observed TTFT for calibration.
+    pub fn observe(&mut self, cost: &CostModel, queued_tokens: u64, input_tokens: u64, observed_s: f64) {
+        let predicted = self.predict(cost, queued_tokens, input_tokens);
+        if predicted <= 1e-9 || observed_s <= 0.0 {
+            return;
+        }
+        let ratio = (observed_s / predicted).clamp(0.2, 5.0);
+        self.scale = (1.0 - self.alpha) * self.scale + self.alpha * self.scale * ratio;
+        self.scale = self.scale.clamp(0.05, 20.0);
+        self.observations += 1;
+    }
+
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ascend_910b, catalog};
+    use crate::sim::EngineFeatures;
+
+    fn cost() -> CostModel {
+        CostModel::new(ascend_910b(), catalog("Qwen3-8B").unwrap(), EngineFeatures::xllm(1))
+    }
+
+    #[test]
+    fn prediction_grows_superlinearly_in_length() {
+        let p = TtftPredictor::new();
+        let c = cost();
+        let t1 = p.predict(&c, 0, 512);
+        let t4 = p.predict(&c, 0, 2048);
+        assert!(t4 > 2.5 * t1);
+    }
+
+    #[test]
+    fn queueing_delay_adds() {
+        let p = TtftPredictor::new();
+        let c = cost();
+        let no_queue = p.predict(&c, 0, 1024);
+        let queued = p.predict(&c, 4096, 1024);
+        assert!(queued > no_queue * 1.5);
+    }
+
+    #[test]
+    fn calibration_converges_to_observed_ratio() {
+        let mut p = TtftPredictor::new();
+        let c = cost();
+        let truth_factor = 1.8;
+        for _ in 0..200 {
+            // ground truth: real prefill takes base * truth_factor
+            let base = c.prefill_s(1024, 0);
+            p.observe(&c, 0, 1024, base * truth_factor);
+        }
+        let calibrated = p.predict(&c, 0, 1024) / c.prefill_s(1024, 0);
+        assert!(
+            (calibrated - truth_factor).abs() < 0.3,
+            "scale {calibrated} should approach {truth_factor}"
+        );
+    }
+
+    #[test]
+    fn scale_stays_bounded() {
+        let mut p = TtftPredictor::new();
+        let c = cost();
+        for _ in 0..1000 {
+            p.observe(&c, 0, 512, 1e6); // absurd observations
+        }
+        assert!(p.scale() <= 20.0);
+        for _ in 0..1000 {
+            p.observe(&c, 0, 512, 1e-9);
+        }
+        assert!(p.scale() >= 0.05);
+    }
+}

@@ -1,0 +1,224 @@
+//! Request lifecycle: phases, SLOs, progress tracking.
+//!
+//! A request moves Encode -> Prefill -> Decode -> Done (text requests skip
+//! Encode).  The *phase is a request attribute, not an instance attribute*
+//! (paper §3.2 "stateless instance"), which is what lets any instance
+//! serve any phase and pools flip roles with zero wait.
+
+use crate::metrics::{RequestOutcome, Slo};
+use crate::workload::{RequestClass, RequestSpec};
+
+pub type RequestId = u64;
+
+/// Inference phase of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Multimodal image encoding (§3.3).
+    Encode,
+    /// Prompt prefill (possibly chunked, §3.2).
+    Prefill,
+    /// Autoregressive decode.
+    Decode,
+    Done,
+    /// Dropped by fault handling / admission control.
+    Failed,
+}
+
+/// A live request in the coordinator.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub spec: RequestSpec,
+    pub slo: Slo,
+    pub phase: Phase,
+    /// Prompt tokens already prefilled (chunked prefill progress).
+    pub prefilled: u64,
+    /// Output tokens generated so far.
+    pub decoded: u64,
+    /// Encode completed (multimodal only).
+    pub encoded: bool,
+    /// Timestamps (simulated seconds).
+    pub first_token_s: Option<f64>,
+    pub finish_s: Option<f64>,
+    /// Prefix tokens satisfied from the global KV cache (skip prefill).
+    pub prefix_hit_tokens: u64,
+    /// Times this request was preempted (offline co-location).
+    pub preemptions: u32,
+    /// Times this request was migrated across instances.
+    pub migrations: u32,
+}
+
+impl Request {
+    pub fn new(id: RequestId, spec: RequestSpec, slo: Slo) -> Request {
+        let phase = if spec.is_multimodal() { Phase::Encode } else { Phase::Prefill };
+        Request {
+            id,
+            spec,
+            slo,
+            phase,
+            prefilled: 0,
+            decoded: 0,
+            encoded: false,
+            first_token_s: None,
+            finish_s: None,
+            prefix_hit_tokens: 0,
+            preemptions: 0,
+            migrations: 0,
+        }
+    }
+
+    pub fn is_online(&self) -> bool {
+        self.spec.class == RequestClass::Online
+    }
+
+    /// Prompt tokens still needing prefill.
+    pub fn prefill_remaining(&self) -> u64 {
+        self.spec.input_tokens.saturating_sub(self.prefilled.max(self.prefix_hit_tokens))
+    }
+
+    /// Total context length right now (for KV accounting).
+    pub fn context_len(&self) -> u64 {
+        self.prefilled.max(self.prefix_hit_tokens) + self.decoded
+    }
+
+    /// Output tokens still to generate.
+    pub fn decode_remaining(&self) -> u64 {
+        self.spec.output_tokens.saturating_sub(self.decoded)
+    }
+
+    /// Advance prefill by `tokens`; transitions to Decode when complete.
+    /// Returns true if prefill just completed.
+    pub fn advance_prefill(&mut self, tokens: u64, now_s: f64) -> bool {
+        debug_assert!(matches!(self.phase, Phase::Prefill));
+        self.prefilled = (self.prefilled.max(self.prefix_hit_tokens) + tokens)
+            .min(self.spec.input_tokens);
+        if self.prefill_remaining() == 0 {
+            self.phase = Phase::Decode;
+            // prefill emits the first output token
+            self.decoded = self.decoded.max(1);
+            if self.first_token_s.is_none() {
+                self.first_token_s = Some(now_s);
+            }
+            if self.decode_remaining() == 0 {
+                self.phase = Phase::Done;
+                self.finish_s = Some(now_s);
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Record `n` decode tokens; transitions to Done when complete.
+    /// Returns true if the request just finished.
+    pub fn advance_decode(&mut self, n: u64, now_s: f64) -> bool {
+        debug_assert!(matches!(self.phase, Phase::Decode));
+        if self.first_token_s.is_none() {
+            self.first_token_s = Some(now_s);
+        }
+        self.decoded = (self.decoded + n).min(self.spec.output_tokens);
+        if self.decode_remaining() == 0 {
+            self.phase = Phase::Done;
+            self.finish_s = Some(now_s);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Mark encode complete; transitions to Prefill.
+    pub fn finish_encode(&mut self) {
+        debug_assert!(matches!(self.phase, Phase::Encode));
+        self.encoded = true;
+        self.phase = Phase::Prefill;
+    }
+
+    pub fn fail(&mut self, now_s: f64) {
+        self.phase = Phase::Failed;
+        self.finish_s = Some(now_s);
+    }
+
+    /// Completion record for the metrics layer.
+    pub fn outcome(&self) -> Option<RequestOutcome> {
+        let finish = self.finish_s?;
+        Some(RequestOutcome {
+            arrival_s: self.spec.arrival_s,
+            first_token_s: self.first_token_s.unwrap_or(finish),
+            finish_s: finish,
+            input_tokens: self.spec.input_tokens,
+            output_tokens: self.decoded,
+            failed: matches!(self.phase, Phase::Failed),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(input: u64, output: u64) -> Request {
+        Request::new(1, RequestSpec::text(0.0, input, output), Slo::UNCONSTRAINED)
+    }
+
+    #[test]
+    fn lifecycle_text() {
+        let mut r = req(100, 3);
+        assert_eq!(r.phase, Phase::Prefill);
+        assert!(!r.advance_prefill(60, 1.0));
+        assert_eq!(r.prefill_remaining(), 40);
+        assert!(r.advance_prefill(40, 2.0));
+        assert_eq!(r.phase, Phase::Decode);
+        assert_eq!(r.first_token_s, Some(2.0));
+        assert_eq!(r.decoded, 1);
+        assert!(!r.advance_decode(1, 3.0));
+        assert!(r.advance_decode(1, 4.0));
+        assert_eq!(r.phase, Phase::Done);
+        let o = r.outcome().unwrap();
+        assert_eq!(o.output_tokens, 3);
+        assert!((o.ttft() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multimodal_starts_in_encode() {
+        let mut spec = RequestSpec::text(0.0, 10, 5);
+        spec.image_patches = 64;
+        let mut r = Request::new(2, spec, Slo::UNCONSTRAINED);
+        assert_eq!(r.phase, Phase::Encode);
+        r.finish_encode();
+        assert_eq!(r.phase, Phase::Prefill);
+    }
+
+    #[test]
+    fn prefix_hit_reduces_prefill() {
+        let mut r = req(100, 2);
+        r.prefix_hit_tokens = 80;
+        assert_eq!(r.prefill_remaining(), 20);
+        assert!(r.advance_prefill(20, 1.0));
+        assert_eq!(r.phase, Phase::Decode);
+    }
+
+    #[test]
+    fn single_token_output_finishes_at_prefill() {
+        let mut r = req(10, 1);
+        assert!(r.advance_prefill(10, 1.0));
+        assert_eq!(r.phase, Phase::Done);
+        assert_eq!(r.finish_s, Some(1.0));
+    }
+
+    #[test]
+    fn overshoot_is_clamped() {
+        let mut r = req(10, 2);
+        r.advance_prefill(1000, 1.0);
+        assert_eq!(r.prefilled, 10);
+        r.advance_decode(1000, 2.0);
+        assert_eq!(r.decoded, 2);
+    }
+
+    #[test]
+    fn failed_outcome_flagged() {
+        let mut r = req(10, 2);
+        r.fail(5.0);
+        let o = r.outcome().unwrap();
+        assert!(o.failed);
+    }
+}

@@ -1,0 +1,401 @@
+//! Global request scheduling + SLO-aware instance role switching (§3.2).
+//!
+//! Three dispatch policies (the Fig 21 ablation):
+//! * `RoundRobin`   — vLLM/SGLang-style static assignment.
+//! * `MinimalLoad`  — greedy least-load.
+//! * `SloAware`     — xLLM: greedy least-load *verified by the TTFT
+//!   predictor*; falls through P pool -> D→P pool -> instance flip.
+//!
+//! Role switching (`plan_role_switches`) implements §3.2: convert decode
+//! instances to prefill when predicted TTFT violates the SLO, convert
+//! prefill instances to decode when the observed token-generation interval
+//! exceeds the TPOT threshold or prefill instances sit idle, always
+//! keeping >= 2 decode-target instances, and preferring the
+//! lightest-loaded instance in the transitional pool.
+
+use crate::coordinator::instance::InstanceView;
+use crate::coordinator::pools::{ElasticPools, InstanceId, PoolKind};
+use crate::coordinator::predictor::TtftPredictor;
+use crate::metrics::Slo;
+use crate::sim::CostModel;
+
+/// Request dispatch policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    RoundRobin,
+    MinimalLoad,
+    SloAware,
+}
+
+/// Outcome of a prefill placement attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Dispatch to this instance.
+    Instance(InstanceId),
+    /// No instance satisfies the SLO: the caller should flip a decode
+    /// instance to prefill and then dispatch to it.
+    NeedFlip,
+}
+
+/// Global scheduler state.
+#[derive(Debug, Clone)]
+pub struct GlobalScheduler {
+    pub policy: DispatchPolicy,
+    pub predictor: TtftPredictor,
+    rr_next: usize,
+}
+
+impl GlobalScheduler {
+    pub fn new(policy: DispatchPolicy) -> GlobalScheduler {
+        GlobalScheduler { policy, predictor: TtftPredictor::new(), rr_next: 0 }
+    }
+
+    /// Choose a prefill instance for a request of `input_tokens`.
+    ///
+    /// `primary` — instances in the Prefill pool; `fallback` — instances in
+    /// the D→P pool (already converting).  Views must be alive (not failed).
+    pub fn place_prefill(
+        &mut self,
+        primary: &[InstanceView],
+        fallback: &[InstanceView],
+        cost: &CostModel,
+        input_tokens: u64,
+        slo: &Slo,
+    ) -> Placement {
+        let alive =
+            |vs: &[InstanceView]| -> Vec<InstanceView> { vs.iter().copied().filter(|v| !v.failed).collect() };
+        let primary = alive(primary);
+        let fallback = alive(fallback);
+        match self.policy {
+            DispatchPolicy::RoundRobin => {
+                let all: Vec<&InstanceView> = primary.iter().chain(fallback.iter()).collect();
+                if all.is_empty() {
+                    return Placement::NeedFlip;
+                }
+                let pick = all[self.rr_next % all.len()].id;
+                self.rr_next += 1;
+                Placement::Instance(pick)
+            }
+            DispatchPolicy::MinimalLoad => {
+                let best = primary
+                    .iter()
+                    .chain(fallback.iter())
+                    .min_by_key(|v| v.queued_prefill_tokens + v.running_tokens);
+                match best {
+                    Some(v) => Placement::Instance(v.id),
+                    None => Placement::NeedFlip,
+                }
+            }
+            DispatchPolicy::SloAware => {
+                // 1) least estimated queueing delay in the P pool, verified
+                //    by the TTFT predictor against the SLO; ties broken by
+                //    total load so colocated instances spread decode work
+                let mut candidates: Vec<&InstanceView> = primary.iter().collect();
+                candidates.sort_by_key(|v| (v.queued_prefill_tokens, v.running_tokens, v.n_running));
+                for v in &candidates {
+                    let ttft =
+                        self.predictor.predict(cost, v.queued_prefill_tokens, input_tokens);
+                    if ttft <= slo.ttft_s {
+                        return Placement::Instance(v.id);
+                    }
+                }
+                // 2) D→P pool
+                let mut fb: Vec<&InstanceView> = fallback.iter().collect();
+                fb.sort_by_key(|v| v.queued_prefill_tokens);
+                for v in &fb {
+                    let ttft =
+                        self.predictor.predict(cost, v.queued_prefill_tokens, input_tokens);
+                    if ttft <= slo.ttft_s {
+                        return Placement::Instance(v.id);
+                    }
+                }
+                // 3) nothing satisfies the SLO: ask for a flip, or if the
+                //    SLO is unconstrained just take the least-loaded
+                if slo.ttft_s.is_infinite() {
+                    return candidates
+                        .first()
+                        .or(fb.first())
+                        .map(|v| Placement::Instance(v.id))
+                        .unwrap_or(Placement::NeedFlip);
+                }
+                Placement::NeedFlip
+            }
+        }
+    }
+
+    /// Choose a decode instance.  Prefers `prefer` (the instance that ran
+    /// prefill — avoids KV transfer, §3.2) when it has capacity; otherwise
+    /// the fewest running tokens whose admission keeps the batch under its
+    /// memory/throughput limits.
+    pub fn place_decode(
+        &mut self,
+        views: &[InstanceView],
+        prefer: Option<InstanceId>,
+        context_tokens: u64,
+        max_decode_seqs: usize,
+    ) -> Option<InstanceId> {
+        let ok = |v: &InstanceView| {
+            !v.failed && v.n_running < max_decode_seqs && v.kv_free() >= context_tokens
+        };
+        if self.policy == DispatchPolicy::SloAware {
+            if let Some(p) = prefer {
+                if let Some(v) = views.iter().find(|v| v.id == p) {
+                    if ok(v) {
+                        return Some(p);
+                    }
+                }
+            }
+        }
+        match self.policy {
+            DispatchPolicy::RoundRobin => {
+                let alive: Vec<&InstanceView> = views.iter().filter(|v| ok(v)).collect();
+                if alive.is_empty() {
+                    return None;
+                }
+                let pick = alive[self.rr_next % alive.len()].id;
+                self.rr_next += 1;
+                Some(pick)
+            }
+            _ => views
+                .iter()
+                .filter(|v| ok(v))
+                .min_by_key(|v| v.running_tokens)
+                .map(|v| v.id),
+        }
+    }
+}
+
+/// A role-flip decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoleFlip {
+    ToPrefill(InstanceId),
+    ToDecode(InstanceId),
+}
+
+/// SLO-aware instance role switching (§3.2).
+///
+/// Inputs are the current views (indexed by instance id), the pools, the
+/// predictor, a representative cost model, the SLO, and the prompt-token
+/// backlog that has not been dispatched yet.
+pub fn plan_role_switches(
+    views: &[InstanceView],
+    pools: &ElasticPools,
+    predictor: &TtftPredictor,
+    cost: &CostModel,
+    slo: &Slo,
+    undispatched_prefill_tokens: u64,
+    min_decode: usize,
+) -> Vec<RoleFlip> {
+    let mut flips = Vec::new();
+
+    // --- prefill side: predicted TTFT violation => pull a decode instance
+    let prefill_ids = pools.prefill_capable();
+    if !prefill_ids.is_empty() || undispatched_prefill_tokens > 0 {
+        let backlog: u64 = prefill_ids
+            .iter()
+            .map(|&i| views[i].queued_prefill_tokens)
+            .sum::<u64>()
+            + undispatched_prefill_tokens;
+        let per_instance = backlog / (prefill_ids.len().max(1) as u64);
+        let est = predictor.predict(cost, per_instance, 0);
+        if est > slo.ttft_s && slo.ttft_s.is_finite() {
+            // convert the lightest decode instance, preferring P→D pool
+            // (§3.2: "prioritizes selecting the instance with the lightest
+            // load from the P→D pool")
+            let candidates: Vec<InstanceId> = {
+                let p2d = pools.of_kind(PoolKind::PrefillToDecode);
+                if p2d.is_empty() {
+                    pools.of_kind(PoolKind::Decode)
+                } else {
+                    p2d
+                }
+            };
+            if pools.decode_target_count() > min_decode {
+                if let Some(&lightest) = candidates
+                    .iter()
+                    .filter(|&&i| !views[i].failed)
+                    .min_by_key(|&&i| views[i].running_tokens)
+                {
+                    flips.push(RoleFlip::ToPrefill(lightest));
+                }
+            }
+        }
+    }
+
+    // --- decode side: TPOT at risk or idle prefill => add decode capacity
+    let decode_ids = pools.decode_capable();
+    let tpot_risk = decode_ids.iter().any(|&i| {
+        let v = &views[i];
+        v.ema_token_interval > slo.tpot_s && v.n_running > 0
+    });
+    let kv_pressure = decode_ids
+        .iter()
+        .any(|&i| views[i].kv_used as f64 > 0.9 * views[i].kv_capacity as f64);
+    let idle_prefill: Vec<InstanceId> = pools
+        .prefill_capable()
+        .into_iter()
+        .filter(|&i| !views[i].failed && views[i].n_queued == 0 && views[i].queued_prefill_tokens == 0)
+        .collect();
+    if (tpot_risk || kv_pressure) && !idle_prefill.is_empty() {
+        // prefer D→P pool members back to decode (§3.2)
+        let d2p = pools.of_kind(PoolKind::DecodeToPrefill);
+        let pick = d2p
+            .iter()
+            .copied()
+            .filter(|&i| idle_prefill.contains(&i))
+            .min_by_key(|&i| views[i].running_tokens)
+            .or_else(|| idle_prefill.iter().copied().min_by_key(|&i| views[i].running_tokens));
+        if let Some(i) = pick {
+            flips.push(RoleFlip::ToDecode(i));
+        }
+    }
+
+    flips
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ascend_910b, catalog};
+    use crate::sim::EngineFeatures;
+
+    fn cost() -> CostModel {
+        CostModel::new(ascend_910b(), catalog("Qwen3-8B").unwrap(), EngineFeatures::xllm(1))
+    }
+
+    fn view(id: usize, queued: u64, running: u64) -> InstanceView {
+        InstanceView {
+            id,
+            queued_prefill_tokens: queued,
+            running_tokens: running,
+            n_running: (running / 1024) as usize,
+            n_queued: (queued / 1024) as usize,
+            kv_used: running,
+            kv_capacity: 1_000_000,
+            failed: false,
+            ema_token_interval: 0.03,
+            ema_ttft: 0.5,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut s = GlobalScheduler::new(DispatchPolicy::RoundRobin);
+        let views = [view(0, 0, 0), view(1, 0, 0), view(2, 0, 0)];
+        let slo = Slo::UNCONSTRAINED;
+        let picks: Vec<_> = (0..6)
+            .map(|_| match s.place_prefill(&views, &[], &cost(), 512, &slo) {
+                Placement::Instance(i) => i,
+                _ => panic!(),
+            })
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn minimal_load_picks_least() {
+        let mut s = GlobalScheduler::new(DispatchPolicy::MinimalLoad);
+        let views = [view(0, 5000, 0), view(1, 100, 0), view(2, 9000, 0)];
+        match s.place_prefill(&views, &[], &cost(), 512, &Slo::UNCONSTRAINED) {
+            Placement::Instance(i) => assert_eq!(i, 1),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn slo_aware_requests_flip_when_all_overloaded() {
+        let mut s = GlobalScheduler::new(DispatchPolicy::SloAware);
+        // enormous queues: predictor will say TTFT blown
+        let views = [view(0, 2_000_000, 0), view(1, 3_000_000, 0)];
+        let slo = Slo::interactive(0.5, 0.05);
+        assert_eq!(s.place_prefill(&views, &[], &cost(), 2048, &slo), Placement::NeedFlip);
+    }
+
+    #[test]
+    fn slo_aware_uses_fallback_pool() {
+        let mut s = GlobalScheduler::new(DispatchPolicy::SloAware);
+        let primary = [view(0, 5_000_000, 0)];
+        let fallback = [view(7, 0, 0)];
+        let slo = Slo::interactive(2.0, 0.05);
+        assert_eq!(
+            s.place_prefill(&primary, &fallback, &cost(), 512, &slo),
+            Placement::Instance(7)
+        );
+    }
+
+    #[test]
+    fn decode_prefers_prefill_origin() {
+        let mut s = GlobalScheduler::new(DispatchPolicy::SloAware);
+        let mut origin = view(0, 0, 900_000);
+        origin.n_running = 10; // has slots free
+        let views = [origin, view(1, 0, 100)];
+        // prefer=0 has capacity (kv_free = 100k >= 2048)
+        assert_eq!(s.place_decode(&views, Some(0), 2048, 64), Some(0));
+        // without preference, least running tokens wins
+        assert_eq!(s.place_decode(&views, None, 2048, 64), Some(1));
+    }
+
+    #[test]
+    fn decode_respects_kv_and_seq_limits() {
+        let mut s = GlobalScheduler::new(DispatchPolicy::SloAware);
+        let mut full = view(0, 0, 999_000);
+        full.n_running = 64;
+        let views = [full, view(1, 0, 500)];
+        assert_eq!(s.place_decode(&views, Some(0), 2048, 64), Some(1));
+        // nothing fits
+        let mut v1 = view(1, 0, 999_999);
+        v1.kv_used = 999_999;
+        let views2 = [full, v1];
+        assert_eq!(s.place_decode(&views2, None, 2048, 64), None);
+    }
+
+    #[test]
+    fn role_switch_pulls_decode_when_ttft_blown() {
+        let views = vec![view(0, 4_000_000, 0), view(1, 0, 1000), view(2, 0, 500)];
+        let pools = ElasticPools::new(1, 2, 0); // 0=P, 1/2=D
+        let flips = plan_role_switches(
+            &views,
+            &pools,
+            &TtftPredictor::new(),
+            &cost(),
+            &Slo::interactive(0.5, 0.05),
+            0,
+            1,
+        );
+        assert!(flips.contains(&RoleFlip::ToPrefill(2)), "lightest decode flips: {flips:?}");
+    }
+
+    #[test]
+    fn role_switch_adds_decode_on_tpot_risk() {
+        let mut v1 = view(1, 0, 5000);
+        v1.ema_token_interval = 0.2; // way above slo
+        let views = vec![view(0, 0, 0), v1, view(2, 0, 100)];
+        let pools = ElasticPools::new(1, 2, 0);
+        let flips = plan_role_switches(
+            &views,
+            &pools,
+            &TtftPredictor::new(),
+            &cost(),
+            &Slo::interactive(10.0, 0.05),
+            0,
+            1,
+        );
+        assert!(flips.contains(&RoleFlip::ToDecode(0)), "idle prefill flips: {flips:?}");
+    }
+
+    #[test]
+    fn no_flip_when_slo_met() {
+        let views = vec![view(0, 100, 0), view(1, 0, 100), view(2, 0, 100)];
+        let pools = ElasticPools::new(1, 2, 0);
+        let flips = plan_role_switches(
+            &views,
+            &pools,
+            &TtftPredictor::new(),
+            &cost(),
+            &Slo::interactive(60.0, 10.0),
+            0,
+            1,
+        );
+        assert!(flips.is_empty(), "{flips:?}");
+    }
+}

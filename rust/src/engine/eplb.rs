@@ -1,0 +1,358 @@
+//! Dynamic Expert-Parallel Load Balance (paper §4.4.2).
+//!
+//! Three cooperating pieces:
+//!
+//! * **Expert load statistics** — the router records per-expert token
+//!   counts; workers aggregate periodically and report to the controller.
+//! * **Routing-table recomputation** — the controller assigns experts
+//!   (plus replicas of hot experts — "Expert Redundancy") to devices,
+//!   balancing the expected token load per device (greedy LPT bin
+//!   packing).
+//! * **Double-buffer weight update** — new expert weights preload into the
+//!   spare buffer on every worker; the controller broadcasts the switch
+//!   only after *all* workers report readiness, so the flip is atomic and
+//!   imperceptible (no serving pause).
+
+
+/// Sliding expert load statistics (token counts per expert).
+#[derive(Debug, Clone)]
+pub struct ExpertStats {
+    pub n_experts: usize,
+    counts: Vec<u64>,
+    /// Decayed history for stability across windows.
+    ema: Vec<f64>,
+    alpha: f64,
+}
+
+impl ExpertStats {
+    pub fn new(n_experts: usize) -> ExpertStats {
+        ExpertStats { n_experts, counts: vec![0; n_experts], ema: vec![0.0; n_experts], alpha: 0.3 }
+    }
+
+    /// Router hook: a token was dispatched to `expert`.
+    pub fn record(&mut self, expert: usize, tokens: u64) {
+        self.counts[expert] += tokens;
+    }
+
+    /// Close the statistics window, folding into the EMA.
+    pub fn roll_window(&mut self) {
+        for (e, c) in self.counts.iter_mut().enumerate() {
+            self.ema[e] = (1.0 - self.alpha) * self.ema[e] + self.alpha * (*c as f64);
+            *c = 0;
+        }
+    }
+
+    /// Smoothed expected load per expert.
+    pub fn load(&self) -> Vec<f64> {
+        self.ema.clone()
+    }
+
+    pub fn window_counts(&self) -> &[u64] {
+        &self.counts
+    }
+}
+
+/// A routing table: which device hosts which expert replicas, and how a
+/// token for expert `e` picks a device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutingTable {
+    pub n_devices: usize,
+    /// replica placements: expert -> devices hosting a copy.
+    pub placements: Vec<Vec<usize>>,
+    /// round-robin cursor per expert (interior mutability avoided: callers
+    /// route via `route(expert, salt)`).
+    pub version: u64,
+}
+
+impl RoutingTable {
+    /// Device for a token of `expert`; `salt` spreads across replicas.
+    pub fn route(&self, expert: usize, salt: u64) -> usize {
+        let devs = &self.placements[expert];
+        devs[(salt as usize) % devs.len()]
+    }
+
+    /// Expected tokens per device given per-expert loads.
+    pub fn device_loads(&self, expert_load: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.n_devices];
+        for (e, devs) in self.placements.iter().enumerate() {
+            let share = expert_load[e] / devs.len() as f64;
+            for &d in devs {
+                out[d] += share;
+            }
+        }
+        out
+    }
+
+    /// Max/mean device load (the imbalance factor the cost model uses).
+    pub fn imbalance(&self, expert_load: &[f64]) -> f64 {
+        let loads = self.device_loads(expert_load);
+        let mean = loads.iter().sum::<f64>() / loads.len() as f64;
+        if mean <= 0.0 {
+            return 1.0;
+        }
+        loads.iter().cloned().fold(0.0, f64::max) / mean
+    }
+}
+
+/// Static baseline: expert e on device e % n_devices, no replicas.
+pub fn static_table(n_experts: usize, n_devices: usize) -> RoutingTable {
+    RoutingTable {
+        n_devices,
+        placements: (0..n_experts).map(|e| vec![e % n_devices]).collect(),
+        version: 0,
+    }
+}
+
+/// Controller: recompute the routing table from observed loads.
+///
+/// Greedy LPT: sort experts by load descending, give each its primary
+/// device as the currently lightest; then spend `redundancy_budget` extra
+/// replicas on the hottest experts (again to the lightest devices).
+pub fn rebalance(
+    expert_load: &[f64],
+    n_devices: usize,
+    redundancy_budget: usize,
+    prev_version: u64,
+) -> RoutingTable {
+    let n = expert_load.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| expert_load[b].partial_cmp(&expert_load[a]).unwrap());
+
+    let mut device_load = vec![0.0f64; n_devices];
+    let mut placements = vec![Vec::new(); n];
+    for &e in &order {
+        let lightest = (0..n_devices)
+            .min_by(|&a, &b| device_load[a].partial_cmp(&device_load[b]).unwrap())
+            .unwrap();
+        placements[e].push(lightest);
+        device_load[lightest] += expert_load[e];
+    }
+    // replicas for the hottest experts
+    for r in 0..redundancy_budget {
+        let e = order[r % n.max(1)];
+        // replica halves the per-device share: recompute marginal benefit
+        let lightest = (0..n_devices)
+            .min_by(|&a, &b| device_load[a].partial_cmp(&device_load[b]).unwrap())
+            .unwrap();
+        if placements[e].contains(&lightest) {
+            continue;
+        }
+        // shift half the load to the replica
+        let share = expert_load[e] / placements[e].len() as f64;
+        let new_share = expert_load[e] / (placements[e].len() + 1) as f64;
+        for &d in &placements[e] {
+            device_load[d] -= share - new_share;
+        }
+        placements[e].push(lightest);
+        device_load[lightest] += new_share;
+    }
+    RoutingTable { n_devices, placements, version: prev_version + 1 }
+}
+
+/// Double-buffer weight update protocol state per worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufferState {
+    /// Serving from buffer A, B idle.
+    ActiveA,
+    /// Serving from buffer B, A idle.
+    ActiveB,
+}
+
+/// Controller-side state machine for a fleet-wide atomic weight switch.
+#[derive(Debug)]
+pub struct WeightUpdateController {
+    n_workers: usize,
+    ready: Vec<bool>,
+    pub table_version: u64,
+    pub switches: u64,
+}
+
+impl WeightUpdateController {
+    pub fn new(n_workers: usize) -> WeightUpdateController {
+        WeightUpdateController { n_workers, ready: vec![false; n_workers], table_version: 0, switches: 0 }
+    }
+
+    /// Worker `w` finished preloading the new expert weights into its
+    /// spare buffer.  Returns `true` when ALL workers are ready — the
+    /// controller then broadcasts the atomic switch.
+    pub fn worker_ready(&mut self, w: usize) -> bool {
+        self.ready[w] = true;
+        if self.ready.iter().all(|&r| r) {
+            self.ready.iter_mut().for_each(|r| *r = false);
+            self.table_version += 1;
+            self.switches += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.ready.iter().filter(|&&r| !r).count()
+    }
+}
+
+/// Worker-side double buffer.
+#[derive(Debug)]
+pub struct DoubleBuffer {
+    pub state: BufferState,
+    /// Version loaded in the spare buffer (None = not preloaded).
+    pub spare_version: Option<u64>,
+    pub active_version: u64,
+}
+
+impl DoubleBuffer {
+    pub fn new() -> DoubleBuffer {
+        DoubleBuffer { state: BufferState::ActiveA, spare_version: None, active_version: 0 }
+    }
+
+    /// Preload new weights into the spare buffer (async; serving continues
+    /// from the active buffer).
+    pub fn preload(&mut self, version: u64) {
+        self.spare_version = Some(version);
+    }
+
+    /// Atomic pointer switch on the controller's broadcast.
+    pub fn switch(&mut self) -> Result<(), String> {
+        match self.spare_version.take() {
+            Some(v) => {
+                self.active_version = v;
+                self.state = match self.state {
+                    BufferState::ActiveA => BufferState::ActiveB,
+                    BufferState::ActiveB => BufferState::ActiveA,
+                };
+                Ok(())
+            }
+            None => Err("switch without preload".to_string()),
+        }
+    }
+}
+
+impl Default for DoubleBuffer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Full fleet simulation step used by tests/benches: returns imbalance
+/// before/after one rebalance round on a skewed load.
+pub fn rebalance_round(
+    stats: &ExpertStats,
+    n_devices: usize,
+    redundancy: usize,
+    prev: &RoutingTable,
+) -> (f64, f64, RoutingTable) {
+    let load = stats.load();
+    let before = prev.imbalance(&load);
+    let table = rebalance(&load, n_devices, redundancy, prev.version);
+    let after = table.imbalance(&load);
+    (before, after, table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn skewed_stats(n_experts: usize, rng: &mut Rng) -> ExpertStats {
+        let mut s = ExpertStats::new(n_experts);
+        for _ in 0..10_000 {
+            let e = (rng.zipf(n_experts as u64, 1.2) - 1) as usize;
+            s.record(e, 1);
+        }
+        s.roll_window();
+        s
+    }
+
+    #[test]
+    fn rebalance_reduces_imbalance_on_skew() {
+        let mut rng = Rng::new(42);
+        let stats = skewed_stats(32, &mut rng);
+        let prev = static_table(32, 8);
+        let (before, after, _) = rebalance_round(&stats, 8, 8, &prev);
+        assert!(before > 1.5, "static should be imbalanced, got {before}");
+        assert!(after < before * 0.7, "rebalance {after} !< {before}");
+    }
+
+    #[test]
+    fn routing_spreads_over_replicas() {
+        let table = RoutingTable { n_devices: 4, placements: vec![vec![0, 2]], version: 1 };
+        let d0 = table.route(0, 0);
+        let d1 = table.route(0, 1);
+        assert_ne!(d0, d1);
+        assert!([0, 2].contains(&d0) && [0, 2].contains(&d1));
+    }
+
+    #[test]
+    fn ema_smooths_windows() {
+        let mut s = ExpertStats::new(2);
+        s.record(0, 100);
+        s.roll_window();
+        let l1 = s.load()[0];
+        s.roll_window(); // empty window decays
+        let l2 = s.load()[0];
+        assert!(l2 < l1);
+        assert!(l2 > 0.0);
+    }
+
+    #[test]
+    fn double_buffer_atomic_switch_protocol() {
+        let mut ctl = WeightUpdateController::new(3);
+        let mut bufs: Vec<DoubleBuffer> = (0..3).map(|_| DoubleBuffer::new()).collect();
+        for b in &mut bufs {
+            b.preload(1);
+        }
+        assert!(!ctl.worker_ready(0));
+        assert!(!ctl.worker_ready(1));
+        assert_eq!(ctl.pending(), 1);
+        assert!(ctl.worker_ready(2), "all ready -> broadcast");
+        for b in &mut bufs {
+            b.switch().unwrap();
+            assert_eq!(b.active_version, 1);
+        }
+        // a second switch without preload must fail
+        assert!(bufs[0].switch().is_err());
+    }
+
+    #[test]
+    fn switch_flips_active_buffer() {
+        let mut b = DoubleBuffer::new();
+        assert_eq!(b.state, BufferState::ActiveA);
+        b.preload(5);
+        b.switch().unwrap();
+        assert_eq!(b.state, BufferState::ActiveB);
+        b.preload(6);
+        b.switch().unwrap();
+        assert_eq!(b.state, BufferState::ActiveA);
+        assert_eq!(b.active_version, 6);
+    }
+
+    #[test]
+    fn property_rebalance_never_worse_than_static() {
+        crate::testutil::check("eplb-no-regression", 64, |rng| {
+            let n_experts = rng.range(4, 64) as usize;
+            let n_devices = rng.range(2, 16) as usize;
+            let mut s = ExpertStats::new(n_experts);
+            for _ in 0..5000 {
+                let alpha = 1.0 + rng.f64();
+                let e = (rng.zipf(n_experts as u64, alpha) - 1) as usize;
+                s.record(e, 1);
+            }
+            s.roll_window();
+            let prev = static_table(n_experts, n_devices);
+            let (before, after, table) = rebalance_round(&s, n_devices, n_devices, &prev);
+            crate::prop_assert!(
+                after <= before * 1.05 + 1e-9,
+                "rebalance regressed: {before} -> {after}"
+            );
+            // every expert placed on at least one valid device
+            for devs in &table.placements {
+                crate::prop_assert!(!devs.is_empty());
+                for &d in devs {
+                    crate::prop_assert!(d < n_devices);
+                }
+            }
+            Ok(())
+        });
+    }
+}

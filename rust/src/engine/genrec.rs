@@ -1,0 +1,411 @@
+//! Generative recommendation (paper §4.5): optimized beam search with
+//! min-heap early termination, resource reuse, and valid-item filtering.
+//!
+//! Host side (§4.5.1): selecting the next `beam_width` hypotheses from
+//! `beam_width × top_k` candidates is a *partial* sort.  Because each
+//! sequence's candidate expansions arrive sorted by log-prob descending
+//! (they come from a per-sequence top-k), a size-`beam_width` min-heap
+//! plus per-sequence early termination (stop scanning a sequence once its
+//! next candidate can't beat the heap minimum) avoids most comparisons.
+//! Buffers are preallocated once and reused across steps (resource reuse).
+//!
+//! Device side (§4.5.2): a token trie of *valid items* (OneRec-style: an
+//! ordered triple of token ids = one item) produces an additive mask that
+//! pushes invalid continuations to -inf before sampling, so only real
+//! items can be emitted.
+
+use std::collections::{BinaryHeap, HashMap};
+
+/// A candidate continuation: (parent beam index, token, total log-prob).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub parent: usize,
+    pub token: u32,
+    pub log_prob: f64,
+}
+
+/// Heap entry ordered by log-prob ascending (min-heap via Reverse logic).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct HeapItem(Candidate);
+
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reverse: BinaryHeap is max-heap; we want the min on top
+        other
+            .0
+            .log_prob
+            .partial_cmp(&self.0.log_prob)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| other.0.parent.cmp(&self.0.parent))
+            .then_with(|| other.0.token.cmp(&self.0.token))
+    }
+}
+
+/// Work counters proving the early-termination savings.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BeamStats {
+    pub candidates_examined: u64,
+    pub candidates_total: u64,
+    pub early_breaks: u64,
+}
+
+/// Reusable beam-search step executor (buffers persist across steps).
+#[derive(Debug)]
+pub struct BeamSearcher {
+    pub beam_width: usize,
+    heap: BinaryHeap<HeapItem>,
+    out: Vec<Candidate>,
+    pub stats: BeamStats,
+}
+
+impl BeamSearcher {
+    pub fn new(beam_width: usize) -> BeamSearcher {
+        BeamSearcher {
+            beam_width,
+            heap: BinaryHeap::with_capacity(beam_width + 1),
+            out: Vec::with_capacity(beam_width),
+            stats: BeamStats::default(),
+        }
+    }
+
+    /// Naive baseline: flatten all candidates, full sort, take top-W.
+    pub fn step_naive(&mut self, expansions: &[Vec<(u32, f64)>]) -> Vec<Candidate> {
+        let mut all: Vec<Candidate> = Vec::new();
+        for (parent, cands) in expansions.iter().enumerate() {
+            for &(token, lp) in cands {
+                all.push(Candidate { parent, token, log_prob: lp });
+                self.stats.candidates_examined += 1;
+                self.stats.candidates_total += 1;
+            }
+        }
+        all.sort_by(|a, b| {
+            b.log_prob
+                .partial_cmp(&a.log_prob)
+                .unwrap()
+                .then_with(|| a.parent.cmp(&b.parent))
+                .then_with(|| a.token.cmp(&b.token))
+        });
+        all.truncate(self.beam_width);
+        all
+    }
+
+    /// Optimized step: min-heap + per-sequence early termination.
+    ///
+    /// `expansions[parent]` MUST be sorted by log-prob descending (the
+    /// natural output order of a top-k over logits).
+    pub fn step_optimized(&mut self, expansions: &[Vec<(u32, f64)>]) -> Vec<Candidate> {
+        self.heap.clear();
+        for (parent, cands) in expansions.iter().enumerate() {
+            self.stats.candidates_total += cands.len() as u64;
+            for &(token, lp) in cands {
+                debug_assert!(
+                    cands.windows(2).all(|w| w[0].1 >= w[1].1),
+                    "expansions must be sorted descending"
+                );
+                if self.heap.len() == self.beam_width {
+                    let min = self.heap.peek().unwrap().0.log_prob;
+                    if lp <= min {
+                        // all remaining candidates of this sequence are
+                        // smaller still: stop scanning it
+                        self.stats.early_breaks += 1;
+                        break;
+                    }
+                }
+                self.stats.candidates_examined += 1;
+                self.heap.push(HeapItem(Candidate { parent, token, log_prob: lp }));
+                if self.heap.len() > self.beam_width {
+                    self.heap.pop();
+                }
+            }
+        }
+        // extract ascending, reverse to descending
+        self.out.clear();
+        while let Some(HeapItem(c)) = self.heap.pop() {
+            self.out.push(c);
+        }
+        self.out.reverse();
+        self.out.clone()
+    }
+}
+
+/// Trie over fixed-arity item codes (OneRec: 3 tokens = 1 item).
+#[derive(Debug, Default)]
+pub struct ValidItemTrie {
+    /// prefix (as vec) -> set of allowed next tokens.
+    children: HashMap<Vec<u32>, Vec<u32>>,
+    pub n_items: usize,
+    pub code_len: usize,
+}
+
+impl ValidItemTrie {
+    /// Build from a catalog of items, each an exact `code_len`-token code.
+    pub fn new(items: &[Vec<u32>]) -> ValidItemTrie {
+        let code_len = items.first().map(|i| i.len()).unwrap_or(0);
+        let mut children: HashMap<Vec<u32>, Vec<u32>> = HashMap::new();
+        for item in items {
+            assert_eq!(item.len(), code_len, "ragged item code");
+            for d in 0..code_len {
+                let prefix = item[..d].to_vec();
+                let entry = children.entry(prefix).or_default();
+                if !entry.contains(&item[d]) {
+                    entry.push(item[d]);
+                }
+            }
+        }
+        ValidItemTrie { children, n_items: items.len(), code_len }
+    }
+
+    /// Allowed next tokens after `prefix` (empty = none: invalid prefix).
+    pub fn allowed(&self, prefix: &[u32]) -> &[u32] {
+        self.children.get(prefix).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Additive mask over the vocab: 0.0 for allowed tokens, −inf else —
+    /// what the device adds to logits before the sampler (§4.5.2).
+    pub fn mask(&self, prefix: &[u32], vocab: usize) -> Vec<f64> {
+        let mut m = vec![f64::NEG_INFINITY; vocab];
+        for &t in self.allowed(prefix) {
+            if (t as usize) < vocab {
+                m[t as usize] = 0.0;
+            }
+        }
+        m
+    }
+
+    /// Is the full code a valid item?
+    pub fn is_valid_item(&self, code: &[u32]) -> bool {
+        if code.len() != self.code_len {
+            return false;
+        }
+        self.children
+            .get(&code[..self.code_len - 1].to_vec())
+            .map(|next| next.contains(&code[self.code_len - 1]))
+            .unwrap_or(false)
+    }
+}
+
+/// Heap-based partial top-k over a large logits row (O(V log k) instead
+/// of the naive O(V log V) full sort) — the §4.5.1 host optimization for
+/// the vocab-sized candidate extraction that feeds each beam step.
+pub fn topk_desc_partial(logits: &[f64], k: usize) -> Vec<(u32, f64)> {
+    let mut heap: BinaryHeap<HeapItem> = BinaryHeap::with_capacity(k + 1);
+    for (i, &lp) in logits.iter().enumerate() {
+        if !lp.is_finite() {
+            continue;
+        }
+        if heap.len() == k {
+            if lp <= heap.peek().unwrap().0.log_prob {
+                continue;
+            }
+            heap.pop();
+        }
+        heap.push(HeapItem(Candidate { parent: 0, token: i as u32, log_prob: lp }));
+    }
+    let mut out: Vec<(u32, f64)> = Vec::with_capacity(heap.len());
+    while let Some(HeapItem(c)) = heap.pop() {
+        out.push((c.token, c.log_prob));
+    }
+    out.reverse();
+    out
+}
+
+/// Top-k extraction from a (masked) logits row, sorted descending — the
+/// per-sequence expansion feed for the beam step.
+pub fn topk_desc(logits: &[f64], k: usize) -> Vec<(u32, f64)> {
+    let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        logits[b as usize]
+            .partial_cmp(&logits[a as usize])
+            .unwrap()
+            .then_with(|| a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx.into_iter()
+        .map(|i| (i, logits[i as usize]))
+        .filter(|(_, lp)| lp.is_finite())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_expansions(rng: &mut Rng, beams: usize, k: usize) -> Vec<Vec<(u32, f64)>> {
+        (0..beams)
+            .map(|_| {
+                let mut v: Vec<(u32, f64)> =
+                    (0..k).map(|t| (t as u32, rng.f64() * -10.0)).collect();
+                v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn optimized_equals_naive() {
+        crate::testutil::check("beam-equivalence", 128, |rng| {
+            let beams = rng.range(1, 16) as usize;
+            let k = rng.range(1, 32) as usize;
+            let w = rng.range(1, 16) as usize;
+            let exp = random_expansions(rng, beams, k);
+            let mut a = BeamSearcher::new(w);
+            let mut b = BeamSearcher::new(w);
+            let naive = a.step_naive(&exp);
+            let opt = b.step_optimized(&exp);
+            crate::prop_assert!(naive.len() == opt.len(), "lengths differ");
+            for (x, y) in naive.iter().zip(&opt) {
+                crate::prop_assert!(
+                    (x.log_prob - y.log_prob).abs() < 1e-12
+                        && x.parent == y.parent
+                        && x.token == y.token,
+                    "selection differs: {x:?} vs {y:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn early_termination_saves_work() {
+        let mut rng = Rng::new(9);
+        // large beam/topk like the paper's beam_width=128, top_k large
+        let exp = random_expansions(&mut rng, 128, 128);
+        let mut s = BeamSearcher::new(128);
+        s.step_optimized(&exp);
+        assert!(
+            s.stats.candidates_examined < s.stats.candidates_total / 2,
+            "examined {}/{} — early termination ineffective",
+            s.stats.candidates_examined,
+            s.stats.candidates_total
+        );
+        assert!(s.stats.early_breaks > 0);
+    }
+
+    #[test]
+    fn results_sorted_descending() {
+        let mut rng = Rng::new(3);
+        let exp = random_expansions(&mut rng, 8, 16);
+        let mut s = BeamSearcher::new(6);
+        let out = s.step_optimized(&exp);
+        for w in out.windows(2) {
+            assert!(w[0].log_prob >= w[1].log_prob);
+        }
+        assert_eq!(out.len(), 6);
+    }
+
+    #[test]
+    fn trie_masks_invalid_items() {
+        let items = vec![vec![1, 2, 3], vec![1, 2, 4], vec![5, 6, 7]];
+        let trie = ValidItemTrie::new(&items);
+        assert_eq!(trie.code_len, 3);
+        let m0 = trie.mask(&[], 10);
+        assert_eq!(m0[1], 0.0);
+        assert_eq!(m0[5], 0.0);
+        assert!(m0[2].is_infinite());
+        let m1 = trie.mask(&[1, 2], 10);
+        assert_eq!(m1[3], 0.0);
+        assert_eq!(m1[4], 0.0);
+        assert!(m1[7].is_infinite());
+        assert!(trie.is_valid_item(&[1, 2, 3]));
+        assert!(!trie.is_valid_item(&[1, 2, 9]));
+        assert!(!trie.is_valid_item(&[1, 2]));
+    }
+
+    #[test]
+    fn masked_beam_search_only_emits_valid_items() {
+        let items = vec![vec![1, 2, 3], vec![4, 5, 6], vec![4, 5, 9]];
+        let trie = ValidItemTrie::new(&items);
+        let vocab = 12;
+        let mut rng = Rng::new(7);
+        // simulate 3 decode steps with random logits + trie mask
+        let mut beams: Vec<(Vec<u32>, f64)> = vec![(vec![], 0.0)];
+        for _ in 0..3 {
+            let mut exp: Vec<Vec<(u32, f64)>> = Vec::new();
+            for (prefix, lp) in &beams {
+                let logits: Vec<f64> = (0..vocab).map(|_| rng.f64() * -5.0).collect();
+                let mask = trie.mask(prefix, vocab);
+                let masked: Vec<f64> =
+                    logits.iter().zip(&mask).map(|(l, m)| l + m + lp).collect();
+                exp.push(topk_desc(&masked, 4));
+            }
+            let mut s = BeamSearcher::new(2);
+            let picks = s.step_optimized(&exp);
+            beams = picks
+                .iter()
+                .map(|c| {
+                    let mut seq = beams[c.parent].0.clone();
+                    seq.push(c.token);
+                    (seq, c.log_prob)
+                })
+                .collect();
+        }
+        for (seq, _) in &beams {
+            assert!(trie.is_valid_item(seq), "emitted invalid item {seq:?}");
+        }
+    }
+
+    #[test]
+    fn topk_desc_filters_neg_inf() {
+        let logits = vec![0.5, f64::NEG_INFINITY, -0.2, f64::NEG_INFINITY];
+        let t = topk_desc(&logits, 4);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].0, 0);
+        assert_eq!(t[1].0, 2);
+    }
+}
+
+#[cfg(test)]
+mod partial_topk_tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn partial_topk_matches_full_sort() {
+        crate::testutil::check("topk-partial-equiv", 64, |rng| {
+            let v: Vec<f64> = (0..rng.range(10, 2000)).map(|_| rng.f64() * -30.0).collect();
+            let k = rng.range(1, 64) as usize;
+            let a = topk_desc(&v, k);
+            let b = topk_desc_partial(&v, k);
+            crate::prop_assert!(a.len() == b.len(), "lengths differ");
+            for (x, y) in a.iter().zip(&b) {
+                crate::prop_assert!(
+                    (x.1 - y.1).abs() < 1e-12,
+                    "values differ: {x:?} vs {y:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn partial_topk_skips_neg_inf() {
+        let v = vec![1.0, f64::NEG_INFINITY, 0.5, f64::NEG_INFINITY, 2.0];
+        let t = topk_desc_partial(&v, 5);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0].0, 4);
+    }
+
+    #[test]
+    fn partial_topk_is_faster_on_large_vocab() {
+        let mut rng = Rng::new(1);
+        let v: Vec<f64> = (0..150_000).map(|_| rng.f64() * -20.0).collect();
+        let t0 = std::time::Instant::now();
+        for _ in 0..3 {
+            std::hint::black_box(topk_desc_partial(&v, 64));
+        }
+        let partial = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        for _ in 0..3 {
+            std::hint::black_box(topk_desc(&v, 64));
+        }
+        let full = t1.elapsed();
+        assert!(partial < full, "partial {partial:?} !< full {full:?}");
+    }
+}

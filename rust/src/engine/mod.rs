@@ -1,0 +1,25 @@
+//! xLLM-Engine (paper §4): per-instance execution optimizations.
+//!
+//! * [`pipeline`]   — multi-layer pipeline execution (§4.1): async CPU/
+//!   device overlap, dual-stream micro-batch comm/comp overlap.
+//! * [`opoverlap`]  — operator-layer Cube/Vector allocation, Eq. (1).
+//! * [`xtensor`]    — "logically contiguous, physically discrete" KV
+//!   memory management (§4.3).
+//! * [`specdecode`] — optimized speculative decoding (§4.4.1).
+//! * [`eplb`]       — dynamic expert-parallel load balance (§4.4.2).
+//! * [`dpbalance`]  — hierarchical DP load balance (§4.4.3).
+//! * [`genrec`]     — generative-recommendation beam search (§4.5).
+//!
+//! The adaptive graph mode (§4.2) lives in `runtime::graph` because it
+//! wraps the PJRT executable cache directly.
+
+pub mod dpbalance;
+pub mod eplb;
+pub mod genrec;
+pub mod opoverlap;
+pub mod pipeline;
+pub mod specdecode;
+pub mod xtensor;
+
+pub use specdecode::SpecConfig;
+pub use xtensor::XTensorManager;

@@ -1,0 +1,221 @@
+//! Operator-layer matrix/vector unit overlap (paper §4.1, Eq. (1)).
+//!
+//! Solves the dynamic resource-allocation problem: given matrix operators
+//! with workloads `W_i` (to run on Cube units) and vector operators with
+//! workloads `W_j` (Vector units), allocate unit counts `x_i`, `y_j` with
+//! `Σx_i ≤ N_cube`, `Σy_j ≤ N_vector` minimizing the *alignment loss*
+//! `L_align = max_{i,j} |T_i − T_j|` where `T = W / (γ · units)` — i.e.
+//! make all concurrent kernels finish together so neither unit class
+//! idles.
+//!
+//! Solver: all operators finish at a common time `T` iff operator k gets
+//! `units_k = W_k / (γ_k · T)`.  Feasibility per class is monotone in `T`
+//! (larger T → fewer units), so binary-search the smallest feasible `T`
+//! with integer rounding, then greedily hand out leftover units to the
+//! slowest operators.
+
+/// A kernel awaiting units: workload in (γ-normalized) work units.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpLoad {
+    pub workload: f64,
+}
+
+/// Allocation result for one class (same order as the input slice).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    pub cube_units: Vec<u32>,
+    pub vector_units: Vec<u32>,
+    /// Per-op completion times under the allocation.
+    pub cube_times: Vec<f64>,
+    pub vector_times: Vec<f64>,
+    /// max |T_i − T_j| across classes (the paper's alignment loss).
+    pub alignment_loss: f64,
+    /// Makespan (time until every unit is free).
+    pub makespan: f64,
+}
+
+fn units_needed(w: f64, gamma: f64, t: f64) -> u32 {
+    if w <= 0.0 {
+        return 0;
+    }
+    (w / (gamma * t)).ceil().max(1.0) as u32
+}
+
+fn feasible(ops: &[OpLoad], gamma: f64, t: f64, total: u32) -> bool {
+    let sum: u64 = ops.iter().map(|o| units_needed(o.workload, gamma, t) as u64).sum();
+    sum <= total as u64
+}
+
+fn allocate_class(ops: &[OpLoad], gamma: f64, total: u32, t: f64) -> Vec<u32> {
+    let mut alloc: Vec<u32> =
+        ops.iter().map(|o| units_needed(o.workload, gamma, t)).collect();
+    // distribute leftover units to the current slowest op
+    let mut used: u32 = alloc.iter().sum();
+    while used < total && !ops.is_empty() {
+        let (slowest, _) = alloc
+            .iter()
+            .enumerate()
+            .map(|(i, &u)| (i, ops[i].workload / (gamma * u.max(1) as f64)))
+            .fold((0, f64::NEG_INFINITY), |acc, (i, t)| if t > acc.1 { (i, t) } else { acc });
+        alloc[slowest] += 1;
+        used += 1;
+    }
+    alloc
+}
+
+/// Solve Eq. (1).  `gamma_cube`/`gamma_vector` are per-unit peak rates.
+pub fn allocate(
+    cube_ops: &[OpLoad],
+    vector_ops: &[OpLoad],
+    gamma_cube: f64,
+    gamma_vector: f64,
+    n_cube: u32,
+    n_vector: u32,
+) -> Allocation {
+    assert!(cube_ops.len() as u64 <= n_cube as u64, "more cube ops than units");
+    assert!(vector_ops.len() as u64 <= n_vector as u64, "more vector ops than units");
+
+    // binary search the smallest common finish time T feasible for BOTH
+    // classes simultaneously
+    let mut lo = 1e-9;
+    let mut hi = 1.0;
+    while !(feasible(cube_ops, gamma_cube, hi, n_cube)
+        && feasible(vector_ops, gamma_vector, hi, n_vector))
+    {
+        hi *= 2.0;
+        if hi > 1e12 {
+            break;
+        }
+    }
+    for _ in 0..64 {
+        let mid = 0.5 * (lo + hi);
+        if feasible(cube_ops, gamma_cube, mid, n_cube)
+            && feasible(vector_ops, gamma_vector, mid, n_vector)
+        {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    let t = hi;
+
+    let cube_units = allocate_class(cube_ops, gamma_cube, n_cube, t);
+    let vector_units = allocate_class(vector_ops, gamma_vector, n_vector, t);
+    let cube_times: Vec<f64> = cube_ops
+        .iter()
+        .zip(&cube_units)
+        .map(|(o, &u)| if u == 0 { 0.0 } else { o.workload / (gamma_cube * u as f64) })
+        .collect();
+    let vector_times: Vec<f64> = vector_ops
+        .iter()
+        .zip(&vector_units)
+        .map(|(o, &u)| if u == 0 { 0.0 } else { o.workload / (gamma_vector * u as f64) })
+        .collect();
+
+    let mut loss: f64 = 0.0;
+    for &ti in &cube_times {
+        for &tj in &vector_times {
+            loss = loss.max((ti - tj).abs());
+        }
+    }
+    let makespan = cube_times
+        .iter()
+        .chain(vector_times.iter())
+        .cloned()
+        .fold(0.0, f64::max);
+    Allocation { cube_units, vector_units, cube_times, vector_times, alignment_loss: loss, makespan }
+}
+
+/// Serial baseline: run every matrix op (all cube units), then every
+/// vector op (all vector units) — what the paper's "serial scheduling of
+/// matrix and vector computation units" does.
+pub fn serial_makespan(
+    cube_ops: &[OpLoad],
+    vector_ops: &[OpLoad],
+    gamma_cube: f64,
+    gamma_vector: f64,
+    n_cube: u32,
+    n_vector: u32,
+) -> f64 {
+    let c: f64 = cube_ops.iter().map(|o| o.workload / (gamma_cube * n_cube as f64)).sum();
+    let v: f64 =
+        vector_ops.iter().map(|o| o.workload / (gamma_vector * n_vector as f64)).sum();
+    c + v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ops(ws: &[f64]) -> Vec<OpLoad> {
+        ws.iter().map(|&w| OpLoad { workload: w }).collect()
+    }
+
+    #[test]
+    fn balanced_allocation_aligns_completion() {
+        let a = allocate(&ops(&[100.0, 100.0]), &ops(&[50.0]), 10.0, 5.0, 8, 4);
+        assert!(a.alignment_loss < 0.5 * a.makespan, "loss={} makespan={}", a.alignment_loss, a.makespan);
+        assert!(a.cube_units.iter().sum::<u32>() <= 8);
+        assert!(a.vector_units.iter().sum::<u32>() <= 4);
+    }
+
+    #[test]
+    fn heavier_ops_get_more_units() {
+        let a = allocate(&ops(&[300.0, 100.0]), &ops(&[10.0]), 10.0, 5.0, 8, 2);
+        assert!(a.cube_units[0] > a.cube_units[1]);
+    }
+
+    #[test]
+    fn overlap_beats_serial() {
+        let c = ops(&[200.0, 150.0, 100.0]);
+        let v = ops(&[80.0, 60.0]);
+        let a = allocate(&c, &v, 10.0, 5.0, 12, 8);
+        let serial = serial_makespan(&c, &v, 10.0, 5.0, 12, 8);
+        assert!(
+            a.makespan < serial,
+            "overlap {} should beat serial {serial}",
+            a.makespan
+        );
+    }
+
+    #[test]
+    fn single_op_each_uses_all_units() {
+        let a = allocate(&ops(&[100.0]), &ops(&[100.0]), 1.0, 1.0, 4, 4);
+        assert_eq!(a.cube_units, vec![4]);
+        assert_eq!(a.vector_units, vec![4]);
+    }
+
+    #[test]
+    fn empty_vector_class_is_fine() {
+        let a = allocate(&ops(&[100.0]), &[], 1.0, 1.0, 4, 4);
+        assert_eq!(a.alignment_loss, 0.0);
+        assert!(a.makespan > 0.0);
+    }
+
+    #[test]
+    fn property_budgets_respected_and_loss_bounded() {
+        crate::testutil::check("opoverlap-budget", 128, |rng| {
+            let nc = rng.range(2, 24) as u32;
+            let nv = rng.range(2, 48) as u32;
+            let n_cube_ops = rng.range(1, (nc as u64).min(6)) as usize;
+            let n_vec_ops = rng.range(1, (nv as u64).min(6)) as usize;
+            let c: Vec<OpLoad> =
+                (0..n_cube_ops).map(|_| OpLoad { workload: rng.f64() * 1000.0 + 1.0 }).collect();
+            let v: Vec<OpLoad> =
+                (0..n_vec_ops).map(|_| OpLoad { workload: rng.f64() * 500.0 + 1.0 }).collect();
+            let a = allocate(&c, &v, 10.0, 5.0, nc, nv);
+            crate::prop_assert!(
+                a.cube_units.iter().sum::<u32>() <= nc,
+                "cube budget exceeded"
+            );
+            crate::prop_assert!(
+                a.vector_units.iter().sum::<u32>() <= nv,
+                "vector budget exceeded"
+            );
+            crate::prop_assert!(a.cube_units.iter().all(|&u| u >= 1), "op starved");
+            // alignment loss never exceeds the makespan
+            crate::prop_assert!(a.alignment_loss <= a.makespan + 1e-9);
+            Ok(())
+        });
+    }
+}

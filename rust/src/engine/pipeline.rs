@@ -1,0 +1,305 @@
+//! Multi-layer pipeline execution engine (paper §4.1).
+//!
+//! * **Framework layer** — [`AsyncPipeline`]: a real two-stage std::thread
+//!   pipeline overlapping CPU batch preparation (with placeholder tokens)
+//!   against device execution; this is what the PJRT server uses, and what
+//!   Table 6 ablates.
+//! * **Model layer** — [`simulate_dual_stream`]: a two-resource list
+//!   scheduler over per-layer MoE micro-batch tasks (Dispatch → Expert
+//!   Forward → Combine) reproducing the Table 7 comm/comp overlap
+//!   accounting.
+//! * The operator layer lives in [`super::opoverlap`].
+
+use std::sync::mpsc;
+use std::thread;
+
+/// Outcome of a pipelined run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PipelineReport {
+    pub iterations: u64,
+    pub wall_s: f64,
+    /// Total CPU preparation time (hidden when async).
+    pub prep_s: f64,
+    /// Total device execution time.
+    pub exec_s: f64,
+}
+
+/// Run `n` iterations where `prepare(i)` builds input i on the CPU and
+/// `execute(i, input)` runs it on the device, *serially* (the baseline:
+/// prepare-then-compute).
+pub fn run_serial<T, P, E>(n: u64, mut prepare: P, mut execute: E) -> PipelineReport
+where
+    P: FnMut(u64) -> T,
+    E: FnMut(u64, T),
+{
+    let t0 = std::time::Instant::now();
+    let mut prep_s = 0.0;
+    let mut exec_s = 0.0;
+    for i in 0..n {
+        let p0 = std::time::Instant::now();
+        let input = prepare(i);
+        prep_s += p0.elapsed().as_secs_f64();
+        let e0 = std::time::Instant::now();
+        execute(i, input);
+        exec_s += e0.elapsed().as_secs_f64();
+    }
+    PipelineReport { iterations: n, wall_s: t0.elapsed().as_secs_f64(), prep_s, exec_s }
+}
+
+/// Run `n` iterations with the paper's asynchronous scheduling: while the
+/// device executes iteration i, the CPU prepares iteration i+1 using
+/// placeholder tokens (the prepared input cannot depend on i's output —
+/// exactly the placeholder-token contract; the caller swaps real tokens in
+/// cheaply inside `execute`).
+///
+/// Implementation: a bounded (depth-1) channel between a producer thread
+/// (CPU scheduling) and the consumer (device).  Threads are scoped, so the
+/// closures may borrow locals.
+pub fn run_async<T, P, E>(n: u64, prepare: P, mut execute: E) -> PipelineReport
+where
+    T: Send,
+    P: FnMut(u64) -> T + Send,
+    E: FnMut(u64, T),
+{
+    let t0 = std::time::Instant::now();
+    let (tx, rx) = mpsc::sync_channel::<(u64, T)>(1);
+    let mut exec_s = 0.0;
+    thread::scope(|s| {
+        s.spawn(move || {
+            let mut prepare = prepare;
+            for i in 0..n {
+                let input = prepare(i);
+                if tx.send((i, input)).is_err() {
+                    break;
+                }
+            }
+        });
+        for _ in 0..n {
+            let (i, input) = rx.recv().expect("producer died");
+            let e0 = std::time::Instant::now();
+            execute(i, input);
+            exec_s += e0.elapsed().as_secs_f64();
+        }
+    });
+    PipelineReport { iterations: n, wall_s: t0.elapsed().as_secs_f64(), prep_s: 0.0, exec_s }
+}
+
+// ---------------------------------------------------------------------
+// Model layer: dual-stream micro-batch simulation (Table 7)
+// ---------------------------------------------------------------------
+
+/// Result of the per-layer dual-stream schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamReport {
+    /// Wall time of the layer stack.
+    pub total_s: f64,
+    /// Communication time not hidden behind compute.
+    pub exposed_comm_s: f64,
+    /// Total communication issued.
+    pub total_comm_s: f64,
+    /// Total compute issued.
+    pub total_compute_s: f64,
+}
+
+impl StreamReport {
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.total_comm_s <= 0.0 {
+            return 0.0;
+        }
+        1.0 - self.exposed_comm_s / self.total_comm_s
+    }
+}
+
+/// Single-stream baseline: per layer, Dispatch → ExpertForward → Combine
+/// strictly serial.  `comm_s`/`compute_s` are per-layer totals.
+pub fn simulate_single_stream(n_layers: u32, compute_s: f64, comm_s: f64) -> StreamReport {
+    let total = (compute_s + comm_s) * n_layers as f64;
+    StreamReport {
+        total_s: total,
+        exposed_comm_s: comm_s * n_layers as f64,
+        total_comm_s: comm_s * n_layers as f64,
+        total_compute_s: compute_s * n_layers as f64,
+    }
+}
+
+/// Fraction of a decoder layer's compute that is attention/shared (runs
+/// before the MoE dispatch); the rest is expert FFN (between dispatch and
+/// combine).  DeepSeek-style layers are roughly 40/60.
+const ATTN_COMPUTE_FRACTION: f64 = 0.4;
+
+/// Dual-stream schedule with `n_micro` micro-batches: the communication
+/// stream runs micro-batch k's Dispatch/Combine while the computation
+/// stream runs another micro-batch's Attention/ExpertForward (paper Fig 7).
+///
+/// Splitting inflates both sides (smaller batches are less efficient):
+/// `compute_inflation`/`comm_inflation` (paper Table 7 measures 13→17 ms
+/// compute and 9.3→12.4 ms comm for n=2, i.e. ~1.31x / ~1.33x).
+///
+/// The schedule is simulated exactly with a two-resource list scheduler
+/// over the task DAG: per layer l and micro-batch k,
+/// `attn(l,k) → disp(l,k) → expert(l,k) → comb(l,k) → attn(l+1,k)`;
+/// Attention/ExpertForward run on the compute stream, Dispatch/Combine on
+/// the communication stream.
+pub fn simulate_dual_stream(
+    n_layers: u32,
+    compute_s: f64,
+    comm_s: f64,
+    n_micro: u32,
+    compute_inflation: f64,
+    comm_inflation: f64,
+) -> StreamReport {
+    assert!(n_micro >= 1);
+    let nm = n_micro as usize;
+    // per-micro-batch task durations (per layer)
+    let attn_mb = ATTN_COMPUTE_FRACTION * compute_s * compute_inflation / nm as f64;
+    let exp_mb = (1.0 - ATTN_COMPUTE_FRACTION) * compute_s * compute_inflation / nm as f64;
+    let disp_mb = 0.5 * comm_s * comm_inflation / nm as f64;
+    let comb_mb = disp_mb;
+
+    // earliest-start list scheduling over two resources
+    let mut comm_free = 0.0f64;
+    let mut comp_free = 0.0f64;
+    // ready[k] = time micro-batch k may start its next task
+    let mut ready = vec![0.0f64; nm];
+    let mut comm_busy = 0.0;
+    let mut comp_busy = 0.0;
+
+    for _layer in 0..n_layers {
+        for k in 0..nm {
+            // attention (compute stream)
+            let start = ready[k].max(comp_free);
+            comp_free = start + attn_mb;
+            comp_busy += attn_mb;
+            ready[k] = comp_free;
+            // dispatch (comm stream) can begin as soon as attn(k) is done
+            let start = ready[k].max(comm_free);
+            comm_free = start + disp_mb;
+            comm_busy += disp_mb;
+            ready[k] = comm_free;
+        }
+        for k in 0..nm {
+            // expert forward (compute stream)
+            let start = ready[k].max(comp_free);
+            comp_free = start + exp_mb;
+            comp_busy += exp_mb;
+            ready[k] = comp_free;
+            // combine (comm stream)
+            let start = ready[k].max(comm_free);
+            comm_free = start + comb_mb;
+            comm_busy += comb_mb;
+            ready[k] = comm_free;
+        }
+        // layer-boundary stream synchronization: the residual add / norm
+        // entering the next layer needs every micro-batch combined (the
+        // imperfect-overlap term the paper measures as exposed comm)
+        let barrier = comm_free.max(comp_free);
+        comp_free = barrier;
+        comm_free = barrier;
+        for r in ready.iter_mut() {
+            *r = barrier;
+        }
+    }
+    let total = comm_free.max(comp_free);
+    // exposed communication: wall time not covered by compute activity
+    let exposed = (total - comp_busy).max(0.0);
+    StreamReport {
+        total_s: total,
+        exposed_comm_s: exposed.min(comm_busy),
+        total_comm_s: comm_busy,
+        total_compute_s: comp_busy,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn spin(d: Duration) {
+        let t0 = std::time::Instant::now();
+        while t0.elapsed() < d {
+            std::hint::spin_loop();
+        }
+    }
+
+    #[test]
+    fn async_pipeline_hides_prep_time() {
+        // The device side is a sleep (accelerator busy, CPU free) so the
+        // CPU prep genuinely overlaps even on a single-core host — the
+        // same contract as the paper's CPU/NPU overlap.
+        let prep = Duration::from_micros(500);
+        let exec = Duration::from_millis(2);
+        let n = 30;
+        let serial = run_serial(n, |_| spin(prep), |_, _| std::thread::sleep(exec));
+        let asynch = run_async(n, |_| spin(prep), |_, _| std::thread::sleep(exec));
+        assert!(
+            asynch.wall_s < serial.wall_s * 0.92,
+            "async {} !< 0.92 * serial {}",
+            asynch.wall_s,
+            serial.wall_s
+        );
+        // async wall should approach the pure device time
+        assert!(asynch.wall_s < n as f64 * 0.0025 + 0.05);
+    }
+
+    #[test]
+    fn async_pipeline_preserves_order_and_count() {
+        let mut seen = Vec::new();
+        let r = run_async(20, |i| i * 2, |i, v| seen.push((i, v)));
+        assert_eq!(r.iterations, 20);
+        assert_eq!(seen.len(), 20);
+        for (i, (idx, v)) in seen.iter().enumerate() {
+            assert_eq!(*idx, i as u64);
+            assert_eq!(*v, (i as u64) * 2);
+        }
+    }
+
+    #[test]
+    fn dual_stream_hides_most_comm() {
+        // paper Table 7 shape: per-layer compute 13 ms, comm 9.3 ms
+        let single = simulate_single_stream(61, 13.0e-3, 9.3e-3);
+        let dual = simulate_dual_stream(61, 13.0e-3, 9.3e-3, 2, 17.0 / 13.0, 12.4 / 9.3);
+        assert!(
+            dual.overlap_ratio() > 0.6,
+            "overlap {} should be large",
+            dual.overlap_ratio()
+        );
+        assert!(
+            dual.total_s < single.total_s,
+            "dual {} !< single {}",
+            dual.total_s,
+            single.total_s
+        );
+        // net gain over 61 layers should be on the order of 100+ ms
+        let gain_ms = (single.total_s - dual.total_s) * 1e3;
+        assert!(gain_ms > 50.0, "gain {gain_ms} ms");
+    }
+
+    #[test]
+    fn dual_stream_single_micro_batch_degenerates() {
+        let single = simulate_single_stream(4, 10e-3, 5e-3);
+        let dual = simulate_dual_stream(4, 10e-3, 5e-3, 1, 1.0, 1.0);
+        // with one micro-batch there is no overlap opportunity
+        assert!((dual.total_s - single.total_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dual_stream_conserves_work() {
+        let r = simulate_dual_stream(8, 10e-3, 6e-3, 2, 1.2, 1.2);
+        assert!((r.total_compute_s - 8.0 * 10e-3 * 1.2).abs() < 1e-9);
+        assert!((r.total_comm_s - 8.0 * 6e-3 * 1.2).abs() < 1e-9);
+        assert!(r.total_s >= r.total_compute_s.max(r.total_comm_s) - 1e-12);
+        assert!(r.exposed_comm_s >= 0.0);
+    }
+
+    #[test]
+    fn more_micro_batches_improve_overlap_until_inflation_wins() {
+        let d2 = simulate_dual_stream(16, 10e-3, 8e-3, 2, 1.1, 1.1);
+        let d4 = simulate_dual_stream(16, 10e-3, 8e-3, 4, 1.1, 1.1);
+        assert!(d4.exposed_comm_s <= d2.exposed_comm_s + 1e-9);
+        // but heavy inflation makes splitting lose
+        let d4_bad = simulate_dual_stream(16, 10e-3, 8e-3, 4, 2.5, 2.5);
+        let single = simulate_single_stream(16, 10e-3, 8e-3);
+        assert!(d4_bad.total_s > single.total_s * 0.9);
+    }
+}

@@ -1,0 +1,480 @@
+//! xTensor memory management (paper §4.3): "logically contiguous,
+//! physically discrete" KV cache storage.
+//!
+//! * A pool of fixed-size physical pages, each carrying the paper's triple
+//!   state ⟨PageID, Status, OwnerSession⟩ with Status ∈ {Free, Allocated,
+//!   Mapped, Reusable}.
+//! * Each request gets a contiguous *virtual* range of `MaxSeqLen` tokens
+//!   at creation; physical pages are mapped on demand as the sequence
+//!   grows (Eq. 2 translation is `translate`).
+//! * **Physical page reuse**: on completion pages are marked Reusable,
+//!   not unmapped; a new request whose demand matches a reusable set gets
+//!   it remapped wholesale, skipping expensive map/unmap.
+//! * **Asynchronous pre-mapping**: during the current token's decode the
+//!   pages for the next token are predicted and mapped ahead of time, so
+//!   the mapping latency hides behind compute.
+//!
+//! On this testbed the "pages" index into a host arena rather than NPU
+//! HBM; map/unmap costs are modelled (counted) so benches can report the
+//! operation savings exactly as the ablation would.
+
+use std::collections::HashMap;
+
+/// Page status (paper's Status field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PageStatus {
+    Free,
+    Allocated,
+    Mapped,
+    Reusable,
+}
+
+/// Physical page record ⟨PageID, Status, OwnerSession⟩.
+#[derive(Debug, Clone, Copy)]
+pub struct Page {
+    pub id: u32,
+    pub status: PageStatus,
+    pub owner: Option<u64>,
+}
+
+/// Map/unmap operation counters (the §4.3 overhead the design avoids).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MapStats {
+    pub maps: u64,
+    pub unmaps: u64,
+    pub remaps_from_reusable: u64,
+    pub premapped_hits: u64,
+    pub oom_rejections: u64,
+}
+
+/// A request's virtual address space: MaxSeqLen tokens, contiguous.
+#[derive(Debug, Clone)]
+struct Session {
+    /// Mapped pages in virtual order (index = virtual page number).
+    pages: Vec<u32>,
+    /// Tokens written.
+    len: u64,
+    /// Pages pre-mapped beyond `len` (async pre-mapping).
+    premapped: u32,
+}
+
+/// The xTensor manager for one instance.
+#[derive(Debug)]
+pub struct XTensorManager {
+    page_tokens: u64,
+    max_seq: u64,
+    pages: Vec<Page>,
+    free: Vec<u32>,
+    /// Reusable sets from completed sessions, keyed by page count.
+    reusable: HashMap<u32, Vec<Vec<u32>>>,
+    sessions: HashMap<u64, Session>,
+    pub stats: MapStats,
+}
+
+impl XTensorManager {
+    /// `total_pages` physical pages of `page_tokens` tokens each;
+    /// `max_seq` bounds each session's virtual range.
+    pub fn new(total_pages: u32, page_tokens: u64, max_seq: u64) -> XTensorManager {
+        XTensorManager {
+            page_tokens,
+            max_seq,
+            pages: (0..total_pages)
+                .map(|id| Page { id, status: PageStatus::Free, owner: None })
+                .collect(),
+            free: (0..total_pages).rev().collect(),
+            reusable: HashMap::new(),
+            sessions: HashMap::new(),
+            stats: MapStats::default(),
+        }
+    }
+
+    pub fn total_pages(&self) -> u32 {
+        self.pages.len() as u32
+    }
+
+    pub fn free_pages(&self) -> u32 {
+        (self.free.len() + self.reusable.values().map(|v| v.iter().map(|s| s.len()).sum::<usize>()).sum::<usize>())
+            as u32
+    }
+
+    fn pages_for(&self, tokens: u64) -> u32 {
+        (tokens.div_ceil(self.page_tokens)) as u32
+    }
+
+    /// Open a session (virtual allocation only — no physical pages yet;
+    /// the paper's "virtual address space ... not actually associated with
+    /// physical pages during allocation").
+    pub fn open(&mut self, session: u64) {
+        self.sessions.insert(session, Session { pages: Vec::new(), len: 0, premapped: 0 });
+    }
+
+    /// Open a session that will need `expected_tokens`, preferring a
+    /// matching Reusable page set (fast remap, no map/unmap ops).
+    pub fn open_with_reuse(&mut self, session: u64, expected_tokens: u64) {
+        let need = self.pages_for(expected_tokens.min(self.max_seq));
+        let set = match self.reusable.get_mut(&need) {
+            Some(sets) => {
+                let set = sets.pop();
+                if sets.is_empty() {
+                    self.reusable.remove(&need);
+                }
+                set
+            }
+            None => None,
+        };
+        if let Some(set) = set {
+            for &pid in &set {
+                let p = &mut self.pages[pid as usize];
+                p.status = PageStatus::Mapped;
+                p.owner = Some(session);
+            }
+            self.stats.remaps_from_reusable += 1;
+            self.sessions.insert(session, Session { pages: set, len: 0, premapped: need });
+            return;
+        }
+        self.open(session);
+    }
+
+    fn grab_page(&mut self, session: u64) -> Option<u32> {
+        // free list first, then cannibalize any reusable set
+        if let Some(pid) = self.free.pop() {
+            let p = &mut self.pages[pid as usize];
+            p.status = PageStatus::Mapped;
+            p.owner = Some(session);
+            self.stats.maps += 1;
+            return Some(pid);
+        }
+        // find a non-empty reusable set (defensively skipping empties)
+        let key = self
+            .reusable
+            .iter()
+            .find(|(_, sets)| sets.iter().any(|s| !s.is_empty()))
+            .map(|(k, _)| *k)?;
+        let sets = self.reusable.get_mut(&key).unwrap();
+        sets.retain(|s| !s.is_empty());
+        let mut set = sets.pop().unwrap();
+        if sets.is_empty() {
+            self.reusable.remove(&key);
+        }
+        let pid = set.pop().unwrap();
+        // the rest of the broken set returns to the free list (unmap cost)
+        for other in set {
+            self.pages[other as usize].status = PageStatus::Free;
+            self.pages[other as usize].owner = None;
+            self.stats.unmaps += 1;
+            self.free.push(other);
+        }
+        let p = &mut self.pages[pid as usize];
+        p.status = PageStatus::Mapped;
+        p.owner = Some(session);
+        self.stats.maps += 1;
+        Some(pid)
+    }
+
+    /// Append `tokens` to the session, mapping pages on demand.
+    /// Returns false (and maps nothing) on out-of-memory.
+    pub fn extend(&mut self, session: u64, tokens: u64) -> bool {
+        let (cur_len, have) = match self.sessions.get(&session) {
+            Some(s) => (s.len, s.pages.len() as u32),
+            None => return false,
+        };
+        let new_len = (cur_len + tokens).min(self.max_seq);
+        let need_total = self.pages_for(new_len);
+        let need_new = need_total.saturating_sub(have);
+        if need_new > 0 {
+            // check feasibility first (no partial maps on OOM)
+            if (self.free.len() as u32)
+                + self
+                    .reusable
+                    .values()
+                    .map(|v| v.iter().map(|s| s.len() as u32).sum::<u32>())
+                    .sum::<u32>()
+                < need_new
+            {
+                self.stats.oom_rejections += 1;
+                return false;
+            }
+            let mut grabbed = Vec::with_capacity(need_new as usize);
+            for _ in 0..need_new {
+                match self.grab_page(session) {
+                    Some(p) => grabbed.push(p),
+                    None => {
+                        // roll back (should not happen after feasibility check)
+                        for p in grabbed {
+                            self.release_page(p);
+                        }
+                        self.stats.oom_rejections += 1;
+                        return false;
+                    }
+                }
+            }
+            let s = self.sessions.get_mut(&session).unwrap();
+            s.pages.extend(grabbed);
+        }
+        let s = self.sessions.get_mut(&session).unwrap();
+        let covered = (s.premapped as u64) * self.page_tokens;
+        if covered >= new_len && need_new == 0 {
+            self.stats.premapped_hits += 1;
+        }
+        s.len = new_len;
+        s.premapped = s.pages.len() as u32;
+        true
+    }
+
+    /// Asynchronously pre-map pages for the next `tokens` tokens (called
+    /// while the current step computes; cost hidden behind the device).
+    pub fn premap(&mut self, session: u64, tokens: u64) -> bool {
+        let (len, have) = match self.sessions.get(&session) {
+            Some(s) => (s.len, s.pages.len() as u32),
+            None => return false,
+        };
+        let target = self.pages_for((len + tokens).min(self.max_seq));
+        let need = target.saturating_sub(have);
+        for _ in 0..need {
+            match self.grab_page(session) {
+                Some(p) => {
+                    let s = self.sessions.get_mut(&session).unwrap();
+                    s.pages.push(p);
+                    s.premapped = s.pages.len() as u32;
+                }
+                None => return false,
+            }
+        }
+        true
+    }
+
+    fn release_page(&mut self, pid: u32) {
+        let p = &mut self.pages[pid as usize];
+        p.status = PageStatus::Free;
+        p.owner = None;
+        self.stats.unmaps += 1;
+        self.free.push(pid);
+    }
+
+    /// Close a session, marking its pages Reusable (fast path for the next
+    /// request of similar length) rather than unmapping.
+    pub fn close(&mut self, session: u64) {
+        if let Some(s) = self.sessions.remove(&session) {
+            let n = s.pages.len() as u32;
+            if n == 0 {
+                return;
+            }
+            for &pid in &s.pages {
+                let p = &mut self.pages[pid as usize];
+                p.status = PageStatus::Reusable;
+                p.owner = None;
+            }
+            self.reusable.entry(n).or_default().push(s.pages);
+        }
+    }
+
+    /// Close a session and *eagerly unmap* (the naive baseline the paper
+    /// improves on; used by the ablation bench).
+    pub fn close_eager(&mut self, session: u64) {
+        if let Some(s) = self.sessions.remove(&session) {
+            for pid in s.pages {
+                self.release_page(pid);
+            }
+        }
+    }
+
+    /// Eq. (2): translate a virtual token address to (physical page,
+    /// offset within page).
+    pub fn translate(&self, session: u64, virt_token: u64) -> Option<(u32, u64)> {
+        let s = self.sessions.get(&session)?;
+        if virt_token >= s.len {
+            return None;
+        }
+        let vpage = (virt_token / self.page_tokens) as usize;
+        let offset = virt_token % self.page_tokens;
+        s.pages.get(vpage).map(|&p| (p, offset))
+    }
+
+    pub fn session_len(&self, session: u64) -> Option<u64> {
+        self.sessions.get(&session).map(|s| s.len)
+    }
+
+    /// Tokens resident across all sessions.
+    pub fn resident_tokens(&self) -> u64 {
+        self.sessions.values().map(|s| s.len).sum()
+    }
+
+    /// Invariant check for property tests: no page owned twice, all mapped
+    /// pages belong to a live session, free+mapped+reusable == total.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.pages.len()];
+        for (sid, s) in &self.sessions {
+            for &pid in &s.pages {
+                let p = &self.pages[pid as usize];
+                if seen[pid as usize] {
+                    return Err(format!("page {pid} mapped twice"));
+                }
+                seen[pid as usize] = true;
+                if p.status != PageStatus::Mapped {
+                    return Err(format!("session {sid} holds page {pid} with status {:?}", p.status));
+                }
+                if p.owner != Some(*sid) {
+                    return Err(format!("page {pid} owner mismatch"));
+                }
+            }
+        }
+        for pid in &self.free {
+            if seen[*pid as usize] {
+                return Err(format!("page {pid} both free and mapped"));
+            }
+            seen[*pid as usize] = true;
+            if self.pages[*pid as usize].status != PageStatus::Free {
+                return Err(format!("free-list page {pid} not Free"));
+            }
+        }
+        for sets in self.reusable.values() {
+            for set in sets {
+                for &pid in set {
+                    if seen[pid as usize] {
+                        return Err(format!("page {pid} in reusable set and elsewhere"));
+                    }
+                    seen[pid as usize] = true;
+                    if self.pages[pid as usize].status != PageStatus::Reusable {
+                        return Err(format!("reusable-set page {pid} not Reusable"));
+                    }
+                }
+            }
+        }
+        if !seen.iter().all(|&x| x) {
+            return Err("page leaked (not free, mapped, or reusable)".to_string());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn on_demand_mapping_grows_with_sequence() {
+        let mut m = XTensorManager::new(16, 16, 256);
+        m.open(1);
+        assert!(m.extend(1, 10));
+        assert_eq!(m.stats.maps, 1); // one 16-token page covers 10
+        assert!(m.extend(1, 10)); // 20 tokens -> 2 pages
+        assert_eq!(m.stats.maps, 2);
+        assert_eq!(m.session_len(1), Some(20));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn translate_eq2() {
+        let mut m = XTensorManager::new(8, 16, 256);
+        m.open(1);
+        m.extend(1, 40);
+        let (p0, o0) = m.translate(1, 0).unwrap();
+        let (p1, o1) = m.translate(1, 17).unwrap();
+        let (p2, o2) = m.translate(1, 39).unwrap();
+        assert_eq!(o0, 0);
+        assert_eq!(o1, 1);
+        assert_eq!(o2, 7);
+        assert_ne!(p0, p1);
+        assert_ne!(p1, p2);
+        assert!(m.translate(1, 40).is_none(), "beyond len");
+    }
+
+    #[test]
+    fn reuse_skips_map_unmap() {
+        let mut m = XTensorManager::new(16, 16, 256);
+        m.open(1);
+        m.extend(1, 64); // 4 pages
+        let maps_before = m.stats.maps;
+        m.close(1); // pages -> Reusable, no unmaps
+        assert_eq!(m.stats.unmaps, 0);
+        m.open_with_reuse(2, 64);
+        assert_eq!(m.stats.remaps_from_reusable, 1);
+        assert!(m.extend(2, 64));
+        assert_eq!(m.stats.maps, maps_before, "no new maps needed");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eager_close_pays_unmaps() {
+        let mut m = XTensorManager::new(16, 16, 256);
+        m.open(1);
+        m.extend(1, 64);
+        m.close_eager(1);
+        assert_eq!(m.stats.unmaps, 4);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn premap_hides_next_token_mapping() {
+        let mut m = XTensorManager::new(16, 4, 256);
+        m.open(1);
+        m.extend(1, 4); // page 0 full
+        assert!(m.premap(1, 1)); // maps page for token 5 ahead of time
+        let maps = m.stats.maps;
+        assert!(m.extend(1, 1)); // no new map needed
+        assert_eq!(m.stats.maps, maps);
+        assert!(m.stats.premapped_hits >= 1);
+    }
+
+    #[test]
+    fn oom_rejects_without_partial_maps() {
+        let mut m = XTensorManager::new(2, 16, 256);
+        m.open(1);
+        assert!(m.extend(1, 32)); // both pages
+        m.open(2);
+        assert!(!m.extend(2, 1));
+        assert_eq!(m.stats.oom_rejections, 1);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reusable_sets_cannibalized_under_pressure() {
+        let mut m = XTensorManager::new(4, 16, 256);
+        m.open(1);
+        m.extend(1, 64); // all 4 pages
+        m.close(1); // one reusable set of 4
+        m.open(2);
+        assert!(m.extend(2, 16)); // needs 1 page -> breaks the set
+        m.check_invariants().unwrap();
+        assert!(m.extend(2, 48)); // grabs the rest
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn property_invariants_under_random_workload() {
+        crate::testutil::check("xtensor-invariants", 128, |rng| {
+            let mut m = XTensorManager::new(32, 8, 128);
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..200 {
+                match rng.range(0, 3) {
+                    0 => {
+                        next_id += 1;
+                        if rng.chance(0.5) {
+                            m.open_with_reuse(next_id, rng.range(1, 128));
+                        } else {
+                            m.open(next_id);
+                        }
+                        live.push(next_id);
+                    }
+                    1 if !live.is_empty() => {
+                        let sid = live[rng.index(live.len())];
+                        m.extend(sid, rng.range(1, 24));
+                    }
+                    2 if !live.is_empty() => {
+                        let idx = rng.index(live.len());
+                        let sid = live.swap_remove(idx);
+                        if rng.chance(0.7) {
+                            m.close(sid);
+                        } else {
+                            m.close_eager(sid);
+                        }
+                    }
+                    _ => {}
+                }
+                m.check_invariants()?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,40 @@
+//! # xLLM — decoupled service-engine LLM inference framework
+//!
+//! A from-scratch reproduction of the *xLLM Technical Report* (JD.com,
+//! cs.DC 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the request path. `service` implements
+//!   xLLM-Service (online/offline co-location, dynamic PD disaggregation,
+//!   hybrid EPD disaggregation, global KV cache management, fault
+//!   recovery); `engine` implements xLLM-Engine (multi-layer pipeline,
+//!   adaptive graph mode, xTensor memory, speculative decoding, EPLB,
+//!   hierarchical DP balance, generative recommendation); `coordinator`
+//!   holds the shared request/batch/instance machinery.
+//! * **L2 (python/compile/model.py)** — the JAX transformer, AOT-lowered
+//!   once to HLO text in `artifacts/`.
+//! * **L1 (python/compile/kernels/)** — Pallas attention/MoE kernels
+//!   (interpret mode), verified against pure-jnp oracles.
+//!
+//! `runtime` loads the AOT artifacts via the PJRT C API (`xla` crate) and
+//! executes them on the request path — Python never runs at serve time.
+//! `sim` provides the calibrated discrete-event cluster simulator used by
+//! the paper-figure benchmarks (the Ascend-cluster substitute; see
+//! DESIGN.md §Hardware-Adaptation).
+
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod service;
+pub mod sim;
+pub mod testutil;
+pub mod util;
+pub mod workload;
+
+/// Crate version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

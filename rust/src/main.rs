@@ -1,0 +1,205 @@
+//! xLLM launcher: serve (real PJRT engine), simulate (cluster sim), info.
+//!
+//! ```text
+//! xllm serve    --requests 16 --prompt-len 64 --max-new 24 --batch 8
+//! xllm simulate --scenario sharegpt-2048 --model Qwen3-8B --instances 4 \
+//!               --rate 2.0 --horizon 60 --mode pd --tpot 0.05
+//! xllm models | scenarios | info
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use xllm::config::{Args, ServeConfig};
+use xllm::coordinator::DispatchPolicy;
+use xllm::metrics::Slo;
+use xllm::model;
+use xllm::server::{synth_prompt, GenRequest, Server};
+use xllm::sim::cluster::{run as sim_run, ClusterConfig, ServingMode};
+use xllm::sim::EngineFeatures;
+use xllm::util::json::Json;
+use xllm::util::Rng;
+use xllm::workload::scenarios::{scenario, SCENARIO_NAMES};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("models") => {
+            for name in model::CATALOG_NAMES {
+                let m = model::catalog(name).unwrap();
+                println!(
+                    "{name:24} params={:>8.2}B active={:>7.2}B layers={} moe={}",
+                    m.params / 1e9,
+                    m.active_params / 1e9,
+                    m.n_layers,
+                    m.is_moe
+                );
+            }
+            Ok(())
+        }
+        Some("scenarios") => {
+            for s in SCENARIO_NAMES {
+                println!("{s}");
+            }
+            Ok(())
+        }
+        Some("info") => cmd_info(&args),
+        other => {
+            eprintln!(
+                "xllm {} — decoupled service-engine LLM inference (paper reproduction)\n\
+                 usage: xllm <serve|simulate|models|scenarios|info> [--key value ...]\n\
+                 unknown subcommand: {other:?}",
+                xllm::version()
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let n_requests = args.get_u64("requests", 16) as usize;
+    let prompt_len = args.get_u64("prompt-len", 64) as usize;
+    let max_new = args.get_u64("max-new", 24) as usize;
+    let batch = args.get_u64("batch", 8) as usize;
+    let speculative = args.has_flag("speculative");
+
+    let cfg = ServeConfig {
+        artifacts_dir: artifacts.clone(),
+        max_batch: batch,
+        max_output_tokens: max_new,
+        speculative,
+        ..ServeConfig::default()
+    };
+    let mut server = Server::new(Path::new(&artifacts), cfg)?;
+    for i in 0..n_requests {
+        server.submit(GenRequest {
+            id: i as u64,
+            prompt: synth_prompt(i as u64, prompt_len),
+            max_new_tokens: max_new,
+        });
+    }
+    let t0 = std::time::Instant::now();
+    let results = server.run_to_completion()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut report = server.report.clone();
+    let out = Json::obj()
+        .set("requests", results.len())
+        .set("wall_s", wall)
+        .set("tokens_generated", server.stats.tokens_generated)
+        .set("throughput_tok_s", server.stats.tokens_generated as f64 / wall)
+        .set("mean_ttft_s", report.ttft_summary().mean())
+        .set("p99_ttft_s", report.ttft_summary().percentile(99.0))
+        .set("mean_tpot_s", report.tpot_summary().mean())
+        .set("prefills", server.stats.prefills)
+        .set("decode_steps", server.stats.decode_steps)
+        .set("spec_tokens_per_round", server.stats.spec.tokens_per_round())
+        .set("page_maps", server.page_stats().maps)
+        .set("page_reuse", server.page_stats().remaps_from_reusable)
+        .set("graph_compiles", server.graph_stats().compiles)
+        .set("graph_hits", server.graph_stats().hits);
+    println!("{}", out.to_string());
+    if let Some(r) = results.first() {
+        println!("# sample generation (req {}): {:?}", r.id, &r.tokens);
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let scenario_name = args.get_or("scenario", "sharegpt-2048");
+    let model_name = args.get_or("model", "Qwen3-8B");
+    let n = args.get_u64("instances", 4) as usize;
+    let rate = args.get_f64("rate", 1.0);
+    let horizon = args.get_f64("horizon", 60.0);
+    let tp = args.get_u64("tp", 1) as u32;
+    let mode = args.get_or("mode", "colocated");
+    let framework = args.get_or("framework", "xllm");
+    let tpot = args.get_f64("tpot", f64::INFINITY);
+    let ttft = args.get_f64("ttft", f64::INFINITY);
+    let hw = match args.get_or("hw", "910B").as_str() {
+        "910B" => model::ascend_910b(),
+        "910C" => model::ascend_910c(),
+        "cpu" => model::cpu_host(),
+        other => bail!("unknown hw {other}"),
+    };
+    let spec = model::catalog(&model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name} (see `xllm models`)"))?;
+    let features = match framework.as_str() {
+        "xllm" => EngineFeatures::xllm(tp),
+        "vllm" => EngineFeatures::vllm(tp),
+        "mindie" => EngineFeatures::mindie(tp),
+        other => bail!("unknown framework {other}"),
+    };
+    let sc = scenario(&scenario_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown scenario {scenario_name}"))?;
+
+    let mut cfg = ClusterConfig::new(n, hw, spec, features);
+    cfg.slo = Slo::interactive(ttft, tpot);
+    cfg.mode = match mode.as_str() {
+        "colocated" => ServingMode::Colocated,
+        "pd" => ServingMode::Disaggregated {
+            n_prefill: args.get_u64("prefill-instances", (n as u64 / 3).max(1)) as usize,
+            dynamic: true,
+        },
+        "pd-static" => ServingMode::Disaggregated {
+            n_prefill: args.get_u64("prefill-instances", (n as u64 / 3).max(1)) as usize,
+            dynamic: false,
+        },
+        other => bail!("unknown mode {other}"),
+    };
+    cfg.dispatch = match args.get_or("dispatch", "slo-aware").as_str() {
+        "round-robin" => DispatchPolicy::RoundRobin,
+        "minimal-load" => DispatchPolicy::MinimalLoad,
+        _ => DispatchPolicy::SloAware,
+    };
+    cfg.prefix_cache = args.has_flag("prefix-cache");
+
+    let mut rng = Rng::new(args.get_u64("seed", 7));
+    let workload = sc.generate(horizon, rate, &mut rng);
+    let n_reqs = workload.len();
+    let res = sim_run(cfg, workload);
+    let slo = Slo::interactive(ttft, tpot);
+    let mut report = res.report;
+    let out = Json::obj()
+        .set("scenario", scenario_name)
+        .set("model", model_name)
+        .set("framework", framework)
+        .set("instances", n)
+        .set("requests", n_reqs)
+        .set("completed", report.n_completed())
+        .set("output_tok_s", report.output_throughput())
+        .set("total_tok_s", report.total_throughput())
+        .set("request_rate", report.request_rate())
+        .set("mean_ttft_s", report.ttft_summary().mean())
+        .set("mean_tpot_s", report.tpot_summary().mean())
+        .set("mean_e2e_s", report.e2e_summary().mean())
+        .set("slo_attainment", report.slo_attainment(&slo))
+        .set("goodput_req_s", report.goodput(&slo))
+        .set("role_flips", res.role_flips)
+        .set("migrations", res.migrations)
+        .set("preemptions", res.preemptions)
+        .set("iterations", res.iterations);
+    println!("{}", out.to_string());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let manifest = xllm::runtime::Manifest::load(Path::new(&artifacts))?;
+    println!("weights: {} ({} tensors)", manifest.weights_file, manifest.n_tensors);
+    for m in &manifest.models {
+        println!("model {}: {:?}", m.name, m.fields);
+    }
+    for g in &manifest.graphs {
+        println!("graph {:20} kind={:?} dims={:?}", g.name, g.kind, g.dims);
+    }
+    Ok(())
+}

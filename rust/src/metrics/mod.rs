@@ -1,0 +1,227 @@
+//! Serving metrics: TTFT / TPOT / E2E collection, SLO attainment, goodput.
+//!
+//! These are the quantities every paper table and figure reports: token
+//! throughput under a TPOT (or E2E) constraint, request rate, SLO
+//! attainment, and goodput (requests/s that met their SLO).
+
+use crate::util::Summary;
+
+/// SLO targets for a request class (seconds). `f64::INFINITY` = unconstrained.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    /// Time to first token.
+    pub ttft_s: f64,
+    /// Time per output token (mean over the request).
+    pub tpot_s: f64,
+    /// End-to-end completion latency.
+    pub e2e_s: f64,
+}
+
+impl Slo {
+    pub const UNCONSTRAINED: Slo =
+        Slo { ttft_s: f64::INFINITY, tpot_s: f64::INFINITY, e2e_s: f64::INFINITY };
+
+    /// Paper main-results setting: TPOT bound only.
+    pub fn tpot(tpot_s: f64) -> Slo {
+        Slo { ttft_s: f64::INFINITY, tpot_s, e2e_s: f64::INFINITY }
+    }
+
+    /// Scenario setting: end-to-end bound only (merchant/customer-service).
+    pub fn e2e(e2e_s: f64) -> Slo {
+        Slo { ttft_s: f64::INFINITY, tpot_s: f64::INFINITY, e2e_s }
+    }
+
+    /// Interactive setting: TTFT + TPOT (the PD-disaggregation experiments).
+    pub fn interactive(ttft_s: f64, tpot_s: f64) -> Slo {
+        Slo { ttft_s, tpot_s, e2e_s: f64::INFINITY }
+    }
+}
+
+/// Completion record for one request.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestOutcome {
+    pub arrival_s: f64,
+    pub first_token_s: f64,
+    pub finish_s: f64,
+    pub input_tokens: u64,
+    pub output_tokens: u64,
+    /// True if the request was dropped/failed rather than completed.
+    pub failed: bool,
+}
+
+impl RequestOutcome {
+    pub fn ttft(&self) -> f64 {
+        self.first_token_s - self.arrival_s
+    }
+
+    pub fn e2e(&self) -> f64 {
+        self.finish_s - self.arrival_s
+    }
+
+    /// Mean time per output token after the first.
+    pub fn tpot(&self) -> f64 {
+        if self.output_tokens <= 1 {
+            return 0.0;
+        }
+        (self.finish_s - self.first_token_s) / (self.output_tokens - 1) as f64
+    }
+
+    pub fn meets(&self, slo: &Slo) -> bool {
+        !self.failed
+            && self.ttft() <= slo.ttft_s
+            && self.tpot() <= slo.tpot_s
+            && self.e2e() <= slo.e2e_s
+    }
+}
+
+/// Aggregated serving metrics over a run.
+#[derive(Debug, Clone, Default)]
+pub struct ServingReport {
+    pub outcomes: Vec<RequestOutcome>,
+}
+
+impl ServingReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, o: RequestOutcome) {
+        self.outcomes.push(o);
+    }
+
+    pub fn n_requests(&self) -> usize {
+        self.outcomes.len()
+    }
+
+    pub fn n_completed(&self) -> usize {
+        self.outcomes.iter().filter(|o| !o.failed).count()
+    }
+
+    fn horizon(&self) -> f64 {
+        let start = self.outcomes.iter().map(|o| o.arrival_s).fold(f64::INFINITY, f64::min);
+        let end = self.outcomes.iter().map(|o| o.finish_s).fold(0.0, f64::max);
+        (end - start).max(1e-9)
+    }
+
+    /// Output-token throughput (tokens/s over the run horizon).
+    pub fn output_throughput(&self) -> f64 {
+        let toks: u64 = self.outcomes.iter().filter(|o| !o.failed).map(|o| o.output_tokens).sum();
+        toks as f64 / self.horizon()
+    }
+
+    /// Total-token (input+output) throughput.
+    pub fn total_throughput(&self) -> f64 {
+        let toks: u64 = self
+            .outcomes
+            .iter()
+            .filter(|o| !o.failed)
+            .map(|o| o.input_tokens + o.output_tokens)
+            .sum();
+        toks as f64 / self.horizon()
+    }
+
+    /// Completed requests per second.
+    pub fn request_rate(&self) -> f64 {
+        self.n_completed() as f64 / self.horizon()
+    }
+
+    /// Fraction of requests that met the SLO.
+    pub fn slo_attainment(&self, slo: &Slo) -> f64 {
+        if self.outcomes.is_empty() {
+            return 1.0;
+        }
+        self.outcomes.iter().filter(|o| o.meets(slo)).count() as f64 / self.outcomes.len() as f64
+    }
+
+    /// Goodput: SLO-meeting requests per second (DistServe's metric).
+    pub fn goodput(&self, slo: &Slo) -> f64 {
+        self.outcomes.iter().filter(|o| o.meets(slo)).count() as f64 / self.horizon()
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        for o in self.outcomes.iter().filter(|o| !o.failed) {
+            s.add(o.ttft());
+        }
+        s
+    }
+
+    pub fn tpot_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        for o in self.outcomes.iter().filter(|o| !o.failed && o.output_tokens > 1) {
+            s.add(o.tpot());
+        }
+        s
+    }
+
+    pub fn e2e_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        for o in self.outcomes.iter().filter(|o| !o.failed) {
+            s.add(o.e2e());
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(arr: f64, ft: f64, fin: f64, inp: u64, out: u64) -> RequestOutcome {
+        RequestOutcome {
+            arrival_s: arr,
+            first_token_s: ft,
+            finish_s: fin,
+            input_tokens: inp,
+            output_tokens: out,
+            failed: false,
+        }
+    }
+
+    #[test]
+    fn ttft_tpot_e2e() {
+        let o = outcome(1.0, 1.5, 2.5, 100, 11);
+        assert!((o.ttft() - 0.5).abs() < 1e-12);
+        assert!((o.e2e() - 1.5).abs() < 1e-12);
+        assert!((o.tpot() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slo_meets() {
+        let o = outcome(0.0, 0.4, 1.4, 10, 11);
+        assert!(o.meets(&Slo::interactive(0.5, 0.11)));
+        assert!(!o.meets(&Slo::interactive(0.3, 0.11)));
+        assert!(!o.meets(&Slo::interactive(0.5, 0.09)));
+        assert!(o.meets(&Slo::UNCONSTRAINED));
+    }
+
+    #[test]
+    fn throughput_over_horizon() {
+        let mut r = ServingReport::new();
+        r.record(outcome(0.0, 0.1, 1.0, 10, 50));
+        r.record(outcome(0.0, 0.2, 2.0, 10, 50));
+        assert!((r.output_throughput() - 50.0).abs() < 1e-9);
+        assert!((r.request_rate() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn goodput_counts_only_slo_met() {
+        let mut r = ServingReport::new();
+        r.record(outcome(0.0, 0.1, 1.0, 10, 2)); // tpot=0.9
+        r.record(outcome(0.0, 0.1, 0.2, 10, 2)); // tpot=0.1
+        let slo = Slo::tpot(0.5);
+        assert!((r.slo_attainment(&slo) - 0.5).abs() < 1e-9);
+        assert!((r.goodput(&slo) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn failed_requests_excluded_from_throughput() {
+        let mut r = ServingReport::new();
+        r.record(outcome(0.0, 0.1, 1.0, 10, 50));
+        let mut bad = outcome(0.0, 0.1, 1.0, 10, 50);
+        bad.failed = true;
+        r.record(bad);
+        assert!((r.output_throughput() - 50.0).abs() < 1e-9);
+        assert_eq!(r.n_completed(), 1);
+    }
+}

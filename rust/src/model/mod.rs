@@ -1,0 +1,268 @@
+//! Model and hardware catalogs.
+//!
+//! [`ModelSpec`] carries the analytic dimensions the roofline cost model
+//! (sim::roofline) needs to predict prefill/decode step costs for the
+//! paper's evaluation models (Qwen2/3-series, DeepSeek-R1/V3, the
+//! DS-Distill-Qwen sizes) — these are the *simulated* models of the
+//! figure/table benches.  The `tiny` spec mirrors the real AOT-compiled
+//! model in `artifacts/` and is what the runtime actually executes.
+//!
+//! [`HardwareSpec`] is the Ascend-910B/910C-shaped accelerator abstraction:
+//! peak matrix FLOPs, vector FLOPs, HBM bandwidth, kernel launch overhead,
+//! and the Cube/Vector unit counts used by the operator-overlap optimizer
+//! (paper Eq. (1)).
+
+/// Analytic description of a served model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    /// Total parameter count.
+    pub params: f64,
+    /// Activated parameters per token (== `params` for dense models).
+    pub active_params: f64,
+    pub n_layers: u32,
+    pub d_model: u32,
+    pub n_heads: u32,
+    /// KV heads (GQA); bytes/token scale with this.
+    pub n_kv_heads: u32,
+    pub head_dim: u32,
+    /// Mixture-of-experts?
+    pub is_moe: bool,
+    /// Routed experts per layer (MoE only).
+    pub n_experts: u32,
+    /// Experts activated per token (MoE only).
+    pub experts_per_tok: u32,
+}
+
+impl ModelSpec {
+    /// KV cache bytes per token (fp16 K+V across all layers).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * 2.0 * self.n_layers as f64 * self.n_kv_heads as f64 * self.head_dim as f64
+    }
+
+    /// Weight bytes (fp16).
+    pub fn weight_bytes(&self) -> f64 {
+        2.0 * self.params
+    }
+
+    /// Activated weight bytes per token (fp16) — what decode streams.
+    pub fn active_weight_bytes(&self) -> f64 {
+        2.0 * self.active_params
+    }
+
+    /// FLOPs to process one token (forward): ~2 * active params, plus the
+    /// attention term 2 * ctx * d_model * 2 per layer handled by the cost
+    /// model (context-dependent).
+    pub fn flops_per_token(&self) -> f64 {
+        2.0 * self.active_params
+    }
+
+    fn dense(
+        name: &'static str,
+        params_b: f64,
+        n_layers: u32,
+        d_model: u32,
+        n_heads: u32,
+        n_kv_heads: u32,
+    ) -> ModelSpec {
+        ModelSpec {
+            name,
+            params: params_b * 1e9,
+            active_params: params_b * 1e9,
+            n_layers,
+            d_model,
+            n_heads,
+            n_kv_heads,
+            head_dim: d_model / n_heads,
+            is_moe: false,
+            n_experts: 0,
+            experts_per_tok: 0,
+        }
+    }
+}
+
+/// The real AOT-compiled model (must match python/compile/model.py TINY).
+pub fn tiny() -> ModelSpec {
+    ModelSpec {
+        name: "tiny",
+        params: 130_000.0,
+        active_params: 130_000.0,
+        n_layers: 2,
+        d_model: 64,
+        n_heads: 4,
+        n_kv_heads: 4,
+        head_dim: 16,
+        is_moe: false,
+        n_experts: 0,
+        experts_per_tok: 0,
+    }
+}
+
+/// Paper evaluation models (public configs; head counts per release docs).
+pub fn catalog(name: &str) -> Option<ModelSpec> {
+    Some(match name {
+        "tiny" => tiny(),
+        "Qwen3-0.6B" => ModelSpec::dense("Qwen3-0.6B", 0.6, 28, 1024, 16, 8),
+        "Qwen3-1.7B" => ModelSpec::dense("Qwen3-1.7B", 1.7, 28, 2048, 16, 8),
+        "Qwen3-4B" => ModelSpec::dense("Qwen3-4B", 4.0, 36, 2560, 32, 8),
+        "Qwen3-8B" => ModelSpec::dense("Qwen3-8B", 8.0, 36, 4096, 32, 8),
+        "Qwen3-14B" => ModelSpec::dense("Qwen3-14B", 14.0, 40, 5120, 40, 8),
+        "Qwen3-32B" => ModelSpec::dense("Qwen3-32B", 32.0, 64, 5120, 64, 8),
+        "Qwen2-7B" => ModelSpec::dense("Qwen2-7B", 7.0, 28, 3584, 28, 4),
+        "Qwen2-72B" => ModelSpec::dense("Qwen2-72B", 72.0, 80, 8192, 64, 8),
+        "DS-Distill-Qwen-1.5B" => ModelSpec::dense("DS-Distill-Qwen-1.5B", 1.5, 28, 1536, 12, 2),
+        "DS-Distill-Qwen-7B" => ModelSpec::dense("DS-Distill-Qwen-7B", 7.0, 28, 3584, 28, 4),
+        "DS-Distill-Qwen-14B" => ModelSpec::dense("DS-Distill-Qwen-14B", 14.0, 48, 5120, 40, 8),
+        "DS-Distill-Qwen-32B" => ModelSpec::dense("DS-Distill-Qwen-32B", 32.0, 64, 5120, 40, 8),
+        "DeepSeek-R1" | "DeepSeek-V3" => ModelSpec {
+            name: if name == "DeepSeek-R1" { "DeepSeek-R1" } else { "DeepSeek-V3" },
+            params: 671e9,
+            active_params: 37e9,
+            n_layers: 61,
+            d_model: 7168,
+            n_heads: 128,
+            // MLA compressed KV: model as few effective KV heads
+            n_kv_heads: 1,
+            head_dim: 576,
+            is_moe: true,
+            n_experts: 256,
+            experts_per_tok: 8,
+        },
+        _ => return None,
+    })
+}
+
+/// All catalog names (for CLI listing).
+pub const CATALOG_NAMES: &[&str] = &[
+    "tiny",
+    "Qwen3-0.6B",
+    "Qwen3-1.7B",
+    "Qwen3-4B",
+    "Qwen3-8B",
+    "Qwen3-14B",
+    "Qwen3-32B",
+    "Qwen2-7B",
+    "Qwen2-72B",
+    "DS-Distill-Qwen-1.5B",
+    "DS-Distill-Qwen-7B",
+    "DS-Distill-Qwen-14B",
+    "DS-Distill-Qwen-32B",
+    "DeepSeek-R1",
+    "DeepSeek-V3",
+];
+
+/// Accelerator abstraction (Ascend-shaped; see DESIGN.md §Hardware-Adaptation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareSpec {
+    pub name: &'static str,
+    /// Peak dense matrix FLOPs/s (fp16).
+    pub matrix_flops: f64,
+    /// Peak vector FLOPs/s.
+    pub vector_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// HBM capacity, bytes.
+    pub hbm_bytes: f64,
+    /// Per-kernel launch overhead, seconds (paper §4.2: 5–50 µs).
+    pub kernel_launch_s: f64,
+    /// Interconnect (All-to-All / KV transfer) bandwidth, bytes/s.
+    pub net_bw: f64,
+    /// Matrix (Cube) unit count — operator-overlap optimizer.
+    pub n_cube: u32,
+    /// Vector unit count.
+    pub n_vector: u32,
+}
+
+/// Ascend 910B-like device.
+pub fn ascend_910b() -> HardwareSpec {
+    HardwareSpec {
+        name: "910B",
+        matrix_flops: 376e12,
+        vector_flops: 94e12 / 16.0,
+        hbm_bw: 1.6e12,
+        hbm_bytes: 64e9,
+        kernel_launch_s: 20e-6,
+        net_bw: 56e9,
+        n_cube: 24,
+        n_vector: 48,
+    }
+}
+
+/// Ascend 910C-like device (next generation: ~2x compute, ~2x bandwidth).
+pub fn ascend_910c() -> HardwareSpec {
+    HardwareSpec {
+        name: "910C",
+        matrix_flops: 752e12,
+        vector_flops: 2.0 * 94e12 / 16.0,
+        hbm_bw: 3.2e12,
+        hbm_bytes: 128e9,
+        kernel_launch_s: 18e-6,
+        net_bw: 112e9,
+        n_cube: 48,
+        n_vector: 96,
+    }
+}
+
+/// The CPU host running the real PJRT path (calibrated by `bench calibrate`).
+pub fn cpu_host() -> HardwareSpec {
+    HardwareSpec {
+        name: "cpu",
+        matrix_flops: 5e10,
+        vector_flops: 2e10,
+        hbm_bw: 2e10,
+        hbm_bytes: 8e9,
+        kernel_launch_s: 10e-6,
+        net_bw: 1e10,
+        n_cube: 4,
+        n_vector: 8,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_covers_all_names() {
+        for name in CATALOG_NAMES {
+            let spec = catalog(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert!(spec.params > 0.0);
+            assert!(spec.active_params <= spec.params);
+            assert!(spec.n_layers > 0);
+        }
+        assert!(catalog("nope").is_none());
+    }
+
+    #[test]
+    fn moe_models_have_fewer_active_params() {
+        let r1 = catalog("DeepSeek-R1").unwrap();
+        assert!(r1.is_moe);
+        assert!(r1.active_params < r1.params / 10.0);
+        assert_eq!(r1.n_layers, 61); // paper table 7 uses 61 layers
+    }
+
+    #[test]
+    fn kv_bytes_scale_with_kv_heads() {
+        let a = catalog("Qwen3-8B").unwrap();
+        let b = catalog("Qwen3-32B").unwrap();
+        assert!(a.kv_bytes_per_token() > 0.0);
+        assert!(b.kv_bytes_per_token() > a.kv_bytes_per_token() * 0.9);
+    }
+
+    #[test]
+    fn hw_910c_is_faster_than_910b() {
+        let b = ascend_910b();
+        let c = ascend_910c();
+        assert!(c.matrix_flops > b.matrix_flops);
+        assert!(c.hbm_bw > b.hbm_bw);
+    }
+
+    #[test]
+    fn tiny_matches_python_config() {
+        let t = tiny();
+        assert_eq!(t.n_layers, 2);
+        assert_eq!(t.d_model, 64);
+        assert_eq!(t.n_heads, 4);
+        assert_eq!(t.head_dim, 16);
+    }
+}

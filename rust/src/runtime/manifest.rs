@@ -1,0 +1,220 @@
+//! Parser for `artifacts/manifest.txt` (written by python/compile/aot.py).
+//!
+//! Line-oriented `kind key=value ...` records:
+//!
+//! ```text
+//! model  name=tiny vocab=256 d_model=64 n_layers=2 ...
+//! weights file=weights.bin n_tensors=27
+//! graph  name=decode_b4 file=decode_b4.hlo.txt weights=tiny kind=decode b=4 smax=160
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One `model` record (dims of an AOT-compiled model).
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub fields: HashMap<String, u64>,
+}
+
+impl ModelInfo {
+    pub fn get(&self, key: &str) -> Option<u64> {
+        self.fields.get(key).copied()
+    }
+
+    pub fn require(&self, key: &str) -> Result<u64> {
+        self.get(key).with_context(|| format!("model {} missing field {key}", self.name))
+    }
+}
+
+/// Graph kinds the runtime understands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GraphKind {
+    Prefill,
+    Decode,
+    Verify,
+    Encode,
+    Moe,
+}
+
+impl GraphKind {
+    fn parse(s: &str) -> Result<GraphKind> {
+        Ok(match s {
+            "prefill" => GraphKind::Prefill,
+            "decode" => GraphKind::Decode,
+            "verify" => GraphKind::Verify,
+            "encode" => GraphKind::Encode,
+            "moe" => GraphKind::Moe,
+            other => bail!("unknown graph kind {other}"),
+        })
+    }
+}
+
+/// One `graph` record (an AOT-lowered HLO module).
+#[derive(Debug, Clone)]
+pub struct GraphInfo {
+    pub name: String,
+    pub file: String,
+    pub weights_set: String,
+    pub kind: GraphKind,
+    pub dims: HashMap<String, u64>,
+}
+
+impl GraphInfo {
+    pub fn dim(&self, key: &str) -> Option<u64> {
+        self.dims.get(key).copied()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub models: Vec<ModelInfo>,
+    pub graphs: Vec<GraphInfo>,
+    pub weights_file: String,
+    pub n_tensors: u64,
+}
+
+impl Manifest {
+    /// Load and parse `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let kind = parts.next().unwrap();
+            let kv: HashMap<&str, &str> = parts
+                .map(|p| {
+                    p.split_once('=')
+                        .with_context(|| format!("line {}: bad token {p}", lineno + 1))
+                })
+                .collect::<Result<_>>()?;
+            match kind {
+                "model" => {
+                    let name = kv.get("name").context("model without name")?.to_string();
+                    let fields = kv
+                        .iter()
+                        .filter(|(k, _)| **k != "name")
+                        .filter_map(|(k, v)| v.parse().ok().map(|n| (k.to_string(), n)))
+                        .collect();
+                    m.models.push(ModelInfo { name, fields });
+                }
+                "weights" => {
+                    m.weights_file = kv.get("file").context("weights without file")?.to_string();
+                    m.n_tensors =
+                        kv.get("n_tensors").and_then(|v| v.parse().ok()).unwrap_or(0);
+                }
+                "graph" => {
+                    let name = kv.get("name").context("graph without name")?.to_string();
+                    let file = kv.get("file").context("graph without file")?.to_string();
+                    let weights_set =
+                        kv.get("weights").context("graph without weights")?.to_string();
+                    let gkind = GraphKind::parse(kv.get("kind").context("graph without kind")?)?;
+                    let dims = kv
+                        .iter()
+                        .filter(|(k, _)| !matches!(**k, "name" | "file" | "weights" | "kind"))
+                        .filter_map(|(k, v)| v.parse().ok().map(|n| (k.to_string(), n)))
+                        .collect();
+                    m.graphs.push(GraphInfo { name, file, weights_set, kind: gkind, dims });
+                }
+                other => bail!("line {}: unknown record kind {other}", lineno + 1),
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelInfo> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    pub fn graph(&self, name: &str) -> Option<&GraphInfo> {
+        self.graphs.iter().find(|g| g.name == name)
+    }
+
+    /// Graphs of a kind for a weight set, e.g. all decode buckets.
+    pub fn graphs_of(&self, kind: GraphKind, weights_set: &str) -> Vec<&GraphInfo> {
+        self.graphs
+            .iter()
+            .filter(|g| g.kind == kind && g.weights_set == weights_set)
+            .collect()
+    }
+
+    /// Smallest prefill bucket with s >= `len`, for a weight set.
+    pub fn prefill_bucket(&self, weights_set: &str, len: u64) -> Option<&GraphInfo> {
+        self.graphs_of(GraphKind::Prefill, weights_set)
+            .into_iter()
+            .filter(|g| g.dim("s").unwrap_or(0) >= len)
+            .min_by_key(|g| g.dim("s").unwrap_or(u64::MAX))
+    }
+
+    /// Smallest decode bucket with b >= `batch`.
+    pub fn decode_bucket(&self, weights_set: &str, batch: u64) -> Option<&GraphInfo> {
+        self.graphs_of(GraphKind::Decode, weights_set)
+            .into_iter()
+            .filter(|g| g.dim("b").unwrap_or(0) >= batch)
+            .min_by_key(|g| g.dim("b").unwrap_or(u64::MAX))
+    }
+
+    /// Smallest verify bucket with b >= `batch` (m fixed by AOT).
+    pub fn verify_bucket(&self, weights_set: &str, batch: u64) -> Option<&GraphInfo> {
+        self.graphs_of(GraphKind::Verify, weights_set)
+            .into_iter()
+            .filter(|g| g.dim("b").unwrap_or(0) >= batch)
+            .min_by_key(|g| g.dim("b").unwrap_or(u64::MAX))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+model name=tiny vocab=256 d_model=64 n_layers=2 n_heads=4 d_head=16 d_ff=256 max_seq=160 n_params=130624
+weights file=weights.bin n_tensors=27
+graph name=prefill_s16 file=prefill_s16.hlo.txt weights=tiny kind=prefill s=16
+graph name=prefill_s64 file=prefill_s64.hlo.txt weights=tiny kind=prefill s=64
+graph name=decode_b1 file=decode_b1.hlo.txt weights=tiny kind=decode b=1 smax=160
+graph name=decode_b4 file=decode_b4.hlo.txt weights=tiny kind=decode b=4 smax=160
+graph name=verify_b1_m4 file=verify_b1_m4.hlo.txt weights=tiny kind=verify b=1 m=4 smax=160
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.models.len(), 1);
+        assert_eq!(m.graphs.len(), 5);
+        assert_eq!(m.weights_file, "weights.bin");
+        assert_eq!(m.n_tensors, 27);
+        assert_eq!(m.model("tiny").unwrap().require("max_seq").unwrap(), 160);
+    }
+
+    #[test]
+    fn bucket_selection_picks_smallest_fit() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.prefill_bucket("tiny", 10).unwrap().name, "prefill_s16");
+        assert_eq!(m.prefill_bucket("tiny", 16).unwrap().name, "prefill_s16");
+        assert_eq!(m.prefill_bucket("tiny", 17).unwrap().name, "prefill_s64");
+        assert!(m.prefill_bucket("tiny", 65).is_none());
+        assert_eq!(m.decode_bucket("tiny", 3).unwrap().name, "decode_b4");
+        assert_eq!(m.verify_bucket("tiny", 1).unwrap().dim("m"), Some(4));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("bogus name=x").is_err());
+        assert!(Manifest::parse("graph name=a").is_err());
+    }
+}

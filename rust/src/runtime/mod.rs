@@ -1,0 +1,503 @@
+//! Runtime: load AOT artifacts and execute them on the PJRT CPU client.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Graphs were lowered with `return_tuple=True`, so every output is a
+//! tuple literal that we decompose host-side.
+//!
+//! The runtime is the only module touching the `xla` crate; everything
+//! above it (coordinator, engine, service) works with plain host vectors.
+
+pub mod graph;
+pub mod manifest;
+pub mod weights;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+pub use graph::{GraphCache, GraphStats, LaunchMode};
+pub use manifest::{GraphInfo, GraphKind, Manifest};
+pub use weights::WeightStore;
+
+/// Dimensions of an AOT-compiled decoder model (from the manifest).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub max_seq: usize,
+}
+
+/// Host-side batched KV cache in the decode layout [L, B, H, Smax, Dh].
+///
+/// This is the *logically contiguous* view the graphs consume; the xTensor
+/// manager (engine::xtensor) owns which request occupies which batch slot
+/// and which physical pages back it.
+#[derive(Debug, Clone)]
+pub struct BatchKv {
+    pub dims: ModelDims,
+    pub batch: usize,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl BatchKv {
+    pub fn zeros(dims: ModelDims, batch: usize) -> BatchKv {
+        let n = dims.n_layers * batch * dims.n_heads * dims.max_seq * dims.d_head;
+        BatchKv { dims, batch, k: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    fn slot_offset(&self, l: usize, b: usize, h: usize, s: usize) -> usize {
+        let d = &self.dims;
+        (((l * self.batch + b) * d.n_heads + h) * d.max_seq + s) * d.d_head
+    }
+
+    /// Copy a prefill KV ([L, H, S, Dh] over bucket length `s_bucket`,
+    /// valid length `len`) into batch slot `slot`.
+    pub fn write_prefill(&mut self, slot: usize, pk: &[f32], pv: &[f32], s_bucket: usize, len: usize) {
+        let d = self.dims;
+        assert!(slot < self.batch, "slot {slot} out of range");
+        assert!(len <= d.max_seq);
+        for l in 0..d.n_layers {
+            for h in 0..d.n_heads {
+                for s in 0..len {
+                    let src = ((l * d.n_heads + h) * s_bucket + s) * d.d_head;
+                    let dst = self.slot_offset(l, slot, h, s);
+                    self.k[dst..dst + d.d_head].copy_from_slice(&pk[src..src + d.d_head]);
+                    self.v[dst..dst + d.d_head].copy_from_slice(&pv[src..src + d.d_head]);
+                }
+            }
+        }
+    }
+
+    /// Zero a slot (request completed; slot reusable).
+    pub fn clear_slot(&mut self, slot: usize) {
+        let d = self.dims;
+        for l in 0..d.n_layers {
+            for h in 0..d.n_heads {
+                let off = self.slot_offset(l, slot, h, 0);
+                let n = d.max_seq * d.d_head;
+                self.k[off..off + n].fill(0.0);
+                self.v[off..off + n].fill(0.0);
+            }
+        }
+    }
+
+    /// Copy one slot's valid prefix (length `len`) from `other[src_slot]`.
+    pub fn copy_slot_from(&mut self, slot: usize, other: &BatchKv, src_slot: usize, len: usize) {
+        let d = self.dims;
+        for l in 0..d.n_layers {
+            for h in 0..d.n_heads {
+                for s in 0..len.min(d.max_seq) {
+                    let dst = self.slot_offset(l, slot, h, s);
+                    let src = other.slot_offset(l, src_slot, h, s);
+                    self.k[dst..dst + d.d_head].copy_from_slice(&other.k[src..src + d.d_head]);
+                    self.v[dst..dst + d.d_head].copy_from_slice(&other.v[src..src + d.d_head]);
+                }
+            }
+        }
+    }
+}
+
+/// Output of a prefill execution.
+pub struct PrefillOutput {
+    /// Logits at the last *valid* position, length `vocab`.
+    pub last_logits: Vec<f32>,
+    /// Full prefill KV [L, H, S_bucket, Dh].
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub bucket_s: usize,
+}
+
+/// Output of a decode step.
+pub struct DecodeOutput {
+    /// Logits [B_bucket, vocab].
+    pub logits: Vec<f32>,
+    pub bucket_b: usize,
+}
+
+/// Output of a speculative-verify step.
+pub struct VerifyOutput {
+    /// Logits [B_bucket, M, vocab].
+    pub logits: Vec<f32>,
+    pub bucket_b: usize,
+    pub m: usize,
+}
+
+/// The PJRT-backed inference runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    pub weights: WeightStore,
+    dir: PathBuf,
+    cache: GraphCache,
+    /// Per-set weight literals, in HLO parameter order.
+    weight_literals: HashMap<String, Vec<xla::Literal>>,
+    /// Reusable input literals keyed by "graph/arg" (perf: the decode hot
+    /// path refills these via copy_raw_from instead of allocating fresh
+    /// literals each step — see EXPERIMENTS.md §Perf).
+    scratch: HashMap<String, xla::Literal>,
+}
+
+fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("literal shape {:?} does not match data len {}", dims, data.len());
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+impl Runtime {
+    /// Fetch (or create) a reusable f32 input literal and fill it.
+    fn scratch_f32(&mut self, key: &str, data: &[f32], dims: &[usize]) -> Result<&xla::Literal> {
+        if !self.scratch.contains_key(key) {
+            self.scratch.insert(
+                key.to_string(),
+                xla::Literal::create_from_shape(xla::PrimitiveType::F32, dims),
+            );
+        }
+        let lit = self.scratch.get_mut(key).unwrap();
+        lit.copy_raw_from(data).map_err(|e| anyhow::anyhow!("scratch fill {key}: {e:?}"))?;
+        Ok(self.scratch.get(key).unwrap())
+    }
+
+    /// Load artifacts from `dir` and create a PJRT CPU client.
+    ///
+    /// Compilation is lazy per graph (first use) through the graph cache;
+    /// call [`Runtime::warmup`] to pre-compile everything.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        let manifest = Manifest::load(dir)?;
+        let weights = WeightStore::load(&dir.join(&manifest.weights_file))?;
+        let mut weight_literals = HashMap::new();
+        let mut sets: Vec<String> = manifest
+            .graphs
+            .iter()
+            .map(|g| g.weights_set.clone())
+            .collect();
+        sets.sort();
+        sets.dedup();
+        for set in sets {
+            let mut lits = Vec::new();
+            for t in weights.set(&set) {
+                let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+                lits.push(lit_f32(&t.data, &dims)?);
+            }
+            if lits.is_empty() {
+                bail!("weight set {set} referenced by manifest but absent in weights.bin");
+            }
+            weight_literals.insert(set, lits);
+        }
+        Ok(Runtime {
+            client,
+            manifest,
+            weights,
+            dir: dir.to_path_buf(),
+            cache: GraphCache::new(32),
+            weight_literals,
+            scratch: HashMap::new(),
+        })
+    }
+
+    /// Model dims for a weight set, from the manifest `model` record.
+    pub fn model_dims(&self, set: &str) -> Result<ModelDims> {
+        let m = self
+            .manifest
+            .model(set)
+            .with_context(|| format!("no model record for {set}"))?;
+        Ok(ModelDims {
+            vocab: m.require("vocab")? as usize,
+            d_model: m.require("d_model")? as usize,
+            n_layers: m.require("n_layers")? as usize,
+            n_heads: m.require("n_heads")? as usize,
+            d_head: m.require("d_head")? as usize,
+            max_seq: m.require("max_seq")? as usize,
+        })
+    }
+
+    /// Pre-compile every graph in the manifest (dev warmup path).
+    pub fn warmup(&mut self) -> Result<()> {
+        let graphs: Vec<(String, String)> = self
+            .manifest
+            .graphs
+            .iter()
+            .map(|g| (g.name.clone(), g.file.clone()))
+            .collect();
+        for (name, file) in graphs {
+            self.cache.get_or_compile(&self.client, &self.dir, &name, &file)?;
+        }
+        Ok(())
+    }
+
+    pub fn graph_stats(&self) -> GraphStats {
+        self.cache.stats
+    }
+
+    /// Execute a graph by name with the given extra inputs (weights are
+    /// prepended automatically) and return the decomposed output tuple.
+    fn run(&mut self, graph_name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let g = self
+            .manifest
+            .graph(graph_name)
+            .with_context(|| format!("unknown graph {graph_name}"))?
+            .clone();
+        let wl = self
+            .weight_literals
+            .get(&g.weights_set)
+            .with_context(|| format!("no weights for set {}", g.weights_set))?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(wl.len() + inputs.len());
+        args.extend(wl.iter());
+        args.extend(inputs.iter());
+        let exe = self.cache.get_or_compile(&self.client, &self.dir, &g.name, &g.file)?;
+        let result = exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("executing {graph_name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {graph_name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling {graph_name}: {e:?}"))
+    }
+
+    /// Prefill a prompt (auto bucket selection + padding).
+    pub fn prefill(&mut self, set: &str, tokens: &[i32]) -> Result<PrefillOutput> {
+        let dims = self.model_dims(set)?;
+        let g = self
+            .manifest
+            .prefill_bucket(set, tokens.len() as u64)
+            .with_context(|| format!("no prefill bucket fits {} tokens", tokens.len()))?
+            .clone();
+        let s = g.dim("s").unwrap() as usize;
+        let mut padded = tokens.to_vec();
+        padded.resize(s, 0);
+        let out = self.run(&g.name, &[lit_i32(&padded, &[s as i64])?])?;
+        let logits: Vec<f32> = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("prefill logits: {e:?}"))?;
+        let k = out[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("prefill k: {e:?}"))?;
+        let v = out[2].to_vec::<f32>().map_err(|e| anyhow::anyhow!("prefill v: {e:?}"))?;
+        let last = tokens.len() - 1;
+        let last_logits = logits[last * dims.vocab..(last + 1) * dims.vocab].to_vec();
+        Ok(PrefillOutput { last_logits, k, v, bucket_s: s })
+    }
+
+    /// One decode step over a batch cache.  `tokens`/`pos` are per active
+    /// slot; inactive slots should carry pos=0/token=0 (their logits are
+    /// ignored by the caller).  The cache is updated in place.
+    pub fn decode(
+        &mut self,
+        set: &str,
+        kv: &mut BatchKv,
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<DecodeOutput> {
+        let dims = kv.dims;
+        let b = kv.batch;
+        if tokens.len() != b || pos.len() != b {
+            bail!("decode: tokens/pos length {} != batch {b}", tokens.len());
+        }
+        let g = self
+            .manifest
+            .decode_bucket(set, b as u64)
+            .with_context(|| format!("no decode bucket fits batch {b}"))?
+            .clone();
+        let gb = g.dim("b").unwrap() as usize;
+        if gb != b {
+            bail!("decode: BatchKv batch {b} must equal a bucket size (have {gb})");
+        }
+        let cache_dims = [
+            dims.n_layers,
+            b,
+            dims.n_heads,
+            dims.max_seq,
+            dims.d_head,
+        ];
+        // hot path: refill persistent scratch literals instead of
+        // allocating fresh ones per step (§Perf)
+        let gname = g.name.clone();
+        self.scratch_f32(&format!("{gname}/k"), &kv.k, &cache_dims)?;
+        self.scratch_f32(&format!("{gname}/v"), &kv.v, &cache_dims)?;
+        let args = [
+            lit_i32(tokens, &[b as i64])?,
+            lit_i32(pos, &[b as i64])?,
+        ];
+        let out = {
+            let wl = self
+                .weight_literals
+                .get(&g.weights_set)
+                .with_context(|| format!("no weights for set {}", g.weights_set))?;
+            let mut full: Vec<&xla::Literal> = Vec::with_capacity(wl.len() + 4);
+            full.extend(wl.iter());
+            full.push(&args[0]);
+            full.push(&args[1]);
+            full.push(self.scratch.get(&format!("{gname}/k")).unwrap());
+            full.push(self.scratch.get(&format!("{gname}/v")).unwrap());
+            let exe = self.cache.get_or_compile(&self.client, &self.dir, &g.name, &g.file)?;
+            let result = exe
+                .execute::<&xla::Literal>(&full)
+                .map_err(|e| anyhow::anyhow!("executing {gname}: {e:?}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetching result of {gname}: {e:?}"))?;
+            lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling {gname}: {e:?}"))?
+        };
+        let logits = out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("decode logits: {e:?}"))?;
+        // copy outputs into the existing buffers (no per-step allocation)
+        out[1]
+            .copy_raw_to(&mut kv.k)
+            .map_err(|e| anyhow::anyhow!("decode k out: {e:?}"))?;
+        out[2]
+            .copy_raw_to(&mut kv.v)
+            .map_err(|e| anyhow::anyhow!("decode v out: {e:?}"))?;
+        Ok(DecodeOutput { logits, bucket_b: b })
+    }
+
+    /// Speculative verify: score `m` candidate tokens per sequence.
+    pub fn verify(
+        &mut self,
+        set: &str,
+        kv: &mut BatchKv,
+        tokens: &[i32], // [B * M]
+        pos: &[i32],    // [B]
+    ) -> Result<VerifyOutput> {
+        let dims = kv.dims;
+        let b = kv.batch;
+        let g = self
+            .manifest
+            .verify_bucket(set, b as u64)
+            .with_context(|| format!("no verify bucket fits batch {b}"))?
+            .clone();
+        let gb = g.dim("b").unwrap() as usize;
+        let m = g.dim("m").unwrap() as usize;
+        if gb != b {
+            bail!("verify: BatchKv batch {b} must equal bucket {gb}");
+        }
+        if tokens.len() != b * m {
+            bail!("verify: tokens len {} != b*m {}", tokens.len(), b * m);
+        }
+        let cache_dims = [
+            dims.n_layers as i64,
+            b as i64,
+            dims.n_heads as i64,
+            dims.max_seq as i64,
+            dims.d_head as i64,
+        ];
+        let out = self.run(
+            &g.name,
+            &[
+                lit_i32(tokens, &[b as i64, m as i64])?,
+                lit_i32(pos, &[b as i64])?,
+                lit_f32(&kv.k, &cache_dims)?,
+                lit_f32(&kv.v, &cache_dims)?,
+            ],
+        )?;
+        let logits = out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("verify logits: {e:?}"))?;
+        kv.k = out[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("verify k: {e:?}"))?;
+        kv.v = out[2].to_vec::<f32>().map_err(|e| anyhow::anyhow!("verify v: {e:?}"))?;
+        Ok(VerifyOutput { logits, bucket_b: b, m })
+    }
+
+    /// Run the vision encoder on one image's patch features.
+    pub fn encode(&mut self, patches: &[f32]) -> Result<Vec<f32>> {
+        let g = (*self
+            .manifest
+            .graphs_of(GraphKind::Encode, "enc")
+            .first()
+            .context("no encode graph")?)
+        .clone();
+        let np = g.dim("np").unwrap() as i64;
+        let dp = g.dim("dp").unwrap() as i64;
+        let out = self.run(&g.name, &[lit_f32(patches, &[np, dp])?])?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("encode out: {e:?}"))
+    }
+
+    /// Run the standalone MoE block (EPLB demo path).
+    pub fn moe(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        let g = (*self
+            .manifest
+            .graphs_of(GraphKind::Moe, "moe")
+            .first()
+            .context("no moe graph")?)
+        .clone();
+        let t = g.dim("t").unwrap() as i64;
+        let d = g.dim("d").unwrap() as i64;
+        let out = self.run(&g.name, &[lit_f32(x, &[t, d])?])?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("moe out: {e:?}"))
+    }
+}
+
+/// Greedy argmax over a logits row.
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bestv = f32::NEG_INFINITY;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > bestv {
+            bestv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims { vocab: 256, d_model: 64, n_layers: 2, n_heads: 4, d_head: 16, max_seq: 8 }
+    }
+
+    #[test]
+    fn batchkv_write_and_clear() {
+        let d = dims();
+        let mut kv = BatchKv::zeros(d, 2);
+        let s_bucket = 4;
+        let n = d.n_layers * d.n_heads * s_bucket * d.d_head;
+        let pk: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let pv: Vec<f32> = (0..n).map(|i| (i * 2) as f32).collect();
+        kv.write_prefill(1, &pk, &pv, s_bucket, 3);
+        // slot 0 untouched
+        assert!(kv.k.iter().take(d.n_heads * d.max_seq * d.d_head).all(|&x| x == 0.0));
+        // spot check: l=0,h=0,s=0,d=5 of slot 1
+        let off = kv.slot_offset(0, 1, 0, 0);
+        assert_eq!(kv.k[off + 5], pk[5]);
+        // position 3 (beyond len) must stay zero
+        let off3 = kv.slot_offset(0, 1, 0, 3);
+        assert!(kv.k[off3..off3 + d.d_head].iter().all(|&x| x == 0.0));
+        kv.clear_slot(1);
+        assert!(kv.k.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn batchkv_copy_slot() {
+        let d = dims();
+        let mut a = BatchKv::zeros(d, 2);
+        let s_bucket = 4;
+        let n = d.n_layers * d.n_heads * s_bucket * d.d_head;
+        let pk: Vec<f32> = (0..n).map(|i| i as f32 + 1.0).collect();
+        a.write_prefill(0, &pk, &pk, s_bucket, 4);
+        let mut b = BatchKv::zeros(d, 4);
+        b.copy_slot_from(2, &a, 0, 4);
+        let src = a.slot_offset(1, 0, 2, 3);
+        let dst = b.slot_offset(1, 2, 2, 3);
+        assert_eq!(a.k[src..src + d.d_head], b.k[dst..dst + d.d_head]);
+    }
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0, 2.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+}

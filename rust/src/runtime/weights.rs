@@ -1,0 +1,167 @@
+//! Parser for `artifacts/weights.bin` (written by python/compile/aot.py).
+//!
+//! Format (little-endian):
+//! ```text
+//! magic   b"XLLMW001"
+//! u32     n_tensors
+//! per tensor:
+//!   u32   name_len;  name bytes (e.g. "tiny/embed")
+//!   u32   ndim;  u32 dims[ndim]
+//!   f32   data[prod(dims)]
+//! ```
+//! Tensor order within a weight-set prefix (e.g. `tiny/`) is the HLO
+//! parameter order of every graph compiled against that set.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One weight tensor.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// All weight tensors, in file order.
+#[derive(Debug, Clone, Default)]
+pub struct WeightStore {
+    pub tensors: Vec<Tensor>,
+}
+
+impl WeightStore {
+    /// Load `<path>` and validate framing.
+    pub fn load(path: &Path) -> Result<WeightStore> {
+        let data = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        WeightStore::parse(&data)
+    }
+
+    pub fn parse(data: &[u8]) -> Result<WeightStore> {
+        if data.len() < 12 || &data[..8] != b"XLLMW001" {
+            bail!("weights.bin: bad magic");
+        }
+        let mut off = 8usize;
+        let n = read_u32(data, &mut off)? as usize;
+        let mut tensors = Vec::with_capacity(n);
+        for i in 0..n {
+            let name_len = read_u32(data, &mut off)? as usize;
+            if off + name_len > data.len() {
+                bail!("weights.bin: tensor {i} name overruns file");
+            }
+            let name = std::str::from_utf8(&data[off..off + name_len])
+                .context("tensor name not utf-8")?
+                .to_string();
+            off += name_len;
+            let ndim = read_u32(data, &mut off)? as usize;
+            if ndim > 8 {
+                bail!("weights.bin: tensor {name} has implausible ndim {ndim}");
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(data, &mut off)? as usize);
+            }
+            let count: usize = dims.iter().product();
+            let bytes = count * 4;
+            if off + bytes > data.len() {
+                bail!("weights.bin: tensor {name} data overruns file");
+            }
+            let mut vals = vec![0f32; count];
+            for (j, v) in vals.iter_mut().enumerate() {
+                let b = &data[off + j * 4..off + j * 4 + 4];
+                *v = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            }
+            off += bytes;
+            tensors.push(Tensor { name, dims, data: vals });
+        }
+        if off != data.len() {
+            bail!("weights.bin: {} trailing bytes", data.len() - off);
+        }
+        Ok(WeightStore { tensors })
+    }
+
+    /// Tensors of a weight set (prefix before '/'), in file order.
+    pub fn set(&self, set_name: &str) -> Vec<&Tensor> {
+        let prefix = format!("{set_name}/");
+        self.tensors.iter().filter(|t| t.name.starts_with(&prefix)).collect()
+    }
+
+    pub fn get(&self, full_name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|t| t.name == full_name)
+    }
+
+    /// Total parameter count of a set.
+    pub fn param_count(&self, set_name: &str) -> usize {
+        self.set(set_name).iter().map(|t| t.element_count()).sum()
+    }
+}
+
+fn read_u32(data: &[u8], off: &mut usize) -> Result<u32> {
+    if *off + 4 > data.len() {
+        bail!("weights.bin: truncated at offset {off}");
+    }
+    let v = u32::from_le_bytes([data[*off], data[*off + 1], data[*off + 2], data[*off + 3]]);
+    *off += 4;
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"XLLMW001");
+        out.extend_from_slice(&2u32.to_le_bytes());
+        // tensor "a/x": dims [2,3]
+        out.extend_from_slice(&3u32.to_le_bytes());
+        out.extend_from_slice(b"a/x");
+        out.extend_from_slice(&2u32.to_le_bytes());
+        out.extend_from_slice(&2u32.to_le_bytes());
+        out.extend_from_slice(&3u32.to_le_bytes());
+        for i in 0..6 {
+            out.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        // tensor "b/y": dims [4]
+        out.extend_from_slice(&3u32.to_le_bytes());
+        out.extend_from_slice(b"b/y");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&4u32.to_le_bytes());
+        for i in 0..4 {
+            out.extend_from_slice(&(10.0 + i as f32).to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn parses_and_indexes() {
+        let ws = WeightStore::parse(&sample()).unwrap();
+        assert_eq!(ws.tensors.len(), 2);
+        let a = ws.get("a/x").unwrap();
+        assert_eq!(a.dims, vec![2, 3]);
+        assert_eq!(a.data[5], 5.0);
+        assert_eq!(ws.set("b").len(), 1);
+        assert_eq!(ws.param_count("a"), 6);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(WeightStore::parse(b"NOTMAGIC").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing() {
+        let mut s = sample();
+        s.truncate(s.len() - 2);
+        assert!(WeightStore::parse(&s).is_err());
+        let mut s2 = sample();
+        s2.extend_from_slice(&[0, 0]);
+        assert!(WeightStore::parse(&s2).is_err());
+    }
+}

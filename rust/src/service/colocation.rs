@@ -1,0 +1,238 @@
+//! Online-offline co-location scheduler policy (paper §3.1).
+//!
+//! The latency-constrained decoupled architecture: the cluster is viewed
+//! as a *latency-relaxed* pool (the old Prefill instances) and a
+//! *latency-strict* pool (the old Decode instances).  Work items are
+//! assigned by their latency class, not their phase:
+//!
+//! * online prefill  -> latency-relaxed (with preemption rights)
+//! * online decode   -> latency-strict
+//! * offline prefill -> latency-relaxed, best-effort
+//! * offline decode  -> EITHER pool — the degree of freedom this policy
+//!   exploits to keep both pools busy (offline decodes migrate to the
+//!   relaxed pool when online prefill load drops).
+//!
+//! Two safety mechanisms from the paper:
+//! * **Performance-bottleneck analysis** — the roofline model classifies a
+//!   candidate decode batch as compute- or memory-bound; offline requests
+//!   are merged only while the predicted step latency stays within the
+//!   TPOT SLO ("dynamically select requests for decoding batching").
+//! * **Efficient preemption** — online prefill arrivals interrupt offline
+//!   prefill execution at chunk granularity (the "model execution
+//!   interruption" technique: chunked prefill bounds the preemption
+//!   latency to one chunk).
+
+use crate::sim::{Bound, CostModel};
+use crate::workload::RequestClass;
+
+/// Which pool a work item should run in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolChoice {
+    LatencyRelaxed,
+    LatencyStrict,
+}
+
+/// Co-location policy configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ColocationConfig {
+    /// TPOT SLO of online requests (s) — the hard constraint.
+    pub online_tpot_s: f64,
+    /// Fraction of the TPOT budget a decode step may use after admitting
+    /// offline work (headroom guard).
+    pub tpot_headroom: f64,
+    /// Relaxed-pool online-prefill utilization below which offline decode
+    /// migrates INTO the relaxed pool.
+    pub relaxed_idle_threshold: f64,
+}
+
+impl Default for ColocationConfig {
+    fn default() -> Self {
+        ColocationConfig { online_tpot_s: 0.1, tpot_headroom: 0.9, relaxed_idle_threshold: 0.5 }
+    }
+}
+
+/// Decide the pool for a work item (the latency-constrained reassignment).
+pub fn assign_pool(
+    class: RequestClass,
+    is_decode: bool,
+    relaxed_online_util: f64,
+    cfg: &ColocationConfig,
+) -> PoolChoice {
+    match (class, is_decode) {
+        (RequestClass::Online, false) => PoolChoice::LatencyRelaxed,
+        (RequestClass::Online, true) => PoolChoice::LatencyStrict,
+        (RequestClass::Offline, false) => PoolChoice::LatencyRelaxed,
+        (RequestClass::Offline, true) => {
+            // offline decode is the flexible load: fill the relaxed pool
+            // when online prefill traffic is low, otherwise ride along on
+            // strict instances (subject to the admission check below)
+            if relaxed_online_util < cfg.relaxed_idle_threshold {
+                PoolChoice::LatencyRelaxed
+            } else {
+                PoolChoice::LatencyStrict
+            }
+        }
+    }
+}
+
+/// Admission decision for merging offline decodes into a strict-pool
+/// decode batch: model the step with and without the extra sequences and
+/// admit only if the TPOT budget holds (§3.1 Solution 1).
+///
+/// Returns how many of `offline_candidates` sequences (each with the given
+/// mean context) can be admitted.
+pub fn admit_offline_decodes(
+    cost: &CostModel,
+    online_seqs: u64,
+    online_kv_tokens: u64,
+    offline_candidates: u64,
+    offline_ctx_tokens: u64,
+    cfg: &ColocationConfig,
+) -> u64 {
+    let budget = cfg.online_tpot_s * cfg.tpot_headroom;
+    // base step must already fit, else admit nothing
+    if cost.decode_step_s(online_seqs.max(1), online_kv_tokens) > budget {
+        return 0;
+    }
+    let mut lo = 0u64;
+    let mut hi = offline_candidates;
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        let t = cost.decode_step_s(
+            online_seqs + mid,
+            online_kv_tokens + mid * offline_ctx_tokens,
+        );
+        if t <= budget {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+/// Bottleneck-aware candidate ordering (§3.1 Solution 1): when the online
+/// batch is memory-bound, prefer *short-context* offline requests (they
+/// add compute but little memory traffic); when compute-bound, prefer
+/// long-context ones (memory-heavy, compute-light).  Returns indices of
+/// `offline_ctxs` in admission order.
+pub fn order_offline_candidates(
+    cost: &CostModel,
+    online_seqs: u64,
+    online_kv_tokens: u64,
+    offline_ctxs: &[u64],
+) -> Vec<usize> {
+    let bound = cost.decode_bound(online_seqs.max(1), online_kv_tokens);
+    let mut idx: Vec<usize> = (0..offline_ctxs.len()).collect();
+    match bound {
+        Bound::Memory => idx.sort_by_key(|&i| offline_ctxs[i]),
+        Bound::Compute => idx.sort_by_key(|&i| std::cmp::Reverse(offline_ctxs[i])),
+    }
+    idx
+}
+
+/// Preemption decision at chunk granularity (§3.1 Solution 2): an online
+/// prefill arrival preempts offline prefill work; the latency cost is at
+/// most one chunk's execution, which is bounded by `chunk_tokens`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptAction {
+    /// Let the current offline chunk finish (bounded delay), then switch.
+    FinishChunkThenSwitch,
+    /// Nothing to preempt.
+    None,
+}
+
+pub fn preempt_for_online_prefill(offline_running: bool) -> PreemptAction {
+    if offline_running {
+        PreemptAction::FinishChunkThenSwitch
+    } else {
+        PreemptAction::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ascend_910b, catalog};
+    use crate::sim::EngineFeatures;
+
+    fn cost() -> CostModel {
+        CostModel::new(ascend_910b(), catalog("Qwen3-8B").unwrap(), EngineFeatures::xllm(1))
+    }
+
+    #[test]
+    fn pool_assignment_matrix() {
+        let cfg = ColocationConfig::default();
+        use PoolChoice::*;
+        use RequestClass::*;
+        assert_eq!(assign_pool(Online, false, 0.9, &cfg), LatencyRelaxed);
+        assert_eq!(assign_pool(Online, true, 0.9, &cfg), LatencyStrict);
+        assert_eq!(assign_pool(Offline, false, 0.9, &cfg), LatencyRelaxed);
+        // offline decode follows the tide:
+        assert_eq!(assign_pool(Offline, true, 0.9, &cfg), LatencyStrict);
+        assert_eq!(assign_pool(Offline, true, 0.1, &cfg), LatencyRelaxed);
+    }
+
+    #[test]
+    fn admission_monotone_and_bounded() {
+        let c = cost();
+        let cfg = ColocationConfig { online_tpot_s: 0.05, ..Default::default() };
+        let n = admit_offline_decodes(&c, 8, 8 * 2048, 64, 2048, &cfg);
+        assert!(n <= 64);
+        // admitted batch must still meet the budget
+        let t = c.decode_step_s(8 + n, 8 * 2048 + n * 2048);
+        assert!(t <= cfg.online_tpot_s * cfg.tpot_headroom + 1e-9);
+        // one more must violate (or all were admitted)
+        if n < 64 {
+            let t1 = c.decode_step_s(8 + n + 1, 8 * 2048 + (n + 1) * 2048);
+            assert!(t1 > cfg.online_tpot_s * cfg.tpot_headroom);
+        }
+    }
+
+    #[test]
+    fn admission_zero_when_budget_blown() {
+        let c = cost();
+        let cfg = ColocationConfig { online_tpot_s: 1e-6, ..Default::default() };
+        assert_eq!(admit_offline_decodes(&c, 32, 32 * 4096, 10, 2048, &cfg), 0);
+    }
+
+    #[test]
+    fn ordering_depends_on_bottleneck() {
+        let c = cost();
+        let ctxs = vec![8000u64, 100, 3000];
+        // decode at small batch is memory bound -> short ctx first
+        let order = order_offline_candidates(&c, 4, 4 * 2048, &ctxs);
+        assert_eq!(order[0], 1);
+        assert_eq!(order[2], 0);
+    }
+
+    #[test]
+    fn preemption_is_chunk_bounded() {
+        assert_eq!(preempt_for_online_prefill(true), PreemptAction::FinishChunkThenSwitch);
+        assert_eq!(preempt_for_online_prefill(false), PreemptAction::None);
+    }
+
+    #[test]
+    fn property_admission_never_violates_budget() {
+        crate::testutil::check("coloc-admission", 64, |rng| {
+            let c = cost();
+            let cfg = ColocationConfig {
+                online_tpot_s: 0.02 + rng.f64() * 0.2,
+                ..Default::default()
+            };
+            let online = rng.range(1, 32);
+            let kv = online * rng.range(256, 4096);
+            let cand = rng.range(0, 64);
+            let ctx = rng.range(128, 4096);
+            let n = admit_offline_decodes(&c, online, kv, cand, ctx, &cfg);
+            if n > 0 {
+                let t = c.decode_step_s(online + n, kv + n * ctx);
+                crate::prop_assert!(
+                    t <= cfg.online_tpot_s * cfg.tpot_headroom + 1e-9,
+                    "admitted batch violates TPOT: {t}"
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,243 @@
+//! Hybrid Encode-Prefill-Decode disaggregation (paper §3.3).
+//!
+//! Multimodal requests add an Encode phase (vision tower).  The policy
+//! space is which phases co-locate on an instance:
+//!
+//! * `EP-D`  — Encode fused with Prefill (runs in the P pool), Decode
+//!   separate.
+//! * `ED-P`  — Encode fused with Decode (runs in the D pool), Prefill
+//!   separate.
+//! * `E-P-D` — all three phases on separate pools.
+//!
+//! The **EPD profiler** binary-searches, per strategy, (1) the maximum
+//! encode batch size and (2) the prefill/decode token budget such that a
+//! worst-case iteration still meets the TPOT SLO; it then picks the
+//! strategy maximizing predicted goodput under the measured workload mix
+//! (the paper's "automatically selects the optimal disaggregation strategy
+//! based on pre-profiling").
+//!
+//! Dual-stream parallelism (vision stream ∥ language stream) halves the
+//! exposed encode time on instances that run Encode alongside LM phases.
+
+use crate::sim::CostModel;
+
+/// The three disaggregation strategies (+ the fused baseline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EpdStrategy {
+    /// Everything on every instance (no disaggregation — ablation base).
+    Fused,
+    /// Encode+Prefill in the P pool; Decode separate.
+    EpD,
+    /// Encode+Decode in the D pool; Prefill separate.
+    EdP,
+    /// Three separate pools.
+    EPD,
+}
+
+pub const ALL_STRATEGIES: [EpdStrategy; 4] =
+    [EpdStrategy::Fused, EpdStrategy::EpD, EpdStrategy::EdP, EpdStrategy::EPD];
+
+/// Profiler output for one strategy.
+#[derive(Debug, Clone, Copy)]
+pub struct EpdProfile {
+    pub strategy: EpdStrategy,
+    /// Max images per encode batch under the TPOT SLO.
+    pub max_encode_batch: u64,
+    /// Prefill token budget per iteration under the TPOT SLO.
+    pub token_budget: u64,
+    /// Predicted goodput score (relative).
+    pub score: f64,
+}
+
+/// Binary-search the largest `x` in [lo, hi] with `ok(x)` (monotone).
+fn bsearch_max<F: Fn(u64) -> bool>(lo: u64, hi: u64, ok: F) -> u64 {
+    if !ok(lo) {
+        return 0;
+    }
+    let (mut lo, mut hi) = (lo, hi);
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        if ok(mid) {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+/// Profile one strategy: the iteration that must meet TPOT depends on
+/// which phases share an instance with decode.
+pub fn profile_strategy(
+    strategy: EpdStrategy,
+    cost: &CostModel,
+    patches_per_image: u64,
+    decode_seqs: u64,
+    decode_kv: u64,
+    tpot_slo_s: f64,
+) -> EpdProfile {
+    let base = cost.decode_step_s(decode_seqs.max(1), decode_kv);
+    // encode batch limit: only binds when encode shares with decode
+    // (ED-P, Fused); dual-stream hides half the encode cost
+    let encode_shares_decode = matches!(strategy, EpdStrategy::EdP | EpdStrategy::Fused);
+    let max_encode_batch = if encode_shares_decode {
+        bsearch_max(1, 64, |b| {
+            base + 0.5 * cost.encode_s(b * patches_per_image) <= tpot_slo_s
+        })
+    } else {
+        // encode never delays decode; capped by encoder throughput alone
+        64
+    };
+    // prefill token budget: binds when prefill shares with decode
+    let prefill_shares_decode = matches!(strategy, EpdStrategy::Fused);
+    let token_budget = if prefill_shares_decode {
+        bsearch_max(16, 8192, |t| base + cost.prefill_s(t, 0) <= tpot_slo_s)
+    } else {
+        8192
+    };
+
+    // goodput score: phase parallelism (more separation = more parallel
+    // capacity) minus migration overhead (more separation = more KV/image
+    // hops)
+    let parallelism = match strategy {
+        EpdStrategy::Fused => 1.0,
+        EpdStrategy::EpD => 1.8,
+        EpdStrategy::EdP => 1.6,
+        EpdStrategy::EPD => 2.2,
+    };
+    let hops = match strategy {
+        EpdStrategy::Fused => 0.0,
+        EpdStrategy::EpD | EpdStrategy::EdP => 1.0,
+        EpdStrategy::EPD => 2.0,
+    };
+    let hop_cost = cost.kv_transfer_s(2048) * hops;
+    let effective_budget = token_budget.min(8192) as f64;
+    let score = parallelism * (effective_budget / 8192.0).max(0.1)
+        * (max_encode_batch as f64).max(1.0).min(16.0).sqrt()
+        / (1.0 + 10.0 * hop_cost);
+    EpdProfile { strategy, max_encode_batch, token_budget, score }
+}
+
+/// The EPD profiler: evaluate all strategies, pick the best score.
+pub fn profile_all(
+    cost: &CostModel,
+    patches_per_image: u64,
+    decode_seqs: u64,
+    decode_kv: u64,
+    tpot_slo_s: f64,
+) -> (EpdProfile, Vec<EpdProfile>) {
+    let profiles: Vec<EpdProfile> = ALL_STRATEGIES
+        .iter()
+        .map(|&s| profile_strategy(s, cost, patches_per_image, decode_seqs, decode_kv, tpot_slo_s))
+        .collect();
+    let best = *profiles
+        .iter()
+        .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+        .unwrap();
+    (best, profiles)
+}
+
+/// Which pool runs each phase under a strategy (instance placement).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhasePlacement {
+    /// Pool index: 0 = P pool, 1 = D pool, 2 = E pool.
+    pub encode_pool: u8,
+    pub prefill_pool: u8,
+    pub decode_pool: u8,
+}
+
+pub fn placement(strategy: EpdStrategy) -> PhasePlacement {
+    match strategy {
+        EpdStrategy::Fused => PhasePlacement { encode_pool: 0, prefill_pool: 0, decode_pool: 0 },
+        EpdStrategy::EpD => PhasePlacement { encode_pool: 0, prefill_pool: 0, decode_pool: 1 },
+        EpdStrategy::EdP => PhasePlacement { encode_pool: 1, prefill_pool: 0, decode_pool: 1 },
+        EpdStrategy::EPD => PhasePlacement { encode_pool: 2, prefill_pool: 0, decode_pool: 1 },
+    }
+}
+
+/// Dual-stream exposure: fraction of encode time visible to the language
+/// stream when the two run on separate device streams (§3.3).
+pub fn dual_stream_encode_exposure() -> f64 {
+    0.5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ascend_910b, catalog};
+    use crate::sim::EngineFeatures;
+
+    fn cost() -> CostModel {
+        CostModel::new(ascend_910b(), catalog("Qwen2-7B").unwrap(), EngineFeatures::xllm(1))
+    }
+
+    #[test]
+    fn bsearch_finds_boundary() {
+        assert_eq!(bsearch_max(1, 100, |x| x <= 37), 37);
+        assert_eq!(bsearch_max(1, 100, |_| true), 100);
+        assert_eq!(bsearch_max(1, 100, |_| false), 0);
+    }
+
+    #[test]
+    fn profiles_respect_tpot() {
+        let c = cost();
+        let slo = 0.05;
+        let p = profile_strategy(EpdStrategy::Fused, &c, 576, 16, 16 * 1024, slo);
+        if p.max_encode_batch > 0 {
+            let t = c.decode_step_s(16, 16 * 1024)
+                + 0.5 * c.encode_s(p.max_encode_batch * 576);
+            assert!(t <= slo + 1e-9, "encode batch violates TPOT: {t}");
+        }
+        if p.token_budget > 0 {
+            let t = c.decode_step_s(16, 16 * 1024) + c.prefill_s(p.token_budget, 0);
+            assert!(t <= slo + 1e-9, "token budget violates TPOT: {t}");
+        }
+    }
+
+    #[test]
+    fn separated_strategies_get_bigger_budgets() {
+        let c = cost();
+        let fused = profile_strategy(EpdStrategy::Fused, &c, 576, 16, 16 * 1024, 0.05);
+        let epd = profile_strategy(EpdStrategy::EPD, &c, 576, 16, 16 * 1024, 0.05);
+        assert!(epd.token_budget >= fused.token_budget);
+        assert!(epd.max_encode_batch >= fused.max_encode_batch);
+    }
+
+    #[test]
+    fn profiler_picks_a_disaggregated_strategy_under_load() {
+        let c = cost();
+        let (best, all) = profile_all(&c, 576, 16, 16 * 1024, 0.05);
+        assert_eq!(all.len(), 4);
+        assert_ne!(best.strategy, EpdStrategy::Fused, "disaggregation should win under load");
+    }
+
+    #[test]
+    fn placement_matrix() {
+        assert_eq!(placement(EpdStrategy::EpD).encode_pool, 0);
+        assert_eq!(placement(EpdStrategy::EpD).decode_pool, 1);
+        assert_eq!(placement(EpdStrategy::EdP).encode_pool, 1);
+        assert_eq!(placement(EpdStrategy::EPD).encode_pool, 2);
+    }
+
+    #[test]
+    fn property_profile_budgets_monotone_in_slo() {
+        crate::testutil::check("epd-monotone", 32, |rng| {
+            let c = cost();
+            let slo_small = 0.02 + rng.f64() * 0.02;
+            let slo_big = slo_small * 2.0;
+            for s in ALL_STRATEGIES {
+                let a = profile_strategy(s, &c, 576, 8, 8 * 1024, slo_small);
+                let b = profile_strategy(s, &c, 576, 8, 8 * 1024, slo_big);
+                crate::prop_assert!(
+                    b.max_encode_batch >= a.max_encode_batch,
+                    "encode batch not monotone for {s:?}"
+                );
+                crate::prop_assert!(
+                    b.token_budget >= a.token_budget,
+                    "token budget not monotone for {s:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,252 @@
+//! Fast fault recovery (paper §3.5).
+//!
+//! Inference faults can't use training's checkpoint-then-restore (seconds
+//! of model reload would blow every SLO).  xLLM's failover instead does:
+//!
+//! * **Fast request migration** — for each request on the failed instance,
+//!   decide per-request between *recomputing* its KV (re-running prefill
+//!   over the accumulated context on the target) and *migrating* a KV
+//!   replica from the global cache (DRAM/SSD copy survives HBM loss) —
+//!   whichever is predicted cheaper ("evaluates KV recomputation or
+//!   migration costs ... and makes optimal global rescheduling
+//!   decisions").
+//! * **Fast instance recovery** — the restarted instance masks weight
+//!   reload behind the cluster's continued serving; recovery time is
+//!   modelled and reported.
+//!
+//! The detector is heartbeat-based (service::meta) with a short suspicion
+//! timeout.
+
+use crate::service::kvstore::{Tier, TransferEngine};
+use crate::sim::CostModel;
+
+/// How to restore one interrupted request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryAction {
+    /// Re-run prefill over the context on the target instance.
+    Recompute,
+    /// Pull the KV replica (DRAM/SSD copy or remote replica) to the target.
+    Migrate,
+    /// Nothing recoverable (no replica, zero context): restart from input.
+    Restart,
+}
+
+/// A request interrupted by an instance failure.
+#[derive(Debug, Clone, Copy)]
+pub struct InterruptedRequest {
+    pub request: u64,
+    /// Context tokens accumulated (prefilled + decoded).
+    pub context_tokens: u64,
+    /// Tier of the surviving KV replica, if any (HBM copies die with the
+    /// instance; DRAM/SSD/remote copies survive).
+    pub replica_tier: Option<Tier>,
+}
+
+/// Cost-based recovery decision (per request).
+pub fn plan_recovery(
+    req: &InterruptedRequest,
+    cost: &CostModel,
+    xfer: &TransferEngine,
+) -> (RecoveryAction, f64) {
+    if req.context_tokens == 0 {
+        return (RecoveryAction::Restart, 0.0);
+    }
+    let recompute_s = cost.prefill_s(req.context_tokens, 0);
+    match req.replica_tier {
+        None | Some(Tier::Hbm) => (RecoveryAction::Recompute, recompute_s),
+        Some(tier) => {
+            let bytes = req.context_tokens as f64 * cost.model.kv_bytes_per_token();
+            // stage from the tier, then ship to the target instance
+            let migrate_s = xfer.load_to_hbm_s(tier, bytes) + xfer.migrate_s(bytes);
+            if migrate_s < recompute_s {
+                (RecoveryAction::Migrate, migrate_s)
+            } else {
+                (RecoveryAction::Recompute, recompute_s)
+            }
+        }
+    }
+}
+
+/// Heartbeat-based failure detector.
+#[derive(Debug, Clone)]
+pub struct FailureDetector {
+    /// Instance considered failed after this many seconds of silence.
+    pub timeout_s: f64,
+    last_seen: Vec<f64>,
+    pub detected: Vec<usize>,
+}
+
+impl FailureDetector {
+    pub fn new(n_instances: usize, timeout_s: f64) -> FailureDetector {
+        FailureDetector { timeout_s, last_seen: vec![0.0; n_instances], detected: Vec::new() }
+    }
+
+    pub fn heartbeat(&mut self, instance: usize, now_s: f64) {
+        self.last_seen[instance] = now_s;
+        self.detected.retain(|&i| i != instance);
+    }
+
+    /// Poll for failures; returns newly detected instance ids.
+    pub fn poll(&mut self, now_s: f64) -> Vec<usize> {
+        let mut new = Vec::new();
+        for (i, &t) in self.last_seen.iter().enumerate() {
+            if now_s - t > self.timeout_s && !self.detected.contains(&i) {
+                self.detected.push(i);
+                new.push(i);
+            }
+        }
+        new
+    }
+
+    /// Detection latency bound: worst case time from crash to detection.
+    pub fn detection_bound_s(&self, heartbeat_interval_s: f64) -> f64 {
+        self.timeout_s + heartbeat_interval_s
+    }
+}
+
+/// Instance recovery time model: restart + weight load masked by overlap.
+#[derive(Debug, Clone, Copy)]
+pub struct RecoveryModel {
+    /// Process restart + runtime init.
+    pub restart_s: f64,
+    /// Weight bytes / load bandwidth.
+    pub load_bw: f64,
+    /// Fraction of the load masked by pipelined init (paper: "efficient
+    /// masking of computation and communication").
+    pub masked_fraction: f64,
+}
+
+impl Default for RecoveryModel {
+    fn default() -> Self {
+        RecoveryModel { restart_s: 1.0, load_bw: 10e9, masked_fraction: 0.7 }
+    }
+}
+
+impl RecoveryModel {
+    pub fn recovery_s(&self, weight_bytes: f64) -> f64 {
+        self.restart_s + (1.0 - self.masked_fraction) * weight_bytes / self.load_bw
+    }
+
+    /// The checkpoint-reload baseline (no masking, full reload + restore).
+    pub fn baseline_s(&self, weight_bytes: f64) -> f64 {
+        self.restart_s + weight_bytes / self.load_bw + 0.5 * weight_bytes / self.load_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ascend_910b, catalog};
+    use crate::sim::EngineFeatures;
+
+    fn cost() -> CostModel {
+        CostModel::new(ascend_910b(), catalog("Qwen3-8B").unwrap(), EngineFeatures::xllm(1))
+    }
+
+    #[test]
+    fn replica_absent_recomputes_replica_present_migrates() {
+        let c = cost();
+        let x = TransferEngine::default();
+        let none = InterruptedRequest {
+            request: 1,
+            context_tokens: 64,
+            replica_tier: None,
+        };
+        let long = InterruptedRequest {
+            request: 2,
+            context_tokens: 120_000,
+            replica_tier: Some(Tier::Dram),
+        };
+        let (a_none, _) = plan_recovery(&none, &c, &x);
+        let (a_long, t_long) = plan_recovery(&long, &c, &x);
+        assert_eq!(a_none, RecoveryAction::Recompute);
+        assert_eq!(a_long, RecoveryAction::Migrate);
+        assert!(t_long < c.prefill_s(120_000, 0));
+    }
+
+    #[test]
+    fn hbm_only_replica_died_with_instance() {
+        let c = cost();
+        let x = TransferEngine::default();
+        let r = InterruptedRequest {
+            request: 3,
+            context_tokens: 50_000,
+            replica_tier: Some(Tier::Hbm),
+        };
+        let (a, _) = plan_recovery(&r, &c, &x);
+        assert_eq!(a, RecoveryAction::Recompute);
+    }
+
+    #[test]
+    fn zero_context_restarts() {
+        let c = cost();
+        let x = TransferEngine::default();
+        let r = InterruptedRequest { request: 4, context_tokens: 0, replica_tier: None };
+        assert_eq!(plan_recovery(&r, &c, &x).0, RecoveryAction::Restart);
+    }
+
+    #[test]
+    fn detector_fires_after_timeout_and_clears_on_heartbeat() {
+        let mut d = FailureDetector::new(3, 1.0);
+        d.heartbeat(0, 0.0);
+        d.heartbeat(1, 0.0);
+        d.heartbeat(2, 0.0);
+        assert!(d.poll(0.5).is_empty());
+        d.heartbeat(0, 1.0);
+        d.heartbeat(1, 1.0);
+        let new = d.poll(1.9); // 2 silent for 1.9s > 1.0s; 0/1 fresh
+        assert_eq!(new, vec![2]);
+        assert!(d.poll(1.95).is_empty(), "no duplicate detection");
+        d.heartbeat(2, 2.0);
+        assert!(d.detected.is_empty());
+    }
+
+    #[test]
+    fn masked_recovery_beats_checkpoint_baseline() {
+        let m = RecoveryModel::default();
+        let w = 16e9; // 8B params fp16
+        assert!(m.recovery_s(w) < m.baseline_s(w) * 0.5);
+    }
+
+    #[test]
+    fn property_recovery_picks_cheaper_option() {
+        crate::testutil::check("fault-optimal", 96, |rng| {
+            let c = cost();
+            let x = TransferEngine::default();
+            let r = InterruptedRequest {
+                request: 0,
+                context_tokens: rng.range(1, 200_000),
+                replica_tier: match rng.range(0, 3) {
+                    0 => None,
+                    1 => Some(Tier::Dram),
+                    _ => Some(Tier::Ssd),
+                },
+            };
+            let (action, t) = plan_recovery(&r, &c, &x);
+            let recompute = c.prefill_s(r.context_tokens, 0);
+            match action {
+                RecoveryAction::Recompute => {
+                    if let Some(tier) = r.replica_tier {
+                        if tier != Tier::Hbm {
+                            let bytes =
+                                r.context_tokens as f64 * c.model.kv_bytes_per_token();
+                            let mig = x.load_to_hbm_s(tier, bytes) + x.migrate_s(bytes);
+                            crate::prop_assert!(
+                                recompute <= mig + 1e-12,
+                                "chose recompute but migrate was cheaper"
+                            );
+                        }
+                    }
+                    crate::prop_assert!((t - recompute).abs() < 1e-12);
+                }
+                RecoveryAction::Migrate => {
+                    crate::prop_assert!(t <= recompute, "chose migrate but it was dearer");
+                }
+                RecoveryAction::Restart => {
+                    crate::prop_assert!(r.context_tokens == 0);
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,499 @@
+//! Global multi-level KV cache management (paper §3.4).
+//!
+//! Per instance: a tiered HBM → DRAM → SSD cache of KV *blocks* (fixed
+//! token granularity) under the paper's strict consistency rule — "if data
+//! resides in HBM, it must also be present in DRAM".  Blocks are identified
+//! by a rolling prefix hash chain, so shared prompt prefixes dedupe across
+//! requests (prefix cache).
+//!
+//! Globally: a cache-aware router implementing the paper's three steps:
+//! (1) prefix matching detection — per-candidate KV reuse rate;
+//! (2) performance estimation — expected latency from load state, hit
+//!     tier, and recompute cost;
+//! (3) optimal node selection.
+//!
+//! The transfer engine (Mooncake substitute) prices tier loads and
+//! instance-to-instance migrations from bandwidth parameters.
+
+use std::collections::HashMap;
+
+use crate::sim::CostModel;
+
+/// Storage tier, fastest first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tier {
+    Hbm = 0,
+    Dram = 1,
+    Ssd = 2,
+}
+
+/// Rolling hash chain over token blocks: hash[i] covers tokens
+/// [0, (i+1)*block) — a prefix identity, so equal chains = equal prefixes.
+pub fn hash_chain(tokens: &[u32], block_tokens: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(tokens.len() / block_tokens);
+    let mut h: u64 = 0xcbf29ce484222325;
+    for (i, &t) in tokens.iter().enumerate() {
+        h ^= t as u64 + 1;
+        h = h.wrapping_mul(0x100000001b3);
+        if (i + 1) % block_tokens == 0 {
+            out.push(h);
+        }
+    }
+    out
+}
+
+#[derive(Debug, Clone, Copy)]
+struct BlockMeta {
+    tier: Tier,
+    last_access: u64,
+}
+
+/// Per-instance tiered cache (token capacities per tier).
+#[derive(Debug)]
+pub struct TieredCache {
+    pub block_tokens: u64,
+    cap_blocks: [u64; 3],
+    used_blocks: [u64; 3],
+    blocks: HashMap<u64, BlockMeta>,
+    clock: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl TieredCache {
+    pub fn new(block_tokens: u64, hbm_tokens: u64, dram_tokens: u64, ssd_tokens: u64) -> Self {
+        TieredCache {
+            block_tokens,
+            cap_blocks: [
+                hbm_tokens / block_tokens,
+                dram_tokens / block_tokens,
+                ssd_tokens / block_tokens,
+            ],
+            used_blocks: [0; 3],
+            blocks: HashMap::new(),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Longest cached prefix (in blocks) of the hash chain, and the
+    /// slowest tier that must be read to serve it.
+    pub fn match_prefix(&mut self, chain: &[u64]) -> (usize, Option<Tier>) {
+        let mut worst: Option<Tier> = None;
+        let mut n = 0;
+        let now = self.tick();
+        for h in chain {
+            match self.blocks.get_mut(h) {
+                Some(meta) => {
+                    meta.last_access = now;
+                    worst = Some(match worst {
+                        Some(w) if w >= meta.tier => w,
+                        _ => meta.tier,
+                    });
+                    n += 1;
+                }
+                None => break,
+            }
+        }
+        if n > 0 {
+            self.hits += 1;
+        } else if !chain.is_empty() {
+            self.misses += 1;
+        }
+        (n, worst)
+    }
+
+    fn evict_lru_from(&mut self, tier: Tier) -> Option<u64> {
+        let victim = self
+            .blocks
+            .iter()
+            .filter(|(_, m)| m.tier == tier)
+            .min_by_key(|(_, m)| m.last_access)
+            .map(|(h, _)| *h)?;
+        self.demote(victim);
+        Some(victim)
+    }
+
+    /// Demote a block one tier down (HBM→DRAM is a pure drop of the HBM
+    /// copy under the consistency rule; DRAM→SSD and SSD→out move it).
+    fn demote(&mut self, h: u64) {
+        let meta = match self.blocks.get(&h) {
+            Some(m) => *m,
+            None => return,
+        };
+        match meta.tier {
+            Tier::Hbm => {
+                // HBM copy implies a DRAM copy exists: drop the HBM copy
+                self.used_blocks[0] -= 1;
+                self.blocks.get_mut(&h).unwrap().tier = Tier::Dram;
+                // note: DRAM occupancy already counted when inserted
+            }
+            Tier::Dram => {
+                self.used_blocks[1] -= 1;
+                if self.used_blocks[2] < self.cap_blocks[2] {
+                    self.used_blocks[2] += 1;
+                    self.blocks.get_mut(&h).unwrap().tier = Tier::Ssd;
+                } else {
+                    self.blocks.remove(&h);
+                }
+            }
+            Tier::Ssd => {
+                self.used_blocks[2] -= 1;
+                self.blocks.remove(&h);
+            }
+        }
+    }
+
+    /// Insert a block at a tier, evicting LRU as needed.  Maintains the
+    /// HBM⊆DRAM rule: inserting to HBM counts occupancy in both HBM and
+    /// DRAM.
+    pub fn insert(&mut self, h: u64, tier: Tier) {
+        let now = self.tick();
+        if let Some(meta) = self.blocks.get(&h).copied() {
+            if meta.tier <= tier {
+                self.blocks.get_mut(&h).unwrap().last_access = now;
+                return; // already at this tier or faster
+            }
+            // promote: charge the faster tiers
+            if tier == Tier::Hbm && meta.tier >= Tier::Dram {
+                if meta.tier == Tier::Ssd {
+                    // must enter DRAM first (consistency rule)
+                    while self.used_blocks[1] >= self.cap_blocks[1] {
+                        if self.evict_lru_from(Tier::Dram).is_none() {
+                            return;
+                        }
+                    }
+                    self.used_blocks[1] += 1;
+                    self.used_blocks[2] -= 1;
+                }
+                while self.used_blocks[0] >= self.cap_blocks[0] {
+                    if self.evict_lru_from(Tier::Hbm).is_none() {
+                        return;
+                    }
+                }
+                self.used_blocks[0] += 1;
+                let m = self.blocks.get_mut(&h).unwrap();
+                m.tier = Tier::Hbm;
+                m.last_access = now;
+            } else if tier == Tier::Dram && meta.tier == Tier::Ssd {
+                while self.used_blocks[1] >= self.cap_blocks[1] {
+                    if self.evict_lru_from(Tier::Dram).is_none() {
+                        return;
+                    }
+                }
+                self.used_blocks[1] += 1;
+                self.used_blocks[2] -= 1;
+                let m = self.blocks.get_mut(&h).unwrap();
+                m.tier = Tier::Dram;
+                m.last_access = now;
+            }
+            return;
+        }
+        // fresh insert: DRAM first (consistency), then optional HBM charge
+        while self.used_blocks[1] >= self.cap_blocks[1] {
+            if self.evict_lru_from(Tier::Dram).is_none() {
+                return;
+            }
+        }
+        self.used_blocks[1] += 1;
+        let mut t = Tier::Dram;
+        if tier == Tier::Hbm {
+            while self.used_blocks[0] >= self.cap_blocks[0] {
+                if self.evict_lru_from(Tier::Hbm).is_none() {
+                    break;
+                }
+            }
+            if self.used_blocks[0] < self.cap_blocks[0] {
+                self.used_blocks[0] += 1;
+                t = Tier::Hbm;
+            }
+        } else if tier == Tier::Ssd {
+            // explicit SSD insert (offload path)
+            self.used_blocks[1] -= 1;
+            while self.used_blocks[2] >= self.cap_blocks[2] {
+                if self.evict_lru_from(Tier::Ssd).is_none() {
+                    return;
+                }
+            }
+            self.used_blocks[2] += 1;
+            t = Tier::Ssd;
+        }
+        self.blocks.insert(h, BlockMeta { tier: t, last_access: now });
+    }
+
+    /// Insert a whole chain (prefix store after a prefill).
+    pub fn insert_chain(&mut self, chain: &[u64], tier: Tier) {
+        for &h in chain {
+            self.insert(h, tier);
+        }
+    }
+
+    pub fn contains(&self, h: u64) -> Option<Tier> {
+        self.blocks.get(&h).map(|m| m.tier)
+    }
+
+    pub fn used_tokens(&self, tier: Tier) -> u64 {
+        self.used_blocks[tier as usize] * self.block_tokens
+    }
+
+    /// Invariant check: occupancy counters match block table; HBM⊆DRAM is
+    /// modelled by HBM blocks counting toward DRAM occupancy.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut counts = [0u64; 3];
+        for m in self.blocks.values() {
+            counts[m.tier as usize] += 1;
+        }
+        // HBM blocks also hold a DRAM copy
+        let dram_total = counts[1] + counts[0];
+        if counts[0] != self.used_blocks[0] {
+            return Err(format!("hbm count {} != {}", counts[0], self.used_blocks[0]));
+        }
+        if dram_total != self.used_blocks[1] {
+            return Err(format!("dram count {dram_total} != {}", self.used_blocks[1]));
+        }
+        if counts[2] != self.used_blocks[2] {
+            return Err(format!("ssd count {} != {}", counts[2], self.used_blocks[2]));
+        }
+        for (t, (&u, &c)) in self.used_blocks.iter().zip(&self.cap_blocks).enumerate() {
+            if u > c {
+                return Err(format!("tier {t} over capacity: {u} > {c}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Bandwidth parameters of the transfer engine (Mooncake substitute).
+#[derive(Debug, Clone, Copy)]
+pub struct TransferEngine {
+    pub dram_bw: f64,
+    pub ssd_bw: f64,
+    pub net_bw: f64,
+    /// Per-operation latency floor.
+    pub op_latency_s: f64,
+}
+
+impl Default for TransferEngine {
+    fn default() -> Self {
+        TransferEngine { dram_bw: 50e9, ssd_bw: 5e9, net_bw: 25e9, op_latency_s: 200e-6 }
+    }
+}
+
+impl TransferEngine {
+    /// Time to stage `bytes` from `tier` into HBM.
+    pub fn load_to_hbm_s(&self, tier: Tier, bytes: f64) -> f64 {
+        match tier {
+            Tier::Hbm => 0.0,
+            Tier::Dram => self.op_latency_s + bytes / self.dram_bw,
+            Tier::Ssd => self.op_latency_s + bytes / self.ssd_bw,
+        }
+    }
+
+    /// Time to migrate `bytes` between instances.
+    pub fn migrate_s(&self, bytes: f64) -> f64 {
+        self.op_latency_s + bytes / self.net_bw
+    }
+}
+
+/// One candidate instance's state for routing.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteCandidate {
+    pub instance: usize,
+    /// Blocks of the request's chain cached here.
+    pub matched_blocks: usize,
+    /// Slowest tier holding the matched prefix.
+    pub hit_tier: Option<Tier>,
+    /// Prompt tokens queued ahead on this instance.
+    pub queued_prefill_tokens: u64,
+}
+
+/// Cache-aware routing decision (paper §3.4, steps 1–3).
+///
+/// Estimated latency = queueing + prefill of the *missing* suffix +
+/// staging the matched prefix from its tier.
+pub fn route(
+    candidates: &[RouteCandidate],
+    chain_len: usize,
+    input_tokens: u64,
+    block_tokens: u64,
+    cost: &CostModel,
+    xfer: &TransferEngine,
+) -> Option<(usize, f64)> {
+    candidates
+        .iter()
+        .filter(|c| true_candidate(c))
+        .map(|c| {
+            let matched_tokens = (c.matched_blocks as u64 * block_tokens).min(input_tokens);
+            let missing = input_tokens - matched_tokens;
+            let queue_s = cost.prefill_s(c.queued_prefill_tokens, 0);
+            let prefill = if missing > 0 { cost.prefill_s(missing, matched_tokens) } else { 0.0 };
+            let stage = match c.hit_tier {
+                Some(t) => xfer
+                    .load_to_hbm_s(t, matched_tokens as f64 * cost.model.kv_bytes_per_token()),
+                None => 0.0,
+            };
+            let _ = chain_len;
+            (c.instance, queue_s + prefill + stage)
+        })
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+}
+
+fn true_candidate(_c: &RouteCandidate) -> bool {
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ascend_910b, catalog};
+    use crate::sim::EngineFeatures;
+
+    fn cache() -> TieredCache {
+        TieredCache::new(16, 16 * 4, 16 * 8, 16 * 16) // 4/8/16 blocks
+    }
+
+    #[test]
+    fn hash_chain_prefix_property() {
+        let a: Vec<u32> = (0..64).collect();
+        let mut b = a.clone();
+        b[48] = 999; // differs in the last block only
+        let ca = hash_chain(&a, 16);
+        let cb = hash_chain(&b, 16);
+        assert_eq!(ca.len(), 4);
+        assert_eq!(ca[..3], cb[..3]);
+        assert_ne!(ca[3], cb[3]);
+    }
+
+    #[test]
+    fn match_prefix_counts_blocks() {
+        let mut c = cache();
+        let tokens: Vec<u32> = (0..64).collect();
+        let chain = hash_chain(&tokens, 16);
+        c.insert_chain(&chain[..3], Tier::Dram);
+        let (n, tier) = c.match_prefix(&chain);
+        assert_eq!(n, 3);
+        assert_eq!(tier, Some(Tier::Dram));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hbm_implies_dram_occupancy() {
+        let mut c = cache();
+        c.insert(42, Tier::Hbm);
+        assert_eq!(c.contains(42), Some(Tier::Hbm));
+        assert_eq!(c.used_tokens(Tier::Hbm), 16);
+        assert_eq!(c.used_tokens(Tier::Dram), 16, "HBM copy counts in DRAM");
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_demotes_through_tiers() {
+        let mut c = TieredCache::new(16, 16, 16 * 2, 16 * 2); // 1/2/2 blocks
+        c.insert(1, Tier::Hbm);
+        c.insert(2, Tier::Hbm); // evicts 1's HBM copy -> stays in DRAM
+        assert_eq!(c.contains(1), Some(Tier::Dram));
+        assert_eq!(c.contains(2), Some(Tier::Hbm));
+        c.check_invariants().unwrap();
+        c.insert(3, Tier::Hbm); // DRAM full: 1 demotes to SSD
+        c.check_invariants().unwrap();
+        assert_eq!(c.contains(1), Some(Tier::Ssd));
+    }
+
+    #[test]
+    fn routing_prefers_cache_hit() {
+        let cost = CostModel::new(
+            ascend_910b(),
+            catalog("Qwen3-8B").unwrap(),
+            EngineFeatures::xllm(1),
+        );
+        let xfer = TransferEngine::default();
+        let cands = [
+            RouteCandidate {
+                instance: 0,
+                matched_blocks: 0,
+                hit_tier: None,
+                queued_prefill_tokens: 0,
+            },
+            RouteCandidate {
+                instance: 1,
+                matched_blocks: 60,
+                hit_tier: Some(Tier::Dram),
+                queued_prefill_tokens: 0,
+            },
+        ];
+        let (pick, _) = route(&cands, 64, 1024, 16, &cost, &xfer).unwrap();
+        assert_eq!(pick, 1, "instance with 960/1024 tokens cached must win");
+    }
+
+    #[test]
+    fn routing_balances_hit_against_queue() {
+        let cost = CostModel::new(
+            ascend_910b(),
+            catalog("Qwen3-8B").unwrap(),
+            EngineFeatures::xllm(1),
+        );
+        let xfer = TransferEngine::default();
+        let cands = [
+            RouteCandidate {
+                instance: 0,
+                matched_blocks: 0,
+                hit_tier: None,
+                queued_prefill_tokens: 0,
+            },
+            RouteCandidate {
+                instance: 1,
+                matched_blocks: 64,
+                hit_tier: Some(Tier::Ssd),
+                queued_prefill_tokens: 2_000_000, // massive queue
+            },
+        ];
+        let (pick, _) = route(&cands, 64, 1024, 16, &cost, &xfer).unwrap();
+        assert_eq!(pick, 0, "hit is not worth a huge queue");
+    }
+
+    #[test]
+    fn transfer_engine_ordering() {
+        let x = TransferEngine::default();
+        let b = 1e9;
+        assert!(x.load_to_hbm_s(Tier::Hbm, b) == 0.0);
+        assert!(x.load_to_hbm_s(Tier::Dram, b) < x.load_to_hbm_s(Tier::Ssd, b));
+        assert!(x.migrate_s(b) > 0.0);
+    }
+
+    #[test]
+    fn property_tier_invariants_under_churn() {
+        crate::testutil::check("kv-tier-invariants", 96, |rng| {
+            let mut c = TieredCache::new(
+                8,
+                8 * rng.range(1, 8),
+                8 * rng.range(2, 16),
+                8 * rng.range(2, 16),
+            );
+            for _ in 0..300 {
+                let h = rng.range(0, 40);
+                match rng.range(0, 2) {
+                    0 => {
+                        let tier = match rng.range(0, 2) {
+                            0 => Tier::Hbm,
+                            1 => Tier::Dram,
+                            _ => Tier::Ssd,
+                        };
+                        c.insert(h, tier);
+                    }
+                    _ => {
+                        let chain: Vec<u64> = (0..rng.range(1, 5)).map(|i| h + i).collect();
+                        c.match_prefix(&chain);
+                    }
+                }
+                c.check_invariants()?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,173 @@
+//! Metadata service (the paper's ETCD substitute, §3.4).
+//!
+//! In-process replicated-KV abstraction providing what the global KV cache
+//! manager needs: service registration with TTL leases, heartbeat-driven
+//! liveness, load-info synchronization, and versioned global cache state.
+//! Watchers receive ordered change notifications (the aggregation events
+//! instances push "at regular intervals ... via ETCD heartbeat
+//! mechanisms").
+
+use std::collections::HashMap;
+
+/// A registered instance's advertised state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstanceRecord {
+    pub instance: usize,
+    /// Pool/role advertisement.
+    pub role: String,
+    /// Load metrics (tokens resident, free KV, etc.).
+    pub kv_used: u64,
+    pub kv_capacity: u64,
+    pub last_heartbeat_s: f64,
+}
+
+/// A change event delivered to watchers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetaEvent {
+    Registered(usize),
+    Updated(usize),
+    Expired(usize),
+    CacheIndexUpdated { instance: usize, version: u64 },
+}
+
+/// The metadata store: registration + leases + a versioned KV index.
+#[derive(Debug, Default)]
+pub struct MetaStore {
+    instances: HashMap<usize, InstanceRecord>,
+    /// Lease TTL: instances missing heartbeats this long are expired.
+    ttl_s: f64,
+    /// Monotonic version per instance's published cache index.
+    cache_versions: HashMap<usize, u64>,
+    /// Ordered event log (watchers read from an offset).
+    events: Vec<MetaEvent>,
+}
+
+impl MetaStore {
+    pub fn new(ttl_s: f64) -> MetaStore {
+        MetaStore { ttl_s, ..Default::default() }
+    }
+
+    /// Register (or re-register) an instance.
+    pub fn register(&mut self, rec: InstanceRecord) {
+        let id = rec.instance;
+        let new = !self.instances.contains_key(&id);
+        self.instances.insert(id, rec);
+        self.events.push(if new { MetaEvent::Registered(id) } else { MetaEvent::Updated(id) });
+    }
+
+    /// Heartbeat: refresh the lease and load info.
+    pub fn heartbeat(&mut self, instance: usize, kv_used: u64, now_s: f64) -> bool {
+        match self.instances.get_mut(&instance) {
+            Some(r) => {
+                r.kv_used = kv_used;
+                r.last_heartbeat_s = now_s;
+                self.events.push(MetaEvent::Updated(instance));
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Expire instances whose lease lapsed; returns the expired ids.
+    pub fn sweep(&mut self, now_s: f64) -> Vec<usize> {
+        let dead: Vec<usize> = self
+            .instances
+            .iter()
+            .filter(|(_, r)| now_s - r.last_heartbeat_s > self.ttl_s)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in &dead {
+            self.instances.remove(id);
+            self.cache_versions.remove(id);
+            self.events.push(MetaEvent::Expired(*id));
+        }
+        dead
+    }
+
+    /// Publish a new cache-index version for an instance (the aggregated
+    /// KV load/offload events of the interval).
+    pub fn publish_cache_index(&mut self, instance: usize) -> u64 {
+        let v = self.cache_versions.entry(instance).or_insert(0);
+        *v += 1;
+        let version = *v;
+        self.events.push(MetaEvent::CacheIndexUpdated { instance, version });
+        version
+    }
+
+    pub fn cache_version(&self, instance: usize) -> u64 {
+        self.cache_versions.get(&instance).copied().unwrap_or(0)
+    }
+
+    pub fn get(&self, instance: usize) -> Option<&InstanceRecord> {
+        self.instances.get(&instance)
+    }
+
+    pub fn alive(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self.instances.keys().copied().collect();
+        ids.sort();
+        ids
+    }
+
+    /// Read events from `offset`; returns (new offset, events).
+    pub fn watch(&self, offset: usize) -> (usize, &[MetaEvent]) {
+        (self.events.len(), &self.events[offset.min(self.events.len())..])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: usize, t: f64) -> InstanceRecord {
+        InstanceRecord {
+            instance: id,
+            role: "decode".to_string(),
+            kv_used: 0,
+            kv_capacity: 1000,
+            last_heartbeat_s: t,
+        }
+    }
+
+    #[test]
+    fn register_heartbeat_sweep() {
+        let mut m = MetaStore::new(5.0);
+        m.register(rec(1, 0.0));
+        m.register(rec(2, 0.0));
+        assert_eq!(m.alive(), vec![1, 2]);
+        m.heartbeat(1, 42, 4.0);
+        let dead = m.sweep(6.0);
+        assert_eq!(dead, vec![2]);
+        assert_eq!(m.alive(), vec![1]);
+        assert_eq!(m.get(1).unwrap().kv_used, 42);
+    }
+
+    #[test]
+    fn heartbeat_unknown_instance_fails() {
+        let mut m = MetaStore::new(5.0);
+        assert!(!m.heartbeat(9, 0, 1.0));
+    }
+
+    #[test]
+    fn watch_sees_ordered_events() {
+        let mut m = MetaStore::new(5.0);
+        m.register(rec(1, 0.0));
+        let (off, ev) = m.watch(0);
+        assert_eq!(ev, &[MetaEvent::Registered(1)]);
+        m.publish_cache_index(1);
+        m.heartbeat(1, 7, 1.0);
+        let (_, ev2) = m.watch(off);
+        assert_eq!(ev2.len(), 2);
+        assert!(matches!(ev2[0], MetaEvent::CacheIndexUpdated { instance: 1, version: 1 }));
+    }
+
+    #[test]
+    fn cache_versions_monotonic() {
+        let mut m = MetaStore::new(5.0);
+        m.register(rec(3, 0.0));
+        assert_eq!(m.publish_cache_index(3), 1);
+        assert_eq!(m.publish_cache_index(3), 2);
+        assert_eq!(m.cache_version(3), 2);
+        m.sweep(100.0);
+        assert_eq!(m.cache_version(3), 0, "expiry clears versions");
+    }
+}

@@ -1,0 +1,163 @@
+//! Discrete-event simulation clock.
+//!
+//! The cluster simulator (the Ascend-testbed substitute) is a classic
+//! event-queue design: events carry a timestamp and an opaque payload; the
+//! driver pops them in time order.  Determinism: ties are broken by
+//! insertion sequence number, so identical runs produce identical traces.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulated time in seconds.
+pub type SimTime = f64;
+
+struct Entry<E> {
+    time: SimTime,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// An event queue advancing simulated time.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    now: SimTime,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+    }
+
+    /// Current simulated time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule `event` at absolute time `at` (clamped to now if in the past).
+    pub fn schedule_at(&mut self, at: SimTime, event: E) {
+        let t = if at < self.now { self.now } else { at };
+        self.heap.push(Entry { time: t, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Schedule `event` after a delay from now.
+    pub fn schedule_in(&mut self, delay: SimTime, event: E) {
+        debug_assert!(delay >= 0.0, "negative delay");
+        self.schedule_at(self.now + delay.max(0.0), event);
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn next(&mut self) -> Option<(SimTime, E)> {
+        self.heap.pop().map(|e| {
+            debug_assert!(e.time >= self.now, "time went backwards");
+            self.now = e.time;
+            self.processed += 1;
+            (e.time, e.event)
+        })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(3.0, "c");
+        q.schedule_at(1.0, "a");
+        q.schedule_at(2.0, "b");
+        assert_eq!(q.next().unwrap(), (1.0, "a"));
+        assert_eq!(q.next().unwrap(), (2.0, "b"));
+        assert_eq!(q.next().unwrap(), (3.0, "c"));
+        assert!(q.next().is_none());
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(1.0, "first");
+        q.schedule_at(1.0, "second");
+        assert_eq!(q.next().unwrap().1, "first");
+        assert_eq!(q.next().unwrap().1, "second");
+    }
+
+    #[test]
+    fn clock_advances_and_relative_scheduling() {
+        let mut q = EventQueue::new();
+        q.schedule_at(5.0, 1u32);
+        q.next();
+        assert_eq!(q.now(), 5.0);
+        q.schedule_in(2.5, 2u32);
+        assert_eq!(q.next().unwrap(), (7.5, 2u32));
+    }
+
+    #[test]
+    fn past_events_clamp_to_now() {
+        let mut q = EventQueue::new();
+        q.schedule_at(10.0, "x");
+        q.next();
+        q.schedule_at(3.0, "late");
+        let (t, _) = q.next().unwrap();
+        assert_eq!(t, 10.0);
+    }
+
+    #[test]
+    fn property_monotonic_time() {
+        crate::testutil::quickcheck("monotonic-time", |rng| {
+            let mut q = EventQueue::new();
+            for _ in 0..100 {
+                q.schedule_at(rng.f64() * 100.0, ());
+            }
+            let mut last = 0.0;
+            while let Some((t, _)) = q.next() {
+                crate::prop_assert!(t >= last, "t={t} < last={last}");
+                last = t;
+            }
+            Ok(())
+        });
+    }
+}

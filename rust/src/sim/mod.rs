@@ -1,0 +1,15 @@
+//! Discrete-event cluster simulation (the Ascend-testbed substitute).
+//!
+//! * [`clock`] — deterministic event queue.
+//! * [`roofline`] — the paper's roofline + online-factor-learning cost
+//!   model, parameterized by engine features so configuration ablations
+//!   reproduce the baseline frameworks.
+//! * [`cluster`] — multi-instance serving simulation driving the
+//!   coordinator policies over simulated time.
+
+pub mod clock;
+pub mod cluster;
+pub mod roofline;
+
+pub use clock::{EventQueue, SimTime};
+pub use roofline::{Bound, CostModel, EngineFeatures, GraphMode, StepBreakdown};

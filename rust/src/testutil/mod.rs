@@ -1,0 +1,94 @@
+//! Mini property-testing harness.
+//!
+//! The offline crate set has no `proptest`, so this module provides the
+//! same methodology in ~100 lines: run a property over many seeded random
+//! cases and report the first failing seed (re-runnable deterministically).
+//! Used by the coordinator/engine invariant tests (routing, batching,
+//! paging, beam search).
+
+use crate::util::Rng;
+
+/// Number of cases per property (kept modest; each case is cheap).
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `prop` over `cases` seeded RNGs; panic with the failing seed.
+///
+/// `prop` returns `Err(reason)` (or panics) to signal a violation.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(reason) = prop(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {reason}");
+        }
+    }
+}
+
+/// Shorthand: `check` with [`DEFAULT_CASES`].
+pub fn quickcheck<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check(name, DEFAULT_CASES, prop);
+}
+
+/// Assert helper producing `Result` instead of panicking, so properties can
+/// bubble a readable message with the failing seed attached.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 64, |rng| {
+            n += 1;
+            let x = rng.range(0, 100);
+            prop_assert!(x <= 100, "x={x}");
+            Ok(())
+        });
+        assert_eq!(n, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'bad'")]
+    fn failing_property_reports_seed() {
+        check("bad", 64, |rng| {
+            let x = rng.range(0, 100);
+            prop_assert!(x < 50, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn determinism_same_seed_same_values() {
+        let mut first: Vec<u64> = Vec::new();
+        check("collect", 8, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check("collect2", 8, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,8 @@
+//! Small shared utilities: deterministic RNG, tiny JSON writer, stats.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,131 @@
+//! Streaming summary statistics and percentile estimation.
+
+/// Order-preserving sample collector with summary statistics.
+///
+/// Stores all samples (workloads here are <1e7 samples); percentiles are
+/// exact over the collected set.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { samples: Vec::new(), sorted: true }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        var.sqrt()
+    }
+
+    /// Exact percentile (nearest-rank). `p` in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let rank = ((p / 100.0) * (self.samples.len() as f64 - 1.0)).floor() as usize;
+        self.samples[rank.min(self.samples.len() - 1)]
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Fraction of samples <= threshold (e.g. SLO attainment).
+    pub fn fraction_within(&self, threshold: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 1.0;
+        }
+        self.samples.iter().filter(|&&x| x <= threshold).count() as f64
+            / self.samples.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_percentiles() {
+        let mut s = Summary::new();
+        for i in 1..=100 {
+            s.add(i as f64);
+        }
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+        assert_eq!(s.p50(), 50.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert_eq!(s.p99(), 99.0);
+    }
+
+    #[test]
+    fn fraction_within() {
+        let mut s = Summary::new();
+        for i in 1..=10 {
+            s.add(i as f64);
+        }
+        assert!((s.fraction_within(5.0) - 0.5).abs() < 1e-9);
+        assert_eq!(s.fraction_within(100.0), 1.0);
+        assert_eq!(s.fraction_within(0.0), 0.0);
+    }
+
+    #[test]
+    fn empty_summary_is_safe() {
+        let mut s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.p50(), 0.0);
+        assert_eq!(s.fraction_within(1.0), 1.0);
+    }
+
+    #[test]
+    fn stddev_basic() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert!((s.stddev() - 2.138).abs() < 0.01);
+    }
+}

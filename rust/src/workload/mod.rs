@@ -1,0 +1,15 @@
+//! Workload generation: request specs, arrival processes, paper scenarios.
+//!
+//! The paper evaluates on ShareGPT, Azure Code / Conversation traces, and
+//! five JD.com business scenarios (JingYan, customer service, merchant
+//! assistant, product understanding, generative recommendation) plus a
+//! TextCaps-like multimodal set.  None of the proprietary traces are
+//! public, so [`scenarios`] provides statistically matched synthetic
+//! generators (length distributions + arrival burstiness) — see DESIGN.md
+//! §Substitutions.
+
+pub mod scenarios;
+pub mod traces;
+
+pub use scenarios::{scenario, Scenario};
+pub use traces::{ArrivalProcess, RequestClass, RequestSpec};

@@ -1,0 +1,325 @@
+//! Paper evaluation scenarios as synthetic workload generators.
+//!
+//! Each scenario fixes (a) the arrival process and (b) the input/output
+//! length distributions to match what the paper reports for that dataset
+//! (fixed lengths for the ShareGPT main results; published Azure trace
+//! statistics; the prompt/output lengths in Tables 4–5; conversational
+//! shapes for JingYan / customer service).
+
+use crate::util::Rng;
+use crate::workload::traces::{ArrivalProcess, LengthDist, RequestClass, RequestSpec};
+
+/// A named, reproducible workload.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub arrivals: ArrivalProcess,
+    pub input_len: LengthDist,
+    pub output_len: LengthDist,
+    pub class: RequestClass,
+    /// Patches per image for multimodal scenarios (0 = text-only).
+    pub image_patches: u64,
+    /// Fraction of requests sharing a system-prompt prefix, and its length.
+    pub prefix_share: f64,
+    pub prefix_len: u64,
+    /// Number of distinct shared prefixes.
+    pub prefix_groups: u64,
+}
+
+impl Scenario {
+    /// Generate the request list over `[0, horizon_s)` at `rate` req/s
+    /// (overrides the scenario's nominal rate, keeping its *shape*).
+    pub fn generate(&self, horizon_s: f64, rate: f64, rng: &mut Rng) -> Vec<RequestSpec> {
+        let arrivals = self.scaled_arrivals(rate).arrivals(horizon_s, rng);
+        arrivals
+            .into_iter()
+            .map(|t| {
+                let shared = rng.chance(self.prefix_share);
+                RequestSpec {
+                    arrival_s: t,
+                    input_tokens: self.input_len.sample(rng).max(1),
+                    output_tokens: self.output_len.sample(rng).max(1),
+                    class: self.class,
+                    image_patches: self.image_patches,
+                    prefix_group: if shared { 1 + rng.range(0, self.prefix_groups.max(1) - 1) } else { 0 },
+                    shared_prefix: if shared { self.prefix_len } else { 0 },
+                }
+            })
+            .collect()
+    }
+
+    fn scaled_arrivals(&self, rate: f64) -> ArrivalProcess {
+        match self.arrivals {
+            ArrivalProcess::Poisson { .. } => ArrivalProcess::Poisson { rate },
+            ArrivalProcess::Uniform { .. } => ArrivalProcess::Uniform { rate },
+            ArrivalProcess::Bursty { burst_factor, burst_prob, burst_len_s, .. } => {
+                ArrivalProcess::Bursty { rate, burst_factor, burst_prob, burst_len_s }
+            }
+            ArrivalProcess::Tidal { amplitude, period_s, .. } => {
+                ArrivalProcess::Tidal { mean_rate: rate, amplitude, period_s }
+            }
+        }
+    }
+
+    /// Mean total tokens per request (for capacity planning in benches).
+    pub fn mean_tokens(&self, rng: &mut Rng) -> (f64, f64) {
+        let n = 2000;
+        let mut i = 0.0;
+        let mut o = 0.0;
+        for _ in 0..n {
+            i += self.input_len.sample(rng) as f64;
+            o += self.output_len.sample(rng) as f64;
+        }
+        (i / n as f64, o / n as f64)
+    }
+}
+
+/// Look up a scenario by name.
+pub fn scenario(name: &str) -> Option<Scenario> {
+    Some(match name {
+        // §5.1.1 main results: fixed input/output lengths of 2048.
+        "sharegpt-2048" => Scenario {
+            name: "sharegpt-2048",
+            arrivals: ArrivalProcess::Poisson { rate: 1.0 },
+            input_len: LengthDist::Fixed(2048),
+            output_len: LengthDist::Fixed(2048),
+            class: RequestClass::Online,
+            image_patches: 0,
+            prefix_share: 0.0,
+            prefix_len: 0,
+            prefix_groups: 0,
+        },
+        // Fig 15 variants: [2500,1500] and [1500,2500]
+        "sharegpt-2500-1500" => Scenario {
+            name: "sharegpt-2500-1500",
+            input_len: LengthDist::Fixed(2500),
+            output_len: LengthDist::Fixed(1500),
+            ..scenario("sharegpt-2048").unwrap()
+        },
+        "sharegpt-1500-2500" => Scenario {
+            name: "sharegpt-1500-2500",
+            input_len: LengthDist::Fixed(1500),
+            output_len: LengthDist::Fixed(2500),
+            ..scenario("sharegpt-2048").unwrap()
+        },
+        // ShareGPT with its natural length spread (for scheduler tests).
+        "sharegpt" => Scenario {
+            name: "sharegpt",
+            arrivals: ArrivalProcess::Poisson { rate: 1.0 },
+            input_len: LengthDist::LogNormal { median: 220.0, sigma: 1.1, lo: 8, hi: 8192 },
+            output_len: LengthDist::LogNormal { median: 180.0, sigma: 1.0, lo: 4, hi: 4096 },
+            class: RequestClass::Online,
+            image_patches: 0,
+            prefix_share: 0.0,
+            prefix_len: 0,
+            prefix_groups: 0,
+        },
+        // Azure Code: bursty arrivals, long prompts, short outputs (§5.2).
+        "azure-code" => Scenario {
+            name: "azure-code",
+            arrivals: ArrivalProcess::Bursty {
+                rate: 1.0,
+                burst_factor: 8.0,
+                burst_prob: 0.03,
+                burst_len_s: 8.0,
+            },
+            input_len: LengthDist::LogNormal { median: 2000.0, sigma: 0.9, lo: 64, hi: 8192 },
+            output_len: LengthDist::LogNormal { median: 40.0, sigma: 0.8, lo: 4, hi: 512 },
+            class: RequestClass::Online,
+            image_patches: 0,
+            prefix_share: 0.3,
+            prefix_len: 256,
+            prefix_groups: 8,
+        },
+        // Azure Conversation: stable arrivals, conversational lengths.
+        "azure-conv" => Scenario {
+            name: "azure-conv",
+            arrivals: ArrivalProcess::Poisson { rate: 1.0 },
+            input_len: LengthDist::LogNormal { median: 800.0, sigma: 0.6, lo: 32, hi: 4096 },
+            output_len: LengthDist::LogNormal { median: 220.0, sigma: 0.5, lo: 8, hi: 1024 },
+            class: RequestClass::Online,
+            image_patches: 0,
+            prefix_share: 0.5,
+            prefix_len: 512,
+            prefix_groups: 4,
+        },
+        // JingYan AI shopping assistant: conversational logs (§5.1.2).
+        "jingyan" => Scenario {
+            name: "jingyan",
+            arrivals: ArrivalProcess::Tidal { mean_rate: 1.0, amplitude: 0.6, period_s: 600.0 },
+            input_len: LengthDist::LogNormal { median: 900.0, sigma: 0.8, lo: 32, hi: 6800 },
+            output_len: LengthDist::LogNormal { median: 300.0, sigma: 0.6, lo: 16, hi: 1024 },
+            class: RequestClass::Online,
+            image_patches: 0,
+            prefix_share: 0.7,
+            prefix_len: 384,
+            prefix_groups: 6,
+        },
+        // JingYan DeepSeek-V3 setting (Table 4): 6800 in / 400 out.
+        "jingyan-6800-400" => Scenario {
+            name: "jingyan-6800-400",
+            arrivals: ArrivalProcess::Poisson { rate: 1.0 },
+            input_len: LengthDist::Fixed(6800),
+            output_len: LengthDist::Fixed(400),
+            class: RequestClass::Online,
+            image_patches: 0,
+            prefix_share: 0.0,
+            prefix_len: 0,
+            prefix_groups: 0,
+        },
+        // Customer service dialogues (Fig 17; E2E = 10 s).
+        "customer-service" => Scenario {
+            name: "customer-service",
+            arrivals: ArrivalProcess::Poisson { rate: 1.0 },
+            input_len: LengthDist::LogNormal { median: 1200.0, sigma: 0.7, lo: 64, hi: 6000 },
+            output_len: LengthDist::LogNormal { median: 150.0, sigma: 0.5, lo: 8, hi: 600 },
+            class: RequestClass::Online,
+            image_patches: 0,
+            prefix_share: 0.8,
+            prefix_len: 512,
+            prefix_groups: 3,
+        },
+        // Merchant assistant (Fig 18; E2E = 1 s): three short tasks.
+        "merchant-search-terms" => Scenario {
+            name: "merchant-search-terms",
+            arrivals: ArrivalProcess::Poisson { rate: 1.0 },
+            input_len: LengthDist::Uniform { lo: 100, hi: 400 },
+            output_len: LengthDist::Uniform { lo: 8, hi: 48 },
+            class: RequestClass::Online,
+            image_patches: 0,
+            prefix_share: 0.9,
+            prefix_len: 128,
+            prefix_groups: 1,
+        },
+        "merchant-arrangement" => Scenario {
+            name: "merchant-arrangement",
+            input_len: LengthDist::Uniform { lo: 300, hi: 900 },
+            output_len: LengthDist::Uniform { lo: 32, hi: 128 },
+            ..scenario("merchant-search-terms").unwrap()
+        },
+        "merchant-intent" => Scenario {
+            name: "merchant-intent",
+            input_len: LengthDist::Uniform { lo: 60, hi: 240 },
+            output_len: LengthDist::Uniform { lo: 2, hi: 16 },
+            ..scenario("merchant-search-terms").unwrap()
+        },
+        // Product understanding (Table 5): 1200 in / 40 out, batchy.
+        "product-understanding" => Scenario {
+            name: "product-understanding",
+            arrivals: ArrivalProcess::Uniform { rate: 1.0 },
+            input_len: LengthDist::Fixed(1200),
+            output_len: LengthDist::Fixed(40),
+            class: RequestClass::Online,
+            image_patches: 0,
+            prefix_share: 0.6,
+            prefix_len: 200,
+            prefix_groups: 2,
+        },
+        // TextCaps-like multimodal captioning (Fig 22).
+        "textcaps" => Scenario {
+            name: "textcaps",
+            arrivals: ArrivalProcess::Poisson { rate: 1.0 },
+            input_len: LengthDist::Uniform { lo: 16, hi: 64 },
+            output_len: LengthDist::Uniform { lo: 24, hi: 96 },
+            class: RequestClass::Online,
+            image_patches: 576, // ViT-L/14 @ 336px-like patch count
+            prefix_share: 0.0,
+            prefix_len: 0,
+            prefix_groups: 0,
+        },
+        // Offline batch analytics (co-location experiments, §3.1/Fig 23).
+        "offline-docs" => Scenario {
+            name: "offline-docs",
+            arrivals: ArrivalProcess::Poisson { rate: 1.0 },
+            input_len: LengthDist::LogNormal { median: 3000.0, sigma: 0.5, lo: 256, hi: 8192 },
+            output_len: LengthDist::LogNormal { median: 400.0, sigma: 0.4, lo: 64, hi: 1024 },
+            class: RequestClass::Offline,
+            image_patches: 0,
+            prefix_share: 0.0,
+            prefix_len: 0,
+            prefix_groups: 0,
+        },
+        _ => return None,
+    })
+}
+
+/// All scenario names (CLI listing + exhaustive tests).
+pub const SCENARIO_NAMES: &[&str] = &[
+    "sharegpt-2048",
+    "sharegpt-2500-1500",
+    "sharegpt-1500-2500",
+    "sharegpt",
+    "azure-code",
+    "azure-conv",
+    "jingyan",
+    "jingyan-6800-400",
+    "customer-service",
+    "merchant-search-terms",
+    "merchant-arrangement",
+    "merchant-intent",
+    "product-understanding",
+    "textcaps",
+    "offline-docs",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_scenarios_generate() {
+        let mut rng = Rng::new(3);
+        for name in SCENARIO_NAMES {
+            let sc = scenario(name).unwrap_or_else(|| panic!("missing {name}"));
+            let reqs = sc.generate(60.0, 2.0, &mut rng);
+            assert!(!reqs.is_empty(), "{name} generated nothing");
+            for r in &reqs {
+                assert!(r.input_tokens >= 1);
+                assert!(r.output_tokens >= 1);
+                assert!(r.arrival_s >= 0.0 && r.arrival_s < 60.0);
+            }
+        }
+        assert!(scenario("bogus").is_none());
+    }
+
+    #[test]
+    fn fixed_scenarios_have_exact_lengths() {
+        let mut rng = Rng::new(4);
+        let reqs = scenario("sharegpt-2048").unwrap().generate(30.0, 2.0, &mut rng);
+        for r in reqs {
+            assert_eq!(r.input_tokens, 2048);
+            assert_eq!(r.output_tokens, 2048);
+        }
+    }
+
+    #[test]
+    fn textcaps_is_multimodal() {
+        let mut rng = Rng::new(5);
+        let reqs = scenario("textcaps").unwrap().generate(30.0, 2.0, &mut rng);
+        assert!(reqs.iter().all(|r| r.is_multimodal()));
+    }
+
+    #[test]
+    fn offline_class_propagates() {
+        let mut rng = Rng::new(6);
+        let reqs = scenario("offline-docs").unwrap().generate(30.0, 2.0, &mut rng);
+        assert!(reqs.iter().all(|r| r.class == RequestClass::Offline));
+    }
+
+    #[test]
+    fn prefix_sharing_appears() {
+        let mut rng = Rng::new(7);
+        let reqs = scenario("customer-service").unwrap().generate(120.0, 4.0, &mut rng);
+        let shared = reqs.iter().filter(|r| r.shared_prefix > 0).count();
+        assert!(shared as f64 > 0.6 * reqs.len() as f64, "shared={shared}/{}", reqs.len());
+    }
+
+    #[test]
+    fn rate_override_scales_volume() {
+        let mut rng = Rng::new(8);
+        let lo = scenario("sharegpt").unwrap().generate(200.0, 1.0, &mut rng).len();
+        let mut rng = Rng::new(8);
+        let hi = scenario("sharegpt").unwrap().generate(200.0, 4.0, &mut rng).len();
+        assert!(hi as f64 > 3.0 * lo as f64, "lo={lo} hi={hi}");
+    }
+}

@@ -1,0 +1,249 @@
+//! Arrival processes and request specifications.
+
+use crate::util::Rng;
+
+/// Online (latency-sensitive, SLO-bound) vs offline (best-effort) class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RequestClass {
+    Online,
+    Offline,
+}
+
+/// A request to be served: arrival time + token lengths (+ multimodality).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestSpec {
+    pub arrival_s: f64,
+    pub input_tokens: u64,
+    pub output_tokens: u64,
+    pub class: RequestClass,
+    /// Number of image patches to encode (0 = text-only).
+    pub image_patches: u64,
+    /// Prefix-cache group: requests sharing a group share a prompt prefix
+    /// of `shared_prefix` tokens (system prompts etc.).
+    pub prefix_group: u64,
+    pub shared_prefix: u64,
+}
+
+impl RequestSpec {
+    pub fn text(arrival_s: f64, input_tokens: u64, output_tokens: u64) -> Self {
+        RequestSpec {
+            arrival_s,
+            input_tokens,
+            output_tokens,
+            class: RequestClass::Online,
+            image_patches: 0,
+            prefix_group: 0,
+            shared_prefix: 0,
+        }
+    }
+
+    pub fn offline(mut self) -> Self {
+        self.class = RequestClass::Offline;
+        self
+    }
+
+    pub fn is_multimodal(&self) -> bool {
+        self.image_patches > 0
+    }
+}
+
+/// Arrival process shapes seen in the paper's workloads.
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalProcess {
+    /// Poisson arrivals at a constant rate (req/s).
+    Poisson { rate: f64 },
+    /// Deterministic fixed interval.
+    Uniform { rate: f64 },
+    /// Poisson baseline plus minute-scale bursts: with probability
+    /// `burst_prob` per second, the rate multiplies by `burst_factor` for
+    /// `burst_len_s` (the Azure *Code* trace shape — "significant bursty
+    /// traffic", §5.2).
+    Bursty { rate: f64, burst_factor: f64, burst_prob: f64, burst_len_s: f64 },
+    /// Sinusoidal "tidal" day/night pattern compressed to `period_s`
+    /// (§3.1: hourly/daily tidal variation of online traffic).
+    Tidal { mean_rate: f64, amplitude: f64, period_s: f64 },
+}
+
+impl ArrivalProcess {
+    /// Generate arrival times covering `[0, horizon_s)`.
+    pub fn arrivals(&self, horizon_s: f64, rng: &mut Rng) -> Vec<f64> {
+        let mut out = Vec::new();
+        match *self {
+            ArrivalProcess::Poisson { rate } => {
+                let mut t = 0.0;
+                loop {
+                    t += rng.exp(1.0 / rate.max(1e-9));
+                    if t >= horizon_s {
+                        break;
+                    }
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Uniform { rate } => {
+                let dt = 1.0 / rate.max(1e-9);
+                let mut t = dt;
+                while t < horizon_s {
+                    out.push(t);
+                    t += dt;
+                }
+            }
+            ArrivalProcess::Bursty { rate, burst_factor, burst_prob, burst_len_s } => {
+                let mut t: f64 = 0.0;
+                let mut burst_until = -1.0;
+                loop {
+                    let in_burst = t < burst_until;
+                    let r = if in_burst { rate * burst_factor } else { rate };
+                    t += rng.exp(1.0 / r.max(1e-9));
+                    if t >= horizon_s {
+                        break;
+                    }
+                    if !in_burst && rng.chance(burst_prob * (1.0 / r).min(1.0)) {
+                        burst_until = t + burst_len_s;
+                    }
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Tidal { mean_rate, amplitude, period_s } => {
+                // thinning over the sinusoidal intensity
+                let peak = mean_rate * (1.0 + amplitude);
+                let mut t = 0.0;
+                loop {
+                    t += rng.exp(1.0 / peak.max(1e-9));
+                    if t >= horizon_s {
+                        break;
+                    }
+                    let phase = 2.0 * std::f64::consts::PI * t / period_s;
+                    let intensity = mean_rate * (1.0 + amplitude * phase.sin());
+                    if rng.chance((intensity / peak).clamp(0.0, 1.0)) {
+                        out.push(t);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Instantaneous expected rate at time `t` (for monitoring tests).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate } | ArrivalProcess::Uniform { rate } => rate,
+            ArrivalProcess::Bursty { rate, .. } => rate,
+            ArrivalProcess::Tidal { mean_rate, amplitude, period_s } => {
+                let phase = 2.0 * std::f64::consts::PI * t / period_s;
+                mean_rate * (1.0 + amplitude * phase.sin())
+            }
+        }
+    }
+}
+
+/// Length distribution helpers used by the scenario generators.
+#[derive(Debug, Clone, Copy)]
+pub enum LengthDist {
+    Fixed(u64),
+    /// Log-normal with given median and sigma, clamped to [lo, hi].
+    LogNormal { median: f64, sigma: f64, lo: u64, hi: u64 },
+    Uniform { lo: u64, hi: u64 },
+}
+
+impl LengthDist {
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        match *self {
+            LengthDist::Fixed(n) => n,
+            LengthDist::LogNormal { median, sigma, lo, hi } => {
+                let x = rng.lognormal(median.ln(), sigma);
+                (x.round() as u64).clamp(lo, hi)
+            }
+            LengthDist::Uniform { lo, hi } => rng.range(lo, hi),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let mut rng = Rng::new(1);
+        let arr = ArrivalProcess::Poisson { rate: 10.0 }.arrivals(1000.0, &mut rng);
+        let rate = arr.len() as f64 / 1000.0;
+        assert!((rate - 10.0).abs() < 0.5, "rate={rate}");
+    }
+
+    #[test]
+    fn arrivals_sorted_and_in_horizon() {
+        crate::testutil::quickcheck("arrivals-sorted", |rng| {
+            let procs = [
+                ArrivalProcess::Poisson { rate: 5.0 },
+                ArrivalProcess::Bursty {
+                    rate: 3.0,
+                    burst_factor: 8.0,
+                    burst_prob: 0.05,
+                    burst_len_s: 5.0,
+                },
+                ArrivalProcess::Tidal { mean_rate: 4.0, amplitude: 0.8, period_s: 60.0 },
+            ];
+            for p in procs {
+                let arr = p.arrivals(100.0, rng);
+                for w in arr.windows(2) {
+                    crate::prop_assert!(w[0] <= w[1], "unsorted arrivals");
+                }
+                for &t in &arr {
+                    crate::prop_assert!((0.0..100.0).contains(&t), "t={t} out of horizon");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bursty_has_heavier_peaks_than_poisson() {
+        let mut rng = Rng::new(2);
+        let bursty = ArrivalProcess::Bursty {
+            rate: 5.0,
+            burst_factor: 10.0,
+            burst_prob: 0.02,
+            burst_len_s: 10.0,
+        }
+        .arrivals(2000.0, &mut rng);
+        let mut rng2 = Rng::new(2);
+        let poisson = ArrivalProcess::Poisson { rate: 5.0 }.arrivals(2000.0, &mut rng2);
+
+        let peak = |arr: &[f64]| {
+            let mut max_in_window = 0usize;
+            let mut lo = 0;
+            for hi in 0..arr.len() {
+                while arr[hi] - arr[lo] > 5.0 {
+                    lo += 1;
+                }
+                max_in_window = max_in_window.max(hi - lo + 1);
+            }
+            max_in_window
+        };
+        assert!(
+            peak(&bursty) as f64 > peak(&poisson) as f64 * 1.5,
+            "bursty peak {} vs poisson peak {}",
+            peak(&bursty),
+            peak(&poisson)
+        );
+    }
+
+    #[test]
+    fn tidal_rate_oscillates() {
+        let p = ArrivalProcess::Tidal { mean_rate: 10.0, amplitude: 0.9, period_s: 100.0 };
+        assert!(p.rate_at(25.0) > 18.0); // peak
+        assert!(p.rate_at(75.0) < 2.0); // trough
+    }
+
+    #[test]
+    fn length_dists_in_bounds() {
+        crate::testutil::quickcheck("length-bounds", |rng| {
+            let d = LengthDist::LogNormal { median: 500.0, sigma: 0.8, lo: 16, hi: 4096 };
+            let x = d.sample(rng);
+            crate::prop_assert!((16..=4096).contains(&x), "x={x}");
+            let u = LengthDist::Uniform { lo: 5, hi: 10 }.sample(rng);
+            crate::prop_assert!((5..=10).contains(&u));
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,185 @@
+//! Integration: rust runtime loads + executes the real AOT artifacts.
+//!
+//! Requires `make artifacts` to have run (skips with a message otherwise).
+//! The key correctness check mirrors python/tests/test_model.py: decode
+//! continuing from a prefill must be self-consistent (same token stream as
+//! a longer prefill), now across the full python-AOT -> HLO-text ->
+//! PJRT-execute boundary.
+
+use std::path::Path;
+
+use xllm::runtime::{argmax, BatchKv, Runtime};
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn load_and_model_dims() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).expect("load runtime");
+    let dims = rt.model_dims("tiny").unwrap();
+    assert_eq!(dims.vocab, 256);
+    assert_eq!(dims.n_layers, 2);
+    assert_eq!(dims.max_seq, 160);
+    assert!(rt.weights.param_count("tiny") > 100_000);
+}
+
+#[test]
+fn prefill_then_decode_consistency() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(dir).expect("load runtime");
+    let dims = rt.model_dims("tiny").unwrap();
+
+    // Prefill a 10-token prompt, then decode 5 tokens greedily.
+    let prompt: Vec<i32> = vec![5, 17, 200, 3, 90, 41, 7, 9, 12, 77];
+    let p = rt.prefill("tiny", &prompt).expect("prefill");
+    assert_eq!(p.last_logits.len(), dims.vocab);
+    assert_eq!(p.bucket_s, 16); // smallest bucket >= 10
+
+    let mut kv = BatchKv::zeros(dims, 1);
+    kv.write_prefill(0, &p.k, &p.v, p.bucket_s, prompt.len());
+
+    let mut history = prompt.clone();
+    let mut token = argmax(&p.last_logits) as i32;
+    history.push(token);
+    let mut generated = vec![token];
+    for step in 0..5 {
+        let pos = [(prompt.len() + step) as i32];
+        let out = rt.decode("tiny", &mut kv, &[token], &pos).expect("decode");
+        token = argmax(&out.logits[..dims.vocab]) as i32;
+        history.push(token);
+        generated.push(token);
+    }
+
+    // Oracle: prefill over the extended history reproduces the last token.
+    let oracle = rt.prefill("tiny", &history[..history.len() - 1]).expect("oracle prefill");
+    let oracle_token = argmax(&oracle.last_logits) as i32;
+    assert_eq!(
+        oracle_token,
+        *generated.last().unwrap(),
+        "decode path diverged from prefill oracle"
+    );
+}
+
+#[test]
+fn batched_decode_no_crosstalk() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(dir).expect("load runtime");
+    let dims = rt.model_dims("tiny").unwrap();
+
+    let p1: Vec<i32> = vec![1, 2, 3, 4];
+    let p2: Vec<i32> = vec![9, 8, 7, 6, 5, 4, 3];
+    let o1 = rt.prefill("tiny", &p1).unwrap();
+    let o2 = rt.prefill("tiny", &p2).unwrap();
+
+    // batch of 2 (bucket b=2)
+    let mut kv = BatchKv::zeros(dims, 2);
+    kv.write_prefill(0, &o1.k, &o1.v, o1.bucket_s, p1.len());
+    kv.write_prefill(1, &o2.k, &o2.v, o2.bucket_s, p2.len());
+    let toks = [argmax(&o1.last_logits) as i32, argmax(&o2.last_logits) as i32];
+    let pos = [p1.len() as i32, p2.len() as i32];
+    let out = rt.decode("tiny", &mut kv, &toks, &pos).unwrap();
+    let t1_batched = argmax(&out.logits[..dims.vocab]);
+    let t2_batched = argmax(&out.logits[dims.vocab..2 * dims.vocab]);
+
+    // singles
+    let mut kv1 = BatchKv::zeros(dims, 1);
+    kv1.write_prefill(0, &o1.k, &o1.v, o1.bucket_s, p1.len());
+    let s1 = rt.decode("tiny", &mut kv1, &[toks[0]], &[pos[0]]).unwrap();
+    let mut kv2 = BatchKv::zeros(dims, 1);
+    kv2.write_prefill(0, &o2.k, &o2.v, o2.bucket_s, p2.len());
+    let s2 = rt.decode("tiny", &mut kv2, &[toks[1]], &[pos[1]]).unwrap();
+
+    assert_eq!(t1_batched, argmax(&s1.logits[..dims.vocab]));
+    assert_eq!(t2_batched, argmax(&s2.logits[..dims.vocab]));
+}
+
+#[test]
+fn verify_matches_sequential_decode() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(dir).expect("load runtime");
+    let dims = rt.model_dims("tiny").unwrap();
+
+    let prompt: Vec<i32> = vec![3, 1, 4, 1, 5, 9];
+    let p = rt.prefill("tiny", &prompt).unwrap();
+    let cand: Vec<i32> = vec![2, 6, 5, 3];
+
+    let mut kv = BatchKv::zeros(dims, 1);
+    kv.write_prefill(0, &p.k, &p.v, p.bucket_s, prompt.len());
+    let vout = rt
+        .verify("tiny", &mut kv, &cand, &[prompt.len() as i32])
+        .expect("verify");
+    assert_eq!(vout.m, 4);
+
+    let mut kv2 = BatchKv::zeros(dims, 1);
+    kv2.write_prefill(0, &p.k, &p.v, p.bucket_s, prompt.len());
+    for (j, &c) in cand.iter().enumerate() {
+        let d = rt
+            .decode("tiny", &mut kv2, &[c], &[(prompt.len() + j) as i32])
+            .unwrap();
+        let vrow = &vout.logits[j * dims.vocab..(j + 1) * dims.vocab];
+        let drow = &d.logits[..dims.vocab];
+        let max_diff = vrow
+            .iter()
+            .zip(drow)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 2e-3, "step {j}: verify vs decode logits differ by {max_diff}");
+    }
+}
+
+#[test]
+fn draft_model_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(dir).expect("load runtime");
+    let dims = rt.model_dims("draft").unwrap();
+    assert_eq!(dims.n_layers, 1);
+    let prompt: Vec<i32> = vec![10, 20, 30];
+    let p = rt.prefill("draft", &prompt);
+    // draft has no prefill buckets in quick mode; decode from empty cache
+    // is the supported path: seed by decoding the prompt token-by-token.
+    drop(p);
+    let mut kv = BatchKv::zeros(dims, 1);
+    let mut token = prompt[0];
+    for (i, &t) in prompt.iter().enumerate().skip(1) {
+        let out = rt.decode("draft", &mut kv, &[token], &[(i - 1) as i32]).unwrap();
+        assert_eq!(out.logits.len() % dims.vocab, 0);
+        token = t;
+    }
+}
+
+#[test]
+fn encoder_and_moe_graphs_run() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(dir).expect("load runtime");
+    let patches = vec![0.5f32; 16 * 32];
+    let emb = rt.encode(&patches).expect("encode");
+    assert_eq!(emb.len(), 16 * 64);
+    assert!(emb.iter().all(|x| x.is_finite()));
+
+    let x = vec![0.1f32; 32 * 64];
+    let y = rt.moe(&x).expect("moe");
+    assert_eq!(y.len(), 32 * 64);
+    assert!(y.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn graph_cache_reuses_compiled_executables() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(dir).expect("load runtime");
+    let prompt: Vec<i32> = vec![1, 2, 3];
+    rt.prefill("tiny", &prompt).unwrap();
+    let after_first = rt.graph_stats();
+    rt.prefill("tiny", &prompt).unwrap();
+    rt.prefill("tiny", &prompt).unwrap();
+    let after_third = rt.graph_stats();
+    assert_eq!(after_first.compiles, after_third.compiles, "bucket should compile once");
+    assert_eq!(after_third.hits, after_first.hits + 2);
+}
