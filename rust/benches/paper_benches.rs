@@ -19,7 +19,8 @@ use xllm::metrics::Slo;
 use xllm::model::{ascend_910b, ascend_910c, catalog, HardwareSpec, ModelSpec};
 use xllm::service::colocation::ColocationConfig;
 use xllm::service::epd::EpdStrategy;
-use xllm::sim::cluster::{run as sim_run, ClusterConfig, ColocationMode, ServingMode};
+use xllm::coordinator::orchestrator::{ColocationMode, ServingMode};
+use xllm::sim::cluster::{run as sim_run, ClusterConfig};
 use xllm::sim::{CostModel, EngineFeatures, GraphMode};
 use xllm::util::Rng;
 use xllm::workload::scenario;

@@ -21,6 +21,10 @@ pub struct BatchConfig {
     pub max_encode_batch: usize,
     /// Instance KV capacity in tokens.
     pub kv_capacity_tokens: u64,
+    /// Cap on concurrently active sequences (running + newly admitted
+    /// prefills).  Backends with physical batch slots (the PJRT server)
+    /// set this to their slot count; the simulator leaves it unbounded.
+    pub max_seqs: usize,
 }
 
 impl Default for BatchConfig {
@@ -30,6 +34,7 @@ impl Default for BatchConfig {
             token_budget: 1024,
             max_encode_batch: 8,
             kv_capacity_tokens: 2_000_000,
+            max_seqs: usize::MAX,
         }
     }
 }
@@ -108,6 +113,11 @@ pub fn plan_iteration(
     for r in queue_order {
         debug_assert!(matches!(r.phase, Phase::Prefill));
         if budget == 0 {
+            break;
+        }
+        // slot admission: a prefilled sequence occupies an active slot
+        // until completion, so admit only while slots remain
+        if running.len() + plan.prefill_chunks.len() >= cfg.max_seqs {
             break;
         }
         let want = r.prefill_remaining();
@@ -229,6 +239,19 @@ mod tests {
         let cfg = BatchConfig { kv_capacity_tokens: 1100, token_budget: 500, ..Default::default() };
         let plan = plan_iteration(&[&d], &[&p], &[], &cfg);
         assert!(plan.prefill_chunks.is_empty(), "chunk would exceed KV capacity");
+    }
+
+    #[test]
+    fn max_seqs_gates_prefill_admission() {
+        let d1 = decoding(online(1, 10, 5));
+        let d2 = decoding(online(2, 10, 5));
+        let p1 = online(3, 100, 5);
+        let p2 = online(4, 100, 5);
+        let cfg = BatchConfig { max_seqs: 3, token_budget: 1024, ..Default::default() };
+        let plan = plan_iteration(&[&d1, &d2], &[&p1, &p2], &[], &cfg);
+        assert_eq!(plan.decode_ids, vec![1, 2]);
+        assert_eq!(plan.prefill_chunks.len(), 1, "only one slot free: {plan:?}");
+        assert_eq!(plan.prefill_chunks[0].0, 3);
     }
 
     #[test]

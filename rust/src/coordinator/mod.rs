@@ -1,15 +1,19 @@
 //! Coordinator: the shared request/batch/instance machinery under both
 //! xLLM-Service policies (service/) and the engine optimizations (engine/).
 //!
-//! * [`request`]   — request lifecycle (Encode/Prefill/Decode phases).
-//! * [`batcher`]   — continuous batching + chunked prefill planning.
-//! * [`instance`]  — stateless instance state + runtime monitor.
-//! * [`pools`]     — the four elastic pools (P, D, P→D, D→P) + Encode.
-//! * [`predictor`] — online-calibrated TTFT predictor.
-//! * [`scheduler`] — global dispatch policies + SLO-aware role switching.
+//! * [`request`]      — request lifecycle (Encode/Prefill/Decode phases).
+//! * [`batcher`]      — continuous batching + chunked prefill planning.
+//! * [`instance`]     — stateless instance state + runtime monitor.
+//! * [`pools`]        — the four elastic pools (P, D, P→D, D→P) + Encode.
+//! * [`predictor`]    — online-calibrated TTFT predictor.
+//! * [`scheduler`]    — global dispatch policies + SLO-aware role switching.
+//! * [`orchestrator`] — the shared request-lifecycle state machine driving
+//!   all of the above over a pluggable [`orchestrator::Executor`] backend
+//!   (roofline simulation or real PJRT execution).
 
 pub mod batcher;
 pub mod instance;
+pub mod orchestrator;
 pub mod pools;
 pub mod predictor;
 pub mod request;
@@ -17,6 +21,10 @@ pub mod scheduler;
 
 pub use batcher::{plan_iteration, BatchConfig, IterationPlan};
 pub use instance::{InstanceState, InstanceView, Monitor};
+pub use orchestrator::{
+    ColocationMode, Executor, IterationWork, Orchestrator, OrchestratorConfig, RunResult,
+    ServingMode,
+};
 pub use pools::{ElasticPools, InstanceId, PoolKind};
 pub use predictor::TtftPredictor;
 pub use request::{Phase, Request, RequestId};

@@ -1,0 +1,880 @@
+//! The request-lifecycle state machine (moved out of `sim::cluster`).
+//!
+//! Drives the coordinator/service policy code over an event queue:
+//! request arrival → (encode) → dispatch → chunked prefill iterations →
+//! KV handoff → batched decode iterations → completion, with dynamic PD
+//! role switching, online/offline co-location, fault injection, and the
+//! prefix cache all live.  Iteration execution — and therefore how time
+//! advances — is delegated to the [`Executor`].
+
+use std::collections::HashMap;
+
+use crate::coordinator::orchestrator::{
+    ColocationMode, DecodeWork, EncodeWork, Executor, IterationWork, OrchestratorConfig,
+    PrefillWork, RunResult, ServingMode,
+};
+use crate::coordinator::{
+    plan_iteration, plan_role_switches, ElasticPools, GlobalScheduler, InstanceId, InstanceState,
+    InstanceView, Phase, Placement, PoolKind, Request, RequestId, RoleFlip,
+};
+use crate::metrics::{ServingReport, Slo};
+use crate::service::colocation::admit_offline_decodes;
+use crate::service::fault::{plan_recovery, InterruptedRequest, RecoveryAction};
+use crate::service::kvstore::{hash_chain, Tier, TieredCache, TransferEngine};
+use crate::sim::clock::EventQueue;
+use crate::workload::RequestSpec;
+
+#[derive(Debug, Clone)]
+enum Ev {
+    Arrive(usize),
+    IterDone(InstanceId),
+    KvReady(InstanceId),
+    Monitor,
+    Fault(usize),
+    Recover(usize),
+}
+
+/// Work in flight on one instance.
+struct InFlight {
+    work: IterationWork,
+    duration: f64,
+}
+
+/// The shared serving orchestrator, generic over the execution backend.
+pub struct Orchestrator<X: Executor> {
+    cfg: OrchestratorConfig,
+    executor: X,
+    xfer: TransferEngine,
+    queue: EventQueue<Ev>,
+    instances: Vec<InstanceState>,
+    pools: ElasticPools,
+    scheduler: GlobalScheduler,
+    requests: HashMap<RequestId, Request>,
+    specs: Vec<RequestSpec>,
+    current: HashMap<InstanceId, InFlight>,
+    /// Where each request's prefill ran (decode placement preference).
+    prefill_home: HashMap<RequestId, InstanceId>,
+    prefix_cache: TieredCache,
+    report: ServingReport,
+    preemptions: u64,
+    migrations: u64,
+    recoveries: u64,
+    prefix_hits: u64,
+    iterations: u64,
+}
+
+impl<X: Executor> Orchestrator<X> {
+    pub fn new(cfg: OrchestratorConfig, executor: X) -> Orchestrator<X> {
+        let (n_p, n_d) = match cfg.mode {
+            ServingMode::Colocated => (0, cfg.n_instances),
+            ServingMode::Disaggregated { n_prefill, .. } => {
+                let p = n_prefill.min(cfg.n_instances);
+                (p, cfg.n_instances - p)
+            }
+        };
+        let pools = ElasticPools::new(n_p, n_d, cfg.n_encode);
+        let instances: Vec<InstanceState> = (0..cfg.n_instances + cfg.n_encode)
+            .map(|id| InstanceState::new(id, executor.cost().clone(), cfg.batch))
+            .collect();
+        let scheduler = GlobalScheduler::new(cfg.dispatch);
+        Orchestrator {
+            executor,
+            xfer: TransferEngine::default(),
+            queue: EventQueue::new(),
+            instances,
+            pools,
+            scheduler,
+            requests: HashMap::new(),
+            specs: Vec::new(),
+            current: HashMap::new(),
+            prefill_home: HashMap::new(),
+            prefix_cache: TieredCache::new(64, 1 << 22, 1 << 24, 1 << 26),
+            report: ServingReport::new(),
+            preemptions: 0,
+            migrations: 0,
+            recoveries: 0,
+            prefix_hits: 0,
+            iterations: 0,
+            cfg,
+        }
+    }
+
+    pub fn executor(&self) -> &X {
+        &self.executor
+    }
+
+    pub fn executor_mut(&mut self) -> &mut X {
+        &mut self.executor
+    }
+
+    /// Run the workload to completion; returns metrics + counters and
+    /// hands the executor back (real backends carry per-request results).
+    pub fn run(mut self, workload: Vec<RequestSpec>) -> (RunResult, X) {
+        self.specs = workload;
+        for (i, spec) in self.specs.iter().enumerate() {
+            self.queue.schedule_at(spec.arrival_s, Ev::Arrive(i));
+        }
+        for (t, inst) in self.cfg.faults.clone() {
+            self.queue.schedule_at(t, Ev::Fault(inst));
+        }
+        self.queue.schedule_at(self.cfg.monitor_interval_s, Ev::Monitor);
+
+        // cap to guarantee termination on pathological configs
+        let max_events = self.cfg.max_events;
+        let mut truncated = false;
+        while let Some((_, ev)) = self.queue.next() {
+            match ev {
+                Ev::Arrive(i) => self.on_arrive(i),
+                Ev::IterDone(id) => self.on_iter_done(id),
+                Ev::KvReady(id) => self.kick(id),
+                Ev::Monitor => self.on_monitor(),
+                Ev::Fault(id) => self.on_fault(id),
+                Ev::Recover(id) => self.on_recover(id),
+            }
+            if self.queue.processed() > max_events {
+                truncated = true;
+                break;
+            }
+            if self.all_done() && self.queue.len() <= 1 {
+                break; // only the monitor tick remains
+            }
+        }
+        let result = RunResult {
+            role_flips: self.pools.flips,
+            preemptions: self.preemptions,
+            migrations: self.migrations,
+            recoveries: self.recoveries,
+            prefix_hits: self.prefix_hits,
+            iterations: self.iterations,
+            events: self.queue.processed(),
+            truncated,
+            per_instance: self
+                .instances
+                .iter()
+                .map(|i| (i.monitor.iterations, i.monitor.tokens_generated))
+                .collect(),
+            report: self.report,
+        };
+        (result, self.executor)
+    }
+
+    fn all_done(&self) -> bool {
+        self.report.n_requests() >= self.specs.len()
+    }
+
+    fn view(&self, id: InstanceId) -> InstanceView {
+        let inst = &self.instances[id];
+        let queued_prefill_tokens: u64 = inst
+            .prefill_queue
+            .iter()
+            .filter_map(|r| self.requests.get(r))
+            .map(|r| r.prefill_remaining())
+            .sum();
+        let running_tokens: u64 = inst
+            .running
+            .iter()
+            .filter_map(|r| self.requests.get(r))
+            .map(|r| r.context_len())
+            .sum();
+        InstanceView {
+            id,
+            queued_prefill_tokens,
+            running_tokens,
+            n_running: inst.running.len(),
+            n_queued: inst.prefill_queue.len(),
+            kv_used: inst.kv_tokens,
+            kv_capacity: inst.batch.kv_capacity_tokens,
+            failed: inst.failed,
+            ema_token_interval: inst.monitor.ema_token_interval,
+            ema_ttft: inst.monitor.ema_ttft,
+        }
+    }
+
+    fn views(&self, ids: &[InstanceId]) -> Vec<InstanceView> {
+        ids.iter().map(|&i| self.view(i)).collect()
+    }
+
+    fn alive(&self, ids: Vec<InstanceId>) -> Vec<InstanceId> {
+        ids.into_iter().filter(|&i| !self.instances[i].failed).collect()
+    }
+
+    /// Fail a request that could not be placed anywhere.
+    fn fail_request(&mut self, rid: RequestId) {
+        let now = self.queue.now();
+        let r = self.requests.get_mut(&rid).unwrap();
+        r.fail(now);
+        if let Some(o) = r.outcome() {
+            self.report.record(o);
+        }
+        self.executor.finished(rid, now);
+    }
+
+    // --- arrival -------------------------------------------------------
+
+    fn on_arrive(&mut self, idx: usize) {
+        let spec = self.specs[idx];
+        let id = idx as RequestId;
+        let mut req = Request::new(id, spec, self.cfg.slo);
+
+        // prefix cache lookup (§3.4): shared system prompts skip prefill
+        if self.cfg.prefix_cache && spec.shared_prefix > 0 {
+            let tokens: Vec<u32> = (0..spec.shared_prefix as u32)
+                .map(|t| ((spec.prefix_group as u32) << 16) | t)
+                .collect();
+            let chain = hash_chain(&tokens, self.prefix_cache.block_tokens as usize);
+            let (blocks, _) = self.prefix_cache.match_prefix(&chain);
+            let hit = (blocks as u64 * self.prefix_cache.block_tokens)
+                .min(spec.shared_prefix)
+                .min(spec.input_tokens.saturating_sub(1));
+            if hit > 0 {
+                req.prefix_hit_tokens = hit;
+                self.prefix_hits += 1;
+            }
+            self.prefix_cache.insert_chain(&chain, Tier::Dram);
+        }
+
+        let multimodal = spec.is_multimodal();
+        self.requests.insert(id, req);
+        if multimodal && self.cfg.epd.is_some() {
+            self.route_encode(id);
+        } else {
+            if multimodal {
+                // no EPD support: encode fused into prefill on one instance
+                self.requests.get_mut(&id).unwrap().finish_encode();
+            }
+            self.route_prefill(id);
+        }
+    }
+
+    fn route_encode(&mut self, id: RequestId) {
+        use crate::service::epd::placement;
+        let strategy = self.cfg.epd.unwrap();
+        let place = placement(strategy);
+        let pool_ids = match place.encode_pool {
+            0 => self.alive(self.pools.prefill_capable()),
+            1 => self.alive(self.pools.decode_capable()),
+            _ => self.alive(self.pools.encode_capable()),
+        };
+        let pool_ids = if pool_ids.is_empty() {
+            self.alive((0..self.instances.len()).collect())
+        } else {
+            pool_ids
+        };
+        let target = pool_ids
+            .into_iter()
+            .min_by_key(|&i| self.instances[i].encode_queue.len())
+            .expect("no instance for encode");
+        self.instances[target].encode_queue.push_back(id);
+        self.kick(target);
+    }
+
+    fn route_prefill(&mut self, id: RequestId) {
+        let req = &self.requests[&id];
+        let input = req.prefill_remaining();
+        let is_online = req.is_online();
+
+        let (primary_ids, fallback_ids) = match self.cfg.mode {
+            ServingMode::Colocated => {
+                (self.alive((0..self.cfg.n_instances).collect()), Vec::new())
+            }
+            ServingMode::Disaggregated { .. } => (
+                self.alive(self.pools.of_kind(PoolKind::Prefill)),
+                self.alive(self.pools.of_kind(PoolKind::DecodeToPrefill)),
+            ),
+        };
+        let primary = self.views(&primary_ids);
+        let fallback = self.views(&fallback_ids);
+        let slo = if is_online { self.cfg.slo } else { Slo::UNCONSTRAINED };
+        let placement = self.scheduler.place_prefill(
+            &primary,
+            &fallback,
+            self.executor.cost(),
+            input,
+            &slo,
+        );
+        let target = match placement {
+            Placement::Instance(i) => i,
+            Placement::NeedFlip => {
+                // dynamic PD: convert the lightest decode instance
+                let flipped =
+                    if let ServingMode::Disaggregated { dynamic: true, .. } = self.cfg.mode {
+                        let candidates = self.alive(self.pools.decode_capable());
+                        candidates
+                            .into_iter()
+                            .min_by_key(|&i| self.view(i).running_tokens)
+                            .filter(|&i| self.pools.flip_to_prefill(i, 2))
+                    } else {
+                        None
+                    };
+                match flipped {
+                    Some(i) => i,
+                    None => {
+                        // no flip possible: least-loaded anywhere
+                        match primary
+                            .iter()
+                            .chain(fallback.iter())
+                            .min_by_key(|v| v.queued_prefill_tokens)
+                        {
+                            Some(v) => v.id,
+                            None => {
+                                self.fail_request(id);
+                                return;
+                            }
+                        }
+                    }
+                }
+            }
+        };
+        self.instances[target].prefill_queue.push_back(id);
+        self.kick(target);
+    }
+
+    // --- iteration execution -------------------------------------------
+
+    fn kick(&mut self, id: InstanceId) {
+        let inst = &self.instances[id];
+        if inst.busy || inst.failed || !inst.has_work() {
+            return;
+        }
+        let pool = self.pools.kind(id);
+        let colocated = matches!(self.cfg.mode, ServingMode::Colocated);
+
+        let serves_prefill = colocated || pool.serves_prefill();
+        // stateless instances (§3.2): pool membership steers NEW work, but
+        // an instance always drains what it already holds (e.g. offline
+        // decodes placed on latency-relaxed instances under co-location)
+        let serves_decode = colocated || pool.serves_decode() || !inst.running.is_empty();
+        let serves_encode = pool.serves_encode() || self.cfg.epd.is_some() || colocated;
+
+        let running: Vec<&Request> = if serves_decode {
+            inst.running.iter().filter_map(|r| self.requests.get(r)).collect()
+        } else {
+            Vec::new()
+        };
+        let queued: Vec<&Request> = if serves_prefill {
+            inst.prefill_queue.iter().filter_map(|r| self.requests.get(r)).collect()
+        } else {
+            Vec::new()
+        };
+        let encodes: Vec<&Request> = if serves_encode {
+            inst.encode_queue.iter().filter_map(|r| self.requests.get(r)).collect()
+        } else {
+            Vec::new()
+        };
+        if running.is_empty() && queued.is_empty() && encodes.is_empty() {
+            return;
+        }
+
+        // online-priority co-location: offline prefill waits while any
+        // online request is queued (dispatch-time priority, no runtime
+        // admission control — the Fig 23 middle policy)
+        let queued: Vec<&Request> =
+            if let Some((ColocationMode::OnlinePriority, _)) = self.cfg.colocation {
+                let any_online = queued.iter().any(|r| r.is_online());
+                if any_online {
+                    queued.into_iter().filter(|r| r.is_online()).collect()
+                } else {
+                    queued
+                }
+            } else {
+                queued
+            };
+
+        let mut plan = plan_iteration(&running, &queued, &encodes, &inst.batch);
+
+        // co-location admission control: cap offline decodes so the step
+        // stays within the online TPOT budget (§3.1 Solution 1)
+        if let Some((ColocationMode::XllmOoc, coloc)) = &self.cfg.colocation {
+            let online: Vec<RequestId> = plan
+                .decode_ids
+                .iter()
+                .copied()
+                .filter(|r| self.requests[r].is_online())
+                .collect();
+            let offline: Vec<RequestId> = plan
+                .decode_ids
+                .iter()
+                .copied()
+                .filter(|r| !self.requests[r].is_online())
+                .collect();
+            if !offline.is_empty() {
+                let online_kv: u64 =
+                    online.iter().map(|r| self.requests[r].context_len()).sum();
+                let mean_ctx = (offline
+                    .iter()
+                    .map(|r| self.requests[r].context_len())
+                    .sum::<u64>()
+                    / offline.len() as u64)
+                    .max(1);
+                let admit = admit_offline_decodes(
+                    self.executor.cost(),
+                    online.len().max(1) as u64,
+                    online_kv,
+                    offline.len() as u64,
+                    mean_ctx,
+                    coloc,
+                ) as usize;
+                if admit < offline.len() {
+                    self.preemptions += (offline.len() - admit) as u64;
+                    let keep: Vec<RequestId> = offline.iter().copied().take(admit).collect();
+                    plan.decode_ids = online.into_iter().chain(keep).collect();
+                }
+            }
+        }
+        self.preemptions += plan.preempted.len() as u64;
+
+        if plan.is_empty() {
+            return;
+        }
+
+        // hand the planned work to the executor; virtual time advances by
+        // whatever it reports (modelled cost or measured wall time)
+        let work = IterationWork {
+            decodes: plan
+                .decode_ids
+                .iter()
+                .map(|r| DecodeWork { req: *r, context_tokens: self.requests[r].context_len() })
+                .collect(),
+            prefills: plan
+                .prefill_chunks
+                .iter()
+                .map(|&(r, tokens, ctx)| PrefillWork { req: r, tokens, context_tokens: ctx })
+                .collect(),
+            encodes: plan
+                .encode_ids
+                .iter()
+                .map(|r| EncodeWork { req: *r, image_patches: self.requests[r].spec.image_patches })
+                .collect(),
+        };
+        let now = self.queue.now();
+        let duration = self.executor.begin_iteration(id, now, &work).max(1e-6);
+
+        self.instances[id].busy = true;
+        self.current.insert(id, InFlight { work, duration });
+        self.queue.schedule_in(duration, Ev::IterDone(id));
+    }
+
+    fn on_iter_done(&mut self, id: InstanceId) {
+        let now = self.queue.now();
+        let plan = match self.current.remove(&id) {
+            Some(p) => p,
+            None => return,
+        };
+        if self.instances[id].failed {
+            self.instances[id].busy = false;
+            return; // fault handler already migrated the work
+        }
+        // NOTE: busy stays true until bookkeeping completes, so re-entrant
+        // kick() calls (e.g. from place_decode_for back onto this
+        // instance) cannot snapshot a stale plan.
+        self.iterations += 1;
+
+        // encodes complete
+        for e in &plan.work.encodes {
+            let rid = e.req;
+            if let Some(r) = self.requests.get_mut(&rid) {
+                r.finish_encode();
+            }
+            self.instances[id].encode_queue.retain(|x| *x != rid);
+            self.route_prefill(rid);
+        }
+
+        // prefill chunks advance
+        for p in &plan.work.prefills {
+            let rid = p.req;
+            let done = {
+                let r = match self.requests.get_mut(&rid) {
+                    Some(r) => r,
+                    None => continue,
+                };
+                self.instances[id].kv_tokens += p.tokens;
+                r.advance_prefill(p.tokens, now)
+            };
+            if done {
+                let (finished, ttft, ctx, input) = {
+                    let r = &self.requests[&rid];
+                    (
+                        r.phase == Phase::Done,
+                        r.first_token_s.unwrap_or(now) - r.spec.arrival_s,
+                        r.context_len(),
+                        r.spec.input_tokens,
+                    )
+                };
+                self.instances[id].prefill_queue.retain(|x| *x != rid);
+                self.instances[id].monitor.observe_ttft(ttft);
+                // feed the TTFT predictor (online factor learning)
+                self.scheduler.predictor.observe(self.executor.cost(), 0, input, ttft.max(1e-6));
+                if finished {
+                    self.instances[id].kv_tokens =
+                        self.instances[id].kv_tokens.saturating_sub(ctx);
+                    self.finish(rid);
+                } else {
+                    self.prefill_home.insert(rid, id);
+                    self.place_decode_for(rid, id, ctx);
+                }
+            }
+        }
+
+        // decodes advance
+        let iter_dur = plan.duration;
+        let mut finished: Vec<RequestId> = Vec::new();
+        for d in &plan.work.decodes {
+            let rid = d.req;
+            let tokens = self.executor.decode_emission(id, rid);
+            let done = {
+                let r = match self.requests.get_mut(&rid) {
+                    Some(r) => r,
+                    None => continue,
+                };
+                let emitted = tokens.min(r.decode_remaining());
+                self.instances[id].kv_tokens += emitted;
+                r.advance_decode(tokens, now)
+            };
+            let per_token = iter_dur / tokens as f64;
+            self.instances[id].monitor.observe_token_interval(per_token);
+            self.instances[id].monitor.observe_iteration(tokens);
+            if done {
+                finished.push(rid);
+            }
+        }
+        for rid in finished {
+            let ctx = self.requests[&rid].context_len();
+            self.instances[id].running.retain(|x| *x != rid);
+            self.instances[id].kv_tokens =
+                self.instances[id].kv_tokens.saturating_sub(ctx);
+            self.finish(rid);
+        }
+
+        self.instances[id].busy = false;
+        // layer-2 reactive workload migration (§4.4.3): at iteration
+        // boundaries this instance's running set is in no executing plan,
+        // so whole sequences can move to under-loaded peers safely.
+        if self.executor.cost().features.dp_balance {
+            self.rebalance_from(id);
+        }
+        self.kick(id);
+    }
+
+    /// Reactive inter-instance decode migration (paper §4.4.3 layer 2).
+    ///
+    /// If this instance's decode token load exceeds the cluster mean by
+    /// more than the tolerance and a peer sits well below it, migrate the
+    /// smallest running sequences over (KV transfer modelled via KvReady).
+    fn rebalance_from(&mut self, id: InstanceId) {
+        const TOLERANCE_HI: f64 = 1.25;
+        const TOLERANCE_LO: f64 = 0.80;
+        const MAX_MOVES: usize = 4;
+        let colocated = matches!(self.cfg.mode, ServingMode::Colocated);
+        let peers: Vec<InstanceId> = if colocated {
+            self.alive((0..self.cfg.n_instances).collect())
+        } else {
+            self.alive(self.pools.decode_capable())
+        };
+        if peers.len() < 2 || !peers.contains(&id) {
+            return;
+        }
+        let load = |s: &Self, i: InstanceId| -> u64 {
+            s.instances[i]
+                .running
+                .iter()
+                .filter_map(|r| s.requests.get(r))
+                .map(|r| r.context_len())
+                .sum()
+        };
+        let mine = load(self, id);
+        let total: u64 = peers.iter().map(|&p| load(self, p)).sum();
+        let mean = total as f64 / peers.len() as f64;
+        if mean <= 0.0 || (mine as f64) < mean * TOLERANCE_HI {
+            return;
+        }
+        // smallest sequences first: cheapest KV transfers
+        let mut mine_reqs: Vec<(u64, RequestId)> = self.instances[id]
+            .running
+            .iter()
+            .filter_map(|r| self.requests.get(r).map(|q| (q.context_len(), *r)))
+            .collect();
+        mine_reqs.sort();
+        let mut moved = 0usize;
+        let mut my_load = mine as f64;
+        for (ctx, rid) in mine_reqs {
+            if moved >= MAX_MOVES || my_load < mean * TOLERANCE_HI {
+                break;
+            }
+            let target = peers
+                .iter()
+                .copied()
+                .filter(|&p| p != id)
+                .min_by_key(|&p| load(self, p));
+            let target = match target {
+                Some(t) if (load(self, t) as f64) < mean * TOLERANCE_LO => t,
+                _ => break,
+            };
+            if self.instances[target].running.len() >= self.cfg.batch.max_decode_seqs
+                || self.instances[target].kv_free() < ctx
+            {
+                break;
+            }
+            self.instances[id].running.retain(|x| *x != rid);
+            self.instances[id].kv_tokens = self.instances[id].kv_tokens.saturating_sub(ctx);
+            self.instances[target].running.push(rid);
+            self.instances[target].kv_tokens += ctx;
+            if let Some(r) = self.requests.get_mut(&rid) {
+                r.migrations += 1;
+            }
+            self.migrations += 1;
+            let delay = self.executor.kv_transfer_s(ctx);
+            self.queue.schedule_in(delay, Ev::KvReady(target));
+            my_load -= ctx as f64;
+            moved += 1;
+        }
+    }
+
+    /// Place a request that just finished prefill into a decode batch.
+    fn place_decode_for(&mut self, rid: RequestId, home: InstanceId, ctx: u64) {
+        let colocated = matches!(self.cfg.mode, ServingMode::Colocated);
+        // §3.1 latency-constrained decoupling: under xLLM-OOC, OFFLINE
+        // decode may run in either pool (it is not latency-strict), which
+        // is the capacity the co-location policy exploits
+        let offline_flexible = matches!(self.cfg.colocation, Some((ColocationMode::XllmOoc, _)))
+            && self.requests.get(&rid).map(|r| !r.is_online()).unwrap_or(false);
+        let candidates: Vec<InstanceId> = if colocated || offline_flexible {
+            self.alive((0..self.cfg.n_instances).collect())
+        } else {
+            self.alive(self.pools.decode_capable())
+        };
+        let views = self.views(&candidates);
+        let prefer = if colocated || self.pools.kind(home).serves_decode() {
+            Some(home)
+        } else {
+            None
+        };
+        let target = self
+            .scheduler
+            .place_decode(&views, prefer, ctx, self.cfg.batch.max_decode_seqs)
+            .or_else(|| candidates.first().copied());
+        let target = match target {
+            Some(t) => t,
+            None => {
+                self.fail_request(rid);
+                return;
+            }
+        };
+        if target == home {
+            self.instances[home].running.push(rid);
+            self.kick(home);
+        } else {
+            // KV transfer (migration queue, FCFS): the target gets the
+            // request after the transfer delay
+            let delay = self.executor.kv_transfer_s(ctx);
+            self.migrations += 1;
+            self.instances[home].kv_tokens =
+                self.instances[home].kv_tokens.saturating_sub(ctx);
+            self.instances[target].kv_tokens += ctx;
+            self.instances[target].running.push(rid);
+            self.requests.get_mut(&rid).unwrap().migrations += 1;
+            self.queue.schedule_in(delay, Ev::KvReady(target));
+        }
+    }
+
+    fn finish(&mut self, rid: RequestId) {
+        self.prefill_home.remove(&rid);
+        if let Some(r) = self.requests.get(&rid) {
+            if let Some(o) = r.outcome() {
+                self.report.record(o);
+            }
+        }
+        self.executor.finished(rid, self.queue.now());
+    }
+
+    // --- monitoring / role switching -----------------------------------
+
+    fn on_monitor(&mut self) {
+        // settle drained transitional instances
+        for id in 0..self.instances.len() {
+            let kind = self.pools.kind(id);
+            if matches!(kind, PoolKind::PrefillToDecode | PoolKind::DecodeToPrefill) {
+                let drained = match kind {
+                    PoolKind::PrefillToDecode => self.instances[id].prefill_queue.is_empty(),
+                    PoolKind::DecodeToPrefill => self.instances[id].running.is_empty(),
+                    _ => false,
+                };
+                if drained {
+                    self.pools.settle(id);
+                }
+            }
+        }
+        // SLO-aware role switching
+        if let ServingMode::Disaggregated { dynamic: true, .. } = self.cfg.mode {
+            let views: Vec<InstanceView> =
+                (0..self.instances.len()).map(|i| self.view(i)).collect();
+            let flips = plan_role_switches(
+                &views,
+                &self.pools,
+                &self.scheduler.predictor,
+                self.executor.cost(),
+                &self.cfg.slo,
+                0,
+                2,
+            );
+            for f in flips {
+                match f {
+                    RoleFlip::ToPrefill(i) => {
+                        self.pools.flip_to_prefill(i, 2);
+                    }
+                    RoleFlip::ToDecode(i) => {
+                        self.pools.flip_to_decode(i);
+                    }
+                }
+            }
+        }
+        // keep kicking idle instances with queued work (e.g. after flips)
+        for id in 0..self.instances.len() {
+            self.kick(id);
+        }
+        if !self.all_done() {
+            self.queue.schedule_in(self.cfg.monitor_interval_s, Ev::Monitor);
+        }
+    }
+
+    // --- faults ---------------------------------------------------------
+
+    fn on_fault(&mut self, id: InstanceId) {
+        let now = self.queue.now();
+        self.instances[id].failed = true;
+        self.instances[id].busy = false;
+        self.current.remove(&id);
+        let owned = self.instances[id].owned_requests();
+        for rid in owned {
+            self.instances[id].evict(rid);
+            let (ctx, phase) = match self.requests.get(&rid) {
+                Some(r) => (r.context_len(), r.phase),
+                None => continue,
+            };
+            let interrupted = InterruptedRequest {
+                request: rid,
+                context_tokens: ctx,
+                // decode-phase requests have a DRAM replica via the global
+                // cache when prefix caching is on; otherwise HBM-only
+                replica_tier: if self.cfg.prefix_cache {
+                    Some(Tier::Dram)
+                } else {
+                    Some(Tier::Hbm)
+                },
+            };
+            let (action, _delay) = plan_recovery(&interrupted, self.executor.cost(), &self.xfer);
+            self.recoveries += 1;
+            match (phase, action) {
+                (Phase::Decode, RecoveryAction::Migrate) => {
+                    let home = self.prefill_home.get(&rid).copied().unwrap_or(id);
+                    if let Some(r) = self.requests.get_mut(&rid) {
+                        r.migrations += 1;
+                    }
+                    self.place_decode_for(rid, home, ctx);
+                }
+                (Phase::Decode, _) => {
+                    // recompute: back to prefill from scratch
+                    if let Some(r) = self.requests.get_mut(&rid) {
+                        r.phase = Phase::Prefill;
+                        r.prefilled = 0;
+                        r.prefix_hit_tokens = 0;
+                        r.preemptions += 1;
+                    }
+                    self.route_prefill(rid);
+                }
+                (Phase::Prefill, _) => {
+                    if let Some(r) = self.requests.get_mut(&rid) {
+                        r.prefilled = 0;
+                    }
+                    self.route_prefill(rid);
+                }
+                (Phase::Encode, _) => {
+                    self.route_encode(rid);
+                }
+                _ => {}
+            }
+        }
+        self.instances[id].kv_tokens = 0;
+        let recovery_s =
+            self.cfg.recovery.recovery_s(self.executor.cost().model.weight_bytes());
+        self.queue.schedule_at(now + recovery_s, Ev::Recover(id));
+    }
+
+    fn on_recover(&mut self, id: InstanceId) {
+        self.instances[id].failed = false;
+        self.kick(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ascend_910b, catalog};
+    use crate::sim::roofline::{CostModel, EngineFeatures};
+
+    /// A trivial fixed-cost executor: proves the lifecycle runs with no
+    /// roofline model and no PJRT runtime behind it.
+    struct FixedCost {
+        cost: CostModel,
+        step_s: f64,
+        iterations: u64,
+        finished: u64,
+    }
+
+    impl FixedCost {
+        fn new(step_s: f64) -> FixedCost {
+            FixedCost {
+                cost: CostModel::new(
+                    ascend_910b(),
+                    catalog("Qwen3-8B").unwrap(),
+                    EngineFeatures::xllm(1),
+                ),
+                step_s,
+                iterations: 0,
+                finished: 0,
+            }
+        }
+    }
+
+    impl Executor for FixedCost {
+        fn cost(&self) -> &CostModel {
+            &self.cost
+        }
+
+        fn begin_iteration(
+            &mut self,
+            _instance: InstanceId,
+            _now_s: f64,
+            _work: &IterationWork,
+        ) -> f64 {
+            self.iterations += 1;
+            self.step_s
+        }
+
+        fn finished(&mut self, _req: RequestId, _now_s: f64) {
+            self.finished += 1;
+        }
+    }
+
+    #[test]
+    fn lifecycle_runs_on_any_executor() {
+        let cfg = OrchestratorConfig { n_instances: 2, ..Default::default() };
+        let workload: Vec<RequestSpec> =
+            (0..8).map(|i| RequestSpec::text(i as f64 * 0.1, 64, 4)).collect();
+        let n = workload.len();
+        let (res, exec) = Orchestrator::new(cfg, FixedCost::new(0.01)).run(workload);
+        assert_eq!(res.report.n_completed(), n);
+        assert_eq!(exec.finished as usize, n, "executor told about every completion");
+        assert!(exec.iterations > 0);
+        assert!(!res.truncated);
+    }
+
+    #[test]
+    fn max_events_cap_sets_truncated() {
+        let cfg = OrchestratorConfig { n_instances: 1, max_events: 10, ..Default::default() };
+        let workload: Vec<RequestSpec> =
+            (0..50).map(|i| RequestSpec::text(i as f64 * 0.01, 256, 64)).collect();
+        let (res, _) = Orchestrator::new(cfg, FixedCost::new(0.01)).run(workload);
+        assert!(res.truncated, "tiny event cap must truncate the run");
+        assert!(res.events >= 10);
+    }
+}

@@ -1,0 +1,208 @@
+//! The shared serving orchestrator: one request-lifecycle state machine
+//! for both the discrete-event cluster simulator and the real PJRT
+//! server (the paper's decoupled service-engine split, §2).
+//!
+//! The orchestrator owns the lifecycle — arrival → (encode) → dispatch →
+//! chunked-prefill iterations → KV handoff → batched decode →
+//! completion — plus dynamic PD role switching, online/offline
+//! co-location admission, preemption, and fault recovery.  *How* an
+//! iteration's work actually runs is delegated to an [`Executor`]:
+//!
+//! * [`crate::sim::executor::RooflineExecutor`] prices iterations with
+//!   the roofline cost model (the Ascend-testbed substitute) — virtual
+//!   time advances by the modelled step cost.
+//! * `server::PjrtExecutor` executes iterations for real on the AOT
+//!   PJRT artifacts — virtual time advances by measured wall time.
+//!
+//! Any future backend (batched PJRT, remote instance, quantized path)
+//! drops in behind the same trait instead of forking the lifecycle
+//! logic again.  See DESIGN.md §Orchestrator.
+
+pub mod machine;
+
+pub use machine::Orchestrator;
+
+use crate::coordinator::batcher::BatchConfig;
+use crate::coordinator::pools::InstanceId;
+use crate::coordinator::request::RequestId;
+use crate::coordinator::scheduler::DispatchPolicy;
+use crate::metrics::{ServingReport, Slo};
+use crate::service::colocation::ColocationConfig;
+use crate::service::epd::EpdStrategy;
+use crate::service::fault::RecoveryModel;
+use crate::sim::roofline::CostModel;
+
+/// How instances split work across phases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServingMode {
+    /// Every instance serves prefill + decode (chunked continuous batch).
+    Colocated,
+    /// PD disaggregation with `n_prefill` initial prefill instances;
+    /// `dynamic` enables SLO-aware role switching (§3.2).
+    Disaggregated { n_prefill: usize, dynamic: bool },
+}
+
+/// Online-offline co-location variants (Fig 23).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColocationMode {
+    /// Offline requests treated exactly like online (baseline P/D).
+    BaselinePd,
+    /// Offline dispatched only when no online request is waiting.
+    OnlinePriority,
+    /// The paper's policy: latency-constrained pools + admission control
+    /// + preemption (xLLM-OOC).
+    XllmOoc,
+}
+
+/// One decode sequence scheduled into an iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeWork {
+    pub req: RequestId,
+    /// Context tokens resident for this sequence (KV length).
+    pub context_tokens: u64,
+}
+
+/// One (possibly partial) prefill chunk scheduled into an iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillWork {
+    pub req: RequestId,
+    /// New prompt tokens computed this iteration.
+    pub tokens: u64,
+    /// Context already computed before this chunk.
+    pub context_tokens: u64,
+}
+
+/// One multimodal encode task scheduled into an iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct EncodeWork {
+    pub req: RequestId,
+    pub image_patches: u64,
+}
+
+/// The work selected for one forward iteration on one instance, handed
+/// to the [`Executor`].
+#[derive(Debug, Clone, Default)]
+pub struct IterationWork {
+    pub decodes: Vec<DecodeWork>,
+    pub prefills: Vec<PrefillWork>,
+    pub encodes: Vec<EncodeWork>,
+}
+
+impl IterationWork {
+    pub fn is_empty(&self) -> bool {
+        self.decodes.is_empty() && self.prefills.is_empty() && self.encodes.is_empty()
+    }
+
+    pub fn prefill_tokens(&self) -> u64 {
+        self.prefills.iter().map(|p| p.tokens).sum()
+    }
+}
+
+/// Backend executing the orchestrator's planned iterations.
+///
+/// The orchestrator plans *what* runs each iteration; the executor
+/// decides *how long it takes* (and, for real backends, actually runs
+/// it).  Virtual time advances by the returned duration, so a roofline
+/// executor yields a discrete-event simulation while a PJRT executor
+/// yields real serving with wall-clock metrics.
+pub trait Executor {
+    /// Cost model backing the dispatch/prediction/role-switch heuristics
+    /// (for real backends, a calibrated stand-in is fine — heuristics
+    /// only compare relative magnitudes).
+    fn cost(&self) -> &CostModel;
+
+    /// Begin executing `work` on `instance` at virtual time `now_s`;
+    /// returns the iteration duration in seconds.  Real executors run
+    /// the model here and return measured wall time; cost-model
+    /// executors just price the step.
+    fn begin_iteration(&mut self, instance: InstanceId, now_s: f64, work: &IterationWork) -> f64;
+
+    /// Tokens emitted for decode request `req` in the iteration that
+    /// just completed on `instance`.  Called once per scheduled decode,
+    /// in plan order, at iteration completion (speculative decoding
+    /// emits >1).  Default: one token per iteration.
+    fn decode_emission(&mut self, instance: InstanceId, req: RequestId) -> u64 {
+        let _ = (instance, req);
+        1
+    }
+
+    /// KV-cache transfer latency between instances for `tokens` of
+    /// context (PD handoff / migration).
+    fn kv_transfer_s(&self, tokens: u64) -> f64 {
+        self.cost().kv_transfer_s(tokens)
+    }
+
+    /// A request left the orchestrator (completed or failed) at virtual
+    /// time `now_s`.  Real executors release per-request resources
+    /// (batch slot, pages) here.
+    fn finished(&mut self, req: RequestId, now_s: f64) {
+        let _ = (req, now_s);
+    }
+}
+
+/// Executor-agnostic orchestrator configuration: everything about the
+/// serving *policy*, nothing about the backend (hardware, model, or
+/// speculative-decoding parameters live in the executor).
+#[derive(Debug, Clone)]
+pub struct OrchestratorConfig {
+    pub n_instances: usize,
+    /// Dedicated encode instances (EPD E pool).
+    pub n_encode: usize,
+    pub mode: ServingMode,
+    pub dispatch: DispatchPolicy,
+    pub slo: Slo,
+    pub batch: BatchConfig,
+    pub colocation: Option<(ColocationMode, ColocationConfig)>,
+    /// Multimodal phase placement (None = text-only serving).
+    pub epd: Option<EpdStrategy>,
+    /// Injected faults: (time, instance).
+    pub faults: Vec<(f64, usize)>,
+    pub recovery: RecoveryModel,
+    pub monitor_interval_s: f64,
+    /// Enable the global prefix cache (§3.4).
+    pub prefix_cache: bool,
+    /// Termination cap on processed events — guards against pathological
+    /// configs that never drain.  Hitting it sets [`RunResult::truncated`].
+    pub max_events: u64,
+}
+
+impl Default for OrchestratorConfig {
+    fn default() -> Self {
+        OrchestratorConfig {
+            n_instances: 1,
+            n_encode: 0,
+            mode: ServingMode::Colocated,
+            dispatch: DispatchPolicy::SloAware,
+            slo: Slo::UNCONSTRAINED,
+            batch: BatchConfig::default(),
+            colocation: None,
+            epd: None,
+            faults: Vec::new(),
+            recovery: RecoveryModel::default(),
+            monitor_interval_s: 0.25,
+            prefix_cache: false,
+            max_events: DEFAULT_MAX_EVENTS,
+        }
+    }
+}
+
+/// Default event cap (was a hard-coded constant inside the sim loop).
+pub const DEFAULT_MAX_EVENTS: u64 = 200_000_000;
+
+/// Orchestrator run output: serving metrics + policy counters.
+#[derive(Debug)]
+pub struct RunResult {
+    pub report: ServingReport,
+    pub role_flips: u64,
+    pub preemptions: u64,
+    pub migrations: u64,
+    pub recoveries: u64,
+    pub prefix_hits: u64,
+    pub iterations: u64,
+    pub events: u64,
+    /// The run hit [`OrchestratorConfig::max_events`] and stopped before
+    /// draining every request.
+    pub truncated: bool,
+    /// Per-instance (iterations, tokens generated) for utilization checks.
+    pub per_instance: Vec<(u64, u64)>,
+}

@@ -384,6 +384,157 @@ mod tests {
     }
 
     #[test]
+    fn role_switch_empty_pools_is_noop() {
+        let pools = ElasticPools::new(0, 0, 0);
+        let flips = plan_role_switches(
+            &[],
+            &pools,
+            &TtftPredictor::new(),
+            &cost(),
+            &Slo::interactive(0.5, 0.05),
+            10_000,
+            1,
+        );
+        assert!(flips.is_empty(), "no instances, nothing to flip: {flips:?}");
+    }
+
+    #[test]
+    fn role_switch_never_flips_last_decode_instance() {
+        // one decode instance, massive prefill pressure: the decode floor
+        // must hold (flipping the last decode instance would deadlock
+        // every request finishing prefill)
+        let views = vec![view(0, 5_000_000, 0), view(1, 0, 2000)];
+        let pools = ElasticPools::new(1, 1, 0); // 0=P, 1=D
+        let flips = plan_role_switches(
+            &views,
+            &pools,
+            &TtftPredictor::new(),
+            &cost(),
+            &Slo::interactive(0.1, 0.05),
+            1_000_000,
+            1,
+        );
+        assert!(
+            !flips.iter().any(|f| matches!(f, RoleFlip::ToPrefill(_))),
+            "must not flip the only decode instance: {flips:?}"
+        );
+    }
+
+    #[test]
+    fn role_switch_never_strands_last_busy_prefill_instance() {
+        // The sole prefill instance has queued prompts while decode TPOT
+        // is blown: converting it would strand the queued prefill work,
+        // and the planner only converts *idle* prefill instances — so no
+        // flip.  (An idle last prefill instance MAY convert: prefill
+        // capacity is recoverable on demand through the NeedFlip path in
+        // dispatch, whereas the decode floor below is a hard invariant.)
+        let mut d = view(1, 0, 5000);
+        d.ema_token_interval = 0.5; // far above TPOT SLO
+        let views = vec![view(0, 2000, 0), d];
+        let pools = ElasticPools::new(1, 1, 0);
+        let flips = plan_role_switches(
+            &views,
+            &pools,
+            &TtftPredictor::new(),
+            &cost(),
+            &Slo::interactive(60.0, 0.05),
+            0,
+            1,
+        );
+        assert!(
+            !flips.iter().any(|f| matches!(f, RoleFlip::ToDecode(_))),
+            "busy prefill instance must keep its role: {flips:?}"
+        );
+    }
+
+    #[test]
+    fn role_switch_single_instance_cluster_never_flips() {
+        // A 1-instance cluster must keep its role under any load, in
+        // either starting configuration: a lone decode instance is
+        // protected by the decode floor, a lone prefill instance has no
+        // decode peer whose pressure could pull it over.
+        let slos = [(0.1, 0.01), (60.0, 10.0)];
+        for (ttft, tpot) in slos {
+            let views = vec![view(0, 4_000_000, 4_000_000)];
+            let decode_only = ElasticPools::new(0, 1, 0);
+            let flips = plan_role_switches(
+                &views,
+                &decode_only,
+                &TtftPredictor::new(),
+                &cost(),
+                &Slo::interactive(ttft, tpot),
+                1_000_000,
+                1,
+            );
+            assert!(flips.is_empty(), "lone decode instance flipped: {flips:?}");
+
+            let mut idle = view(0, 0, 0);
+            idle.ema_token_interval = 0.5;
+            let prefill_only = ElasticPools::new(1, 0, 0);
+            let flips = plan_role_switches(
+                &[idle],
+                &prefill_only,
+                &TtftPredictor::new(),
+                &cost(),
+                &Slo::interactive(ttft, tpot),
+                1_000_000,
+                1,
+            );
+            assert!(flips.is_empty(), "lone prefill instance flipped: {flips:?}");
+        }
+    }
+
+    #[test]
+    fn role_switch_hysteresis_under_oscillating_load() {
+        // Alternate prefill-heavy and decode-heavy snapshots.  The
+        // transitional-pool preference (§3.2) localizes the churn: one
+        // elastic instance ping-pongs through P→D/D→P while the rest of
+        // the fleet keeps its role, the decode floor holds throughout,
+        // and flips stay bounded by one per load swing (no cascade).
+        let mut pools = ElasticPools::new(2, 2, 0); // 0,1=P  2,3=D
+        let predictor = TtftPredictor::new();
+        let c = cost();
+        let slo = Slo::interactive(0.5, 0.05);
+        let rounds = 40u64;
+        for round in 0..rounds {
+            let views: Vec<InstanceView> = (0..4)
+                .map(|i| {
+                    if round % 2 == 0 {
+                        // prefill burst: huge queues, decode healthy
+                        let mut v = view(i, 3_000_000, 0);
+                        v.ema_token_interval = 0.01;
+                        v
+                    } else {
+                        // decode burst: TPOT blown, prefill idle
+                        let mut v = view(i, 0, 500_000);
+                        v.ema_token_interval = 0.5;
+                        v
+                    }
+                })
+                .collect();
+            let flips = plan_role_switches(&views, &pools, &predictor, &c, &slo, 0, 1);
+            assert!(flips.len() <= 1, "round {round}: cascade of flips {flips:?}");
+            for f in flips {
+                match f {
+                    RoleFlip::ToPrefill(i) => {
+                        pools.flip_to_prefill(i, 1);
+                    }
+                    RoleFlip::ToDecode(i) => {
+                        pools.flip_to_decode(i);
+                    }
+                }
+            }
+            assert!(pools.decode_target_count() >= 1, "decode floor violated mid-oscillation");
+        }
+        // churn is absorbed by a single elastic instance; the rest of the
+        // fleet never changes role
+        assert_eq!(pools.kind(0), PoolKind::Prefill, "stable prefill instance flipped");
+        assert_eq!(pools.kind(1), PoolKind::Prefill, "stable prefill instance flipped");
+        assert!(pools.kind(3).target_is_decode(), "stable decode instance flipped");
+        assert!(pools.flips <= rounds, "{} flips in {rounds} rounds", pools.flips);
+    }
+
+    #[test]
     fn no_flip_when_slo_met() {
         let views = vec![view(0, 100, 0), view(1, 0, 100), view(2, 0, 100)];
         let pools = ElasticPools::new(1, 2, 0);

@@ -9,17 +9,31 @@
 //!   recovery); `engine` implements xLLM-Engine (multi-layer pipeline,
 //!   adaptive graph mode, xTensor memory, speculative decoding, EPLB,
 //!   hierarchical DP balance, generative recommendation); `coordinator`
-//!   holds the shared request/batch/instance machinery.
+//!   holds the shared request/batch/instance machinery **and the serving
+//!   orchestrator** — one request-lifecycle state machine
+//!   ([`coordinator::orchestrator::Orchestrator`]) driven through the
+//!   pluggable [`coordinator::orchestrator::Executor`] trait.
 //! * **L2 (python/compile/model.py)** — the JAX transformer, AOT-lowered
 //!   once to HLO text in `artifacts/`.
 //! * **L1 (python/compile/kernels/)** — Pallas attention/MoE kernels
 //!   (interpret mode), verified against pure-jnp oracles.
 //!
-//! `runtime` loads the AOT artifacts via the PJRT C API (`xla` crate) and
-//! executes them on the request path — Python never runs at serve time.
-//! `sim` provides the calibrated discrete-event cluster simulator used by
-//! the paper-figure benchmarks (the Ascend-cluster substitute; see
-//! DESIGN.md §Hardware-Adaptation).
+//! Module map (see DESIGN.md for the full architecture):
+//!
+//! * [`coordinator`] — request lifecycle, batcher, pools, scheduler,
+//!   predictor, and the shared serving **orchestrator** + `Executor`.
+//! * [`service`] — xLLM-Service policies (colocation, EPD, fault, KV store).
+//! * [`engine`] — xLLM-Engine optimizations (xtensor, specdecode, EPLB,
+//!   DP balance, pipeline, genrec).
+//! * [`sim`] — event clock, roofline cost model, the roofline `Executor`,
+//!   and `ClusterConfig` (the Ascend-cluster substitute; see DESIGN.md
+//!   §Hardware-Adaptation).
+//! * [`server`] — the PJRT `Executor` + serving façade over the
+//!   orchestrator; [`runtime`] loads the AOT artifacts via the PJRT C API
+//!   (`xla` crate) — Python never runs at serve time.
+//! * [`workload`] — synthetic scenario generators (DESIGN.md
+//!   §Substitutions); [`metrics`], [`model`], [`config`], [`util`],
+//!   [`testutil`] support the rest.
 
 pub mod config;
 pub mod coordinator;

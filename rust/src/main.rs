@@ -12,11 +12,12 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use xllm::config::{Args, ServeConfig};
+use xllm::coordinator::orchestrator::ServingMode;
 use xllm::coordinator::DispatchPolicy;
 use xllm::metrics::Slo;
 use xllm::model;
 use xllm::server::{synth_prompt, GenRequest, Server};
-use xllm::sim::cluster::{run as sim_run, ClusterConfig, ServingMode};
+use xllm::sim::cluster::{run as sim_run, ClusterConfig};
 use xllm::sim::EngineFeatures;
 use xllm::util::json::Json;
 use xllm::util::Rng;

@@ -1,24 +1,35 @@
 //! The real serving engine: batched greedy generation over the AOT
 //! PJRT artifacts — the end-to-end composition of all three layers.
 //!
-//! This is the path the `quickstart` example and the `serve` CLI run:
-//! request admission → bucketed prefill → xTensor slot/page assignment →
-//! continuous batched decode (optionally speculative via the draft model)
-//! → completion, with TTFT/TPOT metrics recorded exactly as the paper
-//! reports them.  Python never runs here; the artifacts were lowered once
-//! by `make artifacts`.
+//! Since the orchestrator refactor, [`Server`] is a thin façade: request
+//! admission, bucketed prefill ordering, continuous batched decode, and
+//! completion are all driven by the shared
+//! [`coordinator::orchestrator::Orchestrator`] — the same request
+//! lifecycle state machine the cluster simulator runs — while
+//! [`PjrtExecutor`] implements the [`Executor`] trait by actually
+//! executing iterations on the PJRT runtime (xTensor slot/page
+//! assignment, plain or speculative decode) and reporting measured wall
+//! time, so virtual time *is* wall time.  Python never runs here; the
+//! artifacts were lowered once by `make artifacts`.
 
-use std::collections::VecDeque;
+use std::collections::HashMap;
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::ServeConfig;
+use crate::coordinator::orchestrator::{
+    Executor, IterationWork, Orchestrator, OrchestratorConfig, ServingMode,
+};
+use crate::coordinator::{BatchConfig, DispatchPolicy, InstanceId, RequestId};
 use crate::engine::specdecode::{accept_greedy, SpecStats};
 use crate::engine::xtensor::XTensorManager;
-use crate::metrics::{RequestOutcome, ServingReport};
+use crate::metrics::ServingReport;
+use crate::model::{cpu_host, ModelSpec};
 use crate::runtime::{argmax, BatchKv, ModelDims, Runtime};
+use crate::sim::roofline::{CostModel, EngineFeatures};
+use crate::workload::RequestSpec;
 
 /// A generation request for the real engine.
 #[derive(Debug, Clone)]
@@ -37,19 +48,6 @@ pub struct GenResult {
     pub e2e_s: f64,
 }
 
-#[derive(Debug)]
-struct ActiveSeq {
-    id: u64,
-    /// Current cache position (tokens written - 1).
-    pos: usize,
-    prompt_len: usize,
-    generated: Vec<i32>,
-    last_token: i32,
-    max_new: usize,
-    admitted_at: Instant,
-    first_token_at: Option<Instant>,
-}
-
 /// Aggregate server statistics.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ServerStats {
@@ -59,27 +57,57 @@ pub struct ServerStats {
     pub spec: SpecStats,
 }
 
-/// The batched PJRT serving engine.
-pub struct Server {
+/// A request admitted into a batch slot.
+#[derive(Debug)]
+struct SlotSeq {
+    /// Caller-supplied request id (RequestId is the orchestrator's).
+    orig_id: u64,
+    /// Current cache position (tokens written - 1).
+    pos: usize,
+    generated: Vec<i32>,
+    last_token: i32,
+    max_new: usize,
+    /// Virtual (= wall) time the first token was produced.
+    first_token_s: f64,
+}
+
+/// A submitted request the orchestrator has not prefilled yet.
+#[derive(Debug, Clone)]
+struct PendingReq {
+    orig_id: u64,
+    prompt: Vec<i32>,
+    max_new: usize,
+}
+
+/// The [`Executor`] over the real PJRT runtime: executes each planned
+/// iteration on the AOT graphs and advances virtual time by measured
+/// wall time.
+pub struct PjrtExecutor {
     rt: Runtime,
     dims: ModelDims,
     draft_dims: Option<ModelDims>,
-    cfg: ServeConfig,
+    speculative: bool,
+    /// Verify-bucket proposal length (speculative only).
+    spec_m: usize,
+    cost: CostModel,
     kv: BatchKv,
     draft_kv: Option<BatchKv>,
-    slots: Vec<Option<ActiveSeq>>,
+    slots: Vec<Option<SlotSeq>>,
+    slot_of: HashMap<RequestId, usize>,
     pages: XTensorManager,
-    queue: VecDeque<GenRequest>,
+    pending: HashMap<RequestId, PendingReq>,
+    /// Tokens emitted per decode request in the iteration in flight.
+    emitted: HashMap<RequestId, u64>,
     pub stats: ServerStats,
-    started: Instant,
-    pub report: ServingReport,
     results: Vec<GenResult>,
+    /// First runtime error; surfaced by the façade after the run (the
+    /// Executor trait is infallible — the lifecycle drains regardless).
+    error: Option<anyhow::Error>,
 }
 
-impl Server {
-    /// Load artifacts and prepare a decode batch of `cfg.max_batch` slots.
-    pub fn new(artifacts: &Path, cfg: ServeConfig) -> Result<Server> {
-        let mut rt = Runtime::load(artifacts)?;
+impl PjrtExecutor {
+    fn new(artifacts: &Path, cfg: &ServeConfig) -> Result<PjrtExecutor> {
+        let rt = Runtime::load(artifacts)?;
         let dims = rt.model_dims("tiny")?;
         // batch size must match an AOT decode bucket exactly
         let bucket = rt
@@ -94,156 +122,133 @@ impl Server {
                 cfg.max_batch
             );
         }
-        let (draft_dims, draft_kv) = if cfg.speculative {
+        let (draft_dims, draft_kv, spec_m) = if cfg.speculative {
             let dd = rt.model_dims("draft")?;
-            if rt.manifest.verify_bucket("tiny", cfg.max_batch as u64).is_none() {
-                bail!("speculative decoding needs a verify bucket >= max_batch");
-            }
-            (Some(dd), Some(BatchKv::zeros(dd, cfg.max_batch)))
+            let vb = rt
+                .manifest
+                .verify_bucket("tiny", cfg.max_batch as u64)
+                .context("speculative decoding needs a verify bucket >= max_batch")?;
+            let m = vb.dim("m").context("verify bucket missing m dim")? as usize;
+            (Some(dd), Some(BatchKv::zeros(dd, cfg.max_batch)), m)
         } else {
-            (None, None)
+            (None, None, 0)
         };
         let kv = BatchKv::zeros(dims, cfg.max_batch);
         // xTensor pages back the batch slots: one slot = max_seq tokens
         let page_tokens = 16u64;
-        let total_pages = (cfg.max_batch as u64 * dims.max_seq as u64).div_ceil(page_tokens) as u32;
-        Ok(Server {
+        let total_pages =
+            (cfg.max_batch as u64 * dims.max_seq as u64).div_ceil(page_tokens) as u32;
+        // stand-in cost model for the orchestrator's heuristics (single
+        // instance: only relative magnitudes matter)
+        let cost = CostModel::new(cpu_host(), tiny_model_spec(dims), EngineFeatures::xllm(1));
+        Ok(PjrtExecutor {
             rt,
             dims,
             draft_dims,
+            speculative: cfg.speculative,
+            spec_m,
+            cost,
             kv,
             draft_kv,
             slots: (0..cfg.max_batch).map(|_| None).collect(),
+            slot_of: HashMap::new(),
             pages: XTensorManager::new(total_pages, page_tokens, dims.max_seq as u64),
-            queue: VecDeque::new(),
+            pending: HashMap::new(),
+            emitted: HashMap::new(),
             stats: ServerStats::default(),
-            started: Instant::now(),
-            report: ServingReport::new(),
             results: Vec::new(),
-            cfg,
+            error: None,
         })
-    }
-
-    pub fn model_dims(&self) -> ModelDims {
-        self.dims
-    }
-
-    /// Enqueue a request.
-    pub fn submit(&mut self, req: GenRequest) {
-        self.queue.push_back(req);
     }
 
     fn free_slot(&self) -> Option<usize> {
         self.slots.iter().position(|s| s.is_none())
     }
 
-    /// Admit queued requests into free slots (prefill them).
-    fn admit(&mut self) -> Result<()> {
-        while let Some(slot) = self.free_slot() {
-            let Some(req) = self.queue.pop_front() else { break };
-            let t0 = Instant::now();
-            let max_prompt = self
-                .rt
-                .manifest
-                .graphs_of(crate::runtime::GraphKind::Prefill, "tiny")
-                .iter()
-                .filter_map(|g| g.dim("s"))
-                .max()
-                .unwrap_or(0) as usize;
-            let prompt = if req.prompt.len() > max_prompt {
-                // chunk-free fallback: truncate to the largest bucket
-                // (chunked prefill over multiple buckets is exercised in
-                // the simulator; the real tiny model caps prompts)
-                req.prompt[req.prompt.len() - max_prompt..].to_vec()
-            } else {
-                req.prompt.clone()
-            };
-            let out = self.rt.prefill("tiny", &prompt)?;
-            self.stats.prefills += 1;
-            self.kv.write_prefill(slot, &out.k, &out.v, out.bucket_s, prompt.len());
-            // xTensor session: pages for the prompt + expected output
-            let sid = req.id;
-            self.pages.open_with_reuse(sid, (prompt.len() + req.max_new_tokens) as u64);
-            self.pages.extend(sid, prompt.len() as u64);
-            let first = argmax(&out.last_logits) as i32;
-            // seed the draft cache with the prompt (token-by-token decode
-            // through the cheap draft model) so proposals are conditioned
-            // on the real context
-            if let Some(dd) = self.draft_dims {
-                // single-slot temp cache (b=1 bucket) so other slots'
-                // draft caches are untouched, then copy into the batch
-                let mut tmp = BatchKv::zeros(dd, 1);
-                for (t, &tok) in prompt.iter().enumerate() {
-                    self.rt.decode("draft", &mut tmp, &[tok], &[t as i32])?;
-                }
-                let dkv = self.draft_kv.as_mut().unwrap();
-                dkv.clear_slot(slot);
-                dkv.copy_slot_from(slot, &tmp, 0, prompt.len());
+    /// Prefill one request into a free slot (first token included).
+    fn run_prefill(&mut self, req: RequestId, now_s: f64, iter_start: Instant) -> Result<()> {
+        let pend = self
+            .pending
+            .remove(&req)
+            .ok_or_else(|| anyhow!("prefill for unknown request {req}"))?;
+        let slot = self.free_slot().ok_or_else(|| anyhow!("no free batch slot"))?;
+        let out = self.rt.prefill("tiny", &pend.prompt)?;
+        self.stats.prefills += 1;
+        self.kv.write_prefill(slot, &out.k, &out.v, out.bucket_s, pend.prompt.len());
+        // xTensor session: pages for the prompt + expected output
+        self.pages.open_with_reuse(req, (pend.prompt.len() + pend.max_new) as u64);
+        self.pages.extend(req, pend.prompt.len() as u64);
+        let first = argmax(&out.last_logits) as i32;
+        // seed the draft cache with the prompt (token-by-token decode
+        // through the cheap draft model) so proposals are conditioned
+        // on the real context
+        if let Some(dd) = self.draft_dims {
+            // single-slot temp cache (b=1 bucket) so other slots'
+            // draft caches are untouched, then copy into the batch
+            let mut tmp = BatchKv::zeros(dd, 1);
+            for (t, &tok) in pend.prompt.iter().enumerate() {
+                self.rt.decode("draft", &mut tmp, &[tok], &[t as i32])?;
             }
-            let max_new = req
-                .max_new_tokens
-                .min(self.dims.max_seq - prompt.len() - 1)
-                .min(self.cfg.max_output_tokens);
-            let now = Instant::now();
-            self.slots[slot] = Some(ActiveSeq {
-                id: req.id,
-                pos: prompt.len(),
-                prompt_len: prompt.len(),
-                generated: vec![first],
-                last_token: first,
-                max_new: max_new.max(1),
-                admitted_at: t0,
-                first_token_at: Some(now),
-            });
+            let dkv = self.draft_kv.as_mut().unwrap();
+            dkv.clear_slot(slot);
+            dkv.copy_slot_from(slot, &tmp, 0, pend.prompt.len());
         }
+        self.slots[slot] = Some(SlotSeq {
+            orig_id: pend.orig_id,
+            pos: pend.prompt.len(),
+            generated: vec![first],
+            last_token: first,
+            max_new: pend.max_new.max(1),
+            first_token_s: now_s + iter_start.elapsed().as_secs_f64(),
+        });
+        self.slot_of.insert(req, slot);
         Ok(())
     }
 
-    fn active_count(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_some()).count()
-    }
-
-    /// One plain decode iteration over all active slots.
-    fn decode_step(&mut self) -> Result<()> {
-        let b = self.cfg.max_batch;
+    /// One plain decode iteration over the scheduled slots.
+    fn run_decode(&mut self, reqs: &[RequestId]) -> Result<()> {
+        let b = self.slots.len();
         let mut tokens = vec![0i32; b];
         let mut pos = vec![0i32; b];
-        for (i, s) in self.slots.iter().enumerate() {
-            if let Some(s) = s {
-                tokens[i] = s.last_token;
-                pos[i] = s.pos as i32;
-            }
+        for r in reqs {
+            let slot = *self.slot_of.get(r).ok_or_else(|| anyhow!("decode for unslotted {r}"))?;
+            let seq = self.slots[slot].as_ref().unwrap();
+            tokens[slot] = seq.last_token;
+            pos[slot] = seq.pos as i32;
         }
         let out = self.rt.decode("tiny", &mut self.kv, &tokens, &pos)?;
         self.stats.decode_steps += 1;
-        for i in 0..b {
-            let Some(seq) = self.slots[i].as_mut() else { continue };
-            let logits = &out.logits[i * self.dims.vocab..(i + 1) * self.dims.vocab];
+        for r in reqs {
+            let slot = self.slot_of[r];
+            let seq = self.slots[slot].as_mut().unwrap();
+            // max_new is clamped at admission, but keep the cache-bound
+            // guard: never write KV past max_seq
+            if seq.generated.len() >= seq.max_new || seq.pos + 1 >= self.dims.max_seq {
+                self.emitted.insert(*r, 0);
+                continue;
+            }
+            let logits = &out.logits[slot * self.dims.vocab..(slot + 1) * self.dims.vocab];
             let next = argmax(logits) as i32;
             seq.pos += 1;
-            self.pages.extend(seq.id, 1);
-            self.pages.premap(seq.id, 1); // async pre-mapping (§4.3)
+            self.pages.extend(*r, 1);
+            self.pages.premap(*r, 1); // async pre-mapping (§4.3)
             seq.generated.push(next);
             seq.last_token = next;
             self.stats.tokens_generated += 1;
-            if seq.generated.len() >= seq.max_new || seq.pos + 1 >= self.dims.max_seq {
-                self.retire(i);
-            }
+            self.emitted.insert(*r, 1);
         }
         Ok(())
     }
 
     /// One speculative round: draft proposes m tokens, verify scores them.
-    fn spec_step(&mut self) -> Result<()> {
-        let b = self.cfg.max_batch;
-        let m = self
-            .rt
-            .manifest
-            .verify_bucket("tiny", b as u64)
-            .context("verify bucket")?
-            .dim("m")
-            .unwrap() as usize;
+    fn run_spec(&mut self, reqs: &[RequestId]) -> Result<()> {
+        let b = self.slots.len();
+        let m = self.spec_m;
         let draft_dims = self.draft_dims.context("draft dims")?;
+        let active: Vec<usize> = reqs
+            .iter()
+            .map(|r| self.slot_of.get(r).copied().ok_or_else(|| anyhow!("spec for unslotted {r}")))
+            .collect::<Result<_>>()?;
 
         // 1) draft proposes m tokens autoregressively (cheap model)
         let mut proposals = vec![vec![0i32; m]; b];
@@ -261,10 +266,7 @@ impl Server {
                     .map(|&p| p.min(draft_dims.max_seq as i32 - 1))
                     .collect();
                 let out = self.rt.decode("draft", dkv, &cur, &dpos_clamped)?;
-                for i in 0..b {
-                    if self.slots[i].is_none() {
-                        continue;
-                    }
+                for &i in &active {
                     let logits =
                         &out.logits[i * draft_dims.vocab..(i + 1) * draft_dims.vocab];
                     proposals[i][j] = argmax(logits) as i32;
@@ -278,8 +280,8 @@ impl Server {
         //    shifted: we score the m tokens starting at each seq's pos
         let mut vtokens = vec![0i32; b * m];
         let mut vpos = vec![0i32; b];
-        for i in 0..b {
-            let Some(seq) = self.slots[i].as_ref() else { continue };
+        for &i in &active {
+            let seq = self.slots[i].as_ref().unwrap();
             vtokens[i * m] = seq.last_token;
             for j in 1..m {
                 vtokens[i * m + j] = proposals[i][j - 1];
@@ -290,13 +292,12 @@ impl Server {
         self.stats.decode_steps += 1;
 
         // 3) greedy acceptance per sequence
-        let mut retire: Vec<usize> = Vec::new();
-        for i in 0..b {
-            let Some(seq) = self.slots[i].as_mut() else { continue };
+        for (r, &i) in reqs.iter().zip(&active) {
+            let seq = self.slots[i].as_mut().unwrap();
             let target_argmax: Vec<i32> = (0..m)
                 .map(|j| {
-                    let row =
-                        &vout.logits[(i * m + j) * self.dims.vocab..(i * m + j + 1) * self.dims.vocab];
+                    let row = &vout.logits
+                        [(i * m + j) * self.dims.vocab..(i * m + j + 1) * self.dims.vocab];
                     argmax(row) as i32
                 })
                 .collect();
@@ -306,82 +307,221 @@ impl Server {
             self.stats.spec.proposed += draft_prefix.len() as u64;
             self.stats.spec.accepted += n_acc as u64;
             self.stats.spec.bonus += 1;
+            let mut n_emitted = 0u64;
             for &t in &emitted {
+                if seq.generated.len() >= seq.max_new || seq.pos + 1 >= self.dims.max_seq {
+                    break;
+                }
                 seq.pos += 1;
-                self.pages.extend(seq.id, 1);
+                self.pages.extend(*r, 1);
                 seq.generated.push(t);
                 seq.last_token = t;
                 self.stats.tokens_generated += 1;
-                if seq.generated.len() >= seq.max_new || seq.pos + m + 1 >= self.dims.max_seq {
-                    retire.push(i);
-                    break;
-                }
+                n_emitted += 1;
             }
             // NOTE: the verify pass wrote KV for all m candidates; the
             // rejected suffix slots get overwritten by later positions —
             // harmless because attention masks beyond `pos`.
-        }
-        for i in retire {
-            self.retire(i);
+            self.emitted.insert(*r, n_emitted.max(1));
         }
         Ok(())
     }
 
-    fn retire(&mut self, slot: usize) {
-        if let Some(seq) = self.slots[slot].take() {
-            let now = Instant::now();
-            let arrival = seq.admitted_at.duration_since(self.started).as_secs_f64();
-            let first = seq
-                .first_token_at
-                .unwrap_or(now)
-                .duration_since(self.started)
-                .as_secs_f64();
-            let finish = now.duration_since(self.started).as_secs_f64();
-            self.report.record(RequestOutcome {
-                arrival_s: arrival,
-                first_token_s: first,
-                finish_s: finish,
-                input_tokens: seq.prompt_len as u64,
-                output_tokens: seq.generated.len() as u64,
-                failed: false,
-            });
-            self.results.push(GenResult {
-                id: seq.id,
-                tokens: seq.generated,
-                ttft_s: first - arrival,
-                e2e_s: finish - arrival,
-            });
-            self.pages.close(seq.id); // pages -> Reusable (§4.3)
-            self.kv.clear_slot(slot);
+    fn take_results(&mut self) -> Vec<GenResult> {
+        std::mem::take(&mut self.results)
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn cost(&self) -> &CostModel {
+        &self.cost
+    }
+
+    fn begin_iteration(&mut self, _instance: InstanceId, now_s: f64, work: &IterationWork) -> f64 {
+        let t0 = Instant::now();
+        if self.error.is_none() {
+            let mut step = || -> Result<()> {
+                for p in &work.prefills {
+                    self.run_prefill(p.req, now_s, t0)?;
+                }
+                let decode_reqs: Vec<RequestId> = work.decodes.iter().map(|d| d.req).collect();
+                if !decode_reqs.is_empty() {
+                    if self.speculative {
+                        self.run_spec(&decode_reqs)?;
+                    } else {
+                        self.run_decode(&decode_reqs)?;
+                    }
+                }
+                Ok(())
+            };
+            if let Err(e) = step() {
+                self.error = Some(e);
+            }
         }
+        t0.elapsed().as_secs_f64()
+    }
+
+    fn decode_emission(&mut self, _instance: InstanceId, req: RequestId) -> u64 {
+        // after a runtime error the default of 1 token/iteration lets the
+        // lifecycle drain so the error can surface
+        self.emitted.remove(&req).unwrap_or(1).max(1)
+    }
+
+    fn kv_transfer_s(&self, _tokens: u64) -> f64 {
+        0.0 // single instance: no PD handoff on this backend (yet)
+    }
+
+    fn finished(&mut self, req: RequestId, now_s: f64) {
+        self.pending.remove(&req);
+        if let Some(slot) = self.slot_of.remove(&req) {
+            if let Some(seq) = self.slots[slot].take() {
+                self.results.push(GenResult {
+                    id: seq.orig_id,
+                    tokens: seq.generated,
+                    ttft_s: seq.first_token_s,
+                    e2e_s: now_s,
+                });
+                self.pages.close(req); // pages -> Reusable (§4.3)
+                self.kv.clear_slot(slot);
+            }
+        }
+    }
+}
+
+/// Rough dense-transformer spec matching the AOT tiny model, for the
+/// orchestrator's scheduling heuristics.
+fn tiny_model_spec(dims: ModelDims) -> ModelSpec {
+    let d = dims.d_model as f64;
+    let params = 12.0 * dims.n_layers as f64 * d * d + dims.vocab as f64 * d;
+    ModelSpec {
+        name: "tiny-aot",
+        params,
+        active_params: params,
+        n_layers: dims.n_layers as u32,
+        d_model: dims.d_model as u32,
+        n_heads: dims.n_heads as u32,
+        n_kv_heads: dims.n_heads as u32,
+        head_dim: dims.d_head as u32,
+        is_moe: false,
+        n_experts: 0,
+        experts_per_tok: 0,
+    }
+}
+
+/// The batched PJRT serving engine: a façade over the shared orchestrator.
+pub struct Server {
+    exec: Option<PjrtExecutor>,
+    dims: ModelDims,
+    cfg: ServeConfig,
+    queue: Vec<GenRequest>,
+    pub stats: ServerStats,
+    pub report: ServingReport,
+}
+
+impl Server {
+    /// Load artifacts and prepare a decode batch of `cfg.max_batch` slots.
+    pub fn new(artifacts: &Path, cfg: ServeConfig) -> Result<Server> {
+        let exec = PjrtExecutor::new(artifacts, &cfg)?;
+        let dims = exec.dims;
+        Ok(Server {
+            exec: Some(exec),
+            dims,
+            cfg,
+            queue: Vec::new(),
+            stats: ServerStats::default(),
+            report: ServingReport::new(),
+        })
+    }
+
+    pub fn model_dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    /// Enqueue a request.
+    pub fn submit(&mut self, req: GenRequest) {
+        self.queue.push(req);
     }
 
     /// Run until the queue and all slots drain; returns the generations.
+    ///
+    /// All queued requests enter the orchestrator at virtual time 0 (so
+    /// TTFT includes time spent queued behind a full batch), are
+    /// prefilled FCFS as slots free up, and decode continuously.
     pub fn run_to_completion(&mut self) -> Result<Vec<GenResult>> {
-        loop {
-            self.admit()?;
-            if self.active_count() == 0 {
-                if self.queue.is_empty() {
-                    break;
-                }
-                continue;
-            }
-            if self.cfg.speculative {
-                self.spec_step()?;
-            } else {
-                self.decode_step()?;
-            }
+        let mut exec = self.exec.take().expect("executor present");
+        let max_prompt = {
+            let graphs = exec.rt.manifest.graphs_of(crate::runtime::GraphKind::Prefill, "tiny");
+            graphs.iter().filter_map(|g| g.dim("s")).max().unwrap_or(0) as usize
+        };
+        // reserve headroom for the speculative verify window
+        let seq_headroom = 1 + exec.spec_m;
+
+        // validate before draining so a bad request rejects the batch
+        // without losing its neighbours
+        if let Some(bad) = self.queue.iter().find(|r| r.prompt.is_empty()) {
+            let id = bad.id;
+            self.exec = Some(exec);
+            bail!("empty prompt for request {id}");
         }
-        Ok(std::mem::take(&mut self.results))
+
+        let mut specs: Vec<RequestSpec> = Vec::new();
+        for (idx, req) in self.queue.drain(..).enumerate() {
+            // chunk-free fallback: truncate to the largest bucket
+            // (chunked prefill over multiple buckets is exercised in
+            // the simulator; the real tiny model caps prompts)
+            let prompt = if req.prompt.len() > max_prompt {
+                req.prompt[req.prompt.len() - max_prompt..].to_vec()
+            } else {
+                req.prompt.clone()
+            };
+            let max_new = req
+                .max_new_tokens
+                .min(self.dims.max_seq.saturating_sub(prompt.len() + seq_headroom))
+                .min(self.cfg.max_output_tokens)
+                .max(1);
+            let rid = idx as RequestId;
+            specs.push(RequestSpec::text(0.0, prompt.len() as u64, max_new as u64));
+            exec.pending.insert(rid, PendingReq { orig_id: req.id, prompt, max_new });
+        }
+
+        let ocfg = OrchestratorConfig {
+            n_instances: 1,
+            mode: ServingMode::Colocated,
+            dispatch: DispatchPolicy::SloAware,
+            slo: self.cfg.slo,
+            batch: BatchConfig {
+                max_decode_seqs: self.cfg.max_batch,
+                // whole-prompt prefill: the AOT graphs cannot resume a
+                // partial chunk, so never split a prompt across iterations
+                token_budget: u64::MAX,
+                kv_capacity_tokens: (self.cfg.max_batch * self.dims.max_seq) as u64,
+                // a prefilled request occupies a physical batch slot
+                max_seqs: self.cfg.max_batch,
+                ..BatchConfig::default()
+            },
+            monitor_interval_s: 1.0,
+            ..OrchestratorConfig::default()
+        };
+        let orch = Orchestrator::new(ocfg, exec);
+        let (res, mut exec) = orch.run(specs);
+        let error = exec.error.take();
+        self.report = res.report;
+        self.stats = exec.stats;
+        let results = exec.take_results();
+        self.exec = Some(exec);
+        if let Some(e) = error {
+            return Err(e);
+        }
+        Ok(results)
     }
 
     /// Page-manager statistics (map/unmap/reuse counters).
     pub fn page_stats(&self) -> crate::engine::xtensor::MapStats {
-        self.pages.stats
+        self.exec.as_ref().expect("executor present").pages.stats
     }
 
     pub fn graph_stats(&self) -> crate::runtime::GraphStats {
-        self.rt.graph_stats()
+        self.exec.as_ref().expect("executor present").rt.graph_stats()
     }
 }
 

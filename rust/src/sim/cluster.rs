@@ -1,55 +1,31 @@
 //! Cluster serving simulation: the Ascend-testbed substitute.
 //!
-//! Drives the real coordinator/service/engine policy code over a
-//! discrete-event clock with roofline step costs: request arrival →
-//! (encode) → dispatch → chunked prefill iterations → KV handoff →
-//! batched decode iterations → completion, with dynamic PD role
-//! switching, online/offline co-location, speculative decoding, fault
-//! injection, and the prefix cache all live.
+//! Since the orchestrator refactor this module holds *configuration
+//! only*: [`ClusterConfig`] describes the cluster (hardware, model,
+//! engine features, serving mode, policies) and [`ClusterSim`] wires a
+//! [`RooflineExecutor`] into the shared
+//! [`coordinator::orchestrator::Orchestrator`] — the same request
+//! lifecycle state machine the real PJRT server runs.  Dispatch,
+//! chunked prefill, KV handoff, role switching, co-location admission,
+//! and fault recovery all live in the orchestrator.
 //!
 //! Every paper bench (fig14..fig23, tables 3–8) is a configuration of
 //! [`ClusterConfig`] + a workload from `workload::scenarios`.
 
-use std::collections::HashMap;
-
-use crate::coordinator::{
-    plan_iteration, plan_role_switches, BatchConfig, DispatchPolicy, ElasticPools,
-    GlobalScheduler, InstanceId, InstanceState, InstanceView, Phase, Placement, PoolKind,
-    Request, RequestId, RoleFlip,
-};
-use crate::engine::specdecode::{expected_tokens_per_round, verify_cost_multiplier, SpecConfig};
-use crate::metrics::{ServingReport, Slo};
+use crate::coordinator::orchestrator::{Orchestrator, OrchestratorConfig, DEFAULT_MAX_EVENTS};
+use crate::coordinator::{BatchConfig, DispatchPolicy};
+use crate::engine::specdecode::SpecConfig;
+use crate::metrics::Slo;
 use crate::model::{HardwareSpec, ModelSpec};
-use crate::service::colocation::{admit_offline_decodes, ColocationConfig};
-use crate::service::epd::{dual_stream_encode_exposure, EpdStrategy};
-use crate::service::fault::{plan_recovery, InterruptedRequest, RecoveryAction, RecoveryModel};
-use crate::service::kvstore::{hash_chain, Tier, TieredCache, TransferEngine};
-use crate::sim::clock::EventQueue;
+use crate::service::colocation::ColocationConfig;
+use crate::service::epd::EpdStrategy;
+use crate::service::fault::RecoveryModel;
+use crate::sim::executor::RooflineExecutor;
 use crate::sim::roofline::{CostModel, EngineFeatures};
-use crate::util::Rng;
 use crate::workload::RequestSpec;
 
-/// How instances split work across phases.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ServingMode {
-    /// Every instance serves prefill + decode (chunked continuous batch).
-    Colocated,
-    /// PD disaggregation with `n_prefill` initial prefill instances;
-    /// `dynamic` enables SLO-aware role switching (§3.2).
-    Disaggregated { n_prefill: usize, dynamic: bool },
-}
-
-/// Online-offline co-location variants (Fig 23).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ColocationMode {
-    /// Offline requests treated exactly like online (baseline P/D).
-    BaselinePd,
-    /// Offline dispatched only when no online request is waiting.
-    OnlinePriority,
-    /// The paper's policy: latency-constrained pools + admission control
-    /// + preemption (xLLM-OOC).
-    XllmOoc,
-}
+pub use crate::coordinator::orchestrator::RunResult as SimResult;
+pub use crate::coordinator::orchestrator::{ColocationMode, ServingMode};
 
 /// Full simulation configuration.
 #[derive(Debug, Clone)]
@@ -74,6 +50,9 @@ pub struct ClusterConfig {
     pub monitor_interval_s: f64,
     /// Enable the global prefix cache (§3.4).
     pub prefix_cache: bool,
+    /// Termination cap on processed events (sets `SimResult::truncated`
+    /// when hit instead of silently breaking out).
+    pub max_events: u64,
     pub seed: u64,
 }
 
@@ -107,817 +86,46 @@ impl ClusterConfig {
             recovery: RecoveryModel::default(),
             monitor_interval_s: 0.25,
             prefix_cache: false,
+            max_events: DEFAULT_MAX_EVENTS,
             seed: 0xD15EA5E,
+        }
+    }
+
+    /// Split into the executor-agnostic orchestrator configuration.
+    fn orchestrator_config(&self) -> OrchestratorConfig {
+        OrchestratorConfig {
+            n_instances: self.n_instances,
+            n_encode: self.n_encode,
+            mode: self.mode,
+            dispatch: self.dispatch,
+            slo: self.slo,
+            batch: self.batch,
+            colocation: self.colocation,
+            epd: self.epd,
+            faults: self.faults.clone(),
+            recovery: self.recovery,
+            monitor_interval_s: self.monitor_interval_s,
+            prefix_cache: self.prefix_cache,
+            max_events: self.max_events,
         }
     }
 }
 
-/// Simulation output: serving metrics + policy counters.
-#[derive(Debug)]
-pub struct SimResult {
-    pub report: ServingReport,
-    pub role_flips: u64,
-    pub preemptions: u64,
-    pub migrations: u64,
-    pub recoveries: u64,
-    pub prefix_hits: u64,
-    pub iterations: u64,
-    pub events: u64,
-    /// Per-instance (iterations, tokens generated) for utilization checks.
-    pub per_instance: Vec<(u64, u64)>,
-}
-
-#[derive(Debug, Clone)]
-enum Ev {
-    Arrive(usize),
-    IterDone(InstanceId),
-    KvReady(InstanceId),
-    Monitor,
-    Fault(usize),
-    Recover(usize),
-}
-
-struct PlannedIteration {
-    decode_ids: Vec<RequestId>,
-    prefill_chunks: Vec<(RequestId, u64, u64)>,
-    encode_ids: Vec<RequestId>,
-    duration: f64,
-}
-
-/// The simulator itself.
+/// The simulator: the shared orchestrator over a roofline executor.
 pub struct ClusterSim {
-    cfg: ClusterConfig,
-    cost: CostModel,
-    xfer: TransferEngine,
-    queue: EventQueue<Ev>,
-    instances: Vec<InstanceState>,
-    pools: ElasticPools,
-    scheduler: GlobalScheduler,
-    requests: HashMap<RequestId, Request>,
-    specs: Vec<RequestSpec>,
-    current: HashMap<InstanceId, PlannedIteration>,
-    /// Where each request's prefill ran (decode placement preference).
-    prefill_home: HashMap<RequestId, InstanceId>,
-    prefix_cache: TieredCache,
-    report: ServingReport,
-    rng: Rng,
-    role_flips: u64,
-    preemptions: u64,
-    migrations: u64,
-    recoveries: u64,
-    prefix_hits: u64,
-    iterations: u64,
+    orch: Orchestrator<RooflineExecutor>,
 }
 
 impl ClusterSim {
     pub fn new(cfg: ClusterConfig) -> ClusterSim {
         let cost = CostModel::new(cfg.hw.clone(), cfg.model.clone(), cfg.features.clone());
-        let (n_p, n_d) = match cfg.mode {
-            ServingMode::Colocated => (0, cfg.n_instances),
-            ServingMode::Disaggregated { n_prefill, .. } => {
-                let p = n_prefill.min(cfg.n_instances);
-                (p, cfg.n_instances - p)
-            }
-        };
-        let pools = ElasticPools::new(n_p, n_d, cfg.n_encode);
-        let instances: Vec<InstanceState> = (0..cfg.n_instances + cfg.n_encode)
-            .map(|id| InstanceState::new(id, cost.clone(), cfg.batch))
-            .collect();
-        let scheduler = GlobalScheduler::new(cfg.dispatch);
-        let seed = cfg.seed;
-        ClusterSim {
-            xfer: TransferEngine::default(),
-            cost,
-            queue: EventQueue::new(),
-            instances,
-            pools,
-            scheduler,
-            requests: HashMap::new(),
-            specs: Vec::new(),
-            current: HashMap::new(),
-            prefill_home: HashMap::new(),
-            prefix_cache: TieredCache::new(64, 1 << 22, 1 << 24, 1 << 26),
-            report: ServingReport::new(),
-            rng: Rng::new(seed),
-            role_flips: 0,
-            preemptions: 0,
-            migrations: 0,
-            recoveries: 0,
-            prefix_hits: 0,
-            iterations: 0,
-            cfg,
-        }
+        let executor = RooflineExecutor::new(cost, cfg.spec, cfg.seed);
+        ClusterSim { orch: Orchestrator::new(cfg.orchestrator_config(), executor) }
     }
 
     /// Run the workload to completion; returns metrics + counters.
-    pub fn run(mut self, workload: Vec<RequestSpec>) -> SimResult {
-        self.specs = workload;
-        for (i, spec) in self.specs.iter().enumerate() {
-            self.queue.schedule_at(spec.arrival_s, Ev::Arrive(i));
-        }
-        for (t, inst) in self.cfg.faults.clone() {
-            self.queue.schedule_at(t, Ev::Fault(inst));
-        }
-        self.queue.schedule_at(self.cfg.monitor_interval_s, Ev::Monitor);
-
-        // hard cap to guarantee termination on pathological configs
-        let max_events = 200_000_000u64;
-        while let Some((_, ev)) = self.queue.next() {
-            match ev {
-                Ev::Arrive(i) => self.on_arrive(i),
-                Ev::IterDone(id) => self.on_iter_done(id),
-                Ev::KvReady(id) => self.kick(id),
-                Ev::Monitor => self.on_monitor(),
-                Ev::Fault(id) => self.on_fault(id),
-                Ev::Recover(id) => self.on_recover(id),
-            }
-            if self.queue.processed() > max_events {
-                break;
-            }
-            if self.all_done() && self.queue.len() <= 1 {
-                break; // only the monitor tick remains
-            }
-        }
-        SimResult {
-            report: self.report,
-            role_flips: self.pools.flips.max(self.role_flips),
-            preemptions: self.preemptions,
-            migrations: self.migrations,
-            recoveries: self.recoveries,
-            prefix_hits: self.prefix_hits,
-            iterations: self.iterations,
-            events: self.queue.processed(),
-            per_instance: self
-                .instances
-                .iter()
-                .map(|i| (i.monitor.iterations, i.monitor.tokens_generated))
-                .collect(),
-        }
-    }
-
-    fn all_done(&self) -> bool {
-        self.report.n_requests() >= self.specs.len()
-    }
-
-    fn view(&self, id: InstanceId) -> InstanceView {
-        let inst = &self.instances[id];
-        let queued_prefill_tokens: u64 = inst
-            .prefill_queue
-            .iter()
-            .filter_map(|r| self.requests.get(r))
-            .map(|r| r.prefill_remaining())
-            .sum();
-        let running_tokens: u64 = inst
-            .running
-            .iter()
-            .filter_map(|r| self.requests.get(r))
-            .map(|r| r.context_len())
-            .sum();
-        InstanceView {
-            id,
-            queued_prefill_tokens,
-            running_tokens,
-            n_running: inst.running.len(),
-            n_queued: inst.prefill_queue.len(),
-            kv_used: inst.kv_tokens,
-            kv_capacity: inst.batch.kv_capacity_tokens,
-            failed: inst.failed,
-            ema_token_interval: inst.monitor.ema_token_interval,
-            ema_ttft: inst.monitor.ema_ttft,
-        }
-    }
-
-    fn views(&self, ids: &[InstanceId]) -> Vec<InstanceView> {
-        ids.iter().map(|&i| self.view(i)).collect()
-    }
-
-    fn alive(&self, ids: Vec<InstanceId>) -> Vec<InstanceId> {
-        ids.into_iter().filter(|&i| !self.instances[i].failed).collect()
-    }
-
-    // --- arrival -------------------------------------------------------
-
-    fn on_arrive(&mut self, idx: usize) {
-        let spec = self.specs[idx];
-        let id = idx as RequestId;
-        let mut req = Request::new(id, spec, self.cfg.slo);
-
-        // prefix cache lookup (§3.4): shared system prompts skip prefill
-        if self.cfg.prefix_cache && spec.shared_prefix > 0 {
-            let tokens: Vec<u32> = (0..spec.shared_prefix as u32)
-                .map(|t| ((spec.prefix_group as u32) << 16) | t)
-                .collect();
-            let chain = hash_chain(&tokens, self.prefix_cache.block_tokens as usize);
-            let (blocks, _) = self.prefix_cache.match_prefix(&chain);
-            let hit = (blocks as u64 * self.prefix_cache.block_tokens)
-                .min(spec.shared_prefix)
-                .min(spec.input_tokens.saturating_sub(1));
-            if hit > 0 {
-                req.prefix_hit_tokens = hit;
-                self.prefix_hits += 1;
-            }
-            self.prefix_cache.insert_chain(&chain, Tier::Dram);
-        }
-
-        let multimodal = spec.is_multimodal();
-        self.requests.insert(id, req);
-        if multimodal && self.cfg.epd.is_some() {
-            self.route_encode(id);
-        } else {
-            if multimodal {
-                // no EPD support: encode fused into prefill on one instance
-                self.requests.get_mut(&id).unwrap().finish_encode();
-            }
-            self.route_prefill(id);
-        }
-    }
-
-    fn route_encode(&mut self, id: RequestId) {
-        use crate::service::epd::placement;
-        let strategy = self.cfg.epd.unwrap();
-        let place = placement(strategy);
-        let pool_ids = match place.encode_pool {
-            0 => self.alive(self.pools.prefill_capable()),
-            1 => self.alive(self.pools.decode_capable()),
-            _ => self.alive(self.pools.encode_capable()),
-        };
-        let pool_ids = if pool_ids.is_empty() {
-            self.alive((0..self.instances.len()).collect())
-        } else {
-            pool_ids
-        };
-        let target = pool_ids
-            .into_iter()
-            .min_by_key(|&i| self.instances[i].encode_queue.len())
-            .expect("no instance for encode");
-        self.instances[target].encode_queue.push_back(id);
-        self.kick(target);
-    }
-
-    fn route_prefill(&mut self, id: RequestId) {
-        let req = &self.requests[&id];
-        let input = req.prefill_remaining();
-        let is_online = req.is_online();
-
-        let (primary_ids, fallback_ids) = match self.cfg.mode {
-            ServingMode::Colocated => {
-                (self.alive((0..self.cfg.n_instances).collect()), Vec::new())
-            }
-            ServingMode::Disaggregated { .. } => (
-                self.alive(self.pools.of_kind(PoolKind::Prefill)),
-                self.alive(self.pools.of_kind(PoolKind::DecodeToPrefill)),
-            ),
-        };
-        let primary = self.views(&primary_ids);
-        let fallback = self.views(&fallback_ids);
-        let slo = if is_online { self.cfg.slo } else { Slo::UNCONSTRAINED };
-        let placement =
-            self.scheduler.place_prefill(&primary, &fallback, &self.cost, input, &slo);
-        let target = match placement {
-            Placement::Instance(i) => i,
-            Placement::NeedFlip => {
-                // dynamic PD: convert the lightest decode instance
-                let flipped =
-                    if let ServingMode::Disaggregated { dynamic: true, .. } = self.cfg.mode {
-                        let candidates = self.alive(self.pools.decode_capable());
-                        candidates
-                            .into_iter()
-                            .min_by_key(|&i| self.view(i).running_tokens)
-                            .filter(|&i| self.pools.flip_to_prefill(i, 2))
-                    } else {
-                        None
-                    };
-                match flipped {
-                    Some(i) => i,
-                    None => {
-                        // no flip possible: least-loaded anywhere
-                        match primary
-                            .iter()
-                            .chain(fallback.iter())
-                            .min_by_key(|v| v.queued_prefill_tokens)
-                        {
-                            Some(v) => v.id,
-                            None => {
-                                let now = self.queue.now();
-                                let r = self.requests.get_mut(&id).unwrap();
-                                r.fail(now);
-                                if let Some(o) = r.outcome() {
-                                    self.report.record(o);
-                                }
-                                return;
-                            }
-                        }
-                    }
-                }
-            }
-        };
-        self.instances[target].prefill_queue.push_back(id);
-        self.kick(target);
-    }
-
-    // --- iteration execution -------------------------------------------
-
-    fn kick(&mut self, id: InstanceId) {
-        let inst = &self.instances[id];
-        if inst.busy || inst.failed || !inst.has_work() {
-            return;
-        }
-        let pool = self.pools.kind(id);
-        let colocated = matches!(self.cfg.mode, ServingMode::Colocated);
-
-        let serves_prefill = colocated || pool.serves_prefill();
-        // stateless instances (§3.2): pool membership steers NEW work, but
-        // an instance always drains what it already holds (e.g. offline
-        // decodes placed on latency-relaxed instances under co-location)
-        let serves_decode = colocated || pool.serves_decode() || !inst.running.is_empty();
-        let serves_encode = pool.serves_encode() || self.cfg.epd.is_some() || colocated;
-
-        let running: Vec<&Request> = if serves_decode {
-            inst.running.iter().filter_map(|r| self.requests.get(r)).collect()
-        } else {
-            Vec::new()
-        };
-        let queued: Vec<&Request> = if serves_prefill {
-            inst.prefill_queue.iter().filter_map(|r| self.requests.get(r)).collect()
-        } else {
-            Vec::new()
-        };
-        let encodes: Vec<&Request> = if serves_encode {
-            inst.encode_queue.iter().filter_map(|r| self.requests.get(r)).collect()
-        } else {
-            Vec::new()
-        };
-        if running.is_empty() && queued.is_empty() && encodes.is_empty() {
-            return;
-        }
-
-        // online-priority co-location: offline prefill waits while any
-        // online request is queued (dispatch-time priority, no runtime
-        // admission control — the Fig 23 middle policy)
-        let queued: Vec<&Request> =
-            if let Some((ColocationMode::OnlinePriority, _)) = self.cfg.colocation {
-                let any_online = queued.iter().any(|r| r.is_online());
-                if any_online {
-                    queued.into_iter().filter(|r| r.is_online()).collect()
-                } else {
-                    queued
-                }
-            } else {
-                queued
-            };
-
-        let mut plan = plan_iteration(&running, &queued, &encodes, &inst.batch);
-
-        // co-location admission control: cap offline decodes so the step
-        // stays within the online TPOT budget (§3.1 Solution 1)
-        if let Some((ColocationMode::XllmOoc, coloc)) = &self.cfg.colocation {
-            let online: Vec<RequestId> = plan
-                .decode_ids
-                .iter()
-                .copied()
-                .filter(|r| self.requests[r].is_online())
-                .collect();
-            let offline: Vec<RequestId> = plan
-                .decode_ids
-                .iter()
-                .copied()
-                .filter(|r| !self.requests[r].is_online())
-                .collect();
-            if !offline.is_empty() {
-                let online_kv: u64 =
-                    online.iter().map(|r| self.requests[r].context_len()).sum();
-                let mean_ctx = (offline
-                    .iter()
-                    .map(|r| self.requests[r].context_len())
-                    .sum::<u64>()
-                    / offline.len() as u64)
-                    .max(1);
-                let admit = admit_offline_decodes(
-                    &self.cost,
-                    online.len().max(1) as u64,
-                    online_kv,
-                    offline.len() as u64,
-                    mean_ctx,
-                    coloc,
-                ) as usize;
-                if admit < offline.len() {
-                    self.preemptions += (offline.len() - admit) as u64;
-                    let keep: Vec<RequestId> = offline.iter().copied().take(admit).collect();
-                    plan.decode_ids = online.into_iter().chain(keep).collect();
-                }
-            }
-        }
-        self.preemptions += plan.preempted.len() as u64;
-
-        if plan.is_empty() {
-            return;
-        }
-
-        // iteration duration from the roofline model
-        let kv_tokens: u64 =
-            plan.decode_ids.iter().map(|r| self.requests[r].context_len()).sum();
-        let n_decode = plan.decode_ids.len() as u64;
-        let mut duration = 0.0;
-        if n_decode > 0 {
-            let mut d = self.cost.decode_step_s(n_decode, kv_tokens);
-            if let Some(spec) = self.cfg.spec {
-                d *= verify_cost_multiplier(spec.m);
-                d += d * crate::engine::specdecode::draft_cost_fraction();
-            }
-            duration += d;
-        }
-        if plan.prefill_tokens() > 0 {
-            let ctx: u64 = plan.prefill_chunks.iter().map(|(_, _, c)| *c).sum();
-            duration += self
-                .cost
-                .prefill_s(plan.prefill_tokens(), ctx / plan.prefill_chunks.len().max(1) as u64);
-        }
-        if !plan.encode_ids.is_empty() {
-            let patches: u64 = plan
-                .encode_ids
-                .iter()
-                .map(|r| self.requests[r].spec.image_patches)
-                .sum();
-            let enc = self.cost.encode_s(patches);
-            // dual-stream: encode overlaps the language stream when fused
-            duration += if n_decode > 0 || plan.prefill_tokens() > 0 {
-                enc * dual_stream_encode_exposure()
-            } else {
-                enc
-            };
-        }
-        duration = duration.max(1e-6);
-
-        let planned = PlannedIteration {
-            decode_ids: plan.decode_ids,
-            prefill_chunks: plan.prefill_chunks,
-            encode_ids: plan.encode_ids,
-            duration,
-        };
-        self.instances[id].busy = true;
-        self.current.insert(id, planned);
-        self.queue.schedule_in(duration, Ev::IterDone(id));
-    }
-
-    fn on_iter_done(&mut self, id: InstanceId) {
-        let now = self.queue.now();
-        let plan = match self.current.remove(&id) {
-            Some(p) => p,
-            None => return,
-        };
-        if self.instances[id].failed {
-            self.instances[id].busy = false;
-            return; // fault handler already migrated the work
-        }
-        // NOTE: busy stays true until bookkeeping completes, so re-entrant
-        // kick() calls (e.g. from place_decode_for back onto this
-        // instance) cannot snapshot a stale plan.
-        self.iterations += 1;
-
-        // encodes complete
-        for rid in &plan.encode_ids {
-            if let Some(r) = self.requests.get_mut(rid) {
-                r.finish_encode();
-            }
-            self.instances[id].encode_queue.retain(|x| x != rid);
-            self.route_prefill(*rid);
-        }
-
-        // prefill chunks advance
-        for (rid, tokens, _) in &plan.prefill_chunks {
-            let done = {
-                let r = match self.requests.get_mut(rid) {
-                    Some(r) => r,
-                    None => continue,
-                };
-                self.instances[id].kv_tokens += tokens;
-                r.advance_prefill(*tokens, now)
-            };
-            if done {
-                let (finished, ttft, ctx, input) = {
-                    let r = &self.requests[rid];
-                    (
-                        r.phase == Phase::Done,
-                        r.first_token_s.unwrap_or(now) - r.spec.arrival_s,
-                        r.context_len(),
-                        r.spec.input_tokens,
-                    )
-                };
-                self.instances[id].prefill_queue.retain(|x| x != rid);
-                self.instances[id].monitor.observe_ttft(ttft);
-                // feed the TTFT predictor (online factor learning)
-                self.scheduler.predictor.observe(&self.cost, 0, input, ttft.max(1e-6));
-                if finished {
-                    self.instances[id].kv_tokens =
-                        self.instances[id].kv_tokens.saturating_sub(ctx);
-                    self.finish(*rid);
-                } else {
-                    self.prefill_home.insert(*rid, id);
-                    self.place_decode_for(*rid, id, ctx);
-                }
-            }
-        }
-
-        // decodes advance
-        let iter_dur = plan.duration;
-        let mut finished: Vec<RequestId> = Vec::new();
-        for rid in &plan.decode_ids {
-            let tokens = match self.cfg.spec {
-                Some(spec) => {
-                    let expect = expected_tokens_per_round(spec.m, spec.acceptance);
-                    let frac = expect.fract();
-                    let mut t = expect.trunc() as u64;
-                    if self.rng.chance(frac) {
-                        t += 1;
-                    }
-                    t.max(1)
-                }
-                None => 1,
-            };
-            let done = {
-                let r = match self.requests.get_mut(rid) {
-                    Some(r) => r,
-                    None => continue,
-                };
-                let emitted = tokens.min(r.decode_remaining());
-                self.instances[id].kv_tokens += emitted;
-                r.advance_decode(tokens, now)
-            };
-            let per_token = iter_dur / tokens as f64;
-            self.instances[id].monitor.observe_token_interval(per_token);
-            self.instances[id].monitor.observe_iteration(tokens);
-            if done {
-                finished.push(*rid);
-            }
-        }
-        for rid in finished {
-            let ctx = self.requests[&rid].context_len();
-            self.instances[id].running.retain(|x| *x != rid);
-            self.instances[id].kv_tokens =
-                self.instances[id].kv_tokens.saturating_sub(ctx);
-            self.finish(rid);
-        }
-
-        self.instances[id].busy = false;
-        // layer-2 reactive workload migration (§4.4.3): at iteration
-        // boundaries this instance's running set is in no executing plan,
-        // so whole sequences can move to under-loaded peers safely.
-        if self.cfg.features.dp_balance {
-            self.rebalance_from(id);
-        }
-        self.kick(id);
-    }
-
-    /// Reactive inter-instance decode migration (paper §4.4.3 layer 2).
-    ///
-    /// If this instance's decode token load exceeds the cluster mean by
-    /// more than the tolerance and a peer sits well below it, migrate the
-    /// smallest running sequences over (KV transfer modelled via KvReady).
-    fn rebalance_from(&mut self, id: InstanceId) {
-        const TOLERANCE_HI: f64 = 1.25;
-        const TOLERANCE_LO: f64 = 0.80;
-        const MAX_MOVES: usize = 4;
-        let colocated = matches!(self.cfg.mode, ServingMode::Colocated);
-        let peers: Vec<InstanceId> = if colocated {
-            self.alive((0..self.cfg.n_instances).collect())
-        } else {
-            self.alive(self.pools.decode_capable())
-        };
-        if peers.len() < 2 || !peers.contains(&id) {
-            return;
-        }
-        let load = |s: &Self, i: InstanceId| -> u64 {
-            s.instances[i]
-                .running
-                .iter()
-                .filter_map(|r| s.requests.get(r))
-                .map(|r| r.context_len())
-                .sum()
-        };
-        let mine = load(self, id);
-        let total: u64 = peers.iter().map(|&p| load(self, p)).sum();
-        let mean = total as f64 / peers.len() as f64;
-        if mean <= 0.0 || (mine as f64) < mean * TOLERANCE_HI {
-            return;
-        }
-        // smallest sequences first: cheapest KV transfers
-        let mut mine_reqs: Vec<(u64, RequestId)> = self.instances[id]
-            .running
-            .iter()
-            .filter_map(|r| self.requests.get(r).map(|q| (q.context_len(), *r)))
-            .collect();
-        mine_reqs.sort();
-        let mut moved = 0usize;
-        let mut my_load = mine as f64;
-        for (ctx, rid) in mine_reqs {
-            if moved >= MAX_MOVES || my_load < mean * TOLERANCE_HI {
-                break;
-            }
-            let target = peers
-                .iter()
-                .copied()
-                .filter(|&p| p != id)
-                .min_by_key(|&p| load(self, p));
-            let target = match target {
-                Some(t) if (load(self, t) as f64) < mean * TOLERANCE_LO => t,
-                _ => break,
-            };
-            if self.instances[target].running.len() >= self.cfg.batch.max_decode_seqs
-                || self.instances[target].kv_free() < ctx
-            {
-                break;
-            }
-            self.instances[id].running.retain(|x| *x != rid);
-            self.instances[id].kv_tokens = self.instances[id].kv_tokens.saturating_sub(ctx);
-            self.instances[target].running.push(rid);
-            self.instances[target].kv_tokens += ctx;
-            if let Some(r) = self.requests.get_mut(&rid) {
-                r.migrations += 1;
-            }
-            self.migrations += 1;
-            let delay = self.cost.kv_transfer_s(ctx);
-            self.queue.schedule_in(delay, Ev::KvReady(target));
-            my_load -= ctx as f64;
-            moved += 1;
-        }
-    }
-
-    /// Place a request that just finished prefill into a decode batch.
-    fn place_decode_for(&mut self, rid: RequestId, home: InstanceId, ctx: u64) {
-        let colocated = matches!(self.cfg.mode, ServingMode::Colocated);
-        // §3.1 latency-constrained decoupling: under xLLM-OOC, OFFLINE
-        // decode may run in either pool (it is not latency-strict), which
-        // is the capacity the co-location policy exploits
-        let offline_flexible = matches!(self.cfg.colocation, Some((ColocationMode::XllmOoc, _)))
-            && self.requests.get(&rid).map(|r| !r.is_online()).unwrap_or(false);
-        let candidates: Vec<InstanceId> = if colocated || offline_flexible {
-            self.alive((0..self.cfg.n_instances).collect())
-        } else {
-            self.alive(self.pools.decode_capable())
-        };
-        let views = self.views(&candidates);
-        let prefer = if colocated || self.pools.kind(home).serves_decode() {
-            Some(home)
-        } else {
-            None
-        };
-        let target = self
-            .scheduler
-            .place_decode(&views, prefer, ctx, self.cfg.batch.max_decode_seqs)
-            .or_else(|| candidates.first().copied());
-        let target = match target {
-            Some(t) => t,
-            None => {
-                let now = self.queue.now();
-                let r = self.requests.get_mut(&rid).unwrap();
-                r.fail(now);
-                if let Some(o) = r.outcome() {
-                    self.report.record(o);
-                }
-                return;
-            }
-        };
-        if target == home {
-            self.instances[home].running.push(rid);
-            self.kick(home);
-        } else {
-            // KV transfer (migration queue, FCFS): the target gets the
-            // request after the transfer delay
-            let delay = self.cost.kv_transfer_s(ctx);
-            self.migrations += 1;
-            self.instances[home].kv_tokens =
-                self.instances[home].kv_tokens.saturating_sub(ctx);
-            self.instances[target].kv_tokens += ctx;
-            self.instances[target].running.push(rid);
-            self.requests.get_mut(&rid).unwrap().migrations += 1;
-            self.queue.schedule_in(delay, Ev::KvReady(target));
-        }
-    }
-
-    fn finish(&mut self, rid: RequestId) {
-        self.prefill_home.remove(&rid);
-        if let Some(r) = self.requests.get(&rid) {
-            if let Some(o) = r.outcome() {
-                self.report.record(o);
-            }
-        }
-    }
-
-    // --- monitoring / role switching -----------------------------------
-
-    fn on_monitor(&mut self) {
-        // settle drained transitional instances
-        for id in 0..self.instances.len() {
-            let kind = self.pools.kind(id);
-            if matches!(kind, PoolKind::PrefillToDecode | PoolKind::DecodeToPrefill) {
-                let drained = match kind {
-                    PoolKind::PrefillToDecode => self.instances[id].prefill_queue.is_empty(),
-                    PoolKind::DecodeToPrefill => self.instances[id].running.is_empty(),
-                    _ => false,
-                };
-                if drained {
-                    self.pools.settle(id);
-                }
-            }
-        }
-        // SLO-aware role switching
-        if let ServingMode::Disaggregated { dynamic: true, .. } = self.cfg.mode {
-            let views: Vec<InstanceView> =
-                (0..self.instances.len()).map(|i| self.view(i)).collect();
-            let flips = plan_role_switches(
-                &views,
-                &self.pools,
-                &self.scheduler.predictor,
-                &self.cost,
-                &self.cfg.slo,
-                0,
-                2,
-            );
-            for f in flips {
-                match f {
-                    RoleFlip::ToPrefill(i) => {
-                        self.pools.flip_to_prefill(i, 2);
-                    }
-                    RoleFlip::ToDecode(i) => {
-                        self.pools.flip_to_decode(i);
-                    }
-                }
-            }
-        }
-        // keep kicking idle instances with queued work (e.g. after flips)
-        for id in 0..self.instances.len() {
-            self.kick(id);
-        }
-        if !self.all_done() {
-            self.queue.schedule_in(self.cfg.monitor_interval_s, Ev::Monitor);
-        }
-    }
-
-    // --- faults ---------------------------------------------------------
-
-    fn on_fault(&mut self, id: InstanceId) {
-        let now = self.queue.now();
-        self.instances[id].failed = true;
-        self.instances[id].busy = false;
-        self.current.remove(&id);
-        let owned = self.instances[id].owned_requests();
-        for rid in owned {
-            self.instances[id].evict(rid);
-            let (ctx, phase) = match self.requests.get(&rid) {
-                Some(r) => (r.context_len(), r.phase),
-                None => continue,
-            };
-            let interrupted = InterruptedRequest {
-                request: rid,
-                context_tokens: ctx,
-                // decode-phase requests have a DRAM replica via the global
-                // cache when prefix caching is on; otherwise HBM-only
-                replica_tier: if self.cfg.prefix_cache {
-                    Some(Tier::Dram)
-                } else {
-                    Some(Tier::Hbm)
-                },
-            };
-            let (action, _delay) = plan_recovery(&interrupted, &self.cost, &self.xfer);
-            self.recoveries += 1;
-            match (phase, action) {
-                (Phase::Decode, RecoveryAction::Migrate) => {
-                    let home = self.prefill_home.get(&rid).copied().unwrap_or(id);
-                    if let Some(r) = self.requests.get_mut(&rid) {
-                        r.migrations += 1;
-                    }
-                    self.place_decode_for(rid, home, ctx);
-                }
-                (Phase::Decode, _) => {
-                    // recompute: back to prefill from scratch
-                    if let Some(r) = self.requests.get_mut(&rid) {
-                        r.phase = Phase::Prefill;
-                        r.prefilled = 0;
-                        r.prefix_hit_tokens = 0;
-                        r.preemptions += 1;
-                    }
-                    self.route_prefill(rid);
-                }
-                (Phase::Prefill, _) => {
-                    if let Some(r) = self.requests.get_mut(&rid) {
-                        r.prefilled = 0;
-                    }
-                    self.route_prefill(rid);
-                }
-                (Phase::Encode, _) => {
-                    self.route_encode(rid);
-                }
-                _ => {}
-            }
-        }
-        self.instances[id].kv_tokens = 0;
-        let recovery_s = self.cfg.recovery.recovery_s(self.cfg.model.weight_bytes());
-        self.queue.schedule_at(now + recovery_s, Ev::Recover(id));
-    }
-
-    fn on_recover(&mut self, id: InstanceId) {
-        self.instances[id].failed = false;
-        self.kick(id);
+    pub fn run(self, workload: Vec<RequestSpec>) -> SimResult {
+        self.orch.run(workload).0
     }
 }
 
@@ -930,6 +138,7 @@ pub fn run(cfg: ClusterConfig, workload: Vec<RequestSpec>) -> SimResult {
 mod tests {
     use super::*;
     use crate::model::{ascend_910b, catalog};
+    use crate::util::Rng;
     use crate::workload::scenario;
 
     fn base_cfg(n: usize) -> ClusterConfig {
@@ -955,6 +164,7 @@ mod tests {
         assert_eq!(res.report.n_requests(), n);
         assert_eq!(res.report.n_completed(), n);
         assert!(res.report.output_throughput() > 0.0);
+        assert!(!res.truncated);
     }
 
     #[test]
@@ -1092,12 +302,26 @@ mod tests {
         assert!((r1.report.output_throughput() - r2.report.output_throughput()).abs() < 1e-9);
         assert_eq!(r1.iterations, r2.iterations);
     }
+
+    #[test]
+    fn event_cap_surfaces_truncation() {
+        let mut cfg = base_cfg(1);
+        cfg.max_events = 50;
+        let w = workload(4.0, 20.0, 11);
+        let res = run(cfg, w);
+        assert!(res.truncated, "50-event cap must truncate");
+        assert!(
+            res.report.n_completed() < res.report.n_requests() || res.report.n_requests() == 0,
+            "a truncated run should not have drained everything"
+        );
+    }
 }
 
 #[cfg(test)]
 mod debug_tests {
     use super::*;
     use crate::model::{ascend_910b, catalog};
+    use crate::util::Rng;
     use crate::workload::scenario;
 
     #[test]
@@ -1114,8 +338,6 @@ mod debug_tests {
                 EngineFeatures::xllm(1),
             );
             let sim = ClusterSim::new(cfg);
-            // expose internals via run + inspect afterwards: run consumes,
-            // so re-derive from the result only
             let res = sim.run(w.clone());
             let mut e2e = res.report.e2e_summary();
             println!(

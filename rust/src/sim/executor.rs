@@ -1,0 +1,142 @@
+//! Roofline-cost [`Executor`]: the discrete-event simulation backend.
+//!
+//! Prices each planned iteration with [`CostModel`] exactly as the old
+//! inline `ClusterSim` loop did — decode step from the roofline (with
+//! speculative-decoding verify/draft multipliers), chunked prefill, and
+//! encode with dual-stream overlap when a language stream runs in the
+//! same iteration.  Speculative token emission is drawn per decode
+//! request from a seeded RNG at iteration completion, preserving the
+//! pre-refactor draw order (the golden parity tests depend on it).
+
+use crate::coordinator::orchestrator::{Executor, IterationWork};
+use crate::coordinator::pools::InstanceId;
+use crate::coordinator::request::RequestId;
+use crate::engine::specdecode::{
+    draft_cost_fraction, expected_tokens_per_round, verify_cost_multiplier, SpecConfig,
+};
+use crate::service::epd::dual_stream_encode_exposure;
+use crate::sim::roofline::CostModel;
+use crate::util::Rng;
+
+/// Discrete-event executor over the roofline cost model.
+pub struct RooflineExecutor {
+    cost: CostModel,
+    spec: Option<SpecConfig>,
+    rng: Rng,
+}
+
+impl RooflineExecutor {
+    pub fn new(cost: CostModel, spec: Option<SpecConfig>, seed: u64) -> RooflineExecutor {
+        RooflineExecutor { cost, spec, rng: Rng::new(seed) }
+    }
+}
+
+impl Executor for RooflineExecutor {
+    fn cost(&self) -> &CostModel {
+        &self.cost
+    }
+
+    fn begin_iteration(&mut self, _instance: InstanceId, _now_s: f64, work: &IterationWork) -> f64 {
+        let kv_tokens: u64 = work.decodes.iter().map(|d| d.context_tokens).sum();
+        let n_decode = work.decodes.len() as u64;
+        let mut duration = 0.0;
+        if n_decode > 0 {
+            let mut d = self.cost.decode_step_s(n_decode, kv_tokens);
+            if let Some(spec) = self.spec {
+                d *= verify_cost_multiplier(spec.m);
+                d += d * draft_cost_fraction();
+            }
+            duration += d;
+        }
+        if work.prefill_tokens() > 0 {
+            let ctx: u64 = work.prefills.iter().map(|p| p.context_tokens).sum();
+            duration += self
+                .cost
+                .prefill_s(work.prefill_tokens(), ctx / work.prefills.len().max(1) as u64);
+        }
+        if !work.encodes.is_empty() {
+            let patches: u64 = work.encodes.iter().map(|e| e.image_patches).sum();
+            let enc = self.cost.encode_s(patches);
+            // dual-stream: encode overlaps the language stream when fused
+            duration += if n_decode > 0 || work.prefill_tokens() > 0 {
+                enc * dual_stream_encode_exposure()
+            } else {
+                enc
+            };
+        }
+        duration
+    }
+
+    fn decode_emission(&mut self, _instance: InstanceId, _req: RequestId) -> u64 {
+        match self.spec {
+            Some(spec) => {
+                let expect = expected_tokens_per_round(spec.m, spec.acceptance);
+                let frac = expect.fract();
+                let mut t = expect.trunc() as u64;
+                if self.rng.chance(frac) {
+                    t += 1;
+                }
+                t.max(1)
+            }
+            None => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::orchestrator::{DecodeWork, PrefillWork};
+    use crate::model::{ascend_910b, catalog};
+    use crate::sim::roofline::EngineFeatures;
+
+    fn exec(spec: Option<SpecConfig>) -> RooflineExecutor {
+        let cost = CostModel::new(
+            ascend_910b(),
+            catalog("Qwen3-8B").unwrap(),
+            EngineFeatures::xllm(1),
+        );
+        RooflineExecutor::new(cost, spec, 42)
+    }
+
+    #[test]
+    fn empty_work_costs_nothing() {
+        let mut e = exec(None);
+        assert_eq!(e.begin_iteration(0, 0.0, &IterationWork::default()), 0.0);
+    }
+
+    #[test]
+    fn duration_matches_cost_model() {
+        let mut e = exec(None);
+        let work = IterationWork {
+            decodes: vec![DecodeWork { req: 1, context_tokens: 512 }],
+            prefills: vec![PrefillWork { req: 2, tokens: 256, context_tokens: 0 }],
+            encodes: vec![],
+        };
+        let want = e.cost.decode_step_s(1, 512) + e.cost.prefill_s(256, 0);
+        let got = e.begin_iteration(0, 0.0, &work);
+        assert!((got - want).abs() < 1e-12, "got {got}, want {want}");
+    }
+
+    #[test]
+    fn plain_decode_emits_one_token() {
+        let mut e = exec(None);
+        for _ in 0..10 {
+            assert_eq!(e.decode_emission(0, 7), 1);
+        }
+    }
+
+    #[test]
+    fn spec_decode_emits_expected_rate() {
+        let spec = SpecConfig { m: 4, acceptance: 0.75 };
+        let mut e = exec(Some(spec));
+        let n = 10_000u64;
+        let total: u64 = (0..n).map(|_| e.decode_emission(0, 7)).sum();
+        let expect = expected_tokens_per_round(spec.m, spec.acceptance);
+        let mean = total as f64 / n as f64;
+        assert!(
+            (mean - expect).abs() < 0.05,
+            "mean emission {mean} far from expectation {expect}"
+        );
+    }
+}

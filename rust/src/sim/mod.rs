@@ -4,12 +4,16 @@
 //! * [`roofline`] — the paper's roofline + online-factor-learning cost
 //!   model, parameterized by engine features so configuration ablations
 //!   reproduce the baseline frameworks.
-//! * [`cluster`] — multi-instance serving simulation driving the
-//!   coordinator policies over simulated time.
+//! * [`executor`] — the roofline-cost [`crate::coordinator::Executor`]
+//!   backend for the shared serving orchestrator.
+//! * [`cluster`] — cluster configuration wiring the orchestrator +
+//!   roofline executor into a multi-instance simulation.
 
 pub mod clock;
 pub mod cluster;
+pub mod executor;
 pub mod roofline;
 
 pub use clock::{EventQueue, SimTime};
+pub use executor::RooflineExecutor;
 pub use roofline::{Bound, CostModel, EngineFeatures, GraphMode, StepBreakdown};

@@ -3,11 +3,12 @@
 //! coarse invariants every bench relies on — if one breaks, a figure's
 //! shape is wrong.
 
+use xllm::coordinator::orchestrator::{ColocationMode, ServingMode};
 use xllm::coordinator::DispatchPolicy;
 use xllm::metrics::Slo;
 use xllm::model::{ascend_910b, ascend_910c, catalog};
 use xllm::service::colocation::ColocationConfig;
-use xllm::sim::cluster::{run, ClusterConfig, ColocationMode, ServingMode};
+use xllm::sim::cluster::{run, ClusterConfig};
 use xllm::sim::{CostModel, EngineFeatures};
 use xllm::util::Rng;
 use xllm::workload::scenario;

@@ -1,0 +1,266 @@
+//! API stub of the `xla` PJRT bindings (vendored, offline build).
+//!
+//! Host-side [`Literal`] construction/data movement is fully
+//! functional; anything that would compile or execute an HLO graph
+//! returns a clear error.  The simulator/coordinator/orchestrator
+//! layers never reach PJRT, so the whole workspace builds and tests
+//! offline; swap in the real `xla` crate (LaurentMazare/xla-rs) to run
+//! the real server path.  See `rust/vendor/README.md`.
+
+use std::fmt;
+
+/// Stub error: rendered via `{:?}` by callers.
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn stub_err(what: &str) -> Error {
+    Error(format!(
+        "{what} is unavailable in the vendored xla stub; swap in the real \
+         xla crate (see rust/vendor/README.md)"
+    ))
+}
+
+/// Element dtypes the workspace uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+}
+
+#[derive(Debug, Clone)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side typed array (functional).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+/// Sealed-ish helper for the element types literals carry.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> Data;
+    fn slice(data: &Data) -> Result<&[Self], Error>;
+    fn slice_mut(data: &mut Data) -> Result<&mut [Self], Error>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Data {
+        Data::F32(data)
+    }
+    fn slice(data: &Data) -> Result<&[f32], Error> {
+        match data {
+            Data::F32(v) => Ok(v),
+            _ => Err(Error("literal is not f32".to_string())),
+        }
+    }
+    fn slice_mut(data: &mut Data) -> Result<&mut [f32], Error> {
+        match data {
+            Data::F32(v) => Ok(v),
+            _ => Err(Error("literal is not f32".to_string())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Data {
+        Data::I32(data)
+    }
+    fn slice(data: &Data) -> Result<&[i32], Error> {
+        match data {
+            Data::I32(v) => Ok(v),
+            _ => Err(Error("literal is not i32".to_string())),
+        }
+    }
+    fn slice_mut(data: &mut Data) -> Result<&mut [i32], Error> {
+        match data {
+            Data::I32(v) => Ok(v),
+            _ => Err(Error("literal is not i32".to_string())),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data.to_vec()) }
+    }
+
+    /// Zero-initialized literal of the given shape.
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Literal {
+        let n: usize = dims.iter().product();
+        let data = match ty {
+            PrimitiveType::F32 => Data::F32(vec![0.0; n]),
+            PrimitiveType::S32 => Data::I32(vec![0; n]),
+        };
+        Literal { dims: dims.iter().map(|&d| d as i64).collect(), data }
+    }
+
+    fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Same data, new shape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.len() {
+            return Err(Error(format!(
+                "reshape to {:?} ({n} elems) from {} elems",
+                dims,
+                self.len()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Overwrite the literal's data in place (shape unchanged).
+    pub fn copy_raw_from<T: NativeType>(&mut self, src: &[T]) -> Result<(), Error> {
+        let dst = T::slice_mut(&mut self.data)?;
+        if dst.len() != src.len() {
+            return Err(Error(format!(
+                "copy_raw_from: {} elems into literal of {}",
+                src.len(),
+                dst.len()
+            )));
+        }
+        dst.copy_from_slice(src);
+        Ok(())
+    }
+
+    /// Copy the literal's data out to a host slice.
+    pub fn copy_raw_to<T: NativeType>(&self, dst: &mut [T]) -> Result<(), Error> {
+        let src = T::slice(&self.data)?;
+        if dst.len() != src.len() {
+            return Err(Error(format!(
+                "copy_raw_to: literal of {} elems into buffer of {}",
+                src.len(),
+                dst.len()
+            )));
+        }
+        dst.copy_from_slice(src);
+        Ok(())
+    }
+
+    /// The literal's data as an owned vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::slice(&self.data).map(<[T]>::to_vec)
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        match &self.data {
+            Data::Tuple(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not a tuple".to_string())),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: carries the text, cannot lower it).
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read HLO text from disk (I/O is real; lowering is not).
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, Error> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// A computation handle (stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer handle (stub: never produced by a real execution).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(stub_err("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle (stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(stub_err("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client (stub: creation succeeds, compilation errors).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(stub_err("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+        let mut z = Literal::create_from_shape(PrimitiveType::F32, &[4]);
+        z.copy_raw_from(&[5.0f32, 6.0, 7.0, 8.0]).unwrap();
+        let mut out = [0.0f32; 4];
+        z.copy_raw_to(&mut out).unwrap();
+        assert_eq!(out, [5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn execution_paths_error_clearly() {
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation::from_proto(&HloModuleProto { text: String::new() });
+        let err = client.compile(&comp).unwrap_err();
+        assert!(format!("{err:?}").contains("vendored xla stub"));
+    }
+}
