@@ -776,7 +776,7 @@ fn bench_fig22() {
         let mut rng = Rng::new(5);
         let w = scenario("textcaps").unwrap().generate(20.0, 60.0, &mut rng);
         let res = sim_run(cfg, w);
-        let mut report = res.report;
+        let report = res.report;
         println!(
             "{:<28} | {:>8.2}/s {:>10.1}ms {:>9.1}%",
             name,

@@ -10,8 +10,8 @@
 use std::collections::HashMap;
 
 use crate::coordinator::orchestrator::{
-    ColocationMode, DecodeWork, EncodeWork, Executor, IterationWork, OrchestratorConfig,
-    PrefillWork, RunResult, ServingMode,
+    ColocationMode, DecodeWork, EncodeWork, Executor, InFlightSnapshot, IterationWork, LoadReport,
+    OrchestratorConfig, PrefillWork, RunResult, ServingMode,
 };
 use crate::coordinator::{
     plan_iteration, plan_role_switches, ElasticPools, GlobalScheduler, InstanceId, InstanceState,
@@ -20,7 +20,7 @@ use crate::coordinator::{
 use crate::metrics::{ServingReport, Slo};
 use crate::service::colocation::admit_offline_decodes;
 use crate::service::fault::{plan_recovery, InterruptedRequest, RecoveryAction};
-use crate::service::kvstore::{hash_chain, Tier, TieredCache, TransferEngine};
+use crate::service::kvstore::{hash_chain, prefix_tokens, Tier, TieredCache, TransferEngine};
 use crate::sim::clock::EventQueue;
 use crate::workload::RequestSpec;
 
@@ -61,6 +61,10 @@ pub struct Orchestrator<X: Executor> {
     recoveries: u64,
     prefix_hits: u64,
     iterations: u64,
+    truncated: bool,
+    /// A monitor event is pending in the queue (so incremental `submit`
+    /// can revive monitoring after the replica drains).
+    monitor_live: bool,
 }
 
 impl<X: Executor> Orchestrator<X> {
@@ -77,6 +81,12 @@ impl<X: Executor> Orchestrator<X> {
             .map(|id| InstanceState::new(id, executor.cost().clone(), cfg.batch))
             .collect();
         let scheduler = GlobalScheduler::new(cfg.dispatch);
+        let prefix_cache = TieredCache::new(
+            cfg.prefix_block_tokens,
+            cfg.prefix_hbm_tokens,
+            cfg.prefix_dram_tokens,
+            cfg.prefix_ssd_tokens,
+        );
         Orchestrator {
             executor,
             xfer: TransferEngine::default(),
@@ -88,13 +98,15 @@ impl<X: Executor> Orchestrator<X> {
             specs: Vec::new(),
             current: HashMap::new(),
             prefill_home: HashMap::new(),
-            prefix_cache: TieredCache::new(64, 1 << 22, 1 << 24, 1 << 26),
+            prefix_cache,
             report: ServingReport::new(),
             preemptions: 0,
             migrations: 0,
             recoveries: 0,
             prefix_hits: 0,
             iterations: 0,
+            truncated: false,
+            monitor_live: false,
             cfg,
         }
     }
@@ -110,6 +122,14 @@ impl<X: Executor> Orchestrator<X> {
     /// Run the workload to completion; returns metrics + counters and
     /// hands the executor back (real backends carry per-request results).
     pub fn run(mut self, workload: Vec<RequestSpec>) -> (RunResult, X) {
+        self.start(workload);
+        while self.step() {}
+        self.finish()
+    }
+
+    /// Schedule a workload without running it (steppable entry point —
+    /// the control plane interleaves several replicas' event queues).
+    pub fn start(&mut self, workload: Vec<RequestSpec>) {
         self.specs = workload;
         for (i, spec) in self.specs.iter().enumerate() {
             self.queue.schedule_at(spec.arrival_s, Ev::Arrive(i));
@@ -118,27 +138,64 @@ impl<X: Executor> Orchestrator<X> {
             self.queue.schedule_at(t, Ev::Fault(inst));
         }
         self.queue.schedule_at(self.cfg.monitor_interval_s, Ev::Monitor);
+        self.monitor_live = true;
+    }
 
-        // cap to guarantee termination on pathological configs
-        let max_events = self.cfg.max_events;
-        let mut truncated = false;
-        while let Some((_, ev)) = self.queue.next() {
-            match ev {
-                Ev::Arrive(i) => self.on_arrive(i),
-                Ev::IterDone(id) => self.on_iter_done(id),
-                Ev::KvReady(id) => self.kick(id),
-                Ev::Monitor => self.on_monitor(),
-                Ev::Fault(id) => self.on_fault(id),
-                Ev::Recover(id) => self.on_recover(id),
-            }
-            if self.queue.processed() > max_events {
-                truncated = true;
-                break;
-            }
-            if self.all_done() && self.queue.len() <= 1 {
-                break; // only the monitor tick remains
-            }
+    /// Inject one request after the fact (control-plane routing).  The
+    /// arrival event fires no earlier than `earliest_s` — the fleet
+    /// time of the routing decision plus any staging delay — so a
+    /// replica whose local clock lags fleet time (it drained and froze)
+    /// cannot execute re-dispatched work "in the past".  The spec's own
+    /// `arrival_s` is preserved for metrics, so failover latency lands
+    /// in the request's E2E.  Monitoring is revived if the replica had
+    /// drained.
+    pub fn submit_at(&mut self, spec: RequestSpec, earliest_s: f64) {
+        let i = self.specs.len();
+        self.specs.push(spec);
+        self.queue.schedule_at(spec.arrival_s.max(earliest_s), Ev::Arrive(i));
+        if !self.monitor_live {
+            self.queue.schedule_in(self.cfg.monitor_interval_s, Ev::Monitor);
+            self.monitor_live = true;
         }
+    }
+
+    /// [`Self::submit_at`] with no lower bound beyond the spec's own
+    /// arrival time (clamped to the local clock).
+    pub fn submit(&mut self, spec: RequestSpec) {
+        self.submit_at(spec, spec.arrival_s);
+    }
+
+    /// Process the next event.  Returns false once the replica is
+    /// drained (every submitted request recorded) or the event cap hit —
+    /// `run` loops on this; the control plane instead keeps polling
+    /// [`Self::next_event_time`] because `submit` can add work back.
+    pub fn step(&mut self) -> bool {
+        if self.truncated {
+            return false;
+        }
+        let Some((_, ev)) = self.queue.next() else {
+            return false;
+        };
+        match ev {
+            Ev::Arrive(i) => self.on_arrive(i),
+            Ev::IterDone(id) => self.on_iter_done(id),
+            Ev::KvReady(id) => self.kick(id),
+            Ev::Monitor => self.on_monitor(),
+            Ev::Fault(id) => self.on_fault(id),
+            Ev::Recover(id) => self.on_recover(id),
+        }
+        if self.queue.processed() > self.cfg.max_events {
+            // cap to guarantee termination on pathological configs
+            self.truncated = true;
+            return false;
+        }
+        // drained when only the monitor tick remains
+        !(self.all_done() && self.queue.len() <= 1)
+    }
+
+    /// Finalize: metrics + counters, handing the executor back (real
+    /// backends carry per-request results).
+    pub fn finish(self) -> (RunResult, X) {
         let result = RunResult {
             role_flips: self.pools.flips,
             preemptions: self.preemptions,
@@ -147,7 +204,7 @@ impl<X: Executor> Orchestrator<X> {
             prefix_hits: self.prefix_hits,
             iterations: self.iterations,
             events: self.queue.processed(),
-            truncated,
+            truncated: self.truncated,
             per_instance: self
                 .instances
                 .iter()
@@ -156,6 +213,88 @@ impl<X: Executor> Orchestrator<X> {
             report: self.report,
         };
         (result, self.executor)
+    }
+
+    /// Local virtual time of this replica.
+    pub fn now(&self) -> f64 {
+        self.queue.now()
+    }
+
+    /// Timestamp of this replica's next pending event.
+    pub fn next_event_time(&self) -> Option<f64> {
+        self.queue.peek_time()
+    }
+
+    /// The replica hit its event cap and wedged (control plane treats
+    /// this as a failure and re-dispatches its work).
+    pub fn truncated(&self) -> bool {
+        self.truncated
+    }
+
+    /// Requests with a recorded outcome (completed or failed) so far.
+    pub fn n_recorded(&self) -> usize {
+        self.report.n_requests()
+    }
+
+    /// Aggregate load snapshot published to the control-plane registry
+    /// on each heartbeat lease renewal (§3.4 load-info synchronization).
+    pub fn load_report(&self) -> LoadReport {
+        let mut rep = LoadReport::default();
+        for id in 0..self.instances.len() {
+            let v = self.view(id);
+            rep.queued_prefill_tokens += v.queued_prefill_tokens;
+            rep.running_tokens += v.running_tokens;
+            rep.kv_used += v.kv_used;
+            rep.kv_capacity += v.kv_capacity;
+            rep.n_running += v.n_running;
+            rep.n_queued += v.n_queued;
+        }
+        let (mut online, mut in_flight) = (0u64, 0u64);
+        for r in self.requests.values() {
+            if !matches!(r.phase, Phase::Done | Phase::Failed) {
+                in_flight += 1;
+                if r.is_online() {
+                    online += 1;
+                }
+            }
+        }
+        rep.online_fraction =
+            if in_flight == 0 { 0.0 } else { online as f64 / in_flight as f64 };
+        rep
+    }
+
+    /// Prefix-cache chain summary published to the control plane's
+    /// global index on each heartbeat (§3.4 aggregated load/offload
+    /// events).
+    pub fn cache_summary(&self) -> Vec<(u64, Tier)> {
+        self.prefix_cache.summary()
+    }
+
+    /// Snapshot and forget every request that has not completed:
+    /// pending arrivals, queued prefills, running decodes.  Called by
+    /// the control plane when this replica's lease expires, so the
+    /// survivors can re-run them (§3.5 re-dispatch).  The drained
+    /// requests never reach this replica's report.
+    pub fn drain_in_flight(&mut self) -> Vec<InFlightSnapshot> {
+        let mut out = Vec::new();
+        for (idx, spec) in self.specs.iter().enumerate() {
+            let id = idx as RequestId;
+            match self.requests.get(&id) {
+                Some(r) if matches!(r.phase, Phase::Done | Phase::Failed) => {}
+                Some(r) => out.push(InFlightSnapshot {
+                    spec: *spec,
+                    context_tokens: r.context_len(),
+                    decoding: matches!(r.phase, Phase::Decode),
+                }),
+                // arrival event still pending: nothing computed yet
+                None => out.push(InFlightSnapshot {
+                    spec: *spec,
+                    context_tokens: 0,
+                    decoding: false,
+                }),
+            }
+        }
+        out
     }
 
     fn all_done(&self) -> bool {
@@ -218,9 +357,7 @@ impl<X: Executor> Orchestrator<X> {
 
         // prefix cache lookup (§3.4): shared system prompts skip prefill
         if self.cfg.prefix_cache && spec.shared_prefix > 0 {
-            let tokens: Vec<u32> = (0..spec.shared_prefix as u32)
-                .map(|t| ((spec.prefix_group as u32) << 16) | t)
-                .collect();
+            let tokens = prefix_tokens(spec.prefix_group, spec.shared_prefix);
             let chain = hash_chain(&tokens, self.prefix_cache.block_tokens as usize);
             let (blocks, _) = self.prefix_cache.match_prefix(&chain);
             let hit = (blocks as u64 * self.prefix_cache.block_tokens)
@@ -546,6 +683,18 @@ impl<X: Executor> Orchestrator<X> {
         }
 
         self.instances[id].busy = false;
+        // invariant sweep at the iteration boundary: the prefix cache's
+        // tier occupancy and the backend's own bookkeeping (e.g. xTensor
+        // pages) must be consistent after every completed iteration
+        #[cfg(debug_assertions)]
+        {
+            if let Err(e) = self.prefix_cache.check_invariants() {
+                panic!("prefix-cache invariant violated after iteration {}: {e}", self.iterations);
+            }
+            if let Err(e) = self.executor.debug_check() {
+                panic!("executor invariant violated after iteration {}: {e}", self.iterations);
+            }
+        }
         // layer-2 reactive workload migration (§4.4.3): at iteration
         // boundaries this instance's running set is in no executing plan,
         // so whole sequences can move to under-loaded peers safely.
@@ -733,6 +882,8 @@ impl<X: Executor> Orchestrator<X> {
         }
         if !self.all_done() {
             self.queue.schedule_in(self.cfg.monitor_interval_s, Ev::Monitor);
+        } else {
+            self.monitor_live = false; // revived by the next submit
         }
     }
 
@@ -808,52 +959,7 @@ impl<X: Executor> Orchestrator<X> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::{ascend_910b, catalog};
-    use crate::sim::roofline::{CostModel, EngineFeatures};
-
-    /// A trivial fixed-cost executor: proves the lifecycle runs with no
-    /// roofline model and no PJRT runtime behind it.
-    struct FixedCost {
-        cost: CostModel,
-        step_s: f64,
-        iterations: u64,
-        finished: u64,
-    }
-
-    impl FixedCost {
-        fn new(step_s: f64) -> FixedCost {
-            FixedCost {
-                cost: CostModel::new(
-                    ascend_910b(),
-                    catalog("Qwen3-8B").unwrap(),
-                    EngineFeatures::xllm(1),
-                ),
-                step_s,
-                iterations: 0,
-                finished: 0,
-            }
-        }
-    }
-
-    impl Executor for FixedCost {
-        fn cost(&self) -> &CostModel {
-            &self.cost
-        }
-
-        fn begin_iteration(
-            &mut self,
-            _instance: InstanceId,
-            _now_s: f64,
-            _work: &IterationWork,
-        ) -> f64 {
-            self.iterations += 1;
-            self.step_s
-        }
-
-        fn finished(&mut self, _req: RequestId, _now_s: f64) {
-            self.finished += 1;
-        }
-    }
+    use crate::testutil::FixedCostExecutor as FixedCost;
 
     #[test]
     fn lifecycle_runs_on_any_executor() {
@@ -876,5 +982,102 @@ mod tests {
         let (res, _) = Orchestrator::new(cfg, FixedCost::new(0.01)).run(workload);
         assert!(res.truncated, "tiny event cap must truncate the run");
         assert!(res.events >= 10);
+    }
+
+    #[test]
+    fn steppable_api_matches_run() {
+        let workload: Vec<RequestSpec> =
+            (0..6).map(|i| RequestSpec::text(i as f64 * 0.2, 128, 8)).collect();
+        let cfg = OrchestratorConfig { n_instances: 2, ..Default::default() };
+        let (want, _) = Orchestrator::new(cfg.clone(), FixedCost::new(0.01)).run(workload.clone());
+        let mut orch = Orchestrator::new(cfg, FixedCost::new(0.01));
+        orch.start(workload);
+        while orch.step() {}
+        let (got, _) = orch.finish();
+        assert_eq!(got.report.n_requests(), want.report.n_requests());
+        assert_eq!(got.iterations, want.iterations);
+        assert_eq!(got.events, want.events);
+        assert_eq!(got.migrations, want.migrations);
+    }
+
+    #[test]
+    fn submit_after_drain_revives_monitoring() {
+        let cfg = OrchestratorConfig { n_instances: 1, ..Default::default() };
+        let mut orch = Orchestrator::new(cfg, FixedCost::new(0.01));
+        orch.start(vec![RequestSpec::text(0.0, 64, 4)]);
+        while orch.step() {}
+        assert_eq!(orch.n_recorded(), 1);
+        // drained replica gets late work injected (control-plane path)
+        orch.submit(RequestSpec::text(0.0, 64, 4));
+        while orch.next_event_time().is_some() {
+            orch.step();
+        }
+        let (res, _) = orch.finish();
+        assert_eq!(res.report.n_completed(), 2, "late submit must complete");
+    }
+
+    #[test]
+    fn drain_in_flight_covers_pending_and_running() {
+        let cfg = OrchestratorConfig { n_instances: 1, ..Default::default() };
+        let mut orch = Orchestrator::new(cfg, FixedCost::new(0.05));
+        // two immediate long requests + one that never arrives before the kill
+        orch.start(vec![
+            RequestSpec::text(0.0, 256, 64),
+            RequestSpec::text(0.0, 256, 64),
+            RequestSpec::text(50.0, 64, 4),
+        ]);
+        for _ in 0..8 {
+            orch.step();
+        }
+        assert_eq!(orch.n_recorded(), 0, "nothing completes in 8 events");
+        let drained = orch.drain_in_flight();
+        assert_eq!(drained.len(), 3, "pending arrival + in-flight all drained");
+        assert!(drained.iter().any(|d| d.context_tokens > 0), "some progress was made");
+        assert!(
+            drained.iter().any(|d| d.context_tokens == 0),
+            "the not-yet-arrived request has no context"
+        );
+        let (res, _) = orch.finish();
+        assert_eq!(res.report.n_requests(), 0, "drained requests never hit the report");
+    }
+
+    #[test]
+    fn load_report_aggregates_instances() {
+        let cfg = OrchestratorConfig { n_instances: 2, ..Default::default() };
+        let mut orch = Orchestrator::new(cfg, FixedCost::new(0.05));
+        orch.start(vec![
+            RequestSpec::text(0.0, 512, 32),
+            RequestSpec::text(0.0, 512, 32).offline(),
+        ]);
+        for _ in 0..6 {
+            orch.step();
+        }
+        let rep = orch.load_report();
+        assert!(rep.kv_capacity > 0);
+        assert!(
+            rep.queued_prefill_tokens + rep.running_tokens + rep.kv_used > 0,
+            "two in-flight requests must show load: {rep:?}"
+        );
+        assert!((rep.online_fraction - 0.5).abs() < 1e-9, "1 of 2 in flight is online");
+    }
+
+    #[test]
+    fn prefix_cache_sizing_comes_from_config() {
+        // block granularity larger than the shared prefix => chains are
+        // empty and nothing can hit; the default granularity hits
+        let workload: Vec<RequestSpec> = (0..6)
+            .map(|i| {
+                let mut s = RequestSpec::text(i as f64 * 0.1, 1024, 4);
+                s.prefix_group = 1;
+                s.shared_prefix = 512;
+                s
+            })
+            .collect();
+        let base = OrchestratorConfig { n_instances: 1, prefix_cache: true, ..Default::default() };
+        let coarse = OrchestratorConfig { prefix_block_tokens: 1 << 12, ..base.clone() };
+        let (r_fine, _) = Orchestrator::new(base, FixedCost::new(0.01)).run(workload.clone());
+        let (r_coarse, _) = Orchestrator::new(coarse, FixedCost::new(0.01)).run(workload);
+        assert!(r_fine.prefix_hits > 0, "default 64-token blocks must hit");
+        assert_eq!(r_coarse.prefix_hits, 0, "4096-token blocks cannot cover a 512-token prefix");
     }
 }

@@ -138,6 +138,13 @@ pub trait Executor {
     fn finished(&mut self, req: RequestId, now_s: f64) {
         let _ = (req, now_s);
     }
+
+    /// Backend invariant check, called from debug assertions at every
+    /// iteration boundary (e.g. `XTensorManager::check_invariants` for
+    /// the PJRT executor).  Default: nothing to check.
+    fn debug_check(&self) -> Result<(), String> {
+        Ok(())
+    }
 }
 
 /// Executor-agnostic orchestrator configuration: everything about the
@@ -161,6 +168,13 @@ pub struct OrchestratorConfig {
     pub monitor_interval_s: f64,
     /// Enable the global prefix cache (§3.4).
     pub prefix_cache: bool,
+    /// Prefix-cache block granularity in tokens (§3.4 chain hashing —
+    /// must match the control plane's global index granularity).
+    pub prefix_block_tokens: u64,
+    /// Prefix-cache tier capacities in tokens (HBM / DRAM / SSD).
+    pub prefix_hbm_tokens: u64,
+    pub prefix_dram_tokens: u64,
+    pub prefix_ssd_tokens: u64,
     /// Termination cap on processed events — guards against pathological
     /// configs that never drain.  Hitting it sets [`RunResult::truncated`].
     pub max_events: u64,
@@ -181,6 +195,10 @@ impl Default for OrchestratorConfig {
             recovery: RecoveryModel::default(),
             monitor_interval_s: 0.25,
             prefix_cache: false,
+            prefix_block_tokens: DEFAULT_PREFIX_BLOCK_TOKENS,
+            prefix_hbm_tokens: DEFAULT_PREFIX_HBM_TOKENS,
+            prefix_dram_tokens: DEFAULT_PREFIX_DRAM_TOKENS,
+            prefix_ssd_tokens: DEFAULT_PREFIX_SSD_TOKENS,
             max_events: DEFAULT_MAX_EVENTS,
         }
     }
@@ -188,6 +206,13 @@ impl Default for OrchestratorConfig {
 
 /// Default event cap (was a hard-coded constant inside the sim loop).
 pub const DEFAULT_MAX_EVENTS: u64 = 200_000_000;
+
+/// Default prefix-cache sizing (was hard-coded at the `TieredCache::new`
+/// call in the iteration machine).
+pub const DEFAULT_PREFIX_BLOCK_TOKENS: u64 = 64;
+pub const DEFAULT_PREFIX_HBM_TOKENS: u64 = 1 << 22;
+pub const DEFAULT_PREFIX_DRAM_TOKENS: u64 = 1 << 24;
+pub const DEFAULT_PREFIX_SSD_TOKENS: u64 = 1 << 26;
 
 /// Orchestrator run output: serving metrics + policy counters.
 #[derive(Debug)]
@@ -205,4 +230,39 @@ pub struct RunResult {
     pub truncated: bool,
     /// Per-instance (iterations, tokens generated) for utilization checks.
     pub per_instance: Vec<(u64, u64)>,
+}
+
+/// Aggregate load snapshot a replica publishes with each heartbeat
+/// lease renewal (produced by [`Orchestrator::load_report`], consumed
+/// by the control plane's instance registry — defined here so the
+/// coordinator layer never depends on its own consumers).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LoadReport {
+    /// Prompt tokens waiting in prefill queues across the replica.
+    pub queued_prefill_tokens: u64,
+    /// Context tokens of running decode sequences.
+    pub running_tokens: u64,
+    pub kv_used: u64,
+    pub kv_capacity: u64,
+    pub n_running: usize,
+    pub n_queued: usize,
+    /// Fraction of in-flight requests that are online (latency-bound) —
+    /// drives the cross-replica §3.1 offline steering.
+    pub online_fraction: f64,
+}
+
+/// A request caught in flight when its orchestrator replica dies,
+/// returned by [`Orchestrator::drain_in_flight`] so the control plane
+/// can re-dispatch it onto a surviving replica (§3.5).
+#[derive(Debug, Clone, Copy)]
+pub struct InFlightSnapshot {
+    /// The original request spec (arrival time preserved, so failover
+    /// latency shows up in the re-dispatched request's E2E).
+    pub spec: crate::workload::RequestSpec,
+    /// Context tokens accumulated on the dead replica (lost KV that the
+    /// survivor must recompute or re-stage).
+    pub context_tokens: u64,
+    /// The request had reached the decode phase (its prefill is the
+    /// recompute cost fault recovery weighs against migration).
+    pub decoding: bool,
 }

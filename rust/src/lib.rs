@@ -22,12 +22,18 @@
 //!
 //! * [`coordinator`] — request lifecycle, batcher, pools, scheduler,
 //!   predictor, and the shared serving **orchestrator** + `Executor`.
-//! * [`service`] — xLLM-Service policies (colocation, EPD, fault, KV store).
+//! * [`service`] — xLLM-Service policies (colocation, EPD, fault, KV
+//!   store) and the distributed **control plane**
+//!   ([`service::controlplane`]): instance registry with heartbeat
+//!   leases, global prefix-cache index, cache-aware routing, and
+//!   failover across N orchestrator replicas (see DESIGN.md
+//!   §Control-Plane).
 //! * [`engine`] — xLLM-Engine optimizations (xtensor, specdecode, EPLB,
 //!   DP balance, pipeline, genrec).
 //! * [`sim`] — event clock, roofline cost model, the roofline `Executor`,
-//!   and `ClusterConfig` (the Ascend-cluster substitute; see DESIGN.md
-//!   §Hardware-Adaptation).
+//!   `ClusterConfig` (the Ascend-cluster substitute; see DESIGN.md
+//!   §Hardware-Adaptation), and `sim::fleet` (N replica clusters under
+//!   one control plane).
 //! * [`server`] — the PJRT `Executor` + serving façade over the
 //!   orchestrator; [`runtime`] loads the AOT artifacts via the PJRT C API
 //!   (`xla` crate) — Python never runs at serve time.

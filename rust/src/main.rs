@@ -4,6 +4,9 @@
 //! xllm serve    --requests 16 --prompt-len 64 --max-new 24 --batch 8
 //! xllm simulate --scenario sharegpt-2048 --model Qwen3-8B --instances 4 \
 //!               --rate 2.0 --horizon 60 --mode pd --tpot 0.05
+//! xllm fleet    --replicas 3 --instances 1 --scenario skewed-prefix \
+//!               --rate 2.0 --horizon 40 --routing cache-aware \
+//!               --fail-replica 0 --fail-at 10
 //! xllm models | scenarios | info
 //! ```
 
@@ -28,6 +31,7 @@ fn main() {
     let code = match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("models") => {
             for name in model::CATALOG_NAMES {
                 let m = model::catalog(name).unwrap();
@@ -51,7 +55,7 @@ fn main() {
         other => {
             eprintln!(
                 "xllm {} — decoupled service-engine LLM inference (paper reproduction)\n\
-                 usage: xllm <serve|simulate|models|scenarios|info> [--key value ...]\n\
+                 usage: xllm <serve|simulate|fleet|models|scenarios|info> [--key value ...]\n\
                  unknown subcommand: {other:?}",
                 xllm::version()
             );
@@ -91,7 +95,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let results = server.run_to_completion()?;
     let wall = t0.elapsed().as_secs_f64();
 
-    let mut report = server.report.clone();
+    let report = server.report.clone();
     let out = Json::obj()
         .set("requests", results.len())
         .set("wall_s", wall)
@@ -168,7 +172,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let n_reqs = workload.len();
     let res = sim_run(cfg, workload);
     let slo = Slo::interactive(ttft, tpot);
-    let mut report = res.report;
+    let report = res.report;
     let out = Json::obj()
         .set("scenario", scenario_name)
         .set("model", model_name)
@@ -188,6 +192,60 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         .set("migrations", res.migrations)
         .set("preemptions", res.preemptions)
         .set("iterations", res.iterations);
+    println!("{}", out.to_string());
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    use xllm::service::controlplane::RoutePolicy;
+    use xllm::sim::fleet::{run_fleet, FleetConfig};
+
+    let scenario_name = args.get_or("scenario", "skewed-prefix");
+    let model_name = args.get_or("model", "Qwen3-8B");
+    let n_replicas = args.get_u64("replicas", 3) as usize;
+    let n_instances = args.get_u64("instances", 1) as usize;
+    let rate = args.get_f64("rate", 2.0);
+    let horizon = args.get_f64("horizon", 40.0);
+    let spec = model::catalog(&model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name} (see `xllm models`)"))?;
+    let sc = scenario(&scenario_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown scenario {scenario_name}"))?;
+
+    let mut template =
+        ClusterConfig::new(n_instances, model::ascend_910b(), spec, EngineFeatures::xllm(1));
+    template.prefix_cache = true;
+    let mut cfg = FleetConfig::new(template, n_replicas);
+    cfg.routing = match args.get_or("routing", "cache-aware").as_str() {
+        "round-robin" => RoutePolicy::RoundRobin,
+        _ => RoutePolicy::CacheAware,
+    };
+    let fail_at = args.get_f64("fail-at", f64::NAN);
+    if fail_at.is_finite() {
+        cfg.replica_faults.push((fail_at, args.get_u64("fail-replica", 0) as usize));
+    }
+
+    let mut rng = Rng::new(args.get_u64("seed", 7));
+    let workload = sc.generate(horizon, rate, &mut rng);
+    let n_reqs = workload.len();
+    let res = run_fleet(cfg, workload);
+    let report = &res.report;
+    let out = Json::obj()
+        .set("scenario", scenario_name)
+        .set("replicas", n_replicas)
+        .set("instances_per_replica", n_instances)
+        .set("requests", n_reqs)
+        .set("completed", report.n_completed())
+        .set("output_tok_s", report.output_throughput())
+        .set("mean_ttft_s", report.ttft_summary().mean())
+        .set("mean_e2e_s", report.e2e_summary().mean())
+        .set("cluster_prefix_hits", res.per_replica.iter().map(|r| r.prefix_hits).sum::<u64>())
+        .set("routed_by_cache_hit", res.counters.routed_by_cache_hit)
+        .set("failovers", res.counters.failovers)
+        .set("redispatched_requests", res.counters.redispatched_requests)
+        .set("redispatched_tokens", res.counters.redispatched_tokens)
+        .set("offline_steered", res.counters.offline_steered)
+        .set("unroutable", res.counters.unroutable)
+        .set("truncated", res.truncated);
     println!("{}", out.to_string());
     Ok(())
 }

@@ -89,6 +89,12 @@ impl ServingReport {
         self.outcomes.push(o);
     }
 
+    /// Fold another report's outcomes into this one (cluster-level
+    /// aggregation: the control plane merges per-replica reports).
+    pub fn merge(&mut self, other: &ServingReport) {
+        self.outcomes.extend(other.outcomes.iter().copied());
+    }
+
     pub fn n_requests(&self) -> usize {
         self.outcomes.len()
     }
@@ -212,6 +218,20 @@ mod tests {
         let slo = Slo::tpot(0.5);
         assert!((r.slo_attainment(&slo) - 0.5).abs() < 1e-9);
         assert!((r.goodput(&slo) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_aggregates_outcomes() {
+        let mut a = ServingReport::new();
+        a.record(outcome(0.0, 0.1, 1.0, 10, 50));
+        let mut b = ServingReport::new();
+        b.record(outcome(1.0, 1.1, 2.0, 10, 50));
+        b.record(outcome(1.0, 1.2, 3.0, 10, 50));
+        a.merge(&b);
+        assert_eq!(a.n_requests(), 3);
+        assert_eq!(b.n_requests(), 2, "merge must not drain the source");
+        // throughput spans the merged horizon (0.0 .. 3.0)
+        assert!((a.output_throughput() - 50.0).abs() < 1e-9);
     }
 
     #[test]

@@ -386,6 +386,12 @@ impl Executor for PjrtExecutor {
             }
         }
     }
+
+    fn debug_check(&self) -> Result<(), String> {
+        // xTensor page-table consistency, swept by the orchestrator's
+        // debug assertions at every iteration boundary
+        self.pages.check_invariants()
+    }
 }
 
 /// Rough dense-transformer spec matching the AOT tiny model, for the

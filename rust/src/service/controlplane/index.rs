@@ -1,0 +1,183 @@
+//! Global prefix-cache index (paper §3.4).
+//!
+//! Aggregates the per-replica [`TieredCache`] chain summaries that
+//! replicas publish with their heartbeats, so the router sees
+//! cluster-wide KV reuse without a synchronous query per request.  The
+//! index is *eventually consistent*: a heartbeat publish replaces a
+//! replica's whole block map (version bump), and the router records an
+//! optimistic entry at dispatch time so back-to-back requests sharing a
+//! prefix co-locate even within one heartbeat interval.  Staleness is
+//! harmless — a phantom hit only costs the routed replica a prefill it
+//! would have done anyway.
+//!
+//! [`TieredCache`]: crate::service::kvstore::TieredCache
+
+use std::collections::HashMap;
+
+use crate::service::kvstore::Tier;
+
+/// Cluster-wide view of which replica caches which prefix blocks.
+#[derive(Debug, Default)]
+pub struct GlobalPrefixIndex {
+    per_replica: HashMap<usize, HashMap<u64, Tier>>,
+    versions: HashMap<usize, u64>,
+}
+
+impl GlobalPrefixIndex {
+    pub fn new() -> GlobalPrefixIndex {
+        GlobalPrefixIndex::default()
+    }
+
+    /// Replace `replica`'s published block map (heartbeat publish);
+    /// returns the new monotonic version.
+    pub fn publish(&mut self, replica: usize, summary: &[(u64, Tier)]) -> u64 {
+        self.per_replica.insert(replica, summary.iter().copied().collect());
+        let v = self.versions.entry(replica).or_insert(0);
+        *v += 1;
+        *v
+    }
+
+    /// Optimistically record a routed chain: the target replica will
+    /// hold these blocks (in DRAM per the consistency rule) once it
+    /// admits the request.
+    pub fn record(&mut self, replica: usize, chain: &[u64]) {
+        let map = self.per_replica.entry(replica).or_default();
+        for &h in chain {
+            map.entry(h).or_insert(Tier::Dram);
+        }
+    }
+
+    /// Longest prefix of `chain` the replica holds, and the slowest tier
+    /// that must be read to serve it (mirrors `TieredCache::match_prefix`
+    /// without touching LRU state — the index is a remote view).
+    pub fn match_prefix(&self, replica: usize, chain: &[u64]) -> (usize, Option<Tier>) {
+        let Some(map) = self.per_replica.get(&replica) else {
+            return (0, None);
+        };
+        let mut worst: Option<Tier> = None;
+        let mut n = 0;
+        for h in chain {
+            match map.get(h) {
+                Some(&tier) => {
+                    worst = Some(match worst {
+                        Some(w) if w >= tier => w,
+                        _ => tier,
+                    });
+                    n += 1;
+                }
+                None => break,
+            }
+        }
+        (n, worst)
+    }
+
+    /// Best surviving replica for a chain: `(replica, matched_blocks,
+    /// worst_tier)` with the longest match (lowest replica id on ties).
+    /// Drives the §3.5 recompute-vs-migrate failover decision.
+    pub fn best_match(&self, chain: &[u64]) -> Option<(usize, usize, Tier)> {
+        let mut ids: Vec<usize> = self.per_replica.keys().copied().collect();
+        ids.sort_unstable();
+        ids.iter()
+            .filter_map(|&r| match self.match_prefix(r, chain) {
+                (n, Some(t)) if n > 0 => Some((r, n, t)),
+                _ => None,
+            })
+            .max_by(|a, b| a.1.cmp(&b.1).then_with(|| b.0.cmp(&a.0)))
+    }
+
+    /// Forget a dead replica's blocks (its HBM/DRAM copies died with it).
+    pub fn remove(&mut self, replica: usize) {
+        self.per_replica.remove(&replica);
+        self.versions.remove(&replica);
+    }
+
+    pub fn version(&self, replica: usize) -> u64 {
+        self.versions.get(&replica).copied().unwrap_or(0)
+    }
+
+    pub fn blocks(&self, replica: usize) -> usize {
+        self.per_replica.get(&replica).map(|m| m.len()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::kvstore::{hash_chain, prefix_tokens};
+
+    fn chain(group: u64, blocks: u64) -> Vec<u64> {
+        hash_chain(&prefix_tokens(group, blocks * 16), 16)
+    }
+
+    #[test]
+    fn publish_then_match() {
+        let mut ix = GlobalPrefixIndex::new();
+        let c = chain(1, 4);
+        let summary: Vec<(u64, Tier)> = c.iter().map(|&h| (h, Tier::Dram)).collect();
+        assert_eq!(ix.publish(3, &summary), 1);
+        assert_eq!(ix.match_prefix(3, &c), (4, Some(Tier::Dram)));
+        assert_eq!(ix.match_prefix(0, &c), (0, None), "unknown replica has nothing");
+        // partial overlap: only the shared prefix matches
+        let other = chain(2, 4);
+        assert_eq!(ix.match_prefix(3, &other), (0, None));
+    }
+
+    #[test]
+    fn publish_replaces_and_bumps_version() {
+        let mut ix = GlobalPrefixIndex::new();
+        let c = chain(1, 4);
+        let full: Vec<(u64, Tier)> = c.iter().map(|&h| (h, Tier::Dram)).collect();
+        ix.publish(0, &full);
+        // the replica evicted the tail: a fresh publish must shrink the view
+        assert_eq!(ix.publish(0, &full[..2]), 2);
+        assert_eq!(ix.match_prefix(0, &c), (2, Some(Tier::Dram)));
+        assert_eq!(ix.blocks(0), 2);
+    }
+
+    #[test]
+    fn worst_tier_governs_the_match() {
+        let mut ix = GlobalPrefixIndex::new();
+        let c = chain(1, 3);
+        ix.publish(0, &[(c[0], Tier::Hbm), (c[1], Tier::Ssd), (c[2], Tier::Dram)]);
+        assert_eq!(ix.match_prefix(0, &c), (3, Some(Tier::Ssd)));
+    }
+
+    #[test]
+    fn optimistic_record_fills_the_gap() {
+        let mut ix = GlobalPrefixIndex::new();
+        let c = chain(5, 3);
+        ix.record(2, &c);
+        assert_eq!(ix.match_prefix(2, &c), (3, Some(Tier::Dram)));
+        // an authoritative publish overrides the optimism
+        ix.publish(2, &[(c[0], Tier::Hbm)]);
+        assert_eq!(ix.match_prefix(2, &c), (1, Some(Tier::Hbm)));
+    }
+
+    #[test]
+    fn best_match_prefers_longest_then_lowest_id() {
+        let mut ix = GlobalPrefixIndex::new();
+        let c = chain(1, 4);
+        ix.record(4, &c[..2]);
+        ix.record(1, &c);
+        ix.record(7, &c);
+        assert_eq!(ix.best_match(&c), Some((1, 4, Tier::Dram)), "longest match, lowest id");
+        ix.remove(1);
+        assert_eq!(ix.best_match(&c), Some((7, 4, Tier::Dram)));
+        ix.remove(7);
+        assert_eq!(ix.best_match(&c), Some((4, 2, Tier::Dram)));
+        ix.remove(4);
+        assert_eq!(ix.best_match(&c), None);
+    }
+
+    #[test]
+    fn remove_clears_blocks_and_version() {
+        let mut ix = GlobalPrefixIndex::new();
+        let c = chain(1, 2);
+        ix.record(0, &c);
+        ix.publish(0, &[(c[0], Tier::Dram)]);
+        assert_eq!(ix.version(0), 1);
+        ix.remove(0);
+        assert_eq!(ix.version(0), 0);
+        assert_eq!(ix.blocks(0), 0);
+    }
+}

@@ -1,0 +1,561 @@
+//! The distributed control plane (paper §3.4–§3.5): one `ControlPlane`
+//! over N orchestrator replicas.
+//!
+//! This is the layer that turns the service-policy modules into one
+//! system serving traffic across more than one engine:
+//!
+//! * [`registry`] — instance registry with heartbeat TTL leases and
+//!   per-replica load reports (composes [`crate::service::meta`], the
+//!   ETCD substitute).
+//! * [`index`] — global prefix-cache index aggregating per-replica
+//!   `TieredCache` chain summaries, refreshed on every heartbeat.
+//! * [`router`] — cache-aware routing running the paper's three-step
+//!   selection over the live registry + index (generalizes
+//!   [`crate::service::kvstore::route`]), with the §3.1 offline tide
+//!   rule applied across replicas via
+//!   [`crate::service::colocation::ColocationConfig`].
+//! * failover — an expired lease marks a replica dead; its in-flight
+//!   requests re-queue onto survivors, with the recompute-vs-migrate
+//!   decision delegated to [`crate::service::fault::plan_recovery`]
+//!   against what the global index still holds (§3.5).
+//!
+//! Mechanically, the control plane is a discrete-event driver of
+//! drivers: each replica is a steppable [`Orchestrator`] with its own
+//! event queue, and the control plane interleaves them with its own
+//! queue (arrivals, heartbeats, fault injections) by always advancing
+//! whichever head event is earliest.  Determinism is preserved — ties
+//! break control-plane-first, then by replica id.
+
+pub mod index;
+pub mod registry;
+pub mod router;
+
+pub use index::GlobalPrefixIndex;
+pub use registry::{InstanceRegistry, LoadReport};
+pub use router::{FleetRouter, RouteDecision, RoutePolicy, RouterCtx};
+
+use std::cmp::Ordering;
+
+use crate::coordinator::orchestrator::{
+    Executor, Orchestrator, RunResult, DEFAULT_MAX_EVENTS, DEFAULT_PREFIX_BLOCK_TOKENS,
+};
+use crate::metrics::{RequestOutcome, ServingReport};
+use crate::service::colocation::ColocationConfig;
+use crate::service::fault::{plan_recovery, InterruptedRequest, RecoveryAction};
+use crate::service::kvstore::TransferEngine;
+use crate::sim::clock::EventQueue;
+use crate::sim::CostModel;
+use crate::workload::RequestSpec;
+
+/// Control-plane events (the cluster-scope queue; replicas keep their
+/// own per-replica queues).
+#[derive(Debug, Clone, Copy)]
+enum CtlEv {
+    /// Global request `workload[i]` arrives and must be routed.
+    Arrive(usize),
+    /// Periodic heartbeat: replicas publish load + cache summaries,
+    /// then lapsed leases are swept.
+    Heartbeat,
+    /// Whole-replica crash injection: the replica stops executing and
+    /// stops heartbeating; detection happens via lease expiry.
+    Fault(usize),
+}
+
+/// Control-plane configuration.
+#[derive(Debug, Clone)]
+pub struct ControlPlaneConfig {
+    pub routing: RoutePolicy,
+    /// Heartbeat / lease-renewal interval.
+    pub heartbeat_s: f64,
+    /// Lease TTL: a replica silent longer than this is declared dead at
+    /// the next sweep (detection bound = ttl + heartbeat interval).
+    pub lease_ttl_s: f64,
+    /// Whole-replica crash injections: (time, replica).
+    pub replica_faults: Vec<(f64, usize)>,
+    /// Prefix-chain granularity — must match the replicas'
+    /// `OrchestratorConfig::prefix_block_tokens`.
+    pub block_tokens: u64,
+    /// Cross-replica online/offline steering thresholds (§3.1).
+    pub colocation: ColocationConfig,
+    /// Transfer-cost model for routing and failover decisions.
+    pub xfer: TransferEngine,
+    /// Cap on control-plane scheduling turns (safety net).
+    pub max_events: u64,
+}
+
+impl Default for ControlPlaneConfig {
+    fn default() -> Self {
+        ControlPlaneConfig {
+            routing: RoutePolicy::CacheAware,
+            heartbeat_s: 0.25,
+            lease_ttl_s: 0.65,
+            replica_faults: Vec::new(),
+            block_tokens: DEFAULT_PREFIX_BLOCK_TOKENS,
+            colocation: ColocationConfig::default(),
+            xfer: TransferEngine::default(),
+            max_events: DEFAULT_MAX_EVENTS,
+        }
+    }
+}
+
+/// Cluster-level counters the control plane maintains on top of the
+/// per-replica [`RunResult`]s.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ControlCounters {
+    /// Requests routed to a replica already caching part of their prefix.
+    pub routed_by_cache_hit: u64,
+    /// Replica deaths handled (lease expiry or wedged event loop).
+    pub failovers: u64,
+    /// Requests re-queued onto survivors after a replica death.
+    pub redispatched_requests: u64,
+    /// Context tokens those requests had accumulated on the dead
+    /// replica (the KV that must be recomputed or re-staged).
+    pub redispatched_tokens: u64,
+    /// Re-dispatches where §3.5 recovery chose migration over recompute
+    /// (a surviving replica still held the prefix).
+    pub redispatch_migrations: u64,
+    /// Offline requests narrowed to latency-relaxed replicas (§3.1).
+    pub offline_steered: u64,
+    /// Requests failed because no replica held a lease.
+    pub unroutable: u64,
+    pub heartbeats: u64,
+    pub lease_expiries: u64,
+}
+
+/// Aggregated fleet run output.
+#[derive(Debug)]
+pub struct FleetResult {
+    /// Merged serving report across every replica (plus unroutable
+    /// requests recorded as failed).
+    pub report: ServingReport,
+    /// Per-replica results, indexed by replica id.
+    pub per_replica: Vec<RunResult>,
+    pub counters: ControlCounters,
+    /// Requests submitted to the control plane (re-dispatches are not
+    /// double-counted).
+    pub submitted: usize,
+    /// The control plane or any replica hit its event cap.
+    pub truncated: bool,
+}
+
+impl FleetResult {
+    /// Cluster-wide prefix-cache hits (sum over replicas).
+    pub fn prefix_hits(&self) -> u64 {
+        self.per_replica.iter().map(|r| r.prefix_hits).sum()
+    }
+
+    /// Every submitted request has a recorded outcome somewhere.
+    pub fn all_accounted(&self) -> bool {
+        self.report.n_requests() == self.submitted
+    }
+}
+
+struct Replica<X: Executor> {
+    /// Taken (and finalized into `result`) when the replica dies.
+    orch: Option<Orchestrator<X>>,
+    alive: bool,
+    result: Option<RunResult>,
+}
+
+/// The control plane: owns N orchestrator replicas and drives the full
+/// paper loop — registry leases, global prefix index, cache-aware
+/// routing, failure detection + re-dispatch, cross-replica co-location.
+pub struct ControlPlane<X: Executor> {
+    cfg: ControlPlaneConfig,
+    replicas: Vec<Replica<X>>,
+    registry: InstanceRegistry,
+    index: GlobalPrefixIndex,
+    router: FleetRouter,
+    clock: EventQueue<CtlEv>,
+    workload: Vec<RequestSpec>,
+    /// Routing/failover cost model (cloned from the replicas' executor).
+    cost: CostModel,
+    counters: ControlCounters,
+    /// Failed outcomes for requests no replica could take.
+    lost: ServingReport,
+}
+
+impl<X: Executor> ControlPlane<X> {
+    pub fn new(cfg: ControlPlaneConfig, replicas: Vec<Orchestrator<X>>) -> ControlPlane<X> {
+        assert!(!replicas.is_empty(), "control plane needs at least one replica");
+        let cost = replicas[0].executor().cost().clone();
+        let router = FleetRouter::new(cfg.routing);
+        let registry = InstanceRegistry::new(cfg.lease_ttl_s);
+        let replicas = replicas
+            .into_iter()
+            .map(|mut orch| {
+                orch.start(Vec::new()); // empty workload: arrivals come via submit
+                Replica { orch: Some(orch), alive: true, result: None }
+            })
+            .collect();
+        ControlPlane {
+            cfg,
+            replicas,
+            registry,
+            index: GlobalPrefixIndex::new(),
+            router,
+            clock: EventQueue::new(),
+            workload: Vec::new(),
+            cost,
+            counters: ControlCounters::default(),
+            lost: ServingReport::new(),
+        }
+    }
+
+    /// Serve the workload across the fleet to completion.
+    pub fn run(mut self, workload: Vec<RequestSpec>) -> FleetResult {
+        for (g, spec) in workload.iter().enumerate() {
+            self.clock.schedule_at(spec.arrival_s, CtlEv::Arrive(g));
+        }
+        self.workload = workload;
+        for (t, r) in self.cfg.replica_faults.clone() {
+            self.clock.schedule_at(t, CtlEv::Fault(r));
+        }
+        for r in 0..self.replicas.len() {
+            self.registry.register(r, 0.0);
+        }
+        self.clock.schedule_at(self.cfg.heartbeat_s, CtlEv::Heartbeat);
+
+        let mut turns = 0u64;
+        let mut truncated = false;
+        loop {
+            turns += 1;
+            if turns > self.cfg.max_events {
+                truncated = true;
+                break;
+            }
+            // advance whichever head event is earliest: the control
+            // queue or a live replica's queue (ties: control first,
+            // then lowest replica id — deterministic)
+            let tc = self.clock.peek_time();
+            let tr = self
+                .replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, rep)| rep.alive)
+                .filter_map(|(i, rep)| {
+                    rep.orch.as_ref().and_then(|o| o.next_event_time()).map(|t| (t, i))
+                })
+                .min_by(|a, b| {
+                    a.0.partial_cmp(&b.0).unwrap_or(Ordering::Equal).then_with(|| a.1.cmp(&b.1))
+                });
+            match (tc, tr) {
+                (None, None) => break,
+                (Some(_), None) => self.control_event(),
+                (None, Some((_, i))) => self.step_replica(i),
+                (Some(c), Some((t, i))) => {
+                    if c <= t {
+                        self.control_event();
+                    } else {
+                        self.step_replica(i);
+                    }
+                }
+            }
+        }
+        self.finish(truncated)
+    }
+
+    fn control_event(&mut self) {
+        let Some((t, ev)) = self.clock.next() else {
+            return;
+        };
+        match ev {
+            CtlEv::Arrive(g) => {
+                let spec = self.workload[g];
+                self.route_spec(spec, t, t);
+            }
+            CtlEv::Fault(r) => {
+                // silent crash: the replica stops executing and stops
+                // heartbeating; the lease sweep detects it (§3.5).
+                // Out-of-range ids (bad --fail-replica) are ignored.
+                if let Some(rep) = self.replicas.get_mut(r) {
+                    rep.alive = false;
+                }
+            }
+            CtlEv::Heartbeat => self.on_heartbeat(t),
+        }
+    }
+
+    fn step_replica(&mut self, i: usize) {
+        let wedged = {
+            let orch = self.replicas[i].orch.as_mut().expect("live replica has an orchestrator");
+            !orch.step() && orch.truncated()
+        };
+        if wedged {
+            // event-cap wedge: treat as a failure so its work re-queues
+            let now = self.clock.now();
+            self.fail_replica(i, now);
+        }
+    }
+
+    /// Route one request (fresh arrival or failover re-dispatch).
+    /// `now` is fleet time of the decision; the target replica admits
+    /// the request no earlier than `earliest_s` (≥ now when a staging
+    /// delay is charged).
+    fn route_spec(&mut self, spec: RequestSpec, now: f64, earliest_s: f64) {
+        match self.decide(&spec) {
+            None => self.mark_lost(spec, now),
+            Some(d) => self.admit(spec, d, earliest_s),
+        }
+    }
+
+    /// Run the routing policy over the current registry + index state.
+    fn decide(&mut self, spec: &RequestSpec) -> Option<RouteDecision> {
+        let ctx = RouterCtx {
+            registry: &self.registry,
+            index: &self.index,
+            cost: &self.cost,
+            xfer: &self.cfg.xfer,
+            coloc: &self.cfg.colocation,
+            block_tokens: self.cfg.block_tokens,
+        };
+        self.router.route(spec, &ctx)
+    }
+
+    /// Every lease gone: the request has nowhere to run.
+    fn mark_lost(&mut self, spec: RequestSpec, now: f64) {
+        self.counters.unroutable += 1;
+        self.lost.record(RequestOutcome {
+            arrival_s: spec.arrival_s,
+            first_token_s: now,
+            finish_s: now,
+            input_tokens: spec.input_tokens,
+            output_tokens: 0,
+            failed: true,
+        });
+    }
+
+    /// Hand a routed request to its replica (counters, optimistic index
+    /// and load bookkeeping, admission no earlier than `earliest_s`).
+    fn admit(&mut self, spec: RequestSpec, d: RouteDecision, earliest_s: f64) {
+        if d.matched_blocks > 0 {
+            self.counters.routed_by_cache_hit += 1;
+        }
+        if d.offline_steered {
+            self.counters.offline_steered += 1;
+        }
+        let chain = FleetRouter::chain_for(&spec, self.cfg.block_tokens);
+        if !chain.is_empty() {
+            // optimistic: the target caches this chain on admit
+            self.index.record(d.replica, &chain);
+        }
+        self.registry.note_dispatch(d.replica, spec.input_tokens);
+        self.replicas[d.replica]
+            .orch
+            .as_mut()
+            .expect("routed replica is alive")
+            .submit_at(spec, earliest_s);
+    }
+
+    fn on_heartbeat(&mut self, now: f64) {
+        self.counters.heartbeats += 1;
+        for r in 0..self.replicas.len() {
+            if !self.replicas[r].alive {
+                continue; // crashed or wedged: no lease renewal
+            }
+            let Some(orch) = self.replicas[r].orch.as_ref() else {
+                continue;
+            };
+            let report = orch.load_report();
+            let summary = orch.cache_summary();
+            self.registry.heartbeat(r, report, now);
+            self.index.publish(r, &summary);
+        }
+        for r in self.registry.sweep(now) {
+            if self.replicas[r].orch.is_some() {
+                self.counters.lease_expiries += 1;
+                self.fail_replica(r, now);
+            }
+        }
+        if !self.accounted_all() {
+            self.clock.schedule_in(self.cfg.heartbeat_s, CtlEv::Heartbeat);
+        }
+    }
+
+    /// A replica is dead: finalize it, then re-dispatch everything it
+    /// had in flight onto the survivors (§3.5), deciding
+    /// recompute-vs-migrate per request against the surviving global
+    /// cache.
+    fn fail_replica(&mut self, r: usize, now: f64) {
+        let Some(mut orch) = self.replicas[r].orch.take() else {
+            return; // already failed over
+        };
+        self.replicas[r].alive = false;
+        self.registry.deregister(r);
+        self.index.remove(r);
+        self.counters.failovers += 1;
+        let drained = orch.drain_in_flight();
+        let (result, _executor) = orch.finish();
+        self.replicas[r].result = Some(result);
+        for snap in drained {
+            self.counters.redispatched_requests += 1;
+            self.counters.redispatched_tokens += snap.context_tokens;
+            let Some(d) = self.decide(&snap.spec) else {
+                self.mark_lost(snap.spec, now);
+                continue;
+            };
+            // §3.5 recovery decision, judged against the replica the
+            // router actually chose: if THAT replica still holds (part
+            // of) the request's prefix, migration charges the staging +
+            // transfer delay up front and the survivor then serves the
+            // prefix from its own cache; a cache-cold target simply
+            // recomputes (re-runs prefill on admit) with no phantom
+            // delay — so round-robin failover is never billed for KV it
+            // cannot reuse.
+            let mut earliest = now;
+            if snap.context_tokens > 0 {
+                let chain = FleetRouter::chain_for(&snap.spec, self.cfg.block_tokens);
+                let (matched, tier) = self.index.match_prefix(d.replica, &chain);
+                let interrupted = InterruptedRequest {
+                    request: 0, // fleet-level: per-request ids stay replica-local
+                    context_tokens: snap.context_tokens,
+                    replica_tier: if matched > 0 { tier } else { None },
+                };
+                let (action, delay) = plan_recovery(&interrupted, &self.cost, &self.cfg.xfer);
+                if action == RecoveryAction::Migrate {
+                    self.counters.redispatch_migrations += 1;
+                    earliest = now + delay;
+                }
+            }
+            // original arrival preserved but admission bounded below by
+            // fleet time: failover delay lands in the request's E2E
+            self.admit(snap.spec, d, earliest);
+        }
+    }
+
+    /// Every submitted request has an outcome recorded somewhere
+    /// (completed/failed on a replica, or lost as unroutable).
+    fn accounted_all(&self) -> bool {
+        let mut recorded = self.lost.n_requests();
+        for rep in &self.replicas {
+            recorded += match (&rep.result, &rep.orch) {
+                (Some(res), _) => res.report.n_requests(),
+                (None, Some(orch)) => orch.n_recorded(),
+                (None, None) => 0,
+            };
+        }
+        recorded >= self.workload.len()
+    }
+
+    fn finish(mut self, truncated: bool) -> FleetResult {
+        let mut report = ServingReport::new();
+        report.merge(&self.lost);
+        let mut per_replica = Vec::with_capacity(self.replicas.len());
+        for rep in std::mem::take(&mut self.replicas) {
+            let result = match (rep.result, rep.orch) {
+                (Some(res), _) => res,
+                (None, Some(orch)) => orch.finish().0,
+                (None, None) => unreachable!("replica lost both orchestrator and result"),
+            };
+            report.merge(&result.report);
+            per_replica.push(result);
+        }
+        let truncated = truncated || per_replica.iter().any(|r| r.truncated);
+        FleetResult {
+            report,
+            per_replica,
+            counters: self.counters,
+            submitted: self.workload.len(),
+            truncated,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::orchestrator::OrchestratorConfig;
+    use crate::testutil::FixedCostExecutor as FixedCost;
+
+    fn fleet(n: usize) -> Vec<Orchestrator<FixedCost>> {
+        (0..n)
+            .map(|_| {
+                let cfg = OrchestratorConfig {
+                    n_instances: 1,
+                    prefix_cache: true,
+                    ..Default::default()
+                };
+                Orchestrator::new(cfg, FixedCost::new(0.01))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fleet_completes_and_accounts_everything() {
+        let workload: Vec<RequestSpec> =
+            (0..12).map(|i| RequestSpec::text(i as f64 * 0.05, 256, 16)).collect();
+        let n = workload.len();
+        let cp = ControlPlane::new(ControlPlaneConfig::default(), fleet(3));
+        let res = cp.run(workload);
+        assert_eq!(res.submitted, n);
+        assert!(res.all_accounted(), "{} recorded != {n}", res.report.n_requests());
+        assert_eq!(res.report.n_completed(), n);
+        assert!(!res.truncated);
+        assert!(res.counters.heartbeats > 0);
+        assert_eq!(res.counters.failovers, 0);
+        // work spread beyond a single replica
+        let with_work = res.per_replica.iter().filter(|r| r.iterations > 0).count();
+        assert!(with_work >= 2, "load must spread: {with_work} replicas worked");
+    }
+
+    #[test]
+    fn replica_crash_fails_over_without_losing_requests() {
+        let workload: Vec<RequestSpec> =
+            (0..10).map(|i| RequestSpec::text(i as f64 * 0.05, 256, 400)).collect();
+        let n = workload.len();
+        let cfg = ControlPlaneConfig {
+            replica_faults: vec![(1.0, 0)],
+            ..Default::default()
+        };
+        let res = ControlPlane::new(cfg, fleet(2)).run(workload);
+        assert!(res.all_accounted(), "{} recorded != {n}", res.report.n_requests());
+        assert_eq!(res.report.n_completed(), n, "survivors must finish everything");
+        assert_eq!(res.counters.failovers, 1);
+        assert_eq!(res.counters.lease_expiries, 1, "death detected via lease expiry");
+        assert!(res.counters.redispatched_requests > 0, "victim had work in flight");
+        assert!(res.counters.redispatched_tokens > 0);
+        // the dead replica's pre-crash completions (if any) plus the
+        // survivor's recordings cover the workload exactly once
+        let per: usize = res.per_replica.iter().map(|r| r.report.n_requests()).sum();
+        assert_eq!(per, n);
+    }
+
+    #[test]
+    fn all_replicas_dead_marks_requests_unroutable() {
+        let mut workload = vec![RequestSpec::text(0.0, 128, 200)];
+        workload.extend((0..4).map(|i| RequestSpec::text(3.0 + i as f64 * 0.1, 128, 8)));
+        let n = workload.len();
+        let cfg = ControlPlaneConfig {
+            replica_faults: vec![(0.5, 0), (0.5, 1)],
+            ..Default::default()
+        };
+        let res = ControlPlane::new(cfg, fleet(2)).run(workload);
+        assert!(res.all_accounted());
+        assert_eq!(res.report.n_requests(), n);
+        assert_eq!(res.report.n_completed(), 0, "nothing can run without replicas");
+        assert_eq!(res.counters.failovers, 2);
+        assert_eq!(res.counters.unroutable as usize, n);
+    }
+
+    #[test]
+    fn fleet_run_is_deterministic() {
+        let workload: Vec<RequestSpec> = (0..8)
+            .map(|i| {
+                let mut s = RequestSpec::text(i as f64 * 0.1, 512, 32);
+                s.prefix_group = 1 + (i % 2);
+                s.shared_prefix = 256;
+                s
+            })
+            .collect();
+        let cfg = ControlPlaneConfig { replica_faults: vec![(0.8, 1)], ..Default::default() };
+        let r1 = ControlPlane::new(cfg.clone(), fleet(3)).run(workload.clone());
+        let r2 = ControlPlane::new(cfg, fleet(3)).run(workload);
+        assert_eq!(r1.report.n_completed(), r2.report.n_completed());
+        assert_eq!(r1.counters.routed_by_cache_hit, r2.counters.routed_by_cache_hit);
+        assert_eq!(r1.counters.redispatched_tokens, r2.counters.redispatched_tokens);
+        assert_eq!(r1.prefix_hits(), r2.prefix_hits());
+        let i1: Vec<u64> = r1.per_replica.iter().map(|r| r.iterations).collect();
+        let i2: Vec<u64> = r2.per_replica.iter().map(|r| r.iterations).collect();
+        assert_eq!(i1, i2);
+    }
+}

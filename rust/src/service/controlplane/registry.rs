@@ -1,0 +1,180 @@
+//! Instance registry: heartbeat leases + load reports (paper §3.4).
+//!
+//! Each orchestrator replica renews a TTL lease on every heartbeat and
+//! publishes an aggregate [`LoadReport`] alongside it — the "load-info
+//! synchronization at regular intervals via ETCD heartbeat mechanisms"
+//! of the paper.  Lease bookkeeping and the ordered event log are
+//! delegated to the [`MetaStore`] (the ETCD substitute), so watchers see
+//! the same `Registered`/`Updated`/`Expired` stream a real deployment
+//! would.  Between heartbeats the router charges optimistic dispatch
+//! load ([`InstanceRegistry::note_dispatch`]) so a burst arriving inside
+//! one heartbeat interval does not pile onto a single replica.
+
+use std::collections::HashMap;
+
+use crate::service::meta::{InstanceRecord, MetaStore};
+
+pub use crate::coordinator::orchestrator::LoadReport;
+
+/// Lease-based replica registry over the [`MetaStore`].
+#[derive(Debug)]
+pub struct InstanceRegistry {
+    meta: MetaStore,
+    loads: HashMap<usize, LoadReport>,
+}
+
+impl InstanceRegistry {
+    /// `ttl_s`: a replica silent for longer than this is declared dead
+    /// at the next sweep.
+    pub fn new(ttl_s: f64) -> InstanceRegistry {
+        InstanceRegistry { meta: MetaStore::new(ttl_s), loads: HashMap::new() }
+    }
+
+    /// Register a replica (lease starts at `now_s`).
+    pub fn register(&mut self, replica: usize, now_s: f64) {
+        self.meta.register(InstanceRecord {
+            instance: replica,
+            role: "replica".to_string(),
+            kv_used: 0,
+            kv_capacity: 0,
+            last_heartbeat_s: now_s,
+        });
+        self.loads.insert(replica, LoadReport::default());
+    }
+
+    /// Heartbeat: renew the lease and replace the published load report.
+    /// Returns false for an unknown (or already-expired) replica.
+    pub fn heartbeat(&mut self, replica: usize, report: LoadReport, now_s: f64) -> bool {
+        if !self.meta.heartbeat(replica, report.kv_used, now_s) {
+            return false;
+        }
+        self.loads.insert(replica, report);
+        true
+    }
+
+    /// Charge optimistic load for a request just routed to `replica`
+    /// (overwritten by the authoritative report at the next heartbeat).
+    pub fn note_dispatch(&mut self, replica: usize, input_tokens: u64) {
+        if let Some(l) = self.loads.get_mut(&replica) {
+            l.queued_prefill_tokens += input_tokens;
+            l.n_queued += 1;
+        }
+    }
+
+    /// Expire lapsed leases; returns the newly-dead replica ids,
+    /// ascending (the MetaStore sweeps a hash map, so ordering must be
+    /// imposed here to keep failover deterministic).
+    pub fn sweep(&mut self, now_s: f64) -> Vec<usize> {
+        let mut dead = self.meta.sweep(now_s);
+        dead.sort_unstable();
+        for d in &dead {
+            self.loads.remove(d);
+        }
+        dead
+    }
+
+    /// Drop a replica without waiting for its lease to lapse (used when
+    /// the control plane already knows it is gone, e.g. a wedged event
+    /// loop).  Removes both the load view and the meta record, so
+    /// watchers never see a phantom `Expired` for it later.
+    pub fn deregister(&mut self, replica: usize) {
+        self.loads.remove(&replica);
+        self.meta.deregister(replica);
+    }
+
+    /// Replica ids holding a live lease, ascending (deterministic
+    /// routing order).
+    pub fn alive(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> =
+            self.meta.alive().into_iter().filter(|i| self.loads.contains_key(i)).collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    pub fn is_alive(&self, replica: usize) -> bool {
+        self.loads.contains_key(&replica) && self.meta.get(replica).is_some()
+    }
+
+    pub fn load(&self, replica: usize) -> Option<&LoadReport> {
+        self.loads.get(&replica)
+    }
+
+    /// The underlying metadata store (event log for watchers/tests).
+    pub fn meta(&self) -> &MetaStore {
+        &self.meta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::meta::MetaEvent;
+
+    fn report(queued: u64) -> LoadReport {
+        LoadReport { queued_prefill_tokens: queued, kv_capacity: 1000, ..Default::default() }
+    }
+
+    #[test]
+    fn lease_expiry_marks_dead() {
+        let mut r = InstanceRegistry::new(0.6);
+        r.register(0, 0.0);
+        r.register(1, 0.0);
+        r.heartbeat(0, report(10), 0.25);
+        r.heartbeat(1, report(20), 0.25);
+        assert_eq!(r.alive(), vec![0, 1]);
+        // replica 1 goes silent
+        r.heartbeat(0, report(10), 0.5);
+        r.heartbeat(0, report(10), 0.75);
+        assert!(r.sweep(0.75).is_empty(), "0.5s silence < 0.6s TTL");
+        r.heartbeat(0, report(10), 1.0);
+        assert_eq!(r.sweep(1.0), vec![1], "0.75s silence > TTL");
+        assert_eq!(r.alive(), vec![0]);
+        assert!(!r.is_alive(1));
+        assert!(!r.heartbeat(1, report(0), 1.1), "expired lease cannot renew");
+    }
+
+    #[test]
+    fn heartbeat_replaces_optimistic_dispatch_load() {
+        let mut r = InstanceRegistry::new(5.0);
+        r.register(0, 0.0);
+        r.heartbeat(0, report(100), 0.1);
+        r.note_dispatch(0, 512);
+        r.note_dispatch(0, 256);
+        assert_eq!(r.load(0).unwrap().queued_prefill_tokens, 100 + 512 + 256);
+        assert_eq!(r.load(0).unwrap().n_queued, 2);
+        // authoritative report overwrites the optimistic charges
+        r.heartbeat(0, report(300), 0.2);
+        assert_eq!(r.load(0).unwrap().queued_prefill_tokens, 300);
+    }
+
+    #[test]
+    fn meta_event_log_sees_lifecycle() {
+        let mut r = InstanceRegistry::new(0.5);
+        r.register(2, 0.0);
+        r.heartbeat(2, report(0), 0.1);
+        r.sweep(5.0);
+        let (_, events) = r.meta().watch(0);
+        assert_eq!(
+            events,
+            &[MetaEvent::Registered(2), MetaEvent::Updated(2), MetaEvent::Expired(2)]
+        );
+    }
+
+    #[test]
+    fn deregister_is_immediate_and_consistent() {
+        let mut r = InstanceRegistry::new(10.0);
+        r.register(0, 0.0);
+        r.register(1, 0.0);
+        r.deregister(0);
+        assert_eq!(r.alive(), vec![1]);
+        assert!(r.load(0).is_none());
+        assert!(!r.is_alive(0), "load and meta views must agree");
+        assert!(r.meta().get(0).is_none());
+        // a much-later sweep never emits a phantom expiry for 0
+        r.heartbeat(1, report(0), 1.0);
+        assert!(r.sweep(2.0).is_empty());
+        let (_, ev) = r.meta().watch(0);
+        assert!(!ev.contains(&MetaEvent::Expired(0)));
+        assert!(ev.contains(&MetaEvent::Deregistered(0)));
+    }
+}

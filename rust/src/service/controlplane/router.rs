@@ -1,0 +1,331 @@
+//! Cluster-level cache-aware routing (paper §3.4 steps 1–3).
+//!
+//! Generalizes [`kvstore::route`] from a pure function over candidate
+//! structs to the live control plane: candidates are the replicas with a
+//! valid lease in the [`InstanceRegistry`], prefix matching runs against
+//! the [`GlobalPrefixIndex`], and load comes from the heartbeat reports
+//! (plus optimistic dispatch charges).  A `RoundRobin` policy is kept as
+//! the ablation baseline (the Fig 21-style comparison at fleet scope).
+//!
+//! Offline requests get the cross-replica form of the §3.1 elastic
+//! admission: they are steered to replicas whose in-flight work is
+//! mostly offline already (`online_fraction` below the co-location
+//! config's relaxed-pool threshold), keeping latency-strict replicas
+//! clear — the fleet-scope analogue of `colocation::assign_pool`'s
+//! tide rule.
+
+use crate::service::colocation::ColocationConfig;
+use crate::service::controlplane::index::GlobalPrefixIndex;
+use crate::service::controlplane::registry::InstanceRegistry;
+use crate::service::kvstore::{self, hash_chain, prefix_tokens, RouteCandidate, TransferEngine};
+use crate::sim::CostModel;
+use crate::workload::{RequestClass, RequestSpec};
+
+/// Fleet routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Static spray (baseline).
+    RoundRobin,
+    /// The paper's three-step selection: prefix match rate → latency
+    /// estimate (load + hit tier + transfer cost) → optimal node.
+    CacheAware,
+}
+
+/// Read-only context a routing decision consults.
+pub struct RouterCtx<'a> {
+    pub registry: &'a InstanceRegistry,
+    pub index: &'a GlobalPrefixIndex,
+    pub cost: &'a CostModel,
+    pub xfer: &'a TransferEngine,
+    pub coloc: &'a ColocationConfig,
+    /// Chain granularity — must match the replicas' prefix caches.
+    pub block_tokens: u64,
+}
+
+/// Outcome of routing one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteDecision {
+    pub replica: usize,
+    /// Prefix blocks the chosen replica already caches (per the index).
+    pub matched_blocks: usize,
+    /// The offline tide rule narrowed the candidate set.
+    pub offline_steered: bool,
+}
+
+/// The fleet router (owns only the round-robin cursor).
+#[derive(Debug)]
+pub struct FleetRouter {
+    pub policy: RoutePolicy,
+    rr_next: usize,
+}
+
+impl FleetRouter {
+    pub fn new(policy: RoutePolicy) -> FleetRouter {
+        FleetRouter { policy, rr_next: 0 }
+    }
+
+    /// The request's prefix hash chain at the fleet granularity (empty
+    /// for requests with no shared prefix).
+    pub fn chain_for(spec: &RequestSpec, block_tokens: u64) -> Vec<u64> {
+        if spec.shared_prefix == 0 {
+            return Vec::new();
+        }
+        hash_chain(
+            &prefix_tokens(spec.prefix_group, spec.shared_prefix),
+            block_tokens as usize,
+        )
+    }
+
+    /// Route one request; `None` only when no replica holds a lease.
+    pub fn route(&mut self, spec: &RequestSpec, ctx: &RouterCtx) -> Option<RouteDecision> {
+        let alive = ctx.registry.alive();
+        if alive.is_empty() {
+            return None;
+        }
+        let (cands, offline_steered) = offline_candidates(spec, &alive, ctx);
+        let chain = Self::chain_for(spec, ctx.block_tokens);
+        // matched_blocks reports the picked replica's index match under
+        // BOTH policies, so cache-hit accounting is comparable across
+        // the cache-aware/round-robin ablation
+        let (replica, matched_blocks) = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let pick = cands[self.rr_next % cands.len()];
+                self.rr_next += 1;
+                (pick, ctx.index.match_prefix(pick, &chain).0)
+            }
+            RoutePolicy::CacheAware => {
+                let rcs: Vec<RouteCandidate> = cands
+                    .iter()
+                    .map(|&i| {
+                        let (matched_blocks, hit_tier) = ctx.index.match_prefix(i, &chain);
+                        let queued_prefill_tokens = ctx
+                            .registry
+                            .load(i)
+                            .map(|l| l.queued_prefill_tokens)
+                            .unwrap_or(0);
+                        RouteCandidate { instance: i, matched_blocks, hit_tier, queued_prefill_tokens }
+                    })
+                    .collect();
+                let (pick, _) = kvstore::route(
+                    &rcs,
+                    chain.len(),
+                    spec.input_tokens,
+                    ctx.block_tokens,
+                    ctx.cost,
+                    ctx.xfer,
+                )?;
+                let matched = rcs
+                    .iter()
+                    .find(|c| c.instance == pick)
+                    .map(|c| c.matched_blocks)
+                    .unwrap_or(0);
+                (pick, matched)
+            }
+        };
+        Some(RouteDecision { replica, matched_blocks, offline_steered })
+    }
+}
+
+/// The §3.1 tide rule at fleet scope: offline requests prefer replicas
+/// whose in-flight mix is already mostly offline, unless every replica
+/// is latency-busy (then the full set stays eligible).
+fn offline_candidates(
+    spec: &RequestSpec,
+    alive: &[usize],
+    ctx: &RouterCtx,
+) -> (Vec<usize>, bool) {
+    if spec.class == RequestClass::Offline {
+        let relaxed: Vec<usize> = alive
+            .iter()
+            .copied()
+            .filter(|&i| {
+                ctx.registry
+                    .load(i)
+                    .map(|l| l.online_fraction < ctx.coloc.relaxed_idle_threshold)
+                    .unwrap_or(false)
+            })
+            .collect();
+        if !relaxed.is_empty() && relaxed.len() < alive.len() {
+            return (relaxed, true);
+        }
+    }
+    (alive.to_vec(), false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ascend_910b, catalog};
+    use crate::service::controlplane::registry::LoadReport;
+    use crate::service::kvstore::Tier;
+    use crate::sim::EngineFeatures;
+
+    fn cost() -> CostModel {
+        CostModel::new(ascend_910b(), catalog("Qwen3-8B").unwrap(), EngineFeatures::xllm(1))
+    }
+
+    fn setup(n: usize) -> (InstanceRegistry, GlobalPrefixIndex) {
+        let mut reg = InstanceRegistry::new(10.0);
+        for i in 0..n {
+            reg.register(i, 0.0);
+            reg.heartbeat(i, LoadReport { kv_capacity: 1 << 20, ..Default::default() }, 0.0);
+        }
+        (reg, GlobalPrefixIndex::new())
+    }
+
+    fn spec_with_prefix(group: u64) -> RequestSpec {
+        let mut s = RequestSpec::text(0.0, 1024, 16);
+        s.prefix_group = group;
+        s.shared_prefix = 512;
+        s
+    }
+
+    #[test]
+    fn cache_aware_follows_the_prefix() {
+        let (reg, mut ix) = setup(3);
+        let c = cost();
+        let xfer = TransferEngine::default();
+        let coloc = ColocationConfig::default();
+        let spec = spec_with_prefix(7);
+        let chain = FleetRouter::chain_for(&spec, 64);
+        assert!(!chain.is_empty());
+        ix.record(2, &chain);
+        let ctx = RouterCtx {
+            registry: &reg,
+            index: &ix,
+            cost: &c,
+            xfer: &xfer,
+            coloc: &coloc,
+            block_tokens: 64,
+        };
+        let mut router = FleetRouter::new(RoutePolicy::CacheAware);
+        let d = router.route(&spec, &ctx).unwrap();
+        assert_eq!(d.replica, 2, "the replica caching the prefix must win");
+        assert_eq!(d.matched_blocks, chain.len());
+    }
+
+    #[test]
+    fn cache_aware_abandons_an_overloaded_hit() {
+        let (mut reg, mut ix) = setup(2);
+        let c = cost();
+        let xfer = TransferEngine::default();
+        let coloc = ColocationConfig::default();
+        let spec = spec_with_prefix(3);
+        let chain = FleetRouter::chain_for(&spec, 64);
+        ix.record(1, &chain);
+        // replica 1 holds the prefix but is buried in queued prefill
+        reg.heartbeat(
+            1,
+            LoadReport { queued_prefill_tokens: 5_000_000, ..Default::default() },
+            0.1,
+        );
+        let ctx = RouterCtx {
+            registry: &reg,
+            index: &ix,
+            cost: &c,
+            xfer: &xfer,
+            coloc: &coloc,
+            block_tokens: 64,
+        };
+        let d = FleetRouter::new(RoutePolicy::CacheAware).route(&spec, &ctx).unwrap();
+        assert_eq!(d.replica, 0, "a huge queue outweighs the prefix hit");
+        assert_eq!(d.matched_blocks, 0);
+    }
+
+    #[test]
+    fn round_robin_sprays_in_order() {
+        let (reg, ix) = setup(3);
+        let c = cost();
+        let xfer = TransferEngine::default();
+        let coloc = ColocationConfig::default();
+        let ctx = RouterCtx {
+            registry: &reg,
+            index: &ix,
+            cost: &c,
+            xfer: &xfer,
+            coloc: &coloc,
+            block_tokens: 64,
+        };
+        let mut router = FleetRouter::new(RoutePolicy::RoundRobin);
+        let spec = RequestSpec::text(0.0, 256, 8);
+        let picks: Vec<usize> =
+            (0..6).map(|_| router.route(&spec, &ctx).unwrap().replica).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn offline_steers_to_relaxed_replicas() {
+        let (mut reg, ix) = setup(3);
+        // replica 0/1 busy with online work, replica 2 mostly offline
+        for (i, frac) in [(0usize, 0.9), (1, 0.8), (2, 0.1)] {
+            reg.heartbeat(
+                i,
+                LoadReport { online_fraction: frac, ..Default::default() },
+                0.1,
+            );
+        }
+        let c = cost();
+        let xfer = TransferEngine::default();
+        let coloc = ColocationConfig::default(); // relaxed_idle_threshold 0.5
+        let ctx = RouterCtx {
+            registry: &reg,
+            index: &ix,
+            cost: &c,
+            xfer: &xfer,
+            coloc: &coloc,
+            block_tokens: 64,
+        };
+        let offline = RequestSpec::text(0.0, 512, 32).offline();
+        let d = FleetRouter::new(RoutePolicy::CacheAware).route(&offline, &ctx).unwrap();
+        assert_eq!(d.replica, 2);
+        assert!(d.offline_steered);
+        // an online request is NOT narrowed
+        let online = RequestSpec::text(0.0, 512, 32);
+        let d = FleetRouter::new(RoutePolicy::CacheAware).route(&online, &ctx).unwrap();
+        assert!(!d.offline_steered);
+    }
+
+    #[test]
+    fn no_leases_means_no_route() {
+        let reg = InstanceRegistry::new(1.0);
+        let ix = GlobalPrefixIndex::new();
+        let c = cost();
+        let xfer = TransferEngine::default();
+        let coloc = ColocationConfig::default();
+        let ctx = RouterCtx {
+            registry: &reg,
+            index: &ix,
+            cost: &c,
+            xfer: &xfer,
+            coloc: &coloc,
+            block_tokens: 64,
+        };
+        let spec = RequestSpec::text(0.0, 64, 4);
+        assert_eq!(FleetRouter::new(RoutePolicy::CacheAware).route(&spec, &ctx), None);
+    }
+
+    #[test]
+    fn hit_tier_breaks_otherwise_equal_candidates() {
+        let (reg, mut ix) = setup(2);
+        let c = cost();
+        let xfer = TransferEngine::default();
+        let coloc = ColocationConfig::default();
+        let spec = spec_with_prefix(9);
+        let chain = FleetRouter::chain_for(&spec, 64);
+        // both replicas hold the full chain, but replica 1 holds it hot
+        let cold: Vec<(u64, Tier)> = chain.iter().map(|&h| (h, Tier::Ssd)).collect();
+        let hot: Vec<(u64, Tier)> = chain.iter().map(|&h| (h, Tier::Hbm)).collect();
+        ix.publish(0, &cold);
+        ix.publish(1, &hot);
+        let ctx = RouterCtx {
+            registry: &reg,
+            index: &ix,
+            cost: &c,
+            xfer: &xfer,
+            coloc: &coloc,
+            block_tokens: 64,
+        };
+        let d = FleetRouter::new(RoutePolicy::CacheAware).route(&spec, &ctx).unwrap();
+        assert_eq!(d.replica, 1, "HBM-resident prefix beats SSD staging");
+    }
+}

@@ -27,6 +27,14 @@ pub enum Tier {
     Ssd = 2,
 }
 
+/// Synthetic token stream for a shared prompt prefix: group `g`, token
+/// position `t` maps to `(g << 16) | t`.  Both the orchestrator's local
+/// prefix cache and the control plane's global index derive chains from
+/// this, so a request hashes identically wherever it is routed.
+pub fn prefix_tokens(group: u64, len: u64) -> Vec<u32> {
+    (0..len as u32).map(|t| ((group as u32) << 16) | t).collect()
+}
+
 /// Rolling hash chain over token blocks: hash[i] covers tokens
 /// [0, (i+1)*block) — a prefix identity, so equal chains = equal prefixes.
 pub fn hash_chain(tokens: &[u32], block_tokens: usize) -> Vec<u64> {
@@ -242,6 +250,15 @@ impl TieredCache {
         self.used_blocks[tier as usize] * self.block_tokens
     }
 
+    /// Chain summary for the control plane's global prefix index: every
+    /// resident block hash with its tier, sorted by hash for a
+    /// deterministic publish order.
+    pub fn summary(&self) -> Vec<(u64, Tier)> {
+        let mut out: Vec<(u64, Tier)> = self.blocks.iter().map(|(h, m)| (*h, m.tier)).collect();
+        out.sort_unstable();
+        out
+    }
+
     /// Invariant check: occupancy counters match block table; HBM⊆DRAM is
     /// modelled by HBM blocks counting toward DRAM occupancy.
     pub fn check_invariants(&self) -> Result<(), String> {
@@ -316,7 +333,10 @@ pub struct RouteCandidate {
 /// Cache-aware routing decision (paper §3.4, steps 1–3).
 ///
 /// Estimated latency = queueing + prefill of the *missing* suffix +
-/// staging the matched prefix from its tier.
+/// staging the matched prefix from its tier.  Equal-score candidates
+/// resolve to the lowest instance id, so routing is reproducible
+/// regardless of candidate ordering (the control plane's golden-seed
+/// runs depend on this).
 pub fn route(
     candidates: &[RouteCandidate],
     chain_len: usize,
@@ -327,7 +347,6 @@ pub fn route(
 ) -> Option<(usize, f64)> {
     candidates
         .iter()
-        .filter(|c| true_candidate(c))
         .map(|c| {
             let matched_tokens = (c.matched_blocks as u64 * block_tokens).min(input_tokens);
             let missing = input_tokens - matched_tokens;
@@ -341,11 +360,11 @@ pub fn route(
             let _ = chain_len;
             (c.instance, queue_s + prefill + stage)
         })
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-}
-
-fn true_candidate(_c: &RouteCandidate) -> bool {
-    true
+        .min_by(|a, b| {
+            a.1.partial_cmp(&b.1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.0.cmp(&b.0))
+        })
 }
 
 #[cfg(test)]
@@ -458,12 +477,103 @@ mod tests {
     }
 
     #[test]
+    fn prefix_tokens_are_group_disjoint() {
+        let a = prefix_tokens(1, 64);
+        let b = prefix_tokens(2, 64);
+        assert_eq!(a.len(), 64);
+        assert!(a.iter().all(|t| !b.contains(t)), "groups must not collide");
+        assert_ne!(hash_chain(&a, 16), hash_chain(&b, 16));
+        assert_eq!(hash_chain(&a, 16), hash_chain(&prefix_tokens(1, 64), 16));
+    }
+
+    #[test]
+    fn summary_reports_resident_blocks_sorted() {
+        let mut c = cache();
+        c.insert(9, Tier::Dram);
+        c.insert(3, Tier::Hbm);
+        c.insert(7, Tier::Ssd);
+        let s = c.summary();
+        assert_eq!(s, vec![(3, Tier::Hbm), (7, Tier::Ssd), (9, Tier::Dram)]);
+    }
+
+    #[test]
+    fn routing_ties_resolve_to_lowest_instance_id() {
+        let cost = CostModel::new(
+            ascend_910b(),
+            catalog("Qwen3-8B").unwrap(),
+            EngineFeatures::xllm(1),
+        );
+        let xfer = TransferEngine::default();
+        let cand = |i| RouteCandidate {
+            instance: i,
+            matched_blocks: 8,
+            hit_tier: Some(Tier::Dram),
+            queued_prefill_tokens: 512,
+        };
+        // identical state in every order: the pick must always be the
+        // lowest instance id
+        let orders: [[usize; 3]; 3] = [[5, 2, 9], [9, 5, 2], [2, 9, 5]];
+        for order in orders {
+            let cands: Vec<RouteCandidate> = order.iter().map(|&i| cand(i)).collect();
+            let (pick, _) = route(&cands, 8, 1024, 16, &cost, &xfer).unwrap();
+            assert_eq!(pick, 2, "tie must break to lowest id, got {pick} for {order:?}");
+        }
+    }
+
+    #[test]
     fn transfer_engine_ordering() {
         let x = TransferEngine::default();
         let b = 1e9;
         assert!(x.load_to_hbm_s(Tier::Hbm, b) == 0.0);
         assert!(x.load_to_hbm_s(Tier::Dram, b) < x.load_to_hbm_s(Tier::Ssd, b));
         assert!(x.migrate_s(b) > 0.0);
+    }
+
+    #[test]
+    fn property_chain_churn_keeps_invariants() {
+        // hammer insert_chain / match_prefix / eviction on undersized
+        // caches: the occupancy invariants must hold after every op, and
+        // a matched prefix must never exceed what was inserted
+        crate::testutil::check("kv-chain-churn", 96, |rng| {
+            let block = 8u64;
+            let mut c = TieredCache::new(
+                block,
+                block * rng.range(1, 6),
+                block * rng.range(2, 10),
+                block * rng.range(2, 10),
+            );
+            for _ in 0..200 {
+                let group = rng.range(0, 5);
+                let blocks = rng.range(1, 12);
+                let tokens = prefix_tokens(group, blocks * block);
+                let chain = hash_chain(&tokens, block as usize);
+                match rng.range(0, 2) {
+                    0 => {
+                        let tier = match rng.range(0, 2) {
+                            0 => Tier::Hbm,
+                            1 => Tier::Dram,
+                            _ => Tier::Ssd,
+                        };
+                        c.insert_chain(&chain, tier);
+                    }
+                    1 => {
+                        let (n, tier) = c.match_prefix(&chain);
+                        crate::prop_assert!(n <= chain.len(), "matched past the chain");
+                        crate::prop_assert!(
+                            n == 0 || tier.is_some(),
+                            "match without a tier"
+                        );
+                    }
+                    _ => {
+                        // re-insert a sub-chain at SSD (offload path)
+                        let cut = rng.index(chain.len()) + 1;
+                        c.insert_chain(&chain[..cut], Tier::Ssd);
+                    }
+                }
+                c.check_invariants()?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

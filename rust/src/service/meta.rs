@@ -27,6 +27,9 @@ pub enum MetaEvent {
     Registered(usize),
     Updated(usize),
     Expired(usize),
+    /// Explicit removal by the control plane (clean delete — distinct
+    /// from a lease lapsing).
+    Deregistered(usize),
     CacheIndexUpdated { instance: usize, version: u64 },
 }
 
@@ -82,6 +85,19 @@ impl MetaStore {
             self.events.push(MetaEvent::Expired(*id));
         }
         dead
+    }
+
+    /// Remove an instance without waiting for its lease to lapse (the
+    /// control plane already knows it is gone).  Returns false if the
+    /// instance was not registered.
+    pub fn deregister(&mut self, instance: usize) -> bool {
+        if self.instances.remove(&instance).is_some() {
+            self.cache_versions.remove(&instance);
+            self.events.push(MetaEvent::Deregistered(instance));
+            true
+        } else {
+            false
+        }
     }
 
     /// Publish a new cache-index version for an instance (the aggregated
@@ -158,6 +174,22 @@ mod tests {
         let (_, ev2) = m.watch(off);
         assert_eq!(ev2.len(), 2);
         assert!(matches!(ev2[0], MetaEvent::CacheIndexUpdated { instance: 1, version: 1 }));
+    }
+
+    #[test]
+    fn deregister_removes_without_expiry() {
+        let mut m = MetaStore::new(5.0);
+        m.register(rec(1, 0.0));
+        m.register(rec(2, 0.0));
+        assert!(m.deregister(1));
+        assert!(!m.deregister(1), "already gone");
+        assert_eq!(m.alive(), vec![2]);
+        // no spurious Expired for a deregistered instance
+        let dead = m.sweep(100.0);
+        assert_eq!(dead, vec![2]);
+        let (_, ev) = m.watch(0);
+        assert!(ev.contains(&MetaEvent::Deregistered(1)));
+        assert!(!ev.contains(&MetaEvent::Expired(1)));
     }
 
     #[test]

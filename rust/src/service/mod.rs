@@ -1,21 +1,30 @@
 //! xLLM-Service (paper §3): cluster-level scheduling and management.
 //!
-//! * [`colocation`] — online-offline co-location policy (§3.1).
-//! * [`epd`]        — hybrid Encode-Prefill-Decode disaggregation (§3.3);
+//! * [`colocation`]   — online-offline co-location policy (§3.1).
+//! * [`epd`]          — hybrid Encode-Prefill-Decode disaggregation (§3.3);
 //!   the dynamic PD disaggregation policy (§3.2) lives in
 //!   `coordinator::scheduler` + `coordinator::pools`.
-//! * [`kvstore`]    — global multi-level KV cache management (§3.4).
-//! * [`meta`]       — the ETCD-substitute metadata service (§3.4).
-//! * [`fault`]      — fast fault recovery (§3.5).
+//! * [`kvstore`]      — global multi-level KV cache management (§3.4).
+//! * [`meta`]         — the ETCD-substitute metadata service (§3.4).
+//! * [`fault`]        — fast fault recovery (§3.5).
+//! * [`controlplane`] — the distributed control plane composing the
+//!   above across N orchestrator replicas: instance registry with
+//!   heartbeat leases, global prefix-cache index, cache-aware routing,
+//!   and lease-expiry failover with re-dispatch (§3.4–§3.5).
 
 pub mod colocation;
+pub mod controlplane;
 pub mod epd;
 pub mod fault;
 pub mod kvstore;
 pub mod meta;
 
 pub use colocation::{ColocationConfig, PoolChoice};
+pub use controlplane::{
+    ControlCounters, ControlPlane, ControlPlaneConfig, FleetResult, GlobalPrefixIndex,
+    InstanceRegistry, LoadReport, RoutePolicy,
+};
 pub use epd::{EpdProfile, EpdStrategy};
 pub use fault::{FailureDetector, RecoveryAction};
-pub use kvstore::{hash_chain, Tier, TieredCache, TransferEngine};
+pub use kvstore::{hash_chain, prefix_tokens, Tier, TieredCache, TransferEngine};
 pub use meta::{MetaEvent, MetaStore};

@@ -75,6 +75,12 @@ impl<E> EventQueue<E> {
         self.schedule_at(self.now + delay.max(0.0), event);
     }
 
+    /// Timestamp of the next event without popping it (control-plane
+    /// drivers interleave several queues by comparing heads).
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.time)
+    }
+
     /// Pop the next event, advancing the clock.
     pub fn next(&mut self) -> Option<(SimTime, E)> {
         self.heap.pop().map(|e| {
@@ -133,6 +139,18 @@ mod tests {
         assert_eq!(q.now(), 5.0);
         q.schedule_in(2.5, 2u32);
         assert_eq!(q.next().unwrap(), (7.5, 2u32));
+    }
+
+    #[test]
+    fn peek_does_not_advance() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.schedule_at(2.0, "b");
+        q.schedule_at(1.0, "a");
+        assert_eq!(q.peek_time(), Some(1.0));
+        assert_eq!(q.now(), 0.0, "peek must not advance the clock");
+        assert_eq!(q.next().unwrap(), (1.0, "a"));
+        assert_eq!(q.peek_time(), Some(2.0));
     }
 
     #[test]

@@ -91,8 +91,9 @@ impl ClusterConfig {
         }
     }
 
-    /// Split into the executor-agnostic orchestrator configuration.
-    fn orchestrator_config(&self) -> OrchestratorConfig {
+    /// Split into the executor-agnostic orchestrator configuration
+    /// (also used by `sim::fleet` to stamp out per-replica clusters).
+    pub fn orchestrator_config(&self) -> OrchestratorConfig {
         OrchestratorConfig {
             n_instances: self.n_instances,
             n_encode: self.n_encode,
@@ -107,6 +108,7 @@ impl ClusterConfig {
             monitor_interval_s: self.monitor_interval_s,
             prefix_cache: self.prefix_cache,
             max_events: self.max_events,
+            ..OrchestratorConfig::default()
         }
     }
 }
@@ -339,7 +341,7 @@ mod debug_tests {
             );
             let sim = ClusterSim::new(cfg);
             let res = sim.run(w.clone());
-            let mut e2e = res.report.e2e_summary();
+            let e2e = res.report.e2e_summary();
             println!(
                 "n={} tput={:.0} iters={} completed={} mean_e2e={:.2} p99_ttft={:.2} per_inst={:?}",
                 n,

@@ -1,0 +1,136 @@
+//! Multi-replica fleet simulation: N roofline clusters under one
+//! control plane.
+//!
+//! [`FleetConfig`] stamps `n_replicas` copies of a [`ClusterConfig`]
+//! template (each replica is a full orchestrator over its own
+//! [`RooflineExecutor`], with `template.n_instances` engine instances)
+//! and wires them into a [`ControlPlane`] — the first configuration in
+//! the repo where traffic is served across more than one engine.  This
+//! is the fleet-scope analogue of `sim::cluster::run`: paper-shaped
+//! experiments (cache-aware vs round-robin routing, replica failure
+//! mid-run) are configurations of this driver plus a scenario from
+//! `workload::scenarios` (e.g. `skewed-prefix`).
+
+use crate::service::controlplane::{ControlPlane, ControlPlaneConfig, FleetResult, RoutePolicy};
+use crate::sim::cluster::ClusterConfig;
+use crate::sim::executor::RooflineExecutor;
+use crate::sim::roofline::CostModel;
+use crate::workload::RequestSpec;
+
+pub use crate::coordinator::orchestrator::Orchestrator;
+
+/// Fleet configuration: a per-replica cluster template + control-plane
+/// policy.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Per-replica cluster (hardware, model, features, serving mode,
+    /// instance count, prefix cache, seed).
+    pub template: ClusterConfig,
+    pub n_replicas: usize,
+    pub routing: RoutePolicy,
+    pub heartbeat_s: f64,
+    pub lease_ttl_s: f64,
+    /// Whole-replica crash injections: (time, replica).
+    pub replica_faults: Vec<(f64, usize)>,
+}
+
+impl FleetConfig {
+    pub fn new(template: ClusterConfig, n_replicas: usize) -> FleetConfig {
+        // policy defaults come from the control plane, not re-hardcoded
+        let d = ControlPlaneConfig::default();
+        FleetConfig {
+            template,
+            n_replicas,
+            routing: d.routing,
+            heartbeat_s: d.heartbeat_s,
+            lease_ttl_s: d.lease_ttl_s,
+            replica_faults: Vec::new(),
+        }
+    }
+
+    fn control_plane_config(&self) -> ControlPlaneConfig {
+        ControlPlaneConfig {
+            routing: self.routing,
+            heartbeat_s: self.heartbeat_s,
+            lease_ttl_s: self.lease_ttl_s,
+            replica_faults: self.replica_faults.clone(),
+            block_tokens: self.template.orchestrator_config().prefix_block_tokens,
+            colocation: self
+                .template
+                .colocation
+                .map(|(_, c)| c)
+                .unwrap_or_default(),
+            ..ControlPlaneConfig::default()
+        }
+    }
+}
+
+/// Build the replicas and run the workload through the control plane.
+pub fn run_fleet(cfg: FleetConfig, workload: Vec<RequestSpec>) -> FleetResult {
+    let replicas: Vec<Orchestrator<RooflineExecutor>> = (0..cfg.n_replicas)
+        .map(|i| {
+            let t = &cfg.template;
+            let cost = CostModel::new(t.hw.clone(), t.model.clone(), t.features.clone());
+            // per-replica seed offset keeps speculative draws independent
+            let executor = RooflineExecutor::new(cost, t.spec, t.seed.wrapping_add(i as u64));
+            Orchestrator::new(t.orchestrator_config(), executor)
+        })
+        .collect();
+    ControlPlane::new(cfg.control_plane_config(), replicas).run(workload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ascend_910b, catalog};
+    use crate::sim::EngineFeatures;
+    use crate::util::Rng;
+    use crate::workload::scenario;
+
+    fn template(n_instances: usize) -> ClusterConfig {
+        let mut cfg = ClusterConfig::new(
+            n_instances,
+            ascend_910b(),
+            catalog("Qwen3-8B").unwrap(),
+            EngineFeatures::xllm(1),
+        );
+        cfg.prefix_cache = true;
+        cfg
+    }
+
+    #[test]
+    fn fleet_serves_a_scenario_end_to_end() {
+        let mut rng = Rng::new(21);
+        let w = scenario("skewed-prefix").unwrap().generate(20.0, 2.0, &mut rng);
+        let n = w.len();
+        let res = run_fleet(FleetConfig::new(template(1), 3), w);
+        assert!(res.all_accounted());
+        assert_eq!(res.report.n_completed(), n);
+        assert!(res.prefix_hits() > 0, "skewed prefixes must hit the caches");
+        assert!(res.counters.routed_by_cache_hit > 0);
+        assert!(!res.truncated);
+    }
+
+    #[test]
+    fn offline_traffic_is_steered_across_replicas() {
+        // constructed so the heartbeat after t=0 sees one offline-only
+        // replica and two online-busy replicas: the offline arrival at
+        // t=0.4 must then be narrowed to the relaxed replica (§3.1
+        // tide rule at fleet scope)
+        let w = vec![
+            RequestSpec::text(0.0, 4096, 512).offline(), // lands on the least-loaded (one replica)
+            RequestSpec::text(0.05, 2048, 1024),         // online pins a second replica
+            RequestSpec::text(0.10, 2048, 1024),         // online pins the third
+            RequestSpec::text(0.40, 2048, 256).offline(), // must steer to the offline replica
+        ];
+        let n = w.len();
+        let res = run_fleet(FleetConfig::new(template(1), 3), w);
+        assert!(res.all_accounted());
+        assert_eq!(res.report.n_completed(), n);
+        assert!(
+            res.counters.offline_steered > 0,
+            "mixed load must trigger the cross-replica tide rule: {:?}",
+            res.counters
+        );
+    }
+}

@@ -8,12 +8,17 @@
 //!   backend for the shared serving orchestrator.
 //! * [`cluster`] — cluster configuration wiring the orchestrator +
 //!   roofline executor into a multi-instance simulation.
+//! * [`fleet`] — N replica clusters under one
+//!   [`crate::service::controlplane::ControlPlane`] (registry, global
+//!   prefix index, cache-aware routing, failover).
 
 pub mod clock;
 pub mod cluster;
 pub mod executor;
+pub mod fleet;
 pub mod roofline;
 
 pub use clock::{EventQueue, SimTime};
 pub use executor::RooflineExecutor;
+pub use fleet::{run_fleet, FleetConfig};
 pub use roofline::{Bound, CostModel, EngineFeatures, GraphMode, StepBreakdown};

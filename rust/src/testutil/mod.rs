@@ -1,11 +1,17 @@
-//! Mini property-testing harness.
+//! Mini property-testing harness + shared test fixtures.
 //!
 //! The offline crate set has no `proptest`, so this module provides the
 //! same methodology in ~100 lines: run a property over many seeded random
 //! cases and report the first failing seed (re-runnable deterministically).
 //! Used by the coordinator/engine invariant tests (routing, batching,
-//! paging, beam search).
+//! paging, beam search).  [`FixedCostExecutor`] is the shared trivial
+//! [`Executor`] backing the orchestrator/control-plane unit tests.
 
+use crate::coordinator::orchestrator::{Executor, IterationWork};
+use crate::coordinator::pools::InstanceId;
+use crate::coordinator::request::RequestId;
+use crate::model::{ascend_910b, catalog};
+use crate::sim::roofline::{CostModel, EngineFeatures};
 use crate::util::Rng;
 
 /// Number of cases per property (kept modest; each case is cheap).
@@ -33,6 +39,47 @@ where
     F: FnMut(&mut Rng) -> Result<(), String>,
 {
     check(name, DEFAULT_CASES, prop);
+}
+
+/// A trivial fixed-cost [`Executor`]: every planned iteration takes
+/// `step_s` and each decode emits one token.  Proves the lifecycle runs
+/// with no roofline model and no PJRT runtime behind it; the public
+/// counters let tests assert the orchestrator↔executor contract.
+pub struct FixedCostExecutor {
+    pub cost: CostModel,
+    pub step_s: f64,
+    pub iterations: u64,
+    pub finished: u64,
+}
+
+impl FixedCostExecutor {
+    pub fn new(step_s: f64) -> FixedCostExecutor {
+        FixedCostExecutor {
+            cost: CostModel::new(
+                ascend_910b(),
+                catalog("Qwen3-8B").unwrap(),
+                EngineFeatures::xllm(1),
+            ),
+            step_s,
+            iterations: 0,
+            finished: 0,
+        }
+    }
+}
+
+impl Executor for FixedCostExecutor {
+    fn cost(&self) -> &CostModel {
+        &self.cost
+    }
+
+    fn begin_iteration(&mut self, _instance: InstanceId, _now_s: f64, _work: &IterationWork) -> f64 {
+        self.iterations += 1;
+        self.step_s
+    }
+
+    fn finished(&mut self, _req: RequestId, _now_s: f64) {
+        self.finished += 1;
+    }
 }
 
 /// Assert helper producing `Result` instead of panicking, so properties can

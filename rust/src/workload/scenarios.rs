@@ -227,6 +227,21 @@ pub fn scenario(name: &str) -> Option<Scenario> {
             prefix_len: 0,
             prefix_groups: 0,
         },
+        // Skewed shared-prefix traffic (control-plane experiments,
+        // §3.4): many distinct system prompts, nearly every request
+        // reusing one — the workload where cache-aware routing beats
+        // load-only routing, and the fixture for replica-failure runs.
+        "skewed-prefix" => Scenario {
+            name: "skewed-prefix",
+            arrivals: ArrivalProcess::Poisson { rate: 1.0 },
+            input_len: LengthDist::LogNormal { median: 900.0, sigma: 0.5, lo: 600, hi: 4096 },
+            output_len: LengthDist::LogNormal { median: 120.0, sigma: 0.5, lo: 16, hi: 512 },
+            class: RequestClass::Online,
+            image_patches: 0,
+            prefix_share: 0.9,
+            prefix_len: 512,
+            prefix_groups: 12,
+        },
         // Offline batch analytics (co-location experiments, §3.1/Fig 23).
         "offline-docs" => Scenario {
             name: "offline-docs",
@@ -259,6 +274,7 @@ pub const SCENARIO_NAMES: &[&str] = &[
     "merchant-intent",
     "product-understanding",
     "textcaps",
+    "skewed-prefix",
     "offline-docs",
 ];
 
@@ -312,6 +328,20 @@ mod tests {
         let reqs = scenario("customer-service").unwrap().generate(120.0, 4.0, &mut rng);
         let shared = reqs.iter().filter(|r| r.shared_prefix > 0).count();
         assert!(shared as f64 > 0.6 * reqs.len() as f64, "shared={shared}/{}", reqs.len());
+    }
+
+    #[test]
+    fn skewed_prefix_is_mostly_shared_across_many_groups() {
+        let mut rng = Rng::new(9);
+        let reqs = scenario("skewed-prefix").unwrap().generate(120.0, 4.0, &mut rng);
+        let shared = reqs.iter().filter(|r| r.shared_prefix > 0).count();
+        assert!(shared as f64 > 0.8 * reqs.len() as f64, "shared={shared}/{}", reqs.len());
+        let groups: std::collections::HashSet<u64> =
+            reqs.iter().filter(|r| r.prefix_group > 0).map(|r| r.prefix_group).collect();
+        assert!(groups.len() >= 8, "expected many distinct groups, got {}", groups.len());
+        // inputs always exceed the shared prefix, so a hit never covers
+        // the whole prompt
+        assert!(reqs.iter().all(|r| r.input_tokens > r.shared_prefix));
     }
 
     #[test]

@@ -1,0 +1,104 @@
+//! Control-plane acceptance tests (ISSUE 2): cache-aware routing must
+//! beat round-robin on cluster prefix-hit rate under skewed-prefix
+//! traffic, and a replica killed mid-run must lose no requests — its
+//! in-flight work completes on the survivors with every request
+//! accounted for.
+
+use xllm::model::{ascend_910b, catalog};
+use xllm::service::controlplane::RoutePolicy;
+use xllm::sim::cluster::ClusterConfig;
+use xllm::sim::fleet::{run_fleet, FleetConfig};
+use xllm::sim::EngineFeatures;
+use xllm::util::Rng;
+use xllm::workload::scenario;
+
+fn template() -> ClusterConfig {
+    let mut cfg = ClusterConfig::new(
+        1,
+        ascend_910b(),
+        catalog("Qwen3-8B").unwrap(),
+        EngineFeatures::xllm(1),
+    );
+    cfg.prefix_cache = true;
+    cfg
+}
+
+#[test]
+fn cache_aware_routing_beats_round_robin_on_prefix_hits() {
+    let mut rng = Rng::new(0xFEED);
+    let w = scenario("skewed-prefix").unwrap().generate(40.0, 2.0, &mut rng);
+    let n = w.len();
+    assert!(n > 40, "need a meaningful sample, got {n}");
+
+    let mut aware = FleetConfig::new(template(), 4);
+    aware.routing = RoutePolicy::CacheAware;
+    let mut rr = FleetConfig::new(template(), 4);
+    rr.routing = RoutePolicy::RoundRobin;
+
+    let res_aware = run_fleet(aware, w.clone());
+    let res_rr = run_fleet(rr, w);
+
+    assert_eq!(res_aware.report.n_completed(), n);
+    assert_eq!(res_rr.report.n_completed(), n);
+    assert!(
+        res_aware.prefix_hits() > res_rr.prefix_hits(),
+        "cache-aware routing must achieve a strictly higher cluster \
+         prefix-hit rate: aware={} vs round-robin={} over {n} requests",
+        res_aware.prefix_hits(),
+        res_rr.prefix_hits()
+    );
+    assert!(
+        res_aware.counters.routed_by_cache_hit > 0,
+        "the router must actually observe hits in the global index"
+    );
+}
+
+#[test]
+fn replica_failure_mid_run_loses_no_requests() {
+    let mut rng = Rng::new(0xBEEF);
+    let w = scenario("skewed-prefix").unwrap().generate(30.0, 3.0, &mut rng);
+    let n = w.len();
+
+    let mut cfg = FleetConfig::new(template(), 3);
+    cfg.replica_faults = vec![(10.0, 1)];
+    let res = run_fleet(cfg, w);
+
+    assert!(res.all_accounted(), "{} of {n} accounted", res.report.n_requests());
+    assert_eq!(res.report.n_requests(), n, "every request has an outcome");
+    assert_eq!(
+        res.report.n_completed(),
+        n,
+        "in-flight requests of the dead replica must complete on survivors"
+    );
+    assert_eq!(res.counters.failovers, 1, "exactly one replica died");
+    assert!(res.counters.lease_expiries >= 1, "death detected by lease expiry");
+    assert!(
+        res.counters.redispatched_requests > 0,
+        "the victim had in-flight work at t=10: {:?}",
+        res.counters
+    );
+    assert!(res.counters.unroutable == 0);
+    assert!(!res.truncated);
+    // per-replica reports partition the workload: the victim keeps its
+    // pre-crash completions, survivors absorb the rest
+    let per: usize = res.per_replica.iter().map(|r| r.report.n_requests()).sum();
+    assert_eq!(per, n);
+    assert!(
+        res.per_replica[1].report.n_requests() < n,
+        "the victim cannot have recorded everything"
+    );
+}
+
+#[test]
+fn fleet_scales_over_one_replica_under_load() {
+    // overload one replica, then give the fleet three: mean E2E must
+    // drop substantially (the control plane actually spreads work)
+    let mut rng = Rng::new(0xCAFE);
+    let w = scenario("skewed-prefix").unwrap().generate(10.0, 12.0, &mut rng);
+    let r1 = run_fleet(FleetConfig::new(template(), 1), w.clone());
+    let r3 = run_fleet(FleetConfig::new(template(), 3), w);
+    let e1 = r1.report.e2e_summary().mean();
+    let e3 = r3.report.e2e_summary().mean();
+    assert!(r1.all_accounted() && r3.all_accounted());
+    assert!(e3 < e1 / 1.5, "3 replicas mean E2E {e3} !< {e1}/1.5");
+}
