@@ -130,6 +130,15 @@ impl<X: Executor> Orchestrator<X> {
     /// Schedule a workload without running it (steppable entry point —
     /// the control plane interleaves several replicas' event queues).
     pub fn start(&mut self, workload: Vec<RequestSpec>) {
+        self.start_at(workload, 0.0);
+    }
+
+    /// [`Self::start`] with the local clock pre-advanced to `now_s`.
+    /// A replica spawned mid-run (autoscale-up) must align with fleet
+    /// time first, or its initial monitor tick would fire "in the past"
+    /// relative to every other replica's head event.
+    pub fn start_at(&mut self, workload: Vec<RequestSpec>, now_s: f64) {
+        self.queue.advance_to(now_s);
         self.specs = workload;
         for (i, spec) in self.specs.iter().enumerate() {
             self.queue.schedule_at(spec.arrival_s, Ev::Arrive(i));
@@ -137,8 +146,19 @@ impl<X: Executor> Orchestrator<X> {
         for (t, inst) in self.cfg.faults.clone() {
             self.queue.schedule_at(t, Ev::Fault(inst));
         }
-        self.queue.schedule_at(self.cfg.monitor_interval_s, Ev::Monitor);
+        self.queue.schedule_in(self.cfg.monitor_interval_s, Ev::Monitor);
         self.monitor_live = true;
+    }
+
+    /// Adopt a prefix chain whose KV was migrated here by the control
+    /// plane's *planned* rebalancing (§3.4 proactive movement): the
+    /// blocks land in DRAM per the consistency rule, so subsequent
+    /// arrivals sharing the prefix hit this replica's local cache.
+    /// No-op when the prefix cache is disabled.
+    pub fn adopt_chain(&mut self, chain: &[u64]) {
+        if self.cfg.prefix_cache && !chain.is_empty() {
+            self.prefix_cache.insert_chain(chain, Tier::Dram);
+        }
     }
 
     /// Inject one request after the fact (control-plane routing).  The
@@ -1059,6 +1079,48 @@ mod tests {
             "two in-flight requests must show load: {rep:?}"
         );
         assert!((rep.online_fraction - 0.5).abs() < 1e-9, "1 of 2 in flight is online");
+    }
+
+    #[test]
+    fn start_at_aligns_local_clock_with_fleet_time() {
+        let cfg = OrchestratorConfig { n_instances: 1, ..Default::default() };
+        let mut orch = Orchestrator::new(cfg, FixedCost::new(0.01));
+        orch.start_at(Vec::new(), 12.5);
+        assert_eq!(orch.now(), 12.5);
+        // the first pending event (monitor) fires after fleet time, not
+        // at the replica's local t=0.25
+        let t = orch.next_event_time().expect("monitor scheduled");
+        assert!(t >= 12.5, "first event at {t} predates fleet time");
+        orch.submit_at(RequestSpec::text(0.0, 64, 4), 13.0);
+        while orch.step() {}
+        let (res, _) = orch.finish();
+        assert_eq!(res.report.n_completed(), 1);
+        let o = res.report.outcomes[0];
+        assert!(o.finish_s >= 13.0, "work cannot run before fleet time");
+    }
+
+    #[test]
+    fn adopted_chain_hits_the_local_cache() {
+        let spec = {
+            let mut s = RequestSpec::text(0.0, 1024, 4);
+            s.prefix_group = 3;
+            s.shared_prefix = 512;
+            s
+        };
+        let cfg = OrchestratorConfig { n_instances: 1, prefix_cache: true, ..Default::default() };
+        let chain = hash_chain(
+            &prefix_tokens(spec.prefix_group, spec.shared_prefix),
+            cfg.prefix_block_tokens as usize,
+        );
+        // cold replica: the first request misses
+        let (cold, _) = Orchestrator::new(cfg.clone(), FixedCost::new(0.01)).run(vec![spec]);
+        assert_eq!(cold.prefix_hits, 0);
+        // adopted chain (planned migration landed here): the same first
+        // request now hits
+        let mut orch = Orchestrator::new(cfg, FixedCost::new(0.01));
+        orch.adopt_chain(&chain);
+        let (warm, _) = orch.run(vec![spec]);
+        assert_eq!(warm.prefix_hits, 1, "migrated KV must serve the prefix");
     }
 
     #[test]

@@ -25,9 +25,10 @@
 //! * [`service`] — xLLM-Service policies (colocation, EPD, fault, KV
 //!   store) and the distributed **control plane**
 //!   ([`service::controlplane`]): instance registry with heartbeat
-//!   leases, global prefix-cache index, cache-aware routing, and
-//!   failover across N orchestrator replicas (see DESIGN.md
-//!   §Control-Plane).
+//!   leases, global prefix-cache index, cache-aware routing, failover
+//!   across N orchestrator replicas, and the elastic **fleet scaler**
+//!   (replica autoscaling + planned cross-replica KV rebalancing; see
+//!   DESIGN.md §Control-Plane).
 //! * [`engine`] — xLLM-Engine optimizations (xtensor, specdecode, EPLB,
 //!   DP balance, pipeline, genrec).
 //! * [`sim`] — event clock, roofline cost model, the roofline `Executor`,

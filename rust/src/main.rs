@@ -7,6 +7,9 @@
 //! xllm fleet    --replicas 3 --instances 1 --scenario skewed-prefix \
 //!               --rate 2.0 --horizon 40 --routing cache-aware \
 //!               --fail-replica 0 --fail-at 10
+//! xllm fleet    --scenario tide --rate 6 --horizon 40 --replicas 1 \
+//!               --autoscale --capacity-target 4096 --min-replicas 1 \
+//!               --max-replicas 6
 //! xllm models | scenarios | info
 //! ```
 
@@ -197,7 +200,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_fleet(args: &Args) -> Result<()> {
-    use xllm::service::controlplane::RoutePolicy;
+    use xllm::service::controlplane::{RoutePolicy, ScalerConfig};
     use xllm::sim::fleet::{run_fleet, FleetConfig};
 
     let scenario_name = args.get_or("scenario", "skewed-prefix");
@@ -223,6 +226,17 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     if fail_at.is_finite() {
         cfg.replica_faults.push((fail_at, args.get_u64("fail-replica", 0) as usize));
     }
+    if args.has_flag("autoscale") {
+        let d = ScalerConfig::default();
+        cfg.scaler = Some(ScalerConfig {
+            capacity_target_tokens: args
+                .get_u64("capacity-target", d.capacity_target_tokens),
+            min_replicas: args.get_u64("min-replicas", 1) as usize,
+            max_replicas: args.get_u64("max-replicas", d.max_replicas as u64) as usize,
+            cooldown_s: args.get_f64("cooldown", d.cooldown_s),
+            hot_prefix_routes: args.get_u64("hot-prefix-routes", d.hot_prefix_routes),
+        });
+    }
 
     let mut rng = Rng::new(args.get_u64("seed", 7));
     let workload = sc.generate(horizon, rate, &mut rng);
@@ -237,6 +251,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         .set("completed", report.n_completed())
         .set("output_tok_s", report.output_throughput())
         .set("mean_ttft_s", report.ttft_summary().mean())
+        .set("p99_ttft_s", report.ttft_summary().percentile(99.0))
         .set("mean_e2e_s", report.e2e_summary().mean())
         .set("cluster_prefix_hits", res.per_replica.iter().map(|r| r.prefix_hits).sum::<u64>())
         .set("routed_by_cache_hit", res.counters.routed_by_cache_hit)
@@ -245,6 +260,11 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         .set("redispatched_tokens", res.counters.redispatched_tokens)
         .set("offline_steered", res.counters.offline_steered)
         .set("unroutable", res.counters.unroutable)
+        .set("scale_ups", res.counters.scale_ups)
+        .set("scale_downs", res.counters.scale_downs)
+        .set("kv_rebalances", res.counters.kv_rebalances)
+        .set("replicas_final", res.n_replicas_final)
+        .set("replicas_total", res.per_replica.len())
         .set("truncated", res.truncated);
     println!("{}", out.to_string());
     Ok(())

@@ -29,36 +29,42 @@
 pub mod index;
 pub mod registry;
 pub mod router;
+pub mod scaler;
 
 pub use index::GlobalPrefixIndex;
 pub use registry::{InstanceRegistry, LoadReport};
 pub use router::{FleetRouter, RouteDecision, RoutePolicy, RouterCtx};
+pub use scaler::{FleetScaler, ScaleAction, ScalerConfig};
 
 use std::cmp::Ordering;
 
 use crate::coordinator::orchestrator::{
-    Executor, Orchestrator, RunResult, DEFAULT_MAX_EVENTS, DEFAULT_PREFIX_BLOCK_TOKENS,
+    Executor, InFlightSnapshot, Orchestrator, RunResult, DEFAULT_MAX_EVENTS,
+    DEFAULT_PREFIX_BLOCK_TOKENS,
 };
 use crate::metrics::{RequestOutcome, ServingReport};
 use crate::service::colocation::ColocationConfig;
 use crate::service::fault::{plan_recovery, InterruptedRequest, RecoveryAction};
-use crate::service::kvstore::TransferEngine;
+use crate::service::kvstore::{Tier, TransferEngine};
 use crate::sim::clock::EventQueue;
 use crate::sim::CostModel;
 use crate::workload::RequestSpec;
 
 /// Control-plane events (the cluster-scope queue; replicas keep their
 /// own per-replica queues).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 enum CtlEv {
     /// Global request `workload[i]` arrives and must be routed.
     Arrive(usize),
     /// Periodic heartbeat: replicas publish load + cache summaries,
-    /// then lapsed leases are swept.
+    /// lapsed leases are swept, and the elastic scaler takes its tick.
     Heartbeat,
     /// Whole-replica crash injection: the replica stops executing and
     /// stops heartbeating; detection happens via lease expiry.
     Fault(usize),
+    /// A planned KV rebalance finished staging: the chain lands on the
+    /// target replica (global index + local cache adoption).
+    RebalanceDone { to: usize, chain: Vec<u64> },
 }
 
 /// Control-plane configuration.
@@ -79,6 +85,9 @@ pub struct ControlPlaneConfig {
     pub colocation: ColocationConfig,
     /// Transfer-cost model for routing and failover decisions.
     pub xfer: TransferEngine,
+    /// Elastic fleet scaling + planned KV rebalancing (None = fixed
+    /// fleet, the pre-scaler behavior).
+    pub scaler: Option<ScalerConfig>,
     /// Cap on control-plane scheduling turns (safety net).
     pub max_events: u64,
 }
@@ -93,6 +102,7 @@ impl Default for ControlPlaneConfig {
             block_tokens: DEFAULT_PREFIX_BLOCK_TOKENS,
             colocation: ColocationConfig::default(),
             xfer: TransferEngine::default(),
+            scaler: None,
             max_events: DEFAULT_MAX_EVENTS,
         }
     }
@@ -120,6 +130,16 @@ pub struct ControlCounters {
     pub unroutable: u64,
     pub heartbeats: u64,
     pub lease_expiries: u64,
+    /// Replicas spawned by the elastic scaler.
+    pub scale_ups: u64,
+    /// Replicas gracefully decommissioned by the elastic scaler
+    /// (drained + re-dispatched; distinct from `failovers`).
+    pub scale_downs: u64,
+    /// Planned cross-replica KV migrations of hot prefix chains (§3.4
+    /// proactive movement; distinct from failover `redispatch_migrations`).
+    pub kv_rebalances: u64,
+    /// Total staging + transfer time charged for planned rebalances.
+    pub rebalance_staging_s: f64,
 }
 
 /// Aggregated fleet run output.
@@ -134,6 +154,9 @@ pub struct FleetResult {
     /// Requests submitted to the control plane (re-dispatches are not
     /// double-counted).
     pub submitted: usize,
+    /// Replicas still live when the run finished (after autoscaling;
+    /// `per_replica.len()` is every replica that ever existed).
+    pub n_replicas_final: usize,
     /// The control plane or any replica hit its event cap.
     pub truncated: bool,
 }
@@ -173,6 +196,11 @@ pub struct ControlPlane<X: Executor> {
     counters: ControlCounters,
     /// Failed outcomes for requests no replica could take.
     lost: ServingReport,
+    /// Elastic-scaling policy (built from `cfg.scaler`).
+    scaler: Option<FleetScaler>,
+    /// Factory for scale-up replicas (`id -> fresh orchestrator`); without
+    /// one the scaler can still decommission but never spawn.
+    spawner: Option<Box<dyn FnMut(usize) -> Orchestrator<X>>>,
 }
 
 impl<X: Executor> ControlPlane<X> {
@@ -181,6 +209,7 @@ impl<X: Executor> ControlPlane<X> {
         let cost = replicas[0].executor().cost().clone();
         let router = FleetRouter::new(cfg.routing);
         let registry = InstanceRegistry::new(cfg.lease_ttl_s);
+        let scaler = cfg.scaler.map(FleetScaler::new);
         let replicas = replicas
             .into_iter()
             .map(|mut orch| {
@@ -199,7 +228,22 @@ impl<X: Executor> ControlPlane<X> {
             cost,
             counters: ControlCounters::default(),
             lost: ServingReport::new(),
+            scaler,
+            spawner: None,
         }
+    }
+
+    /// Install the replica factory the scaler uses for scale-up.  The
+    /// factory gets the new replica's id and returns an orchestrator that
+    /// has NOT been started (the control plane aligns its clock with
+    /// fleet time and registers it; it becomes routable after its first
+    /// heartbeat).
+    pub fn with_spawner(
+        mut self,
+        f: impl FnMut(usize) -> Orchestrator<X> + 'static,
+    ) -> ControlPlane<X> {
+        self.spawner = Some(Box::new(f));
+        self
     }
 
     /// Serve the workload across the fleet to completion.
@@ -214,6 +258,11 @@ impl<X: Executor> ControlPlane<X> {
         for r in 0..self.replicas.len() {
             self.registry.register(r, 0.0);
         }
+        // initial report sync: registration alone does not grant
+        // liveness (a never-heartbeated replica must not be routable),
+        // so the starting fleet publishes its first reports at t=0
+        // before any arrival can be routed
+        self.publish_reports(0.0);
         self.clock.schedule_at(self.cfg.heartbeat_s, CtlEv::Heartbeat);
 
         let mut turns = 0u64;
@@ -273,6 +322,16 @@ impl<X: Executor> ControlPlane<X> {
                 }
             }
             CtlEv::Heartbeat => self.on_heartbeat(t),
+            CtlEv::RebalanceDone { to, chain } => {
+                // staging finished: the chain is now resident on the
+                // target (skip if it died while the transfer ran)
+                if self.replicas.get(to).map(|r| r.orch.is_some()).unwrap_or(false) {
+                    self.index.record(to, &chain);
+                    if let Some(orch) = self.replicas[to].orch.as_mut() {
+                        orch.adopt_chain(&chain);
+                    }
+                }
+            }
         }
     }
 
@@ -338,6 +397,9 @@ impl<X: Executor> ControlPlane<X> {
         if !chain.is_empty() {
             // optimistic: the target caches this chain on admit
             self.index.record(d.replica, &chain);
+            if let Some(s) = self.scaler.as_mut() {
+                s.note_route(&chain, d.replica);
+            }
         }
         self.registry.note_dispatch(d.replica, spec.input_tokens);
         self.replicas[d.replica]
@@ -347,8 +409,10 @@ impl<X: Executor> ControlPlane<X> {
             .submit_at(spec, earliest_s);
     }
 
-    fn on_heartbeat(&mut self, now: f64) {
-        self.counters.heartbeats += 1;
+    /// Collect load reports + cache summaries from live replicas (the
+    /// heartbeat publish; also run once at t=0 so the starting fleet is
+    /// routable before its first tick).
+    fn publish_reports(&mut self, now: f64) {
         for r in 0..self.replicas.len() {
             if !self.replicas[r].alive {
                 continue; // crashed or wedged: no lease renewal
@@ -361,15 +425,114 @@ impl<X: Executor> ControlPlane<X> {
             self.registry.heartbeat(r, report, now);
             self.index.publish(r, &summary);
         }
+    }
+
+    fn on_heartbeat(&mut self, now: f64) {
+        self.counters.heartbeats += 1;
+        self.publish_reports(now);
         for r in self.registry.sweep(now) {
             if self.replicas[r].orch.is_some() {
                 self.counters.lease_expiries += 1;
                 self.fail_replica(r, now);
             }
         }
-        if !self.accounted_all() {
+        // elastic-scaling tick (§3.1): plan against the state just
+        // published, then apply (spawn / decommission / rebalance)
+        let mut actions = Vec::new();
+        if let Some(s) = self.scaler.as_mut() {
+            actions = s.plan(now, &self.registry, &self.index);
+        }
+        for a in actions {
+            self.apply_scale_action(a, now);
+        }
+        // keep ticking while ANY control or replica event is pending —
+        // not merely while submitted requests are unaccounted.  Gating
+        // on `accounted_all` alone stopped heartbeats forever the moment
+        // all currently-submitted requests were momentarily accounted;
+        // any later submission (exactly what autoscaled/decommission
+        // re-dispatch creates) then ran against a registry whose leases
+        // had silently gone stale and expired en masse on revival.
+        if self.work_pending() {
             self.clock.schedule_in(self.cfg.heartbeat_s, CtlEv::Heartbeat);
         }
+    }
+
+    /// Anything left for the fleet to do: unaccounted requests, queued
+    /// control events (arrivals, faults, staging completions), or
+    /// pending events on any live replica.
+    fn work_pending(&self) -> bool {
+        !self.accounted_all()
+            || !self.clock.is_empty()
+            || self.replicas.iter().any(|rep| {
+                rep.alive && rep.orch.as_ref().and_then(|o| o.next_event_time()).is_some()
+            })
+    }
+
+    fn apply_scale_action(&mut self, action: ScaleAction, now: f64) {
+        match action {
+            ScaleAction::Up => self.scale_up(now),
+            ScaleAction::Down(r) => self.decommission_replica(r, now),
+            ScaleAction::Rebalance { chain, from, to } => self.start_rebalance(chain, from, to),
+        }
+    }
+
+    /// Spawn a fresh replica: clock aligned to fleet time, registered
+    /// now, routable after its first heartbeat publishes a load report.
+    fn scale_up(&mut self, now: f64) {
+        // clamp against every live replica, including ones still pending
+        // their first heartbeat (the registry cannot see those yet)
+        let live = self.replicas.iter().filter(|r| r.orch.is_some()).count();
+        let max = self.cfg.scaler.map(|s| s.max_replicas).unwrap_or(usize::MAX);
+        if live >= max {
+            return;
+        }
+        let Some(spawn) = self.spawner.as_mut() else {
+            return; // no factory: the scaler can only shrink this fleet
+        };
+        let id = self.replicas.len();
+        let mut orch = spawn(id);
+        orch.start_at(Vec::new(), now);
+        self.replicas.push(Replica { orch: Some(orch), alive: true, result: None });
+        self.registry.register(id, now);
+        self.counters.scale_ups += 1;
+    }
+
+    /// Gracefully decommission a replica: stop routing to it, drain its
+    /// in-flight work, and re-dispatch onto the survivors.  Distinct
+    /// from crash failover — no lease expiry, and the source KV is still
+    /// live for staging, so nothing is lost and migration is judged
+    /// against a real surviving copy.
+    fn decommission_replica(&mut self, r: usize, now: f64) {
+        let Some(mut orch) = self.replicas[r].orch.take() else {
+            return; // already gone
+        };
+        self.replicas[r].alive = false;
+        self.registry.deregister(r);
+        self.router.forget(r);
+        if let Some(s) = self.scaler.as_mut() {
+            s.forget_replica(r);
+        }
+        self.counters.scale_downs += 1;
+        let drained = orch.drain_in_flight();
+        let (result, _executor) = orch.finish();
+        self.replicas[r].result = Some(result);
+        // the victim's index entries stay visible during re-dispatch so
+        // the recompute-vs-migrate decision can see the staging tier of
+        // the still-live source copies
+        self.redispatch_drained(r, drained, now, true);
+        self.index.remove(r);
+    }
+
+    /// Begin a planned hot-prefix migration: charge the staging +
+    /// transfer cost now, land the chain on the target when it elapses.
+    fn start_rebalance(&mut self, chain: Vec<u64>, from: usize, to: usize) {
+        let tier = self.index.match_prefix(from, &chain).1.unwrap_or(Tier::Dram);
+        let bytes =
+            chain.len() as f64 * self.cfg.block_tokens as f64 * self.cost.model.kv_bytes_per_token();
+        let delay = self.cfg.xfer.load_to_hbm_s(tier, bytes) + self.cfg.xfer.migrate_s(bytes);
+        self.counters.kv_rebalances += 1;
+        self.counters.rebalance_staging_s += delay;
+        self.clock.schedule_in(delay, CtlEv::RebalanceDone { to, chain });
     }
 
     /// A replica is dead: finalize it, then re-dispatch everything it
@@ -382,11 +545,38 @@ impl<X: Executor> ControlPlane<X> {
         };
         self.replicas[r].alive = false;
         self.registry.deregister(r);
-        self.index.remove(r);
+        self.index.remove(r); // HBM/DRAM copies died with the replica
+        self.router.forget(r);
+        if let Some(s) = self.scaler.as_mut() {
+            s.forget_replica(r);
+        }
         self.counters.failovers += 1;
         let drained = orch.drain_in_flight();
         let (result, _executor) = orch.finish();
         self.replicas[r].result = Some(result);
+        self.redispatch_drained(r, drained, now, false);
+    }
+
+    /// Re-dispatch a drained replica's in-flight work onto the
+    /// survivors (§3.5), deciding recompute-vs-migrate per request.
+    ///
+    /// The decision is judged against the replica the router actually
+    /// chose: if THAT replica still holds (part of) the request's
+    /// prefix, migration charges the staging + transfer delay up front
+    /// and the survivor then serves the prefix from its own cache.  On
+    /// crash failover (`planned = false`) a cache-cold target simply
+    /// recomputes (re-runs prefill on admit) with no phantom delay — so
+    /// round-robin failover is never billed for KV it cannot reuse.  On
+    /// a planned drain (`planned = true`) the source is still alive, so
+    /// a cold target can additionally weigh staging the KV from the
+    /// source's surviving copy against recomputing.
+    fn redispatch_drained(
+        &mut self,
+        victim: usize,
+        drained: Vec<InFlightSnapshot>,
+        now: f64,
+        planned: bool,
+    ) {
         for snap in drained {
             self.counters.redispatched_requests += 1;
             self.counters.redispatched_tokens += snap.context_tokens;
@@ -394,31 +584,42 @@ impl<X: Executor> ControlPlane<X> {
                 self.mark_lost(snap.spec, now);
                 continue;
             };
-            // §3.5 recovery decision, judged against the replica the
-            // router actually chose: if THAT replica still holds (part
-            // of) the request's prefix, migration charges the staging +
-            // transfer delay up front and the survivor then serves the
-            // prefix from its own cache; a cache-cold target simply
-            // recomputes (re-runs prefill on admit) with no phantom
-            // delay — so round-robin failover is never billed for KV it
-            // cannot reuse.
             let mut earliest = now;
             if snap.context_tokens > 0 {
                 let chain = FleetRouter::chain_for(&snap.spec, self.cfg.block_tokens);
                 let (matched, tier) = self.index.match_prefix(d.replica, &chain);
+                let replica_tier = if matched > 0 {
+                    tier
+                } else if planned {
+                    // graceful drain: the source still holds the KV
+                    // (worst case a DRAM copy) and can ship it
+                    self.index.match_prefix(victim, &chain).1.or(Some(Tier::Dram))
+                } else {
+                    None
+                };
                 let interrupted = InterruptedRequest {
                     request: 0, // fleet-level: per-request ids stay replica-local
                     context_tokens: snap.context_tokens,
-                    replica_tier: if matched > 0 { tier } else { None },
+                    replica_tier,
                 };
                 let (action, delay) = plan_recovery(&interrupted, &self.cost, &self.cfg.xfer);
                 if action == RecoveryAction::Migrate {
                     self.counters.redispatch_migrations += 1;
                     earliest = now + delay;
+                    if planned && matched == 0 && !chain.is_empty() {
+                        // the staged KV shipped from the source includes
+                        // the prefix chain — it lands on the cold target
+                        // when the transfer completes (same mechanism as
+                        // planned rebalancing), so the request does not
+                        // pay the transfer delay AND a from-scratch
+                        // prefill of the shared prefix
+                        self.clock
+                            .schedule_in(delay, CtlEv::RebalanceDone { to: d.replica, chain });
+                    }
                 }
             }
             // original arrival preserved but admission bounded below by
-            // fleet time: failover delay lands in the request's E2E
+            // fleet time: drain/failover delay lands in the request's E2E
             self.admit(snap.spec, d, earliest);
         }
     }
@@ -440,6 +641,7 @@ impl<X: Executor> ControlPlane<X> {
     fn finish(mut self, truncated: bool) -> FleetResult {
         let mut report = ServingReport::new();
         report.merge(&self.lost);
+        let n_replicas_final = self.replicas.iter().filter(|r| r.orch.is_some()).count();
         let mut per_replica = Vec::with_capacity(self.replicas.len());
         for rep in std::mem::take(&mut self.replicas) {
             let result = match (rep.result, rep.orch) {
@@ -456,6 +658,7 @@ impl<X: Executor> ControlPlane<X> {
             per_replica,
             counters: self.counters,
             submitted: self.workload.len(),
+            n_replicas_final,
             truncated,
         }
     }
@@ -535,6 +738,126 @@ mod tests {
         assert_eq!(res.report.n_completed(), 0, "nothing can run without replicas");
         assert_eq!(res.counters.failovers, 2);
         assert_eq!(res.counters.unroutable as usize, n);
+    }
+
+    #[test]
+    fn heartbeats_continue_while_replica_events_pend() {
+        // regression: heartbeats were rescheduled only while some
+        // submitted request was unaccounted.  Here the single request
+        // completes within ~0.1s but the replica still owes itself a
+        // Recover event ~1.5s out (instance fault + RecoveryModel);
+        // heartbeats must keep ticking until the fleet is actually
+        // quiescent, or every lease goes silently stale and expires en
+        // masse the moment later work (autoscale/decommission
+        // re-dispatch) revives the fleet.
+        let cfg = OrchestratorConfig {
+            n_instances: 2,
+            faults: vec![(0.05, 0)],
+            ..Default::default()
+        };
+        let orchs = vec![Orchestrator::new(cfg, FixedCost::new(0.01))];
+        let res = ControlPlane::new(ControlPlaneConfig::default(), orchs)
+            .run(vec![RequestSpec::text(0.0, 64, 4)]);
+        assert_eq!(res.report.n_completed(), 1);
+        assert_eq!(res.counters.lease_expiries, 0, "healthy replica must never be swept");
+        // Recover fires no earlier than RecoveryModel::restart_s (1.0s)
+        // after the fault, so at least ticks 0.25..1.0 must fire; the
+        // pre-fix behavior stopped after the single 0.25 tick.
+        assert!(
+            res.counters.heartbeats >= 4,
+            "heartbeats stopped while the replica's Recover event was pending: \
+             only {} ticks",
+            res.counters.heartbeats
+        );
+    }
+
+    #[test]
+    fn autoscaler_spawns_and_decommissions_without_losing_requests() {
+        let mk = || {
+            let cfg = OrchestratorConfig {
+                n_instances: 1,
+                prefix_cache: true,
+                ..Default::default()
+            };
+            Orchestrator::new(cfg, FixedCost::new(0.05))
+        };
+        let cfg = ControlPlaneConfig {
+            scaler: Some(ScalerConfig {
+                capacity_target_tokens: 512,
+                min_replicas: 1,
+                max_replicas: 3,
+                cooldown_s: 0.3,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        // sustained burst (arrivals keep coming while spawned replicas
+        // become routable), then a long quiet gap, then one straggler
+        let mut w: Vec<RequestSpec> =
+            (0..16).map(|i| RequestSpec::text(i as f64 * 0.2, 2048, 32)).collect();
+        w.push(RequestSpec::text(14.0, 64, 4));
+        let n = w.len();
+        let res = ControlPlane::new(cfg, vec![mk()]).with_spawner(move |_| mk()).run(w);
+        assert!(res.all_accounted());
+        assert_eq!(
+            res.report.n_completed(),
+            n,
+            "zero lost requests across scale-up and decommission drain: {:?}",
+            res.counters
+        );
+        assert_eq!(res.counters.unroutable, 0);
+        assert_eq!(res.counters.failovers, 0, "planned shrink is not a failover");
+        assert_eq!(res.counters.lease_expiries, 0);
+        assert!(res.counters.scale_ups >= 1, "burst must grow the fleet: {:?}", res.counters);
+        assert!(
+            res.counters.scale_downs >= 1,
+            "quiet gap must shrink the fleet: {:?}",
+            res.counters
+        );
+        assert!(res.per_replica.len() > 1, "spawned replicas report results");
+        assert!(
+            res.per_replica[1..].iter().any(|r| r.iterations > 0),
+            "a spawned replica must actually serve traffic: {:?}",
+            res.per_replica.iter().map(|r| r.iterations).collect::<Vec<_>>()
+        );
+        assert!(
+            res.n_replicas_final < res.per_replica.len(),
+            "decommissioned replicas must not survive to the end"
+        );
+    }
+
+    #[test]
+    fn hot_prefix_concentration_triggers_planned_rebalance() {
+        let cfg = ControlPlaneConfig {
+            scaler: Some(ScalerConfig {
+                // fixed-size fleet: isolate the rebalancing half
+                min_replicas: 2,
+                max_replicas: 2,
+                capacity_target_tokens: u64::MAX / 4,
+                hot_prefix_routes: 3,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let w: Vec<RequestSpec> = (0..10)
+            .map(|i| {
+                let mut s = RequestSpec::text(i as f64 * 0.3, 1024, 64);
+                s.prefix_group = 1;
+                s.shared_prefix = 512;
+                s
+            })
+            .collect();
+        let n = w.len();
+        let res = ControlPlane::new(cfg, fleet(2)).run(w);
+        assert_eq!(res.report.n_completed(), n);
+        assert!(
+            res.counters.kv_rebalances >= 1,
+            "one group dogpiling one replica must trigger a planned migration: {:?}",
+            res.counters
+        );
+        assert!(res.counters.rebalance_staging_s > 0.0, "staging cost must be charged");
+        assert!(res.prefix_hits() > 0);
+        assert_eq!(res.counters.failovers, 0);
     }
 
     #[test]

@@ -31,6 +31,15 @@ impl InstanceRegistry {
     }
 
     /// Register a replica (lease starts at `now_s`).
+    ///
+    /// Registration alone does NOT make the replica routable: until its
+    /// first heartbeat publishes a real [`LoadReport`], the replica is
+    /// absent from [`Self::alive`].  (A registered-but-silent replica
+    /// used to surface with `LoadReport::default()` — zero load, zero
+    /// capacity — and the router would dogpile it; mid-run scale-up made
+    /// that a real path, not a startup curiosity.)  The lease still
+    /// starts now, so a replica that never reports is swept like any
+    /// other silent one.
     pub fn register(&mut self, replica: usize, now_s: f64) {
         self.meta.register(InstanceRecord {
             instance: replica,
@@ -39,7 +48,7 @@ impl InstanceRegistry {
             kv_capacity: 0,
             last_heartbeat_s: now_s,
         });
-        self.loads.insert(replica, LoadReport::default());
+        // no loads entry yet: the first heartbeat inserts it
     }
 
     /// Heartbeat: renew the lease and replace the published load report.
@@ -161,10 +170,48 @@ mod tests {
     }
 
     #[test]
+    fn registered_but_never_heartbeated_is_not_alive() {
+        // regression: a registered-but-silent replica used to surface in
+        // alive() with LoadReport::default() (zero load, zero capacity),
+        // so the router would dogpile the replica that had not even
+        // booted.  Liveness must wait for the first heartbeat.
+        let mut r = InstanceRegistry::new(10.0);
+        r.register(0, 0.0);
+        r.register(1, 0.0);
+        r.heartbeat(0, report(10), 0.1);
+        assert_eq!(r.alive(), vec![0], "silent replica 1 must not be routable");
+        assert!(!r.is_alive(1));
+        assert!(r.load(1).is_none(), "no phantom default load report");
+        // dispatch charges against a silent replica are dropped, not
+        // booked against a phantom report
+        r.note_dispatch(1, 512);
+        assert!(r.load(1).is_none());
+        // the first heartbeat brings it up
+        r.heartbeat(1, report(20), 0.2);
+        assert_eq!(r.alive(), vec![0, 1]);
+        assert_eq!(r.load(1).unwrap().queued_prefill_tokens, 20);
+    }
+
+    #[test]
+    fn never_heartbeated_replica_is_swept_like_any_silent_one() {
+        let mut r = InstanceRegistry::new(0.5);
+        r.register(0, 0.0);
+        r.register(1, 0.0);
+        r.heartbeat(0, report(0), 0.4);
+        // replica 1 never booted: its lease (started at registration)
+        // lapses on schedule
+        assert_eq!(r.sweep(0.6), vec![1]);
+        assert_eq!(r.alive(), vec![0]);
+        assert!(!r.heartbeat(1, report(0), 0.7), "expired lease cannot renew");
+    }
+
+    #[test]
     fn deregister_is_immediate_and_consistent() {
         let mut r = InstanceRegistry::new(10.0);
         r.register(0, 0.0);
         r.register(1, 0.0);
+        r.heartbeat(0, report(0), 0.0);
+        r.heartbeat(1, report(0), 0.0);
         r.deregister(0);
         assert_eq!(r.alive(), vec![1]);
         assert!(r.load(0).is_none());

@@ -14,6 +14,8 @@
 //! clear — the fleet-scope analogue of `colocation::assign_pool`'s
 //! tide rule.
 
+use std::collections::HashMap;
+
 use crate::service::colocation::ColocationConfig;
 use crate::service::controlplane::index::GlobalPrefixIndex;
 use crate::service::controlplane::registry::InstanceRegistry;
@@ -52,16 +54,44 @@ pub struct RouteDecision {
     pub offline_steered: bool,
 }
 
-/// The fleet router (owns only the round-robin cursor).
+/// The fleet router (owns only the round-robin fairness state).
 #[derive(Debug)]
 pub struct FleetRouter {
     pub policy: RoutePolicy,
-    rr_next: usize,
+    /// Monotonic pick counter for the round-robin policy.
+    rr_clock: u64,
+    /// Replica id → tick of its last round-robin pick (0 = never).
+    /// Keyed by *id*, not candidate-list position: a positional cursor
+    /// (`cands[rr % cands.len()]`) skews the spray whenever offline
+    /// steering or failover narrows the candidate list, because the
+    /// modulus changes under the cursor (e.g. with an odd-phase cursor a
+    /// 2-candidate narrowing picks index 1 every single time).
+    rr_last: HashMap<usize, u64>,
 }
 
 impl FleetRouter {
     pub fn new(policy: RoutePolicy) -> FleetRouter {
-        FleetRouter { policy, rr_next: 0 }
+        FleetRouter { policy, rr_clock: 0, rr_last: HashMap::new() }
+    }
+
+    /// Round-robin pick: the least-recently-routed candidate (ties break
+    /// to the lowest id).  Id-stable under any narrowing of the
+    /// candidate set, and plain rotation when the set is stable.
+    fn rr_pick(&mut self, cands: &[usize]) -> usize {
+        let pick = cands
+            .iter()
+            .copied()
+            .min_by_key(|&i| (self.rr_last.get(&i).copied().unwrap_or(0), i))
+            .expect("rr_pick needs a non-empty candidate set");
+        self.rr_clock += 1;
+        self.rr_last.insert(pick, self.rr_clock);
+        pick
+    }
+
+    /// Drop a dead replica's round-robin state so its id can be reused
+    /// cleanly if the scaler ever re-registers it.
+    pub fn forget(&mut self, replica: usize) {
+        self.rr_last.remove(&replica);
     }
 
     /// The request's prefix hash chain at the fleet granularity (empty
@@ -89,8 +119,7 @@ impl FleetRouter {
         // the cache-aware/round-robin ablation
         let (replica, matched_blocks) = match self.policy {
             RoutePolicy::RoundRobin => {
-                let pick = cands[self.rr_next % cands.len()];
-                self.rr_next += 1;
+                let pick = self.rr_pick(&cands);
                 (pick, ctx.index.match_prefix(pick, &chain).0)
             }
             RoutePolicy::CacheAware => {
@@ -251,6 +280,93 @@ mod tests {
         let picks: Vec<usize> =
             (0..6).map(|_| router.route(&spec, &ctx).unwrap().replica).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_narrowed_candidates_do_not_dogpile() {
+        // regression: the positional cursor (`cands[rr % cands.len()]`)
+        // sprayed every offline request onto the SAME replica when
+        // offline steering narrowed the set to two candidates — the
+        // cursor advanced by one per online pick, so the narrowed
+        // modulus always landed on index 1.  The id-stable cursor must
+        // spread the narrowed picks across both relaxed replicas.
+        let (mut reg, ix) = setup(3);
+        // replica 0 online-busy; replicas 1 and 2 latency-relaxed
+        for (i, frac) in [(0usize, 0.9), (1, 0.1), (2, 0.1)] {
+            reg.heartbeat(
+                i,
+                LoadReport { online_fraction: frac, ..Default::default() },
+                0.1,
+            );
+        }
+        let c = cost();
+        let xfer = TransferEngine::default();
+        let coloc = ColocationConfig::default();
+        let ctx = RouterCtx {
+            registry: &reg,
+            index: &ix,
+            cost: &c,
+            xfer: &xfer,
+            coloc: &coloc,
+            block_tokens: 64,
+        };
+        let mut router = FleetRouter::new(RoutePolicy::RoundRobin);
+        let online = RequestSpec::text(0.0, 256, 8);
+        let offline = RequestSpec::text(0.0, 256, 8).offline();
+        let mut offline_picks = Vec::new();
+        for _ in 0..4 {
+            router.route(&online, &ctx).unwrap();
+            let d = router.route(&offline, &ctx).unwrap();
+            assert!(d.offline_steered, "setup must narrow offline to replicas 1/2");
+            offline_picks.push(d.replica);
+        }
+        assert!(
+            offline_picks.contains(&1) && offline_picks.contains(&2),
+            "narrowed round-robin must use both relaxed replicas, got {offline_picks:?}"
+        );
+    }
+
+    #[test]
+    fn round_robin_spray_stays_even_across_a_replica_kill() {
+        let (mut reg, ix) = setup(3);
+        let c = cost();
+        let xfer = TransferEngine::default();
+        let coloc = ColocationConfig::default();
+        let mut router = FleetRouter::new(RoutePolicy::RoundRobin);
+        let spec = RequestSpec::text(0.0, 256, 8);
+        let mut counts = [0usize; 3];
+        {
+            let ctx = RouterCtx {
+                registry: &reg,
+                index: &ix,
+                cost: &c,
+                xfer: &xfer,
+                coloc: &coloc,
+                block_tokens: 64,
+            };
+            // 7 picks over 3 replicas: kill happens mid-rotation so a
+            // positional cursor would be mid-phase
+            for _ in 0..7 {
+                counts[router.route(&spec, &ctx).unwrap().replica] += 1;
+            }
+        }
+        reg.deregister(1);
+        router.forget(1);
+        let ctx = RouterCtx {
+            registry: &reg,
+            index: &ix,
+            cost: &c,
+            xfer: &xfer,
+            coloc: &coloc,
+            block_tokens: 64,
+        };
+        let mut after = [0usize; 3];
+        for _ in 0..8 {
+            after[router.route(&spec, &ctx).unwrap().replica] += 1;
+        }
+        assert_eq!(after[1], 0, "dead replica must get nothing");
+        assert_eq!(after[0], 4, "survivors split the spray evenly: {after:?}");
+        assert_eq!(after[2], 4, "survivors split the spray evenly: {after:?}");
     }
 
     #[test]

@@ -1,0 +1,409 @@
+//! Elastic fleet scaling (paper §3.1 unified elastic scheduling, §3.4
+//! proactive KV movement).
+//!
+//! The paper's xLLM-Service treats elasticity as a first-class scheduler
+//! concern: capacity follows the tidal load curve instead of being
+//! provisioned for the peak, and the global KV cache supports *planned*
+//! cross-replica migration — not just the reactive failover path.  The
+//! [`FleetScaler`] is the policy half of both:
+//!
+//! * **Autoscaling** — each heartbeat tick it compares the fleet's
+//!   aggregate backlog (queued prefill + resident decode tokens, from the
+//!   registry's load reports) against a per-replica capacity target and
+//!   emits [`ScaleAction::Up`] (spawn a replica; routable only after its
+//!   first heartbeat per the registry's liveness rule) or
+//!   [`ScaleAction::Down`] (gracefully decommission the least-loaded
+//!   replica: stop routing, drain, re-dispatch — no lease expiry, no
+//!   lost work).  A cooldown prevents flapping on a single burst.
+//! * **Planned KV rebalancing** — the scaler tracks which replica each
+//!   hot prefix chain's requests were routed to; when one chain
+//!   concentrates enough routes on a single above-mean-load replica, it
+//!   plans a [`ScaleAction::Rebalance`]: the control plane charges the
+//!   `TransferEngine` staging cost, records the chain on the target in
+//!   the [`GlobalPrefixIndex`], and the target orchestrator adopts the
+//!   chain into its local cache — so subsequent cache-aware routing
+//!   spreads the hot group instead of dogpiling its original home.
+//!
+//! The scaler is pure policy over registry/index snapshots; the
+//! mechanics (spawning orchestrators, draining, staging delays) live in
+//! [`crate::service::controlplane::ControlPlane`].
+
+use std::cmp::Reverse;
+use std::collections::HashMap;
+
+use crate::service::controlplane::index::GlobalPrefixIndex;
+use crate::service::controlplane::registry::InstanceRegistry;
+
+/// Elastic-scaling policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ScalerConfig {
+    /// Per-replica backlog target in tokens (queued prefill + resident
+    /// decode context).  Scale up when the fleet backlog exceeds
+    /// `target × n_alive`; scale down when it would comfortably fit in
+    /// one replica fewer (under half of `target × (n_alive - 1)`).
+    pub capacity_target_tokens: u64,
+    /// Clamped to ≥ 1: an empty fleet can never scale back up (there is
+    /// no heartbeat left to carry the decision), so the last replica is
+    /// never decommissioned.
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// Minimum time between scale actions (anti-flapping).
+    pub cooldown_s: f64,
+    /// Routes of one prefix chain onto one replica before a planned
+    /// rebalance is considered.
+    pub hot_prefix_routes: u64,
+}
+
+impl Default for ScalerConfig {
+    fn default() -> Self {
+        ScalerConfig {
+            capacity_target_tokens: 4096,
+            min_replicas: 1,
+            max_replicas: 8,
+            cooldown_s: 1.0,
+            hot_prefix_routes: 8,
+        }
+    }
+}
+
+/// One control action planned by the scaler.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// Spawn a fresh replica (routable after its first heartbeat).
+    Up,
+    /// Gracefully decommission this replica (drain + re-dispatch).
+    Down(usize),
+    /// Proactively migrate a hot prefix chain from `from` to `to`.
+    Rebalance { chain: Vec<u64>, from: usize, to: usize },
+}
+
+/// Route concentration stats for one prefix chain.
+#[derive(Debug)]
+struct HotChain {
+    chain: Vec<u64>,
+    /// Replica → routes of this chain since the stats were last reset.
+    per_replica: HashMap<usize, u64>,
+}
+
+/// The elastic fleet manager (policy only — see module docs).
+#[derive(Debug)]
+pub struct FleetScaler {
+    pub cfg: ScalerConfig,
+    last_scale_s: f64,
+    /// Chain-tail hash → concentration stats.
+    hot: HashMap<u64, HotChain>,
+}
+
+/// Bound on tracked chains: when exceeded, the coldest entry is evicted
+/// so a long run over many distinct prefixes cannot grow the tracker
+/// (or the per-tick scan) without limit.
+const MAX_TRACKED_CHAINS: usize = 256;
+
+fn backlog(registry: &InstanceRegistry, replica: usize) -> u64 {
+    registry
+        .load(replica)
+        .map(|l| l.queued_prefill_tokens + l.running_tokens)
+        .unwrap_or(0)
+}
+
+impl FleetScaler {
+    pub fn new(cfg: ScalerConfig) -> FleetScaler {
+        FleetScaler { cfg, last_scale_s: f64::NEG_INFINITY, hot: HashMap::new() }
+    }
+
+    /// Record that a request carrying `chain` was routed to `replica`
+    /// (called by the control plane on every admit).
+    pub fn note_route(&mut self, chain: &[u64], replica: usize) {
+        let Some(&key) = chain.last() else {
+            return;
+        };
+        let e = self
+            .hot
+            .entry(key)
+            .or_insert_with(|| HotChain { chain: chain.to_vec(), per_replica: HashMap::new() });
+        *e.per_replica.entry(replica).or_insert(0) += 1;
+        if self.hot.len() > MAX_TRACKED_CHAINS {
+            // evict the coldest chain (fewest total routes, ties to the
+            // smallest key — deterministic); a genuinely hot chain is
+            // never the victim
+            let coldest = self
+                .hot
+                .iter()
+                .map(|(&k, s)| (s.per_replica.values().sum::<u64>(), k))
+                .min()
+                .map(|(_, k)| k);
+            if let Some(k) = coldest {
+                self.hot.remove(&k);
+            }
+        }
+    }
+
+    /// Drop a dead/decommissioned replica from the concentration stats.
+    pub fn forget_replica(&mut self, replica: usize) {
+        for e in self.hot.values_mut() {
+            e.per_replica.remove(&replica);
+        }
+    }
+
+    /// Plan this tick's actions against the live registry/index state.
+    /// At most one scale action and one rebalance per tick.
+    pub fn plan(
+        &mut self,
+        now_s: f64,
+        registry: &InstanceRegistry,
+        index: &GlobalPrefixIndex,
+    ) -> Vec<ScaleAction> {
+        let mut actions = Vec::new();
+        let alive = registry.alive();
+        if alive.is_empty() {
+            return actions;
+        }
+        let n = alive.len();
+        let total: u64 = alive.iter().map(|&r| backlog(registry, r)).sum();
+        if now_s - self.last_scale_s >= self.cfg.cooldown_s {
+            let target = self.cfg.capacity_target_tokens;
+            // never shrink to zero: an empty fleet cannot scale back up
+            let min = self.cfg.min_replicas.max(1);
+            if n < self.cfg.max_replicas && total > target.saturating_mul(n as u64) {
+                self.last_scale_s = now_s;
+                actions.push(ScaleAction::Up);
+            } else if n > min && total <= target.saturating_mul((n - 1) as u64) / 2 {
+                // retire the least-loaded replica; ties break to the
+                // newest id (oldest replicas are the stable core)
+                let victim = alive
+                    .iter()
+                    .copied()
+                    .min_by_key(|&r| (backlog(registry, r), Reverse(r)))
+                    .expect("alive is non-empty");
+                self.last_scale_s = now_s;
+                actions.push(ScaleAction::Down(victim));
+            }
+        }
+        // no rebalance on a tick that already scaled: the fleet is about
+        // to change shape (and the migration target could otherwise be
+        // the very replica being decommissioned)
+        if actions.is_empty() {
+            if let Some(rb) = self.plan_rebalance(&alive, total, registry, index) {
+                actions.push(rb);
+            }
+        }
+        actions
+    }
+
+    /// A hot chain is worth moving when one replica absorbed at least
+    /// `hot_prefix_routes` of its routes AND that replica's backlog sits
+    /// above the fleet mean (the chain is *concentrating* load, not just
+    /// popular on an idle node).  Target: the least-loaded replica not
+    /// already holding any of the chain.
+    fn plan_rebalance(
+        &mut self,
+        alive: &[usize],
+        total: u64,
+        registry: &InstanceRegistry,
+        index: &GlobalPrefixIndex,
+    ) -> Option<ScaleAction> {
+        if alive.len() < 2 {
+            return None;
+        }
+        let mean = total as f64 / alive.len() as f64;
+        let mut keys: Vec<u64> = self.hot.keys().copied().collect();
+        keys.sort_unstable();
+        let mut best: Option<(u64, u64, usize)> = None; // (routes, key, from)
+        for key in keys {
+            let stat = &self.hot[&key];
+            let Some((&from, &routes)) =
+                stat.per_replica.iter().max_by_key(|&(&r, &c)| (c, Reverse(r)))
+            else {
+                continue;
+            };
+            if routes < self.cfg.hot_prefix_routes || !alive.contains(&from) {
+                continue;
+            }
+            if (backlog(registry, from) as f64) <= mean {
+                continue;
+            }
+            if index.match_prefix(from, &stat.chain).0 == 0 {
+                // route stats outlive cache eviction: if the source no
+                // longer holds any of the chain there is nothing to
+                // migrate — don't materialize KV from a dead copy
+                continue;
+            }
+            if best.map(|(c, k, _)| (routes, Reverse(key)) > (c, Reverse(k))).unwrap_or(true) {
+                best = Some((routes, key, from));
+            }
+        }
+        let (_, key, from) = best?;
+        let chain = self.hot[&key].chain.clone();
+        let to = alive
+            .iter()
+            .copied()
+            .filter(|&r| r != from && index.match_prefix(r, &chain).0 == 0)
+            .min_by_key(|&r| (backlog(registry, r), r))?;
+        // reset this chain's stats so the migration gets a window to
+        // take effect before it can re-trigger
+        self.hot.remove(&key);
+        Some(ScaleAction::Rebalance { chain, from, to })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::controlplane::registry::LoadReport;
+
+    fn registry(loads: &[(usize, u64)]) -> InstanceRegistry {
+        let mut reg = InstanceRegistry::new(100.0);
+        for &(r, backlog) in loads {
+            reg.register(r, 0.0);
+            reg.heartbeat(
+                r,
+                LoadReport {
+                    queued_prefill_tokens: backlog,
+                    kv_capacity: 1 << 20,
+                    ..Default::default()
+                },
+                0.0,
+            );
+        }
+        reg
+    }
+
+    fn cfg() -> ScalerConfig {
+        ScalerConfig { capacity_target_tokens: 1000, cooldown_s: 1.0, ..Default::default() }
+    }
+
+    #[test]
+    fn scales_up_when_backlog_exceeds_capacity() {
+        let reg = registry(&[(0, 1500), (1, 900)]);
+        let ix = GlobalPrefixIndex::new();
+        let mut s = FleetScaler::new(cfg());
+        // 2400 total > 1000 * 2 replicas
+        assert_eq!(s.plan(0.0, &reg, &ix), vec![ScaleAction::Up]);
+        // cooldown: no immediate second action
+        assert!(s.plan(0.5, &reg, &ix).is_empty());
+        // after the cooldown it may act again
+        assert_eq!(s.plan(1.5, &reg, &ix), vec![ScaleAction::Up]);
+    }
+
+    #[test]
+    fn max_replicas_caps_scale_up() {
+        let reg = registry(&[(0, 5000), (1, 5000)]);
+        let ix = GlobalPrefixIndex::new();
+        let mut s = FleetScaler::new(ScalerConfig { max_replicas: 2, ..cfg() });
+        assert!(s.plan(0.0, &reg, &ix).is_empty());
+    }
+
+    #[test]
+    fn scales_down_the_least_loaded_replica_when_idle() {
+        // 300 total fits easily in 2 replicas (<= 1000 * 2 / 2)
+        let reg = registry(&[(0, 200), (1, 90), (2, 10)]);
+        let ix = GlobalPrefixIndex::new();
+        let mut s = FleetScaler::new(cfg());
+        assert_eq!(s.plan(0.0, &reg, &ix), vec![ScaleAction::Down(2)]);
+    }
+
+    #[test]
+    fn min_replicas_blocks_scale_down() {
+        let reg = registry(&[(0, 0), (1, 0)]);
+        let ix = GlobalPrefixIndex::new();
+        let mut s = FleetScaler::new(ScalerConfig { min_replicas: 2, ..cfg() });
+        assert!(s.plan(0.0, &reg, &ix).is_empty());
+        // in the steady band (neither over target nor near-empty) the
+        // scaler holds even when shrinking is allowed
+        let reg = registry(&[(0, 800), (1, 700)]);
+        let mut s = FleetScaler::new(cfg());
+        assert!(s.plan(0.0, &reg, &ix).is_empty());
+    }
+
+    #[test]
+    fn min_replicas_zero_never_empties_the_fleet() {
+        // an empty fleet has no heartbeat left to carry a scale-up
+        // decision, so min_replicas is clamped to 1
+        let reg = registry(&[(0, 0)]);
+        let ix = GlobalPrefixIndex::new();
+        let mut s = FleetScaler::new(ScalerConfig { min_replicas: 0, ..cfg() });
+        assert!(
+            s.plan(0.0, &reg, &ix).is_empty(),
+            "the last replica must never be decommissioned"
+        );
+    }
+
+    #[test]
+    fn no_rebalance_on_a_tick_that_scales() {
+        // replica 2 is both the scale-down victim (least-loaded) and
+        // the natural rebalance target; emitting both in one tick would
+        // migrate the chain onto the replica being decommissioned
+        let mut reg = registry(&[(0, 700), (1, 250), (2, 10)]);
+        let mut ix = GlobalPrefixIndex::new();
+        let chain = vec![1u64, 2];
+        ix.record(0, &chain);
+        let mut s = FleetScaler::new(ScalerConfig { hot_prefix_routes: 1, ..cfg() });
+        s.note_route(&chain, 0);
+        let actions = s.plan(0.0, &reg, &ix);
+        assert_eq!(actions, vec![ScaleAction::Down(2)], "scale action only: {actions:?}");
+        // the control plane applies the decommission; on the next quiet
+        // tick the surviving hot stats fire the deferred rebalance
+        reg.deregister(2);
+        let actions = s.plan(5.0, &reg, &ix);
+        assert_eq!(actions, vec![ScaleAction::Rebalance { chain, from: 0, to: 1 }]);
+    }
+
+    #[test]
+    fn tracker_is_bounded() {
+        let mut s = FleetScaler::new(cfg());
+        for i in 0..10_000u64 {
+            s.note_route(&[i], 0);
+        }
+        assert!(s.hot.len() <= MAX_TRACKED_CHAINS + 1, "tracker grew to {}", s.hot.len());
+    }
+
+    #[test]
+    fn hot_concentrated_chain_plans_a_rebalance() {
+        // replica 0 is above the mean backlog and absorbed every route
+        // of the hot chain; replica 2 is the least-loaded cold target
+        let reg = registry(&[(0, 1200), (1, 500), (2, 100)]);
+        let mut ix = GlobalPrefixIndex::new();
+        let chain = vec![11u64, 22, 33];
+        ix.record(0, &chain);
+        let mut s = FleetScaler::new(ScalerConfig { hot_prefix_routes: 4, ..cfg() });
+        for _ in 0..4 {
+            s.note_route(&chain, 0);
+        }
+        let actions = s.plan(0.0, &reg, &ix);
+        assert_eq!(
+            actions,
+            vec![ScaleAction::Rebalance { chain: chain.clone(), from: 0, to: 2 }]
+        );
+        // stats were reset: the same tick's decision does not repeat
+        assert!(s.plan(0.0, &reg, &ix).is_empty());
+    }
+
+    #[test]
+    fn popular_chain_on_an_idle_replica_does_not_rebalance() {
+        // replica 1 holds the hot chain but is BELOW the mean backlog:
+        // the chain is popular, not concentrating load
+        let reg = registry(&[(0, 2000), (1, 100)]);
+        let ix = GlobalPrefixIndex::new();
+        let mut s = FleetScaler::new(ScalerConfig { hot_prefix_routes: 2, ..cfg() });
+        s.note_route(&[7, 8], 1);
+        s.note_route(&[7, 8], 1);
+        let actions = s.plan(5.0, &reg, &ix);
+        assert!(
+            !actions.iter().any(|a| matches!(a, ScaleAction::Rebalance { .. })),
+            "idle holder must not trigger migration: {actions:?}"
+        );
+    }
+
+    #[test]
+    fn rebalance_skips_replicas_already_holding_the_chain() {
+        let reg = registry(&[(0, 1500), (1, 10), (2, 20)]);
+        let mut ix = GlobalPrefixIndex::new();
+        let chain = vec![5u64, 6];
+        ix.record(0, &chain);
+        ix.record(1, &chain); // least-loaded replica already holds it
+        let mut s = FleetScaler::new(ScalerConfig { hot_prefix_routes: 1, ..cfg() });
+        s.note_route(&chain, 0);
+        let actions = s.plan(5.0, &reg, &ix);
+        assert_eq!(actions, vec![ScaleAction::Rebalance { chain, from: 0, to: 2 }]);
+    }
+}

@@ -81,6 +81,15 @@ impl<E> EventQueue<E> {
         self.heap.peek().map(|e| e.time)
     }
 
+    /// Jump the clock forward to `t` without processing anything (never
+    /// backwards).  Used when a replica spawned mid-run must align its
+    /// fresh local clock with fleet time before any event is scheduled.
+    pub fn advance_to(&mut self, t: SimTime) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+
     /// Pop the next event, advancing the clock.
     pub fn next(&mut self) -> Option<(SimTime, E)> {
         self.heap.pop().map(|e| {
@@ -151,6 +160,18 @@ mod tests {
         assert_eq!(q.now(), 0.0, "peek must not advance the clock");
         assert_eq!(q.next().unwrap(), (1.0, "a"));
         assert_eq!(q.peek_time(), Some(2.0));
+    }
+
+    #[test]
+    fn advance_to_is_monotonic() {
+        let mut q: EventQueue<&str> = EventQueue::new();
+        q.advance_to(5.0);
+        assert_eq!(q.now(), 5.0);
+        q.advance_to(2.0);
+        assert_eq!(q.now(), 5.0, "clock never moves backwards");
+        // events scheduled relative to the advanced clock land after it
+        q.schedule_in(1.0, "x");
+        assert_eq!(q.next().unwrap(), (6.0, "x"));
     }
 
     #[test]

@@ -11,7 +11,9 @@
 //! mid-run) are configurations of this driver plus a scenario from
 //! `workload::scenarios` (e.g. `skewed-prefix`).
 
-use crate::service::controlplane::{ControlPlane, ControlPlaneConfig, FleetResult, RoutePolicy};
+use crate::service::controlplane::{
+    ControlPlane, ControlPlaneConfig, FleetResult, RoutePolicy, ScalerConfig,
+};
 use crate::sim::cluster::ClusterConfig;
 use crate::sim::executor::RooflineExecutor;
 use crate::sim::roofline::CostModel;
@@ -26,12 +28,15 @@ pub struct FleetConfig {
     /// Per-replica cluster (hardware, model, features, serving mode,
     /// instance count, prefix cache, seed).
     pub template: ClusterConfig,
+    /// Replicas at start (the autoscaler may grow/shrink from here).
     pub n_replicas: usize,
     pub routing: RoutePolicy,
     pub heartbeat_s: f64,
     pub lease_ttl_s: f64,
     /// Whole-replica crash injections: (time, replica).
     pub replica_faults: Vec<(f64, usize)>,
+    /// Elastic autoscaling + planned KV rebalancing (None = fixed fleet).
+    pub scaler: Option<ScalerConfig>,
 }
 
 impl FleetConfig {
@@ -45,6 +50,7 @@ impl FleetConfig {
             heartbeat_s: d.heartbeat_s,
             lease_ttl_s: d.lease_ttl_s,
             replica_faults: Vec::new(),
+            scaler: d.scaler,
         }
     }
 
@@ -60,23 +66,32 @@ impl FleetConfig {
                 .colocation
                 .map(|(_, c)| c)
                 .unwrap_or_default(),
+            scaler: self.scaler,
             ..ControlPlaneConfig::default()
         }
     }
 }
 
+/// Stamp one replica from the template (also the scale-up factory: the
+/// per-replica seed offset keeps speculative draws independent even for
+/// replicas spawned mid-run).
+fn stamp_replica(template: &ClusterConfig, i: usize) -> Orchestrator<RooflineExecutor> {
+    let cost =
+        CostModel::new(template.hw.clone(), template.model.clone(), template.features.clone());
+    let executor =
+        RooflineExecutor::new(cost, template.spec, template.seed.wrapping_add(i as u64));
+    Orchestrator::new(template.orchestrator_config(), executor)
+}
+
 /// Build the replicas and run the workload through the control plane.
 pub fn run_fleet(cfg: FleetConfig, workload: Vec<RequestSpec>) -> FleetResult {
-    let replicas: Vec<Orchestrator<RooflineExecutor>> = (0..cfg.n_replicas)
-        .map(|i| {
-            let t = &cfg.template;
-            let cost = CostModel::new(t.hw.clone(), t.model.clone(), t.features.clone());
-            // per-replica seed offset keeps speculative draws independent
-            let executor = RooflineExecutor::new(cost, t.spec, t.seed.wrapping_add(i as u64));
-            Orchestrator::new(t.orchestrator_config(), executor)
-        })
-        .collect();
-    ControlPlane::new(cfg.control_plane_config(), replicas).run(workload)
+    let replicas: Vec<Orchestrator<RooflineExecutor>> =
+        (0..cfg.n_replicas).map(|i| stamp_replica(&cfg.template, i)).collect();
+    let cp_cfg = cfg.control_plane_config();
+    let template = cfg.template;
+    ControlPlane::new(cp_cfg, replicas)
+        .with_spawner(move |i| stamp_replica(&template, i))
+        .run(workload)
 }
 
 #[cfg(test)]

@@ -242,6 +242,24 @@ pub fn scenario(name: &str) -> Option<Scenario> {
             prefix_len: 512,
             prefix_groups: 12,
         },
+        // Bursty tidal traffic (elastic-scaling experiments, §3.1): one
+        // compressed day/night swing with a strong amplitude, so a fixed
+        // fleet sized for the trough drowns at the peak and one sized
+        // for the peak idles at the trough — the workload where replica
+        // autoscaling (scale up into the flood, decommission on the
+        // ebb) beats any fixed size.  Moderate prefix sharing keeps the
+        // cache-aware router and the global index exercised.
+        "tide" => Scenario {
+            name: "tide",
+            arrivals: ArrivalProcess::Tidal { mean_rate: 1.0, amplitude: 0.9, period_s: 40.0 },
+            input_len: LengthDist::LogNormal { median: 800.0, sigma: 0.6, lo: 64, hi: 4096 },
+            output_len: LengthDist::LogNormal { median: 150.0, sigma: 0.5, lo: 16, hi: 512 },
+            class: RequestClass::Online,
+            image_patches: 0,
+            prefix_share: 0.5,
+            prefix_len: 256,
+            prefix_groups: 4,
+        },
         // Offline batch analytics (co-location experiments, §3.1/Fig 23).
         "offline-docs" => Scenario {
             name: "offline-docs",
@@ -275,6 +293,7 @@ pub const SCENARIO_NAMES: &[&str] = &[
     "product-understanding",
     "textcaps",
     "skewed-prefix",
+    "tide",
     "offline-docs",
 ];
 
@@ -342,6 +361,27 @@ mod tests {
         // inputs always exceed the shared prefix, so a hit never covers
         // the whole prompt
         assert!(reqs.iter().all(|r| r.input_tokens > r.shared_prefix));
+    }
+
+    #[test]
+    fn tide_swings_between_flood_and_ebb() {
+        let sc = scenario("tide").unwrap();
+        // one full period: peak near t=10, trough near t=30
+        let peak = sc.arrivals.rate_at(10.0);
+        let trough = sc.arrivals.rate_at(30.0);
+        assert!(peak > 5.0 * trough.max(1e-9), "peak {peak} vs trough {trough}");
+        // arrivals concentrate in the flood half of the period
+        let mut rng = Rng::new(11);
+        let reqs = sc.generate(40.0, 4.0, &mut rng);
+        assert!(reqs.len() > 40, "got {}", reqs.len());
+        let flood = reqs.iter().filter(|r| r.arrival_s < 20.0).count();
+        assert!(
+            flood as f64 > 0.65 * reqs.len() as f64,
+            "flood half holds {flood}/{}",
+            reqs.len()
+        );
+        let shared = reqs.iter().filter(|r| r.shared_prefix > 0).count();
+        assert!(shared > 0, "tide must exercise the prefix cache");
     }
 
     #[test]

@@ -1,11 +1,19 @@
-//! Control-plane acceptance tests (ISSUE 2): cache-aware routing must
-//! beat round-robin on cluster prefix-hit rate under skewed-prefix
-//! traffic, and a replica killed mid-run must lose no requests — its
-//! in-flight work completes on the survivors with every request
-//! accounted for.
+//! Control-plane acceptance tests.
+//!
+//! ISSUE 2: cache-aware routing must beat round-robin on cluster
+//! prefix-hit rate under skewed-prefix traffic, and a replica killed
+//! mid-run must lose no requests — its in-flight work completes on the
+//! survivors with every request accounted for.
+//!
+//! ISSUE 3 (elastic fleet): on the bursty `tide` scenario the
+//! autoscaler must scale up into the flood and back down on the ebb
+//! with zero lost requests during decommission drain, and beat the
+//! fixed-size fleet on p99 TTFT; on `skewed-prefix`, planned KV
+//! rebalancing must fire and keep cluster prefix hits at least at the
+//! no-rebalance baseline.
 
 use xllm::model::{ascend_910b, catalog};
-use xllm::service::controlplane::RoutePolicy;
+use xllm::service::controlplane::{RoutePolicy, ScalerConfig};
 use xllm::sim::cluster::ClusterConfig;
 use xllm::sim::fleet::{run_fleet, FleetConfig};
 use xllm::sim::EngineFeatures;
@@ -86,6 +94,104 @@ fn replica_failure_mid_run_loses_no_requests() {
     assert!(
         res.per_replica[1].report.n_requests() < n,
         "the victim cannot have recorded everything"
+    );
+}
+
+#[test]
+fn tide_autoscaling_beats_the_fixed_fleet_it_started_as() {
+    let mut rng = Rng::new(0x71DE);
+    let w = scenario("tide").unwrap().generate(40.0, 6.0, &mut rng);
+    let n = w.len();
+    assert!(n > 100, "need a meaningful sample, got {n}");
+
+    // fixed fleet: the size the autoscaled fleet starts at
+    let fixed = FleetConfig::new(template(), 1);
+    let mut elastic = FleetConfig::new(template(), 1);
+    elastic.scaler = Some(ScalerConfig {
+        capacity_target_tokens: 4096,
+        min_replicas: 1,
+        max_replicas: 6,
+        cooldown_s: 1.0,
+        ..Default::default()
+    });
+
+    let res_fixed = run_fleet(fixed, w.clone());
+    let res_elastic = run_fleet(elastic, w);
+
+    // zero lost requests, including across decommission drains
+    assert!(res_elastic.all_accounted());
+    assert_eq!(
+        res_elastic.report.n_completed(),
+        n,
+        "decommission drain must lose nothing: {:?}",
+        res_elastic.counters
+    );
+    assert_eq!(res_elastic.counters.unroutable, 0);
+    assert_eq!(res_elastic.counters.failovers, 0, "planned shrink is not failover");
+
+    // the flood forces scale-up, the ebb forces scale-down
+    assert!(
+        res_elastic.counters.scale_ups >= 1,
+        "tide flood must grow the fleet: {:?}",
+        res_elastic.counters
+    );
+    assert!(
+        res_elastic.counters.scale_downs >= 1,
+        "tide ebb must shrink the fleet: {:?}",
+        res_elastic.counters
+    );
+    assert!(
+        res_elastic.n_replicas_final < res_elastic.per_replica.len(),
+        "fleet must end smaller than its peak ({} replicas ever, {} final)",
+        res_elastic.per_replica.len(),
+        res_elastic.n_replicas_final
+    );
+
+    // elasticity pays: tail TTFT beats the fixed fleet the run started as
+    let p99_fixed = res_fixed.report.ttft_summary().percentile(99.0);
+    let p99_elastic = res_elastic.report.ttft_summary().percentile(99.0);
+    assert!(
+        p99_elastic < p99_fixed,
+        "autoscaled p99 TTFT {p99_elastic} must beat fixed-size {p99_fixed}"
+    );
+}
+
+#[test]
+fn skewed_prefix_planned_rebalance_fires_and_keeps_hits() {
+    let mut rng = Rng::new(0x5EED);
+    let w = scenario("skewed-prefix").unwrap().generate(30.0, 3.0, &mut rng);
+    let n = w.len();
+
+    // fixed-size fleet (min == max) isolates the rebalancing half of
+    // the scaler from autoscaling
+    let baseline = FleetConfig::new(template(), 3);
+    let mut rebal = FleetConfig::new(template(), 3);
+    rebal.scaler = Some(ScalerConfig {
+        min_replicas: 3,
+        max_replicas: 3,
+        capacity_target_tokens: u64::MAX / 4,
+        hot_prefix_routes: 5,
+        ..Default::default()
+    });
+
+    let res_base = run_fleet(baseline, w.clone());
+    let res_rebal = run_fleet(rebal, w);
+
+    assert_eq!(res_base.report.n_completed(), n);
+    assert_eq!(res_rebal.report.n_completed(), n);
+    assert!(
+        res_rebal.counters.kv_rebalances >= 1,
+        "a hot prefix group concentrating on one replica must trigger a \
+         planned migration: {:?}",
+        res_rebal.counters
+    );
+    assert!(res_rebal.counters.rebalance_staging_s > 0.0, "staging cost is charged");
+    assert!(
+        res_rebal.prefix_hits() >= res_base.prefix_hits(),
+        "planned migration must not cost cluster prefix hits: \
+         with={} without={}",
+        res_rebal.prefix_hits(),
+        res_base.prefix_hits()
     );
 }
 

@@ -1,0 +1,119 @@
+//! Fleet-scope golden parity: `run_fleet` must reproduce exact cluster
+//! counters for fixed-seed configurations, pinning the whole control
+//! plane — routing, heartbeat/lease machinery, failover re-dispatch,
+//! and the elastic scaler — the way `orchestrator_parity.rs` pins the
+//! single-replica lifecycle.
+//!
+//! The golden fixture (`tests/golden/fleet_counters.txt`) is written on
+//! the first run (or when `UPDATE_GOLDEN=1`) and compared byte-exactly
+//! afterwards.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use xllm::model::{ascend_910b, catalog};
+use xllm::service::controlplane::{FleetResult, RoutePolicy, ScalerConfig};
+use xllm::sim::cluster::ClusterConfig;
+use xllm::sim::fleet::{run_fleet, FleetConfig};
+use xllm::sim::EngineFeatures;
+use xllm::util::Rng;
+use xllm::workload::scenario;
+
+const GOLDEN_PATH: &str = "tests/golden/fleet_counters.txt";
+
+fn template() -> ClusterConfig {
+    let mut cfg = ClusterConfig::new(
+        1,
+        ascend_910b(),
+        catalog("Qwen3-8B").unwrap(),
+        EngineFeatures::xllm(1),
+    );
+    cfg.prefix_cache = true;
+    cfg
+}
+
+fn counters_line(name: &str, res: &FleetResult) -> String {
+    let c = &res.counters;
+    let mut s = String::new();
+    write!(
+        s,
+        "{name} submitted={} recorded={} completed={} replicas_total={} replicas_final={} \
+         cache_hits={} failovers={} redispatched={} redispatched_tokens={} \
+         redispatch_migrations={} offline_steered={} unroutable={} lease_expiries={} \
+         scale_ups={} scale_downs={} kv_rebalances={} prefix_hits={} truncated={} \
+         tput_utok_s={}",
+        res.submitted,
+        res.report.n_requests(),
+        res.report.n_completed(),
+        res.per_replica.len(),
+        res.n_replicas_final,
+        c.routed_by_cache_hit,
+        c.failovers,
+        c.redispatched_requests,
+        c.redispatched_tokens,
+        c.redispatch_migrations,
+        c.offline_steered,
+        c.unroutable,
+        c.lease_expiries,
+        c.scale_ups,
+        c.scale_downs,
+        c.kv_rebalances,
+        res.prefix_hits(),
+        res.truncated,
+        // micro-token/s resolution: integral, byte-stable, still
+        // catches timing drift
+        (res.report.output_throughput() * 1e6).round() as u64,
+    )
+    .unwrap();
+    s
+}
+
+fn failover_case() -> String {
+    let mut rng = Rng::new(0xF1EE7);
+    let w = scenario("skewed-prefix").unwrap().generate(25.0, 2.5, &mut rng);
+    let mut cfg = FleetConfig::new(template(), 3);
+    cfg.routing = RoutePolicy::CacheAware;
+    cfg.replica_faults = vec![(8.0, 1)];
+    counters_line("failover", &run_fleet(cfg, w))
+}
+
+fn autoscale_case() -> String {
+    let mut rng = Rng::new(0x71DA1);
+    let w = scenario("tide").unwrap().generate(40.0, 5.0, &mut rng);
+    let mut cfg = FleetConfig::new(template(), 1);
+    cfg.scaler = Some(ScalerConfig {
+        capacity_target_tokens: 4096,
+        min_replicas: 1,
+        max_replicas: 4,
+        cooldown_s: 1.0,
+        ..Default::default()
+    });
+    counters_line("autoscale-tide", &run_fleet(cfg, w))
+}
+
+#[test]
+fn golden_fleet_counters_are_stable() {
+    let got = format!("{}\n{}\n", failover_case(), autoscale_case());
+    let path = Path::new(GOLDEN_PATH);
+    let bless = std::env::var("UPDATE_GOLDEN").is_ok() || !path.exists();
+    if bless {
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        fs::write(path, &got).unwrap();
+        eprintln!("blessed golden fleet counters:\n{got}");
+        return;
+    }
+    let want = fs::read_to_string(path).unwrap();
+    assert_eq!(
+        got, want,
+        "fleet counters diverged from the golden fixture — the control \
+         plane changed behavior.  If intentional, rerun with \
+         UPDATE_GOLDEN=1 and commit the new fixture."
+    );
+}
+
+#[test]
+fn golden_fleet_runs_are_internally_deterministic() {
+    assert_eq!(failover_case(), failover_case());
+    assert_eq!(autoscale_case(), autoscale_case());
+}
