@@ -84,6 +84,10 @@ pub struct ServeConfig {
     pub slo: Slo,
     /// Enable speculative decoding with the draft model.
     pub speculative: bool,
+    /// Iterations kept in flight (§4.2 async scheduling): 1 = blocking
+    /// engine on the orchestrator thread; ≥ 2 moves the engine onto a
+    /// worker thread so host scheduling overlaps device execution.
+    pub pipeline_depth: usize,
 }
 
 impl Default for ServeConfig {
@@ -95,6 +99,7 @@ impl Default for ServeConfig {
             max_output_tokens: 32,
             slo: Slo::interactive(2.0, 0.5),
             speculative: false,
+            pipeline_depth: 1,
         }
     }
 }

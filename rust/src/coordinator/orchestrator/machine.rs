@@ -5,17 +5,33 @@
 //! KV handoff → batched decode iterations → completion, with dynamic PD
 //! role switching, online/offline co-location, fault injection, and the
 //! prefix cache all live.  Iteration execution — and therefore how time
-//! advances — is delegated to the [`Executor`].
+//! advances — is delegated to the [`Executor`] through its two-phase
+//! submit/complete contract.
+//!
+//! # Async pipeline (§4.2)
+//!
+//! Each instance owns a FIFO pipeline of up to
+//! [`OrchestratorConfig::pipeline_depth`] in-flight iterations.  While
+//! iteration N runs "on the device", the orchestrator plans iteration
+//! N+1 against the *predicted* post-completion state (submitted prefill
+//! chunks count as computed, every in-flight decode is assumed to emit
+//! one token), so the host-side planning cost hides under device time.
+//! Completions re-enter through `Ev::IterDone(instance, seq)` events and
+//! reconcile against the live state — a look-ahead plan may carry a
+//! request that already finished (the real pipeline bubble), which is
+//! priced but advances nothing.  At depth 1 the look-ahead view is the
+//! live state and the timeline charges `host + device` per iteration:
+//! exactly the pre-async blocking behavior, event for event.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::coordinator::orchestrator::{
-    ColocationMode, DecodeWork, EncodeWork, Executor, InFlightSnapshot, IterationWork, LoadReport,
-    OrchestratorConfig, PrefillWork, RunResult, ServingMode,
+    ColocationMode, DecodeWork, EncodeWork, Executor, InFlightSnapshot, IterationTicket,
+    IterationWork, LoadReport, OrchestratorConfig, PrefillWork, RunResult, ServingMode,
 };
 use crate::coordinator::{
-    plan_iteration, plan_role_switches, ElasticPools, GlobalScheduler, InstanceId, InstanceState,
-    InstanceView, Phase, Placement, PoolKind, Request, RequestId, RoleFlip,
+    plan_iteration, plan_role_switches, BatchConfig, ElasticPools, GlobalScheduler, InstanceId,
+    InstanceState, InstanceView, Phase, Placement, PoolKind, Request, RequestId, RoleFlip,
 };
 use crate::metrics::{ServingReport, Slo};
 use crate::service::colocation::admit_offline_decodes;
@@ -27,17 +43,29 @@ use crate::workload::RequestSpec;
 #[derive(Debug, Clone)]
 enum Ev {
     Arrive(usize),
-    IterDone(InstanceId),
+    /// Iteration completion: (instance, ticket seq).  The seq matches the
+    /// completion to its pipeline slot, so completions whose pipeline was
+    /// cleared by a fault are recognizably stale and dropped.
+    IterDone(InstanceId, u64),
     KvReady(InstanceId),
     Monitor,
     Fault(usize),
     Recover(usize),
 }
 
-/// Work in flight on one instance.
+/// One iteration in flight on an instance (FIFO pipeline slot).
 struct InFlight {
+    /// Ticket seq (executor-assigned, never reused).
+    seq: u64,
     work: IterationWork,
+    /// Span this iteration occupies on the instance timeline (completion
+    /// minus pipeline-ready time) — the monitor's TPOT attribution.  At
+    /// depth 1 this is `host_s + device_s`; warm at depth ≥ 2 it is the
+    /// device time alone (host hidden).
     duration: f64,
+    /// Ticket still owed its `poll_complete` at the completion event
+    /// (depth ≥ 2; depth 1 completes at submit).
+    ticket: Option<IterationTicket>,
 }
 
 /// The shared serving orchestrator, generic over the execution backend.
@@ -51,7 +79,13 @@ pub struct Orchestrator<X: Executor> {
     scheduler: GlobalScheduler,
     requests: HashMap<RequestId, Request>,
     specs: Vec<RequestSpec>,
-    current: HashMap<InstanceId, InFlight>,
+    /// Per-instance FIFO of in-flight iterations (≤ `pipeline_depth`).
+    inflight: HashMap<InstanceId, VecDeque<InFlight>>,
+    /// Per-instance host / device timeline frontiers: when the host is
+    /// free to plan the next iteration and when the device finishes
+    /// everything submitted so far.  Both reduce to "now" at depth 1.
+    host_free: Vec<f64>,
+    device_free: Vec<f64>,
     /// Where each request's prefill ran (decode placement preference).
     prefill_home: HashMap<RequestId, InstanceId>,
     prefix_cache: TieredCache,
@@ -87,6 +121,7 @@ impl<X: Executor> Orchestrator<X> {
             cfg.prefix_dram_tokens,
             cfg.prefix_ssd_tokens,
         );
+        let n_total = instances.len();
         Orchestrator {
             executor,
             xfer: TransferEngine::default(),
@@ -96,7 +131,9 @@ impl<X: Executor> Orchestrator<X> {
             scheduler,
             requests: HashMap::new(),
             specs: Vec::new(),
-            current: HashMap::new(),
+            inflight: HashMap::new(),
+            host_free: vec![0.0; n_total],
+            device_free: vec![0.0; n_total],
             prefill_home: HashMap::new(),
             prefix_cache,
             report: ServingReport::new(),
@@ -198,7 +235,7 @@ impl<X: Executor> Orchestrator<X> {
         };
         match ev {
             Ev::Arrive(i) => self.on_arrive(i),
-            Ev::IterDone(id) => self.on_iter_done(id),
+            Ev::IterDone(id, seq) => self.on_iter_done(id, seq),
             Ev::KvReady(id) => self.kick(id),
             Ev::Monitor => self.on_monitor(),
             Ev::Fault(id) => self.on_fault(id),
@@ -209,8 +246,12 @@ impl<X: Executor> Orchestrator<X> {
             self.truncated = true;
             return false;
         }
-        // drained when only the monitor tick remains
-        !(self.all_done() && self.queue.len() <= 1)
+        // drained when only the monitor tick remains AND no iteration is
+        // still in flight (a trailing look-ahead bubble after the last
+        // completion must still be processed so its ticket gets polled)
+        !(self.all_done()
+            && self.queue.len() <= 1
+            && self.inflight.values().all(|q| q.is_empty()))
     }
 
     /// Finalize: metrics + counters, handing the executor back (real
@@ -488,10 +529,28 @@ impl<X: Executor> Orchestrator<X> {
 
     // --- iteration execution -------------------------------------------
 
+    /// Number of iterations in flight on `id`.
+    fn inflight_len(&self, id: InstanceId) -> usize {
+        self.inflight.get(&id).map_or(0, |q| q.len())
+    }
+
+    /// Fill this instance's pipeline: plan and submit iterations until
+    /// the configured depth is reached or nothing more can be planned.
+    /// At depth 1 this submits at most one iteration after the previous
+    /// one completed — the blocking contract.
     fn kick(&mut self, id: InstanceId) {
+        while self.submit_next(id) {}
+    }
+
+    /// Plan one iteration against the look-ahead view and submit it.
+    /// Returns true when an iteration was submitted.
+    fn submit_next(&mut self, id: InstanceId) -> bool {
+        if self.inflight_len(id) >= self.cfg.pipeline_depth.max(1) {
+            return false;
+        }
         let inst = &self.instances[id];
         if inst.busy || inst.failed || !inst.has_work() {
-            return;
+            return false;
         }
         let pool = self.pools.kind(id);
         let colocated = matches!(self.cfg.mode, ServingMode::Colocated);
@@ -503,23 +562,81 @@ impl<X: Executor> Orchestrator<X> {
         let serves_decode = colocated || pool.serves_decode() || !inst.running.is_empty();
         let serves_encode = pool.serves_encode() || self.cfg.epd.is_some() || colocated;
 
+        // Look-ahead view (§4.2 async scheduling): with iterations in
+        // flight, plan the next one against the predicted post-completion
+        // request states — submitted prefill chunks count as computed,
+        // every in-flight decode is assumed to emit one token (actual
+        // emission is never lower), finished encodes move to prefill.
+        // With nothing in flight (always the case at depth 1) the view is
+        // exactly the live state.
+        let mut adj: HashMap<RequestId, Request> = HashMap::new();
+        if let Some(q) = self.inflight.get(&id) {
+            for fl in q {
+                for d in &fl.work.decodes {
+                    let Some(base) = self.requests.get(&d.req) else { continue };
+                    let r = adj.entry(d.req).or_insert_with(|| base.clone());
+                    if matches!(r.phase, Phase::Decode) {
+                        r.advance_decode(1, 0.0);
+                    }
+                }
+                for p in &fl.work.prefills {
+                    let Some(base) = self.requests.get(&p.req) else { continue };
+                    let r = adj.entry(p.req).or_insert_with(|| base.clone());
+                    if matches!(r.phase, Phase::Prefill) {
+                        r.advance_prefill(p.tokens, 0.0);
+                    }
+                }
+                for e in &fl.work.encodes {
+                    let Some(base) = self.requests.get(&e.req) else { continue };
+                    let r = adj.entry(e.req).or_insert_with(|| base.clone());
+                    if matches!(r.phase, Phase::Encode) {
+                        r.finish_encode();
+                    }
+                }
+            }
+        }
+        /// Predicted view of a request: the look-ahead clone if one
+        /// exists, the live request otherwise.
+        fn look<'a>(
+            adj: &'a HashMap<RequestId, Request>,
+            live: &'a HashMap<RequestId, Request>,
+            rid: &RequestId,
+        ) -> Option<&'a Request> {
+            adj.get(rid).or_else(|| live.get(rid))
+        }
+
+        // phase filters drop requests whose in-flight work already moves
+        // them past a phase (predicted-complete decodes, prefills mid
+        // KV-handoff, finished encodes) — no-ops on the live view
         let running: Vec<&Request> = if serves_decode {
-            inst.running.iter().filter_map(|r| self.requests.get(r)).collect()
+            inst.running
+                .iter()
+                .filter_map(|r| look(&adj, &self.requests, r))
+                .filter(|r| matches!(r.phase, Phase::Decode))
+                .collect()
         } else {
             Vec::new()
         };
         let queued: Vec<&Request> = if serves_prefill {
-            inst.prefill_queue.iter().filter_map(|r| self.requests.get(r)).collect()
+            inst.prefill_queue
+                .iter()
+                .filter_map(|r| look(&adj, &self.requests, r))
+                .filter(|r| matches!(r.phase, Phase::Prefill))
+                .collect()
         } else {
             Vec::new()
         };
         let encodes: Vec<&Request> = if serves_encode {
-            inst.encode_queue.iter().filter_map(|r| self.requests.get(r)).collect()
+            inst.encode_queue
+                .iter()
+                .filter_map(|r| look(&adj, &self.requests, r))
+                .filter(|r| matches!(r.phase, Phase::Encode))
+                .collect()
         } else {
             Vec::new()
         };
         if running.is_empty() && queued.is_empty() && encodes.is_empty() {
-            return;
+            return false;
         }
 
         // online-priority co-location: offline prefill waits while any
@@ -537,7 +654,26 @@ impl<X: Executor> Orchestrator<X> {
                 queued
             };
 
-        let mut plan = plan_iteration(&running, &queued, &encodes, &inst.batch);
+        // Slot admission stays pessimistic under look-ahead: a request
+        // predicted past its current phase still occupies a physical
+        // batch slot until its completion event actually frees it, and a
+        // mid-KV-handoff prefill will claim a slot the moment it lands.
+        // Both are invisible to the filtered views, so their count comes
+        // off `max_seqs` instead (zero at depth 1: views == live state).
+        let handoff = if serves_prefill {
+            inst.prefill_queue
+                .iter()
+                .filter(|r| adj.get(r).is_some_and(|q| !matches!(q.phase, Phase::Prefill)))
+                .count()
+        } else {
+            0
+        };
+        let hidden_slots = inst.running.len().saturating_sub(running.len()) + handoff;
+        let batch = BatchConfig {
+            max_seqs: inst.batch.max_seqs.saturating_sub(hidden_slots),
+            ..inst.batch
+        };
+        let mut plan = plan_iteration(&running, &queued, &encodes, &batch);
 
         // co-location admission control: cap offline decodes so the step
         // stays within the online TPOT budget (§3.1 Solution 1)
@@ -546,20 +682,22 @@ impl<X: Executor> Orchestrator<X> {
                 .decode_ids
                 .iter()
                 .copied()
-                .filter(|r| self.requests[r].is_online())
+                .filter(|r| look(&adj, &self.requests, r).is_some_and(|q| q.is_online()))
                 .collect();
             let offline: Vec<RequestId> = plan
                 .decode_ids
                 .iter()
                 .copied()
-                .filter(|r| !self.requests[r].is_online())
+                .filter(|r| look(&adj, &self.requests, r).is_some_and(|q| !q.is_online()))
                 .collect();
             if !offline.is_empty() {
-                let online_kv: u64 =
-                    online.iter().map(|r| self.requests[r].context_len()).sum();
+                let online_kv: u64 = online
+                    .iter()
+                    .map(|r| look(&adj, &self.requests, r).map_or(0, |q| q.context_len()))
+                    .sum();
                 let mean_ctx = (offline
                     .iter()
-                    .map(|r| self.requests[r].context_len())
+                    .map(|r| look(&adj, &self.requests, r).map_or(0, |q| q.context_len()))
                     .sum::<u64>()
                     / offline.len() as u64)
                     .max(1);
@@ -581,7 +719,7 @@ impl<X: Executor> Orchestrator<X> {
         self.preemptions += plan.preempted.len() as u64;
 
         if plan.is_empty() {
-            return;
+            return false;
         }
 
         // hand the planned work to the executor; virtual time advances by
@@ -590,7 +728,10 @@ impl<X: Executor> Orchestrator<X> {
             decodes: plan
                 .decode_ids
                 .iter()
-                .map(|r| DecodeWork { req: *r, context_tokens: self.requests[r].context_len() })
+                .map(|r| DecodeWork {
+                    req: *r,
+                    context_tokens: look(&adj, &self.requests, r).map_or(0, |q| q.context_len()),
+                })
                 .collect(),
             prefills: plan
                 .prefill_chunks
@@ -600,50 +741,110 @@ impl<X: Executor> Orchestrator<X> {
             encodes: plan
                 .encode_ids
                 .iter()
-                .map(|r| EncodeWork { req: *r, image_patches: self.requests[r].spec.image_patches })
+                .map(|r| EncodeWork {
+                    req: *r,
+                    image_patches: look(&adj, &self.requests, r)
+                        .map_or(0, |q| q.spec.image_patches),
+                })
                 .collect(),
         };
         let now = self.queue.now();
-        let duration = self.executor.begin_iteration(id, now, &work).max(1e-6);
+        let ticket = self.executor.submit_iteration(id, now, &work);
+        let (outcome, pending) = if self.cfg.pipeline_depth.max(1) == 1 {
+            // depth 1 recovers the blocking contract: complete in-line
+            (self.executor.poll_complete(ticket), None)
+        } else {
+            (ticket.est, Some(ticket))
+        };
+        // a zero/negative duration for non-empty work means the cost
+        // model or backend is broken; surfacing it here beats the old
+        // clamp-and-forget (`.max(1e-6)`) that silently rewrote it
+        debug_assert!(
+            outcome.total_s() > 0.0,
+            "executor returned non-positive duration {} s for non-empty work on instance {id}",
+            outcome.total_s()
+        );
 
-        self.instances[id].busy = true;
-        self.current.insert(id, InFlight { work, duration });
-        self.queue.schedule_in(duration, Ev::IterDone(id));
+        // pipeline timeline: host planning runs serially per instance and
+        // the device starts an iteration once both the host work and the
+        // previous iteration are done.  At depth 1 both frontiers are in
+        // the past, so this reduces exactly to the blocking
+        // `now + host + device`.
+        let host_done = now.max(self.host_free[id]) + outcome.host_s;
+        let ready = now.max(self.device_free[id]);
+        let done = host_done.max(self.device_free[id]) + outcome.device_s;
+        self.host_free[id] = host_done;
+        self.device_free[id] = done;
+        self.inflight.entry(id).or_default().push_back(InFlight {
+            seq: ticket.seq,
+            work,
+            duration: done - ready,
+            ticket: pending,
+        });
+        self.queue.schedule_at(done, Ev::IterDone(id, ticket.seq));
+        true
     }
 
-    fn on_iter_done(&mut self, id: InstanceId) {
+    fn on_iter_done(&mut self, id: InstanceId, seq: u64) {
         let now = self.queue.now();
-        let plan = match self.current.remove(&id) {
-            Some(p) => p,
-            None => return,
+        let fl = match self.inflight.get_mut(&id) {
+            Some(q) if q.front().map(|f| f.seq) == Some(seq) => q.pop_front().unwrap(),
+            // stale completion: the pipeline was cleared by a fault and
+            // this event belongs to the pre-fault generation
+            _ => return,
         };
+        let mut duration = fl.duration;
+        if let Some(t) = fl.ticket {
+            // depth ≥ 2: the ticket completes here, at the event that
+            // re-enters the state machine.  Sim executors resolve to the
+            // submit-time estimate exactly (virtual time stays exact and
+            // `duration` keeps its pipeline-aware span); a real backend
+            // blocks until its worker thread finishes and its measured
+            // span replaces the estimate for the monitor's attribution —
+            // the event timeline itself stays estimate-ordered.
+            let measured = self.executor.poll_complete(t);
+            if measured != t.est {
+                duration = measured.total_s();
+            }
+        }
         if self.instances[id].failed {
-            self.instances[id].busy = false;
             return; // fault handler already migrated the work
         }
-        // NOTE: busy stays true until bookkeeping completes, so re-entrant
-        // kick() calls (e.g. from place_decode_for back onto this
-        // instance) cannot snapshot a stale plan.
+        // NOTE: busy acts as a settle latch until bookkeeping completes,
+        // so re-entrant kick() calls (e.g. from place_decode_for back
+        // onto this instance) cannot plan against a half-applied state.
+        self.instances[id].busy = true;
         self.iterations += 1;
 
         // encodes complete
-        for e in &plan.work.encodes {
+        for e in &fl.work.encodes {
             let rid = e.req;
-            if let Some(r) = self.requests.get_mut(&rid) {
-                r.finish_encode();
+            let advanced = match self.requests.get_mut(&rid) {
+                Some(r) if matches!(r.phase, Phase::Encode) => {
+                    r.finish_encode();
+                    true
+                }
+                _ => false, // look-ahead duplicate or failed request
+            };
+            if advanced {
+                self.instances[id].encode_queue.retain(|x| *x != rid);
+                self.route_prefill(rid);
             }
-            self.instances[id].encode_queue.retain(|x| *x != rid);
-            self.route_prefill(rid);
         }
 
         // prefill chunks advance
-        for p in &plan.work.prefills {
+        for p in &fl.work.prefills {
             let rid = p.req;
             let done = {
                 let r = match self.requests.get_mut(&rid) {
                     Some(r) => r,
                     None => continue,
                 };
+                // a look-ahead plan may carry a chunk for a request that
+                // failed or moved on in the meantime (depth ≥ 2 only)
+                if !matches!(r.phase, Phase::Prefill) {
+                    continue;
+                }
                 self.instances[id].kv_tokens += p.tokens;
                 r.advance_prefill(p.tokens, now)
             };
@@ -664,7 +865,7 @@ impl<X: Executor> Orchestrator<X> {
                 if finished {
                     self.instances[id].kv_tokens =
                         self.instances[id].kv_tokens.saturating_sub(ctx);
-                    self.finish(rid);
+                    self.complete_request(rid);
                 } else {
                     self.prefill_home.insert(rid, id);
                     self.place_decode_for(rid, id, ctx);
@@ -673,16 +874,26 @@ impl<X: Executor> Orchestrator<X> {
         }
 
         // decodes advance
-        let iter_dur = plan.duration;
+        let iter_dur = duration;
         let mut finished: Vec<RequestId> = Vec::new();
-        for d in &plan.work.decodes {
+        for d in &fl.work.decodes {
             let rid = d.req;
+            // one emission draw per planned decode, in plan order — the
+            // draw happens even for a look-ahead bubble (the device ran
+            // the sequence), preserving the RNG stream
             let tokens = self.executor.decode_emission(id, rid);
             let done = {
                 let r = match self.requests.get_mut(&rid) {
                     Some(r) => r,
                     None => continue,
                 };
+                // a look-ahead plan (depth ≥ 2) may still carry a request
+                // that completed in the previous iteration — the real
+                // async-scheduling pipeline bubble: priced into the step,
+                // advances nothing
+                if !matches!(r.phase, Phase::Decode) {
+                    continue;
+                }
                 let emitted = tokens.min(r.decode_remaining());
                 self.instances[id].kv_tokens += emitted;
                 r.advance_decode(tokens, now)
@@ -699,7 +910,7 @@ impl<X: Executor> Orchestrator<X> {
             self.instances[id].running.retain(|x| *x != rid);
             self.instances[id].kv_tokens =
                 self.instances[id].kv_tokens.saturating_sub(ctx);
-            self.finish(rid);
+            self.complete_request(rid);
         }
 
         self.instances[id].busy = false;
@@ -715,13 +926,76 @@ impl<X: Executor> Orchestrator<X> {
                 panic!("executor invariant violated after iteration {}: {e}", self.iterations);
             }
         }
-        // layer-2 reactive workload migration (§4.4.3): at iteration
-        // boundaries this instance's running set is in no executing plan,
-        // so whole sequences can move to under-loaded peers safely.
+        // layer-2 reactive workload migration (§4.4.3): only when the
+        // pipeline is fully drained is this instance's running set in no
+        // executing plan, so whole sequences can move to under-loaded
+        // peers safely (always true at depth 1 at this point).  An
+        // overloaded instance with iterations still in flight quiesces
+        // instead of refilling, so the pipeline drains within `depth`
+        // completions and the next boundary can migrate — without this,
+        // depth ≥ 2 would never hit a drained boundary under sustained
+        // load and layer-2 balancing would silently stop firing.
         if self.executor.cost().features.dp_balance {
-            self.rebalance_from(id);
+            if self.inflight_len(id) == 0 {
+                self.rebalance_from(id);
+            } else if self.rebalance_would_migrate(id) {
+                return; // quiesce: no refill, drain toward a boundary
+            }
         }
         self.kick(id);
+    }
+
+    /// Rebalance tolerances (paper §4.4.3 layer 2): an instance is
+    /// overloaded above `HI` × the peer-mean decode load; a target must
+    /// sit below `LO` × mean to receive migrated sequences.
+    const REBALANCE_TOLERANCE_HI: f64 = 1.25;
+    const REBALANCE_TOLERANCE_LO: f64 = 0.80;
+    const REBALANCE_MAX_MOVES: usize = 4;
+
+    /// Decode-capable peers of `id` for layer-2 balancing (includes
+    /// `id`); empty when balancing cannot apply.
+    fn rebalance_peers(&self, id: InstanceId) -> Vec<InstanceId> {
+        let colocated = matches!(self.cfg.mode, ServingMode::Colocated);
+        let peers = if colocated {
+            self.alive((0..self.cfg.n_instances).collect())
+        } else {
+            self.alive(self.pools.decode_capable())
+        };
+        if peers.len() < 2 || !peers.contains(&id) {
+            return Vec::new();
+        }
+        peers
+    }
+
+    /// Context tokens of `i`'s running decode set (the layer-2 load
+    /// metric).
+    fn decode_load(&self, i: InstanceId) -> u64 {
+        self.instances[i]
+            .running
+            .iter()
+            .filter_map(|r| self.requests.get(r))
+            .map(|r| r.context_len())
+            .sum()
+    }
+
+    /// Would [`Self::rebalance_from`] move work off `id` right now?
+    /// True only when `id` exceeds the peer mean by the HI tolerance
+    /// AND some peer sits below the LO tolerance to receive it — the
+    /// depth ≥ 2 quiesce trigger (quiescing for an overload no peer can
+    /// absorb would serialize the pipeline for nothing).
+    fn rebalance_would_migrate(&self, id: InstanceId) -> bool {
+        let peers = self.rebalance_peers(id);
+        if peers.is_empty() {
+            return false;
+        }
+        let mine = self.decode_load(id);
+        let total: u64 = peers.iter().map(|&p| self.decode_load(p)).sum();
+        let mean = total as f64 / peers.len() as f64;
+        mean > 0.0
+            && (mine as f64) >= mean * Self::REBALANCE_TOLERANCE_HI
+            && peers.iter().any(|&p| {
+                p != id && (self.decode_load(p) as f64) < mean * Self::REBALANCE_TOLERANCE_LO
+            })
     }
 
     /// Reactive inter-instance decode migration (paper §4.4.3 layer 2).
@@ -730,30 +1004,14 @@ impl<X: Executor> Orchestrator<X> {
     /// more than the tolerance and a peer sits well below it, migrate the
     /// smallest running sequences over (KV transfer modelled via KvReady).
     fn rebalance_from(&mut self, id: InstanceId) {
-        const TOLERANCE_HI: f64 = 1.25;
-        const TOLERANCE_LO: f64 = 0.80;
-        const MAX_MOVES: usize = 4;
-        let colocated = matches!(self.cfg.mode, ServingMode::Colocated);
-        let peers: Vec<InstanceId> = if colocated {
-            self.alive((0..self.cfg.n_instances).collect())
-        } else {
-            self.alive(self.pools.decode_capable())
-        };
-        if peers.len() < 2 || !peers.contains(&id) {
+        let peers = self.rebalance_peers(id);
+        if peers.is_empty() {
             return;
         }
-        let load = |s: &Self, i: InstanceId| -> u64 {
-            s.instances[i]
-                .running
-                .iter()
-                .filter_map(|r| s.requests.get(r))
-                .map(|r| r.context_len())
-                .sum()
-        };
-        let mine = load(self, id);
-        let total: u64 = peers.iter().map(|&p| load(self, p)).sum();
+        let mine = self.decode_load(id);
+        let total: u64 = peers.iter().map(|&p| self.decode_load(p)).sum();
         let mean = total as f64 / peers.len() as f64;
-        if mean <= 0.0 || (mine as f64) < mean * TOLERANCE_HI {
+        if mean <= 0.0 || (mine as f64) < mean * Self::REBALANCE_TOLERANCE_HI {
             return;
         }
         // smallest sequences first: cheapest KV transfers
@@ -766,16 +1024,20 @@ impl<X: Executor> Orchestrator<X> {
         let mut moved = 0usize;
         let mut my_load = mine as f64;
         for (ctx, rid) in mine_reqs {
-            if moved >= MAX_MOVES || my_load < mean * TOLERANCE_HI {
+            if moved >= Self::REBALANCE_MAX_MOVES
+                || my_load < mean * Self::REBALANCE_TOLERANCE_HI
+            {
                 break;
             }
             let target = peers
                 .iter()
                 .copied()
                 .filter(|&p| p != id)
-                .min_by_key(|&p| load(self, p));
+                .min_by_key(|&p| self.decode_load(p));
             let target = match target {
-                Some(t) if (load(self, t) as f64) < mean * TOLERANCE_LO => t,
+                Some(t) if (self.decode_load(t) as f64) < mean * Self::REBALANCE_TOLERANCE_LO => {
+                    t
+                }
                 _ => break,
             };
             if self.instances[target].running.len() >= self.cfg.batch.max_decode_seqs
@@ -845,7 +1107,10 @@ impl<X: Executor> Orchestrator<X> {
         }
     }
 
-    fn finish(&mut self, rid: RequestId) {
+    /// A request reached a terminal phase: record it and tell the
+    /// executor.  (Named apart from the consuming [`Self::finish`] —
+    /// the two used to collide under one name, which never compiled.)
+    fn complete_request(&mut self, rid: RequestId) {
         self.prefill_home.remove(&rid);
         if let Some(r) = self.requests.get(&rid) {
             if let Some(o) = r.outcome() {
@@ -913,7 +1178,20 @@ impl<X: Executor> Orchestrator<X> {
         let now = self.queue.now();
         self.instances[id].failed = true;
         self.instances[id].busy = false;
-        self.current.remove(&id);
+        // drain the pipeline: the device work is lost, but every still
+        // outstanding ticket gets its poll_complete (executor contract)
+        // before the slots are forgotten; the pending IterDone events
+        // become stale and are dropped by seq mismatch
+        let tickets: Vec<IterationTicket> = self
+            .inflight
+            .get_mut(&id)
+            .map(|q| q.drain(..).filter_map(|fl| fl.ticket).collect())
+            .unwrap_or_default();
+        for t in tickets {
+            let _ = self.executor.poll_complete(t);
+        }
+        self.host_free[id] = now;
+        self.device_free[id] = now;
         let owned = self.instances[id].owned_requests();
         for rid in owned {
             self.instances[id].evict(rid);
@@ -1121,6 +1399,85 @@ mod tests {
         orch.adopt_chain(&chain);
         let (warm, _) = orch.run(vec![spec]);
         assert_eq!(warm.prefix_hits, 1, "migrated KV must serve the prefix");
+    }
+
+    #[test]
+    fn depth2_completes_everything_and_bounds_inflight() {
+        let cfg =
+            OrchestratorConfig { n_instances: 2, pipeline_depth: 2, ..Default::default() };
+        let workload: Vec<RequestSpec> =
+            (0..10).map(|i| RequestSpec::text(i as f64 * 0.05, 128, 16)).collect();
+        let n = workload.len();
+        let (res, exec) = Orchestrator::new(cfg, FixedCost::new(0.01)).run(workload);
+        assert_eq!(res.report.n_completed(), n);
+        assert_eq!(exec.finished as usize, n);
+        assert_eq!(exec.outstanding, 0, "every ticket polled by the end");
+        assert!(
+            exec.max_outstanding <= 4,
+            "2 instances x depth 2 bounds the pipeline: {}",
+            exec.max_outstanding
+        );
+        assert!(exec.max_outstanding >= 2, "look-ahead submission must actually happen");
+        assert!(!res.truncated);
+    }
+
+    #[test]
+    fn depth1_never_holds_a_ticket() {
+        let cfg = OrchestratorConfig { n_instances: 2, ..Default::default() };
+        let workload: Vec<RequestSpec> =
+            (0..6).map(|i| RequestSpec::text(i as f64 * 0.1, 128, 8)).collect();
+        let (_, exec) = Orchestrator::new(cfg, FixedCost::new(0.01)).run(workload);
+        assert_eq!(
+            exec.max_outstanding, 1,
+            "depth 1 is the blocking contract: submit completes in place"
+        );
+    }
+
+    #[test]
+    fn warm_pipeline_hides_the_host_share() {
+        // one long decode: depth 1 pays host + device per token, a warm
+        // depth-2 pipeline pays device alone once it fills
+        let workload = vec![RequestSpec::text(0.0, 64, 32)];
+        let cfg1 = OrchestratorConfig { n_instances: 1, ..Default::default() };
+        let cfg2 =
+            OrchestratorConfig { n_instances: 1, pipeline_depth: 2, ..Default::default() };
+        let (r1, _) =
+            Orchestrator::new(cfg1, FixedCost::with_host(0.01, 0.004)).run(workload.clone());
+        let (r2, _) = Orchestrator::new(cfg2, FixedCost::with_host(0.01, 0.004)).run(workload);
+        assert_eq!(r1.report.n_completed(), 1);
+        assert_eq!(r2.report.n_completed(), 1);
+        let e1 = r1.report.e2e_summary().mean();
+        let e2 = r2.report.e2e_summary().mean();
+        assert!(e2 < e1, "pipelined E2E {e2} must beat blocking {e1}");
+    }
+
+    #[test]
+    fn depth2_fault_recovery_drains_the_pipeline() {
+        let cfg = OrchestratorConfig {
+            n_instances: 2,
+            pipeline_depth: 2,
+            faults: vec![(0.05, 0)],
+            ..Default::default()
+        };
+        let workload: Vec<RequestSpec> =
+            (0..8).map(|i| RequestSpec::text(i as f64 * 0.02, 256, 32)).collect();
+        let n = workload.len();
+        let (res, exec) = Orchestrator::new(cfg, FixedCost::new(0.01)).run(workload);
+        assert_eq!(res.report.n_requests(), n, "every request accounted");
+        assert_eq!(res.report.n_completed(), n, "survivor serves everything");
+        assert_eq!(exec.outstanding, 0, "the fault drain polls every outstanding ticket");
+        assert!(res.recoveries > 0, "the fault actually interrupted work");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "non-positive duration")]
+    fn zero_duration_executor_trips_the_debug_assertion() {
+        // regression for the old `begin_iteration(...).max(1e-6)` clamp:
+        // a broken executor now fails loudly instead of being silently
+        // rewritten to a microsecond
+        let cfg = OrchestratorConfig { n_instances: 1, ..Default::default() };
+        let _ = Orchestrator::new(cfg, FixedCost::new(0.0)).run(vec![RequestSpec::text(0.0, 64, 4)]);
     }
 
     #[test]

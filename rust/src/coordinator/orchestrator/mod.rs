@@ -98,24 +98,90 @@ impl IterationWork {
     }
 }
 
+/// Timing of one iteration, split so the orchestrator can overlap the
+/// host share with device execution (paper §4.2 async scheduling).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct IterationOutcome {
+    /// Host-side planning/dispatch cost (batch assembly, scheduling,
+    /// launch prep).  Exposed at pipeline depth 1; hidden under the
+    /// previous iteration's device time when the pipeline is warm.
+    pub host_s: f64,
+    /// Device execution time (modelled or measured).
+    pub device_s: f64,
+}
+
+impl IterationOutcome {
+    /// The blocking-contract duration: host + device back to back.
+    pub fn total_s(&self) -> f64 {
+        self.host_s + self.device_s
+    }
+}
+
+/// Handle to an iteration accepted by [`Executor::submit_iteration`].
+#[derive(Debug, Clone, Copy)]
+pub struct IterationTicket {
+    pub instance: InstanceId,
+    /// Monotonic submission number (executor-assigned, never reused).
+    /// The orchestrator matches completion events to pipeline slots with
+    /// it, so completions from a pre-fault pipeline are recognizably
+    /// stale.
+    pub seq: u64,
+    /// The executor's estimate of the outcome, made at submit time.
+    /// Model-priced executors know the exact outcome up front (estimate
+    /// == completion); real backends predict from their cost model and
+    /// report the measured outcome at [`Executor::poll_complete`].
+    pub est: IterationOutcome,
+}
+
 /// Backend executing the orchestrator's planned iterations.
 ///
 /// The orchestrator plans *what* runs each iteration; the executor
 /// decides *how long it takes* (and, for real backends, actually runs
-/// it).  Virtual time advances by the returned duration, so a roofline
+/// it).  Virtual time advances by the reported durations, so a roofline
 /// executor yields a discrete-event simulation while a PJRT executor
 /// yields real serving with wall-clock metrics.
+///
+/// The contract is two-phase (paper §4.2 asynchronous scheduling):
+/// [`Executor::submit_iteration`] begins the work without blocking the
+/// caller, and [`Executor::poll_complete`] finishes it.  The
+/// orchestrator submits up to [`OrchestratorConfig::pipeline_depth`]
+/// iterations per instance before completing the oldest, so host-side
+/// planning for iteration N+1 runs while iteration N is on the device.
+/// Depth 1 recovers the old blocking behavior exactly: submit is
+/// followed immediately by poll, and the full `host_s + device_s` span
+/// is charged to the timeline.
 pub trait Executor {
     /// Cost model backing the dispatch/prediction/role-switch heuristics
     /// (for real backends, a calibrated stand-in is fine — heuristics
     /// only compare relative magnitudes).
     fn cost(&self) -> &CostModel;
 
-    /// Begin executing `work` on `instance` at virtual time `now_s`;
-    /// returns the iteration duration in seconds.  Real executors run
-    /// the model here and return measured wall time; cost-model
-    /// executors just price the step.
-    fn begin_iteration(&mut self, instance: InstanceId, now_s: f64, work: &IterationWork) -> f64;
+    /// Phase 1: begin executing `work` on `instance` at virtual time
+    /// `now_s`.  Must not block on the device work: real executors hand
+    /// the iteration to a worker thread, cost-model executors just price
+    /// the step.  Returns a ticket whose `est` is the executor's best
+    /// knowledge of the outcome at submit time.
+    fn submit_iteration(
+        &mut self,
+        instance: InstanceId,
+        now_s: f64,
+        work: &IterationWork,
+    ) -> IterationTicket;
+
+    /// Phase 2: complete a submitted iteration, blocking (real backends)
+    /// until the device work has finished.  Called at most once per
+    /// ticket, in submission order per instance; tickets still
+    /// outstanding when the orchestrator is finalized or the instance
+    /// faults are either drained via this call or abandoned.
+    fn poll_complete(&mut self, ticket: IterationTicket) -> IterationOutcome;
+
+    /// The pre-async blocking contract, recovered: submit and complete
+    /// in one call, returning the total duration in seconds.  Depth-1
+    /// pipelining performs exactly this sequence.
+    fn begin_iteration(&mut self, instance: InstanceId, now_s: f64, work: &IterationWork) -> f64 {
+        let ticket = self.submit_iteration(instance, now_s, work);
+        self.poll_complete(ticket).total_s()
+    }
 
     /// Tokens emitted for decode request `req` in the iteration that
     /// just completed on `instance`.  Called once per scheduled decode,
@@ -175,6 +241,13 @@ pub struct OrchestratorConfig {
     pub prefix_hbm_tokens: u64,
     pub prefix_dram_tokens: u64,
     pub prefix_ssd_tokens: u64,
+    /// Iterations kept in flight per instance (§4.2 async scheduling).
+    /// 1 (the default) is the blocking contract: plan, execute, complete,
+    /// plan again — host overhead fully exposed.  At depth D ≥ 2 the
+    /// orchestrator plans up to D-1 iterations ahead against predicted
+    /// request states, so the host share of an iteration hides under the
+    /// previous iteration's device time.  Values are clamped to ≥ 1.
+    pub pipeline_depth: usize,
     /// Termination cap on processed events — guards against pathological
     /// configs that never drain.  Hitting it sets [`RunResult::truncated`].
     pub max_events: u64,
@@ -199,6 +272,7 @@ impl Default for OrchestratorConfig {
             prefix_hbm_tokens: DEFAULT_PREFIX_HBM_TOKENS,
             prefix_dram_tokens: DEFAULT_PREFIX_DRAM_TOKENS,
             prefix_ssd_tokens: DEFAULT_PREFIX_SSD_TOKENS,
+            pipeline_depth: 1,
             max_events: DEFAULT_MAX_EVENTS,
         }
     }

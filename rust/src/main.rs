@@ -10,8 +10,15 @@
 //! xllm fleet    --scenario tide --rate 6 --horizon 40 --replicas 1 \
 //!               --autoscale --capacity-target 4096 --min-replicas 1 \
 //!               --max-replicas 6
+//! xllm fleet    --scenario tide --rate 6 --horizon 40 --replicas 2 \
+//!               --pipeline-depth 2 --host-overhead 0.002
 //! xllm models | scenarios | info
 //! ```
+//!
+//! `--pipeline-depth N` (serve, simulate, fleet) keeps N iterations in
+//! flight per instance (§4.2 async scheduling; 1 = blocking);
+//! `--host-overhead S` (simulate, fleet) models the per-iteration host
+//! planning cost the pipeline hides.
 
 use std::path::Path;
 
@@ -84,6 +91,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: batch,
         max_output_tokens: max_new,
         speculative,
+        // ≥ 2 moves the engine onto a worker thread (async pipeline §4.2)
+        pipeline_depth: args.get_u64("pipeline-depth", 1).max(1) as usize,
         ..ServeConfig::default()
     };
     let mut server = Server::new(Path::new(&artifacts), cfg)?;
@@ -169,10 +178,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         _ => DispatchPolicy::SloAware,
     };
     cfg.prefix_cache = args.has_flag("prefix-cache");
+    cfg.pipeline_depth = args.get_u64("pipeline-depth", 1).max(1) as usize;
+    cfg.host_overhead_s = args.get_f64("host-overhead", 0.0).max(0.0);
 
     let mut rng = Rng::new(args.get_u64("seed", 7));
     let workload = sc.generate(horizon, rate, &mut rng);
     let n_reqs = workload.len();
+    let pipeline_depth = cfg.pipeline_depth;
     let res = sim_run(cfg, workload);
     let slo = Slo::interactive(ttft, tpot);
     let report = res.report;
@@ -194,7 +206,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         .set("role_flips", res.role_flips)
         .set("migrations", res.migrations)
         .set("preemptions", res.preemptions)
-        .set("iterations", res.iterations);
+        .set("iterations", res.iterations)
+        .set("pipeline_depth", pipeline_depth);
     println!("{}", out.to_string());
     Ok(())
 }
@@ -217,6 +230,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let mut template =
         ClusterConfig::new(n_instances, model::ascend_910b(), spec, EngineFeatures::xllm(1));
     template.prefix_cache = true;
+    template.pipeline_depth = args.get_u64("pipeline-depth", 1).max(1) as usize;
+    template.host_overhead_s = args.get_f64("host-overhead", 0.0).max(0.0);
+    let pipeline_depth = template.pipeline_depth;
     let mut cfg = FleetConfig::new(template, n_replicas);
     cfg.routing = match args.get_or("routing", "cache-aware").as_str() {
         "round-robin" => RoutePolicy::RoundRobin,
@@ -235,6 +251,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             max_replicas: args.get_u64("max-replicas", d.max_replicas as u64) as usize,
             cooldown_s: args.get_f64("cooldown", d.cooldown_s),
             hot_prefix_routes: args.get_u64("hot-prefix-routes", d.hot_prefix_routes),
+            warm_start_chains: args
+                .get_u64("warm-start-chains", d.warm_start_chains as u64)
+                as usize,
         });
     }
 
@@ -263,8 +282,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         .set("scale_ups", res.counters.scale_ups)
         .set("scale_downs", res.counters.scale_downs)
         .set("kv_rebalances", res.counters.kv_rebalances)
+        .set("warm_starts", res.counters.warm_starts)
         .set("replicas_final", res.n_replicas_final)
         .set("replicas_total", res.per_replica.len())
+        .set("pipeline_depth", pipeline_depth)
         .set("truncated", res.truncated);
     println!("{}", out.to_string());
     Ok(())

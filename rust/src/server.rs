@@ -6,28 +6,41 @@
 //! completion are all driven by the shared
 //! [`coordinator::orchestrator::Orchestrator`] — the same request
 //! lifecycle state machine the cluster simulator runs — while
-//! [`PjrtExecutor`] implements the [`Executor`] trait by actually
-//! executing iterations on the PJRT runtime (xTensor slot/page
-//! assignment, plain or speculative decode) and reporting measured wall
-//! time, so virtual time *is* wall time.  Python never runs here; the
-//! artifacts were lowered once by `make artifacts`.
+//! [`PjrtExecutor`] implements the two-phase [`Executor`] contract over
+//! the PJRT runtime (xTensor slot/page assignment, plain or speculative
+//! decode).
+//!
+//! At pipeline depth 1 (the default) the engine state lives inline and
+//! every submit completes in place, reporting measured wall time — the
+//! pre-async blocking behavior, so virtual time *is* wall time.  At
+//! depth ≥ 2 the engine core moves onto a dedicated worker thread:
+//! `submit_iteration` hands the planned work over a channel and returns
+//! immediately with a cost-model estimate, so the orchestrator's
+//! host-side planning for iteration N+1 genuinely overlaps iteration
+//! N's execution (§4.2); `poll_complete` joins the measured result at
+//! the completion event.  Python never runs here; the artifacts were
+//! lowered once by `make artifacts`.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::Path;
+use std::sync::mpsc;
+use std::thread;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::ServeConfig;
 use crate::coordinator::orchestrator::{
-    Executor, IterationWork, Orchestrator, OrchestratorConfig, ServingMode,
+    Executor, IterationOutcome, IterationTicket, IterationWork, Orchestrator, OrchestratorConfig,
+    ServingMode,
 };
 use crate::coordinator::{BatchConfig, DispatchPolicy, InstanceId, RequestId};
-use crate::engine::specdecode::{accept_greedy, SpecStats};
-use crate::engine::xtensor::XTensorManager;
+use crate::engine::specdecode::{accept_greedy, SpecConfig, SpecStats};
+use crate::engine::xtensor::{MapStats, XTensorManager};
 use crate::metrics::ServingReport;
 use crate::model::{cpu_host, ModelSpec};
-use crate::runtime::{argmax, BatchKv, ModelDims, Runtime};
+use crate::runtime::{argmax, BatchKv, GraphStats, ModelDims, Runtime};
+use crate::sim::executor::model_device_s;
 use crate::sim::roofline::{CostModel, EngineFeatures};
 use crate::workload::RequestSpec;
 
@@ -79,34 +92,49 @@ struct PendingReq {
     max_new: usize,
 }
 
-/// The [`Executor`] over the real PJRT runtime: executes each planned
-/// iteration on the AOT graphs and advances virtual time by measured
-/// wall time.
-pub struct PjrtExecutor {
+/// End-of-run snapshot handed back by the engine core (inline or over
+/// the worker channel).
+struct Collected {
+    results: Vec<GenResult>,
+    stats: ServerStats,
+    page_stats: MapStats,
+    graph_stats: GraphStats,
+    /// First runtime error, rendered with its context chain.
+    error: Option<String>,
+}
+
+/// The engine state that actually touches the PJRT runtime.  Lives
+/// inline at pipeline depth 1; moves whole onto a dedicated worker
+/// thread at depth ≥ 2.  (Everything here is plain host memory — the
+/// vendored xla stub and the bookkeeping maps — so the core is `Send`;
+/// when swapping in the real `xla-rs`, its PJRT client is owned by this
+/// core alone and crosses threads exactly once, at spawn.)
+struct EngineCore {
     rt: Runtime,
     dims: ModelDims,
     draft_dims: Option<ModelDims>,
     speculative: bool,
     /// Verify-bucket proposal length (speculative only).
     spec_m: usize,
-    cost: CostModel,
     kv: BatchKv,
     draft_kv: Option<BatchKv>,
     slots: Vec<Option<SlotSeq>>,
     slot_of: HashMap<RequestId, usize>,
     pages: XTensorManager,
     pending: HashMap<RequestId, PendingReq>,
-    /// Tokens emitted per decode request in the iteration in flight.
+    /// Tokens emitted per decode request in the iteration just executed.
     emitted: HashMap<RequestId, u64>,
-    pub stats: ServerStats,
+    /// Largest prefill bucket (prompt truncation bound).
+    max_prompt: usize,
+    stats: ServerStats,
     results: Vec<GenResult>,
     /// First runtime error; surfaced by the façade after the run (the
     /// Executor trait is infallible — the lifecycle drains regardless).
     error: Option<anyhow::Error>,
 }
 
-impl PjrtExecutor {
-    fn new(artifacts: &Path, cfg: &ServeConfig) -> Result<PjrtExecutor> {
+impl EngineCore {
+    fn new(artifacts: &Path, cfg: &ServeConfig) -> Result<EngineCore> {
         let rt = Runtime::load(artifacts)?;
         let dims = rt.model_dims("tiny")?;
         // batch size must match an AOT decode bucket exactly
@@ -138,16 +166,16 @@ impl PjrtExecutor {
         let page_tokens = 16u64;
         let total_pages =
             (cfg.max_batch as u64 * dims.max_seq as u64).div_ceil(page_tokens) as u32;
-        // stand-in cost model for the orchestrator's heuristics (single
-        // instance: only relative magnitudes matter)
-        let cost = CostModel::new(cpu_host(), tiny_model_spec(dims), EngineFeatures::xllm(1));
-        Ok(PjrtExecutor {
+        let max_prompt = {
+            let graphs = rt.manifest.graphs_of(crate::runtime::GraphKind::Prefill, "tiny");
+            graphs.iter().filter_map(|g| g.dim("s")).max().unwrap_or(0) as usize
+        };
+        Ok(EngineCore {
             rt,
             dims,
             draft_dims,
             speculative: cfg.speculative,
             spec_m,
-            cost,
             kv,
             draft_kv,
             slots: (0..cfg.max_batch).map(|_| None).collect(),
@@ -155,6 +183,7 @@ impl PjrtExecutor {
             pages: XTensorManager::new(total_pages, page_tokens, dims.max_seq as u64),
             pending: HashMap::new(),
             emitted: HashMap::new(),
+            max_prompt,
             stats: ServerStats::default(),
             results: Vec::new(),
             error: None,
@@ -210,15 +239,23 @@ impl PjrtExecutor {
         let b = self.slots.len();
         let mut tokens = vec![0i32; b];
         let mut pos = vec![0i32; b];
-        for r in reqs {
-            let slot = *self.slot_of.get(r).ok_or_else(|| anyhow!("decode for unslotted {r}"))?;
+        // a look-ahead plan (pipeline depth ≥ 2) may still reference a
+        // request whose slot was already released — the async-scheduling
+        // bubble; it simply does not join the batch
+        let live: Vec<RequestId> =
+            reqs.iter().copied().filter(|r| self.slot_of.contains_key(r)).collect();
+        for r in &live {
+            let slot = self.slot_of[r];
             let seq = self.slots[slot].as_ref().unwrap();
             tokens[slot] = seq.last_token;
             pos[slot] = seq.pos as i32;
         }
+        if live.is_empty() {
+            return Ok(());
+        }
         let out = self.rt.decode("tiny", &mut self.kv, &tokens, &pos)?;
         self.stats.decode_steps += 1;
-        for r in reqs {
+        for r in &live {
             let slot = self.slot_of[r];
             let seq = self.slots[slot].as_mut().unwrap();
             // max_new is clamped at admission, but keep the cache-bound
@@ -245,10 +282,13 @@ impl PjrtExecutor {
         let b = self.slots.len();
         let m = self.spec_m;
         let draft_dims = self.draft_dims.context("draft dims")?;
-        let active: Vec<usize> = reqs
-            .iter()
-            .map(|r| self.slot_of.get(r).copied().ok_or_else(|| anyhow!("spec for unslotted {r}")))
-            .collect::<Result<_>>()?;
+        // same bubble rule as run_decode: slot-less requests sit out
+        let live: Vec<RequestId> =
+            reqs.iter().copied().filter(|r| self.slot_of.contains_key(r)).collect();
+        if live.is_empty() {
+            return Ok(());
+        }
+        let active: Vec<usize> = live.iter().map(|r| self.slot_of[r]).collect();
 
         // 1) draft proposes m tokens autoregressively (cheap model)
         let mut proposals = vec![vec![0i32; m]; b];
@@ -292,7 +332,7 @@ impl PjrtExecutor {
         self.stats.decode_steps += 1;
 
         // 3) greedy acceptance per sequence
-        for (r, &i) in reqs.iter().zip(&active) {
+        for (r, &i) in live.iter().zip(&active) {
             let seq = self.slots[i].as_mut().unwrap();
             let target_argmax: Vec<i32> = (0..m)
                 .map(|j| {
@@ -327,17 +367,8 @@ impl PjrtExecutor {
         Ok(())
     }
 
-    fn take_results(&mut self) -> Vec<GenResult> {
-        std::mem::take(&mut self.results)
-    }
-}
-
-impl Executor for PjrtExecutor {
-    fn cost(&self) -> &CostModel {
-        &self.cost
-    }
-
-    fn begin_iteration(&mut self, _instance: InstanceId, now_s: f64, work: &IterationWork) -> f64 {
+    /// Execute one planned iteration; returns measured device seconds.
+    fn execute(&mut self, work: &IterationWork, now_s: f64) -> f64 {
         let t0 = Instant::now();
         if self.error.is_none() {
             let mut step = || -> Result<()> {
@@ -361,17 +392,15 @@ impl Executor for PjrtExecutor {
         t0.elapsed().as_secs_f64()
     }
 
-    fn decode_emission(&mut self, _instance: InstanceId, req: RequestId) -> u64 {
-        // after a runtime error the default of 1 token/iteration lets the
-        // lifecycle drain so the error can surface
-        self.emitted.remove(&req).unwrap_or(1).max(1)
+    /// Emission counts of the iteration just executed (drained so the
+    /// next iteration starts clean).
+    fn drain_emitted(&mut self) -> Vec<(RequestId, u64)> {
+        self.emitted.drain().collect()
     }
 
-    fn kv_transfer_s(&self, _tokens: u64) -> f64 {
-        0.0 // single instance: no PD handoff on this backend (yet)
-    }
-
-    fn finished(&mut self, req: RequestId, now_s: f64) {
+    /// A request left the orchestrator: release its slot and record the
+    /// generation.
+    fn finish_request(&mut self, req: RequestId, now_s: f64) {
         self.pending.remove(&req);
         if let Some(slot) = self.slot_of.remove(&req) {
             if let Some(seq) = self.slots[slot].take() {
@@ -387,10 +416,310 @@ impl Executor for PjrtExecutor {
         }
     }
 
+    /// End-of-run snapshot: drains results, takes the error, copies the
+    /// counters.
+    fn collect(&mut self) -> Collected {
+        Collected {
+            results: std::mem::take(&mut self.results),
+            stats: self.stats,
+            page_stats: self.pages.stats,
+            graph_stats: self.rt.graph_stats(),
+            error: self.error.take().map(|e| format!("{e:#}")),
+        }
+    }
+}
+
+/// Commands the façade sends to the engine worker thread (depth ≥ 2).
+enum Cmd {
+    /// Admit a not-yet-prefilled request into the pending set.
+    Queue { req: RequestId, pend: PendingReq },
+    /// Execute one planned iteration; a `Reply::Done` follows.
+    Submit { seq: u64, now_s: f64, work: IterationWork },
+    /// A request left the orchestrator (slot release, result record).
+    Finished { req: RequestId, now_s: f64 },
+    /// End-of-run snapshot request; a `Reply::Collect` follows.
+    Collect,
+}
+
+/// Replies from the engine worker thread.
+enum Reply {
+    Done { seq: u64, device_s: f64, emitted: Vec<(RequestId, u64)> },
+    Collect(Box<Collected>),
+}
+
+fn worker_loop(mut core: EngineCore, rx: mpsc::Receiver<Cmd>, tx: mpsc::Sender<Reply>) {
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Queue { req, pend } => {
+                core.pending.insert(req, pend);
+            }
+            Cmd::Submit { seq, now_s, work } => {
+                let device_s = core.execute(&work, now_s);
+                let emitted = core.drain_emitted();
+                if tx.send(Reply::Done { seq, device_s, emitted }).is_err() {
+                    break; // façade hung up
+                }
+            }
+            Cmd::Finished { req, now_s } => core.finish_request(req, now_s),
+            Cmd::Collect => {
+                if tx.send(Reply::Collect(Box::new(core.collect()))).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Channel ends + join handle for the engine worker thread.
+struct WorkerHandle {
+    tx: Option<mpsc::Sender<Cmd>>,
+    rx: mpsc::Receiver<Reply>,
+    join: Option<thread::JoinHandle<()>>,
+    /// `Done` replies drained while waiting for a non-`Done` reply, kept
+    /// in arrival (= submission) order for the next `poll_complete`.
+    done_buf: VecDeque<(u64, f64, Vec<(RequestId, u64)>)>,
+}
+
+impl WorkerHandle {
+    fn send(&self, cmd: Cmd) {
+        if let Some(tx) = &self.tx {
+            // a send error means the worker died; the failure surfaces
+            // via the disconnect on the next receive
+            let _ = tx.send(cmd);
+        }
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        self.tx.take(); // hang up: the worker loop exits on disconnect
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Where the engine core lives.
+enum Backend {
+    /// Depth 1: inline, submit completes in place (blocking contract).
+    Inline(Box<EngineCore>),
+    /// Depth ≥ 2: on a worker thread, submissions genuinely overlap the
+    /// orchestrator's host-side planning.
+    Worker(WorkerHandle),
+}
+
+/// The [`Executor`] over the real PJRT runtime (see module docs).
+pub struct PjrtExecutor {
+    cost: CostModel,
+    dims: ModelDims,
+    spec_m: usize,
+    /// Cost-model stand-in for the speculative multipliers when
+    /// estimating submitted iterations (worker backend only).
+    est_spec: Option<SpecConfig>,
+    max_prompt: usize,
+    backend: Backend,
+    seq: u64,
+    /// Outcome of the most recent inline submit, completed at poll.
+    inline_last: Option<(u64, IterationOutcome)>,
+    /// Emission counts from the most recently completed iteration.
+    emitted: HashMap<RequestId, u64>,
+    /// The worker channel broke (thread died); reported at collect.
+    worker_lost: bool,
+}
+
+impl PjrtExecutor {
+    fn new(artifacts: &Path, cfg: &ServeConfig) -> Result<PjrtExecutor> {
+        let core = EngineCore::new(artifacts, cfg)?;
+        let dims = core.dims;
+        let spec_m = core.spec_m;
+        let max_prompt = core.max_prompt;
+        // stand-in cost model for the orchestrator's heuristics (single
+        // instance: only relative magnitudes matter)
+        let cost = CostModel::new(cpu_host(), tiny_model_spec(dims), EngineFeatures::xllm(1));
+        let est_spec = if cfg.speculative && spec_m > 0 {
+            Some(SpecConfig { m: spec_m, acceptance: 0.75 })
+        } else {
+            None
+        };
+        let backend = if cfg.pipeline_depth >= 2 {
+            let (cmd_tx, cmd_rx) = mpsc::channel();
+            let (rep_tx, rep_rx) = mpsc::channel();
+            let join = thread::Builder::new()
+                .name("pjrt-engine".into())
+                .spawn(move || worker_loop(core, cmd_rx, rep_tx))
+                .context("spawning the PJRT engine worker thread")?;
+            Backend::Worker(WorkerHandle {
+                tx: Some(cmd_tx),
+                rx: rep_rx,
+                join: Some(join),
+                done_buf: VecDeque::new(),
+            })
+        } else {
+            Backend::Inline(Box::new(core))
+        };
+        Ok(PjrtExecutor {
+            cost,
+            dims,
+            spec_m,
+            est_spec,
+            max_prompt,
+            backend,
+            seq: 0,
+            inline_last: None,
+            emitted: HashMap::new(),
+            worker_lost: false,
+        })
+    }
+
+    /// Admit a not-yet-prefilled request.
+    fn queue_request(&mut self, req: RequestId, pend: PendingReq) {
+        match &mut self.backend {
+            Backend::Inline(core) => {
+                core.pending.insert(req, pend);
+            }
+            Backend::Worker(h) => h.send(Cmd::Queue { req, pend }),
+        }
+    }
+
+    /// Block until the next `Done` reply (buffering is handled by the
+    /// caller for out-of-band requests).  Returns None when the worker
+    /// died.
+    fn recv_done(h: &mut WorkerHandle) -> Option<(u64, f64, Vec<(RequestId, u64)>)> {
+        if let Some(d) = h.done_buf.pop_front() {
+            return Some(d);
+        }
+        loop {
+            match h.rx.recv() {
+                Ok(Reply::Done { seq, device_s, emitted }) => {
+                    return Some((seq, device_s, emitted))
+                }
+                Ok(Reply::Collect(_)) => continue, // late reply: nothing waits on it
+                Err(_) => return None,
+            }
+        }
+    }
+
+    /// End-of-run snapshot from whichever backend holds the core.
+    fn collect(&mut self) -> Collected {
+        match &mut self.backend {
+            Backend::Inline(core) => core.collect(),
+            Backend::Worker(h) => {
+                h.send(Cmd::Collect);
+                loop {
+                    match h.rx.recv() {
+                        Ok(Reply::Collect(c)) => return *c,
+                        Ok(Reply::Done { seq, device_s, emitted }) => {
+                            h.done_buf.push_back((seq, device_s, emitted));
+                        }
+                        Err(_) => {
+                            self.worker_lost = true;
+                            return Collected {
+                                results: Vec::new(),
+                                stats: ServerStats::default(),
+                                page_stats: MapStats::default(),
+                                graph_stats: GraphStats::default(),
+                                error: Some("engine worker thread died".to_string()),
+                            };
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn cost(&self) -> &CostModel {
+        &self.cost
+    }
+
+    fn submit_iteration(
+        &mut self,
+        instance: InstanceId,
+        now_s: f64,
+        work: &IterationWork,
+    ) -> IterationTicket {
+        self.seq += 1;
+        let seq = self.seq;
+        match &mut self.backend {
+            Backend::Inline(core) => {
+                // blocking contract: execute in place, measured wall time
+                let device_s = core.execute(work, now_s);
+                for (r, n) in core.drain_emitted() {
+                    self.emitted.insert(r, n);
+                }
+                let out = IterationOutcome { host_s: 0.0, device_s };
+                self.inline_last = Some((seq, out));
+                IterationTicket { instance, seq, est: out }
+            }
+            Backend::Worker(h) => {
+                h.send(Cmd::Submit { seq, now_s, work: work.clone() });
+                // the estimate orders the completion event in virtual
+                // time; the measured span arrives at poll_complete
+                let device_s = model_device_s(&self.cost, self.est_spec, work);
+                IterationTicket {
+                    instance,
+                    seq,
+                    est: IterationOutcome { host_s: 0.0, device_s },
+                }
+            }
+        }
+    }
+
+    fn poll_complete(&mut self, ticket: IterationTicket) -> IterationOutcome {
+        match &mut self.backend {
+            Backend::Inline(_) => {
+                let (seq, out) = self.inline_last.take().unwrap_or((ticket.seq, ticket.est));
+                debug_assert_eq!(seq, ticket.seq, "inline completion out of order");
+                out
+            }
+            Backend::Worker(h) => match Self::recv_done(h) {
+                Some((seq, device_s, emitted)) => {
+                    debug_assert_eq!(seq, ticket.seq, "worker completion out of order");
+                    for (r, n) in emitted {
+                        self.emitted.insert(r, n);
+                    }
+                    IterationOutcome { host_s: 0.0, device_s }
+                }
+                None => {
+                    // worker died: fall back to the estimate so the
+                    // lifecycle drains; the loss surfaces at collect
+                    self.worker_lost = true;
+                    ticket.est
+                }
+            },
+        }
+    }
+
+    fn decode_emission(&mut self, _instance: InstanceId, req: RequestId) -> u64 {
+        // after a runtime error the default of 1 token/iteration lets the
+        // lifecycle drain so the error can surface
+        self.emitted.remove(&req).unwrap_or(1).max(1)
+    }
+
+    fn kv_transfer_s(&self, _tokens: u64) -> f64 {
+        0.0 // single instance: no PD handoff on this backend (yet)
+    }
+
+    fn finished(&mut self, req: RequestId, now_s: f64) {
+        match &mut self.backend {
+            Backend::Inline(core) => core.finish_request(req, now_s),
+            Backend::Worker(h) => h.send(Cmd::Finished { req, now_s }),
+        }
+    }
+
     fn debug_check(&self) -> Result<(), String> {
         // xTensor page-table consistency, swept by the orchestrator's
-        // debug assertions at every iteration boundary
-        self.pages.check_invariants()
+        // debug assertions at every iteration boundary.  KNOWN GAP: the
+        // worker backend skips the per-iteration sweep — a synchronous
+        // round-trip here would serialize the very overlap the worker
+        // exists for — so page-table corruption at depth ≥ 2 only
+        // surfaces through execution errors; depth-1 runs and the test
+        // suite keep the full sweep.
+        match &self.backend {
+            Backend::Inline(core) => core.pages.check_invariants(),
+            Backend::Worker(_) => Ok(()),
+        }
     }
 }
 
@@ -422,6 +751,8 @@ pub struct Server {
     queue: Vec<GenRequest>,
     pub stats: ServerStats,
     pub report: ServingReport,
+    page_stats: MapStats,
+    graph_stats: GraphStats,
 }
 
 impl Server {
@@ -436,6 +767,8 @@ impl Server {
             queue: Vec::new(),
             stats: ServerStats::default(),
             report: ServingReport::new(),
+            page_stats: MapStats::default(),
+            graph_stats: GraphStats::default(),
         })
     }
 
@@ -455,10 +788,7 @@ impl Server {
     /// prefilled FCFS as slots free up, and decode continuously.
     pub fn run_to_completion(&mut self) -> Result<Vec<GenResult>> {
         let mut exec = self.exec.take().expect("executor present");
-        let max_prompt = {
-            let graphs = exec.rt.manifest.graphs_of(crate::runtime::GraphKind::Prefill, "tiny");
-            graphs.iter().filter_map(|g| g.dim("s")).max().unwrap_or(0) as usize
-        };
+        let max_prompt = exec.max_prompt;
         // reserve headroom for the speculative verify window
         let seq_headroom = 1 + exec.spec_m;
 
@@ -487,7 +817,7 @@ impl Server {
                 .max(1);
             let rid = idx as RequestId;
             specs.push(RequestSpec::text(0.0, prompt.len() as u64, max_new as u64));
-            exec.pending.insert(rid, PendingReq { orig_id: req.id, prompt, max_new });
+            exec.queue_request(rid, PendingReq { orig_id: req.id, prompt, max_new });
         }
 
         let ocfg = OrchestratorConfig {
@@ -506,28 +836,37 @@ impl Server {
                 ..BatchConfig::default()
             },
             monitor_interval_s: 1.0,
+            pipeline_depth: self.cfg.pipeline_depth.max(1),
             ..OrchestratorConfig::default()
         };
         let orch = Orchestrator::new(ocfg, exec);
         let (res, mut exec) = orch.run(specs);
-        let error = exec.error.take();
+        let collected = exec.collect();
+        let worker_lost = exec.worker_lost;
         self.report = res.report;
-        self.stats = exec.stats;
-        let results = exec.take_results();
+        self.stats = collected.stats;
+        self.page_stats = collected.page_stats;
+        self.graph_stats = collected.graph_stats;
+        let results = collected.results;
         self.exec = Some(exec);
-        if let Some(e) = error {
-            return Err(e);
+        if let Some(e) = collected.error {
+            return Err(anyhow!("{e}"));
+        }
+        if worker_lost {
+            bail!("engine worker thread died mid-run");
         }
         Ok(results)
     }
 
-    /// Page-manager statistics (map/unmap/reuse counters).
+    /// Page-manager statistics (map/unmap/reuse counters), as of the
+    /// last completed run.
     pub fn page_stats(&self) -> crate::engine::xtensor::MapStats {
-        self.exec.as_ref().expect("executor present").pages.stats
+        self.page_stats
     }
 
+    /// Graph-cache statistics, as of the last completed run.
     pub fn graph_stats(&self) -> crate::runtime::GraphStats {
-        self.exec.as_ref().expect("executor present").rt.graph_stats()
+        self.graph_stats
     }
 }
 

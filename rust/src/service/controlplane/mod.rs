@@ -24,7 +24,13 @@
 //! event queue, and the control plane interleaves them with its own
 //! queue (arrivals, heartbeats, fault injections) by always advancing
 //! whichever head event is earliest.  Determinism is preserved — ties
-//! break control-plane-first, then by replica id.
+//! break control-plane-first, then by replica id.  With async-pipelined
+//! replicas (`pipeline_depth ≥ 2`) several replicas hold in-flight
+//! iterations *concurrently* — their pending `IterDone` events overlap
+//! in fleet time — and the same `next_event_time` interleave drives
+//! them without any special casing: the sim stays deterministic, and a
+//! real multi-replica deployment would step each replica on its own
+//! thread against the same ordering contract.
 
 pub mod index;
 pub mod registry;
@@ -138,7 +144,11 @@ pub struct ControlCounters {
     /// Planned cross-replica KV migrations of hot prefix chains (§3.4
     /// proactive movement; distinct from failover `redispatch_migrations`).
     pub kv_rebalances: u64,
-    /// Total staging + transfer time charged for planned rebalances.
+    /// Hot chains pre-staged onto freshly spawned replicas (scale-up
+    /// warm start; distinct from `kv_rebalances`).
+    pub warm_starts: u64,
+    /// Total staging + transfer time charged for planned rebalances and
+    /// warm starts.
     pub rebalance_staging_s: f64,
 }
 
@@ -495,6 +505,22 @@ impl<X: Executor> ControlPlane<X> {
         self.replicas.push(Replica { orch: Some(orch), alive: true, result: None });
         self.registry.register(id, now);
         self.counters.scale_ups += 1;
+        // warm start (§3.4 proactive movement): pre-stage the hottest
+        // prefix chains onto the spawned replica while it waits for its
+        // first heartbeat — the staging delay runs concurrently with the
+        // registration window, so by the time the registry makes it
+        // routable the top shared prefixes hit its local cache instead
+        // of costing a from-scratch prefill each.
+        let k = self.cfg.scaler.map(|s| s.warm_start_chains).unwrap_or(0);
+        if k > 0 {
+            let chains = self.scaler.as_ref().map(|s| s.hottest_chains(k)).unwrap_or_default();
+            for chain in chains {
+                // only chains some live replica still holds can ship KV
+                let Some((src, _, _)) = self.index.best_match(&chain) else { continue };
+                self.counters.warm_starts += 1;
+                self.stage_chain(chain, src, id);
+            }
+        }
     }
 
     /// Gracefully decommission a replica: stop routing to it, drain its
@@ -526,11 +552,28 @@ impl<X: Executor> ControlPlane<X> {
     /// Begin a planned hot-prefix migration: charge the staging +
     /// transfer cost now, land the chain on the target when it elapses.
     fn start_rebalance(&mut self, chain: Vec<u64>, from: usize, to: usize) {
-        let tier = self.index.match_prefix(from, &chain).1.unwrap_or(Tier::Dram);
+        self.counters.kv_rebalances += 1;
+        self.stage_chain(chain, from, to);
+    }
+
+    /// Shared staging mechanics for planned rebalancing and scale-up
+    /// warm start: charge the `TransferEngine` cost for shipping the
+    /// chain's KV off `from`'s slowest holding tier, then land it on
+    /// `to` (global index + local `adopt_chain`) when the delay elapses.
+    /// The chain is truncated to the prefix `from` actually holds —
+    /// staging the unmatched tail would land (and bill for) KV that
+    /// exists nowhere in the fleet, crediting the target with phantom
+    /// prefix hits.
+    fn stage_chain(&mut self, mut chain: Vec<u64>, from: usize, to: usize) {
+        let (matched, tier) = self.index.match_prefix(from, &chain);
+        chain.truncate(matched);
+        if chain.is_empty() {
+            return; // the source no longer holds any of it
+        }
+        let tier = tier.unwrap_or(Tier::Dram);
         let bytes =
             chain.len() as f64 * self.cfg.block_tokens as f64 * self.cost.model.kv_bytes_per_token();
         let delay = self.cfg.xfer.load_to_hbm_s(tier, bytes) + self.cfg.xfer.migrate_s(bytes);
-        self.counters.kv_rebalances += 1;
         self.counters.rebalance_staging_s += delay;
         self.clock.schedule_in(delay, CtlEv::RebalanceDone { to, chain });
     }
@@ -824,6 +867,51 @@ mod tests {
             res.n_replicas_final < res.per_replica.len(),
             "decommissioned replicas must not survive to the end"
         );
+    }
+
+    #[test]
+    fn scale_up_warm_starts_the_spawned_replica() {
+        let mk = || {
+            let cfg = OrchestratorConfig {
+                n_instances: 1,
+                prefix_cache: true,
+                ..Default::default()
+            };
+            Orchestrator::new(cfg, FixedCost::new(0.05))
+        };
+        let cfg = ControlPlaneConfig {
+            scaler: Some(ScalerConfig {
+                capacity_target_tokens: 512,
+                min_replicas: 1,
+                max_replicas: 3,
+                cooldown_s: 0.3,
+                warm_start_chains: 2,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        // a hot shared prefix dominates the burst, so the route tracker
+        // has chains to pre-stage when the scaler grows the fleet
+        let w: Vec<RequestSpec> = (0..16)
+            .map(|i| {
+                let mut s = RequestSpec::text(i as f64 * 0.2, 2048, 32);
+                s.prefix_group = 7;
+                s.shared_prefix = 512;
+                s
+            })
+            .collect();
+        let n = w.len();
+        let res = ControlPlane::new(cfg, vec![mk()]).with_spawner(move |_| mk()).run(w);
+        assert!(res.all_accounted());
+        assert_eq!(res.report.n_completed(), n, "warm start must lose nothing: {:?}", res.counters);
+        assert!(res.counters.scale_ups >= 1, "burst must grow the fleet: {:?}", res.counters);
+        assert!(
+            res.counters.warm_starts >= 1,
+            "spawn under a hot prefix must pre-stage it: {:?}",
+            res.counters
+        );
+        assert!(res.counters.rebalance_staging_s > 0.0, "staging cost must be charged");
+        assert!(res.per_replica.len() > 1, "a replica was actually spawned");
     }
 
     #[test]

@@ -52,6 +52,12 @@ pub struct ScalerConfig {
     /// Routes of one prefix chain onto one replica before a planned
     /// rebalance is considered.
     pub hot_prefix_routes: u64,
+    /// Scale-up warm start: pre-stage this many of the hottest tracked
+    /// prefix chains onto a freshly spawned replica (via the same
+    /// staging path as planned rebalancing) while it waits for its
+    /// first heartbeat, so the top shared prefixes already hit its
+    /// local cache by the time it becomes routable.  0 disables.
+    pub warm_start_chains: usize,
 }
 
 impl Default for ScalerConfig {
@@ -62,6 +68,7 @@ impl Default for ScalerConfig {
             max_replicas: 8,
             cooldown_s: 1.0,
             hot_prefix_routes: 8,
+            warm_start_chains: 2,
         }
     }
 }
@@ -136,6 +143,20 @@ impl FleetScaler {
                 self.hot.remove(&k);
             }
         }
+    }
+
+    /// Top-`k` tracked chains by total route count, hottest first (ties
+    /// to the smallest chain key — deterministic).  Drives the scale-up
+    /// warm start: these are the prefixes a fresh replica will most
+    /// likely be asked to serve.
+    pub fn hottest_chains(&self, k: usize) -> Vec<Vec<u64>> {
+        let mut ranked: Vec<(u64, u64)> = self
+            .hot
+            .iter()
+            .map(|(&key, s)| (s.per_replica.values().sum::<u64>(), key))
+            .collect();
+        ranked.sort_by(|a, b| b.0.cmp(&a.0).then_with(|| a.1.cmp(&b.1)));
+        ranked.into_iter().take(k).map(|(_, key)| self.hot[&key].chain.clone()).collect()
     }
 
     /// Drop a dead/decommissioned replica from the concentration stats.
@@ -346,6 +367,23 @@ mod tests {
         reg.deregister(2);
         let actions = s.plan(5.0, &reg, &ix);
         assert_eq!(actions, vec![ScaleAction::Rebalance { chain, from: 0, to: 1 }]);
+    }
+
+    #[test]
+    fn hottest_chains_rank_by_routes_then_key() {
+        let mut s = FleetScaler::new(cfg());
+        for _ in 0..3 {
+            s.note_route(&[10, 11], 0);
+        }
+        s.note_route(&[20, 21], 1);
+        for _ in 0..3 {
+            s.note_route(&[5, 6], 2);
+        }
+        let top = s.hottest_chains(2);
+        // three routes each for [10,11] (key 11) and [5,6] (key 6):
+        // the tie breaks to the smaller key, the 1-route chain is cut
+        assert_eq!(top, vec![vec![5, 6], vec![10, 11]]);
+        assert!(s.hottest_chains(0).is_empty());
     }
 
     #[test]

@@ -50,6 +50,13 @@ pub struct ClusterConfig {
     pub monitor_interval_s: f64,
     /// Enable the global prefix cache (§3.4).
     pub prefix_cache: bool,
+    /// Iterations kept in flight per instance (§4.2 async scheduling);
+    /// 1 = the blocking contract.
+    pub pipeline_depth: usize,
+    /// Modelled host-side planning/dispatch cost per iteration — the
+    /// share the async pipeline hides at depth ≥ 2.  Default 0.0 so
+    /// depth-1 runs reproduce the pre-async golden fixtures exactly.
+    pub host_overhead_s: f64,
     /// Termination cap on processed events (sets `SimResult::truncated`
     /// when hit instead of silently breaking out).
     pub max_events: u64,
@@ -86,6 +93,8 @@ impl ClusterConfig {
             recovery: RecoveryModel::default(),
             monitor_interval_s: 0.25,
             prefix_cache: false,
+            pipeline_depth: 1,
+            host_overhead_s: 0.0,
             max_events: DEFAULT_MAX_EVENTS,
             seed: 0xD15EA5E,
         }
@@ -107,6 +116,7 @@ impl ClusterConfig {
             recovery: self.recovery,
             monitor_interval_s: self.monitor_interval_s,
             prefix_cache: self.prefix_cache,
+            pipeline_depth: self.pipeline_depth.max(1),
             max_events: self.max_events,
             ..OrchestratorConfig::default()
         }
@@ -121,7 +131,8 @@ pub struct ClusterSim {
 impl ClusterSim {
     pub fn new(cfg: ClusterConfig) -> ClusterSim {
         let cost = CostModel::new(cfg.hw.clone(), cfg.model.clone(), cfg.features.clone());
-        let executor = RooflineExecutor::new(cost, cfg.spec, cfg.seed);
+        let executor = RooflineExecutor::new(cost, cfg.spec, cfg.seed)
+            .with_host_overhead(cfg.host_overhead_s);
         ClusterSim { orch: Orchestrator::new(cfg.orchestrator_config(), executor) }
     }
 

@@ -7,8 +7,20 @@
 //! same iteration.  Speculative token emission is drawn per decode
 //! request from a seeded RNG at iteration completion, preserving the
 //! pre-refactor draw order (the golden parity tests depend on it).
+//!
+//! Under the two-phase contract the modelled price is known at submit
+//! time, so the ticket's estimate *is* the outcome — virtual time stays
+//! exact and deterministic at any pipeline depth.  The optional
+//! `host_overhead_s` term models the orchestrator-side planning/dispatch
+//! cost per iteration (the share §4.2 async scheduling hides); it
+//! defaults to 0.0 so depth-1 runs reproduce the pre-async golden
+//! fixtures bit for bit.  (The engine-internal CPU batch-prep time is
+//! already part of the modelled step via `CostModel::exposed_sched` —
+//! this term is specifically the host work *outside* the engine step.)
 
-use crate::coordinator::orchestrator::{Executor, IterationWork};
+use crate::coordinator::orchestrator::{
+    Executor, IterationOutcome, IterationTicket, IterationWork,
+};
 use crate::coordinator::pools::InstanceId;
 use crate::coordinator::request::RequestId;
 use crate::engine::specdecode::{
@@ -18,16 +30,60 @@ use crate::service::epd::dual_stream_encode_exposure;
 use crate::sim::roofline::CostModel;
 use crate::util::Rng;
 
+/// Price one planned iteration's device time with the roofline model
+/// (shared with `server::PjrtExecutor`, which uses it as the submit-time
+/// estimate while the real measurement is in flight).
+pub fn model_device_s(cost: &CostModel, spec: Option<SpecConfig>, work: &IterationWork) -> f64 {
+    let kv_tokens: u64 = work.decodes.iter().map(|d| d.context_tokens).sum();
+    let n_decode = work.decodes.len() as u64;
+    let mut duration = 0.0;
+    if n_decode > 0 {
+        let mut d = cost.decode_step_s(n_decode, kv_tokens);
+        if let Some(spec) = spec {
+            d *= verify_cost_multiplier(spec.m);
+            d += d * draft_cost_fraction();
+        }
+        duration += d;
+    }
+    if work.prefill_tokens() > 0 {
+        let ctx: u64 = work.prefills.iter().map(|p| p.context_tokens).sum();
+        duration += cost.prefill_s(work.prefill_tokens(), ctx / work.prefills.len().max(1) as u64);
+    }
+    if !work.encodes.is_empty() {
+        let patches: u64 = work.encodes.iter().map(|e| e.image_patches).sum();
+        let enc = cost.encode_s(patches);
+        // dual-stream: encode overlaps the language stream when fused
+        duration += if n_decode > 0 || work.prefill_tokens() > 0 {
+            enc * dual_stream_encode_exposure()
+        } else {
+            enc
+        };
+    }
+    duration
+}
+
 /// Discrete-event executor over the roofline cost model.
 pub struct RooflineExecutor {
     cost: CostModel,
     spec: Option<SpecConfig>,
     rng: Rng,
+    /// Host-side planning/dispatch cost charged per iteration as
+    /// [`IterationOutcome::host_s`] (default 0.0 — the pre-async
+    /// contract).
+    host_overhead_s: f64,
+    seq: u64,
 }
 
 impl RooflineExecutor {
     pub fn new(cost: CostModel, spec: Option<SpecConfig>, seed: u64) -> RooflineExecutor {
-        RooflineExecutor { cost, spec, rng: Rng::new(seed) }
+        RooflineExecutor { cost, spec, rng: Rng::new(seed), host_overhead_s: 0.0, seq: 0 }
+    }
+
+    /// Model a nonzero per-iteration host overhead, the share the async
+    /// pipeline hides in virtual time at depth ≥ 2.
+    pub fn with_host_overhead(mut self, host_s: f64) -> RooflineExecutor {
+        self.host_overhead_s = host_s.max(0.0);
+        self
     }
 }
 
@@ -36,35 +92,22 @@ impl Executor for RooflineExecutor {
         &self.cost
     }
 
-    fn begin_iteration(&mut self, _instance: InstanceId, _now_s: f64, work: &IterationWork) -> f64 {
-        let kv_tokens: u64 = work.decodes.iter().map(|d| d.context_tokens).sum();
-        let n_decode = work.decodes.len() as u64;
-        let mut duration = 0.0;
-        if n_decode > 0 {
-            let mut d = self.cost.decode_step_s(n_decode, kv_tokens);
-            if let Some(spec) = self.spec {
-                d *= verify_cost_multiplier(spec.m);
-                d += d * draft_cost_fraction();
-            }
-            duration += d;
-        }
-        if work.prefill_tokens() > 0 {
-            let ctx: u64 = work.prefills.iter().map(|p| p.context_tokens).sum();
-            duration += self
-                .cost
-                .prefill_s(work.prefill_tokens(), ctx / work.prefills.len().max(1) as u64);
-        }
-        if !work.encodes.is_empty() {
-            let patches: u64 = work.encodes.iter().map(|e| e.image_patches).sum();
-            let enc = self.cost.encode_s(patches);
-            // dual-stream: encode overlaps the language stream when fused
-            duration += if n_decode > 0 || work.prefill_tokens() > 0 {
-                enc * dual_stream_encode_exposure()
-            } else {
-                enc
-            };
-        }
-        duration
+    fn submit_iteration(
+        &mut self,
+        instance: InstanceId,
+        _now_s: f64,
+        work: &IterationWork,
+    ) -> IterationTicket {
+        let device_s = model_device_s(&self.cost, self.spec, work);
+        let host_s = if work.is_empty() { 0.0 } else { self.host_overhead_s };
+        self.seq += 1;
+        IterationTicket { instance, seq: self.seq, est: IterationOutcome { host_s, device_s } }
+    }
+
+    fn poll_complete(&mut self, ticket: IterationTicket) -> IterationOutcome {
+        // modelled prices are exact at submit time: the estimate is the
+        // outcome, at any pipeline depth
+        ticket.est
     }
 
     fn decode_emission(&mut self, _instance: InstanceId, _req: RequestId) -> u64 {

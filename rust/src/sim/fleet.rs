@@ -74,12 +74,17 @@ impl FleetConfig {
 
 /// Stamp one replica from the template (also the scale-up factory: the
 /// per-replica seed offset keeps speculative draws independent even for
-/// replicas spawned mid-run).
+/// replicas spawned mid-run).  The template's `pipeline_depth` and
+/// `host_overhead_s` carry through, so a fleet of async-pipelined
+/// replicas keeps one in-flight iteration per instance per replica —
+/// the control plane interleaves their concurrently pending completion
+/// events deterministically by `next_event_time`.
 fn stamp_replica(template: &ClusterConfig, i: usize) -> Orchestrator<RooflineExecutor> {
     let cost =
         CostModel::new(template.hw.clone(), template.model.clone(), template.features.clone());
     let executor =
-        RooflineExecutor::new(cost, template.spec, template.seed.wrapping_add(i as u64));
+        RooflineExecutor::new(cost, template.spec, template.seed.wrapping_add(i as u64))
+            .with_host_overhead(template.host_overhead_s);
     Orchestrator::new(template.orchestrator_config(), executor)
 }
 

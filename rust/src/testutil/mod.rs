@@ -7,7 +7,9 @@
 //! paging, beam search).  [`FixedCostExecutor`] is the shared trivial
 //! [`Executor`] backing the orchestrator/control-plane unit tests.
 
-use crate::coordinator::orchestrator::{Executor, IterationWork};
+use crate::coordinator::orchestrator::{
+    Executor, IterationOutcome, IterationTicket, IterationWork,
+};
 use crate::coordinator::pools::InstanceId;
 use crate::coordinator::request::RequestId;
 use crate::model::{ascend_910b, catalog};
@@ -42,14 +44,23 @@ where
 }
 
 /// A trivial fixed-cost [`Executor`]: every planned iteration takes
-/// `step_s` and each decode emits one token.  Proves the lifecycle runs
-/// with no roofline model and no PJRT runtime behind it; the public
-/// counters let tests assert the orchestrator↔executor contract.
+/// `step_s` device time (plus an optional `host_s` host share) and each
+/// decode emits one token.  Proves the lifecycle runs with no roofline
+/// model and no PJRT runtime behind it; the public counters let tests
+/// assert the orchestrator↔executor two-phase contract (including how
+/// many tickets were ever outstanding at once).
 pub struct FixedCostExecutor {
     pub cost: CostModel,
     pub step_s: f64,
+    /// Host share reported per iteration ([`IterationOutcome::host_s`]).
+    pub host_s: f64,
     pub iterations: u64,
     pub finished: u64,
+    /// Tickets submitted but not yet completed, and its high-water mark
+    /// (the pipeline tests pin the in-flight bound with these).
+    pub outstanding: u64,
+    pub max_outstanding: u64,
+    seq: u64,
 }
 
 impl FixedCostExecutor {
@@ -61,9 +72,20 @@ impl FixedCostExecutor {
                 EngineFeatures::xllm(1),
             ),
             step_s,
+            host_s: 0.0,
             iterations: 0,
             finished: 0,
+            outstanding: 0,
+            max_outstanding: 0,
+            seq: 0,
         }
+    }
+
+    /// [`Self::new`] with a nonzero host share per iteration.
+    pub fn with_host(step_s: f64, host_s: f64) -> FixedCostExecutor {
+        let mut e = FixedCostExecutor::new(step_s);
+        e.host_s = host_s;
+        e
     }
 }
 
@@ -72,9 +94,26 @@ impl Executor for FixedCostExecutor {
         &self.cost
     }
 
-    fn begin_iteration(&mut self, _instance: InstanceId, _now_s: f64, _work: &IterationWork) -> f64 {
+    fn submit_iteration(
+        &mut self,
+        instance: InstanceId,
+        _now_s: f64,
+        _work: &IterationWork,
+    ) -> IterationTicket {
         self.iterations += 1;
-        self.step_s
+        self.seq += 1;
+        self.outstanding += 1;
+        self.max_outstanding = self.max_outstanding.max(self.outstanding);
+        IterationTicket {
+            instance,
+            seq: self.seq,
+            est: IterationOutcome { host_s: self.host_s, device_s: self.step_s },
+        }
+    }
+
+    fn poll_complete(&mut self, ticket: IterationTicket) -> IterationOutcome {
+        self.outstanding = self.outstanding.saturating_sub(1);
+        ticket.est
     }
 
     fn finished(&mut self, _req: RequestId, _now_s: f64) {

@@ -41,8 +41,8 @@ fn counters_line(name: &str, res: &FleetResult) -> String {
         "{name} submitted={} recorded={} completed={} replicas_total={} replicas_final={} \
          cache_hits={} failovers={} redispatched={} redispatched_tokens={} \
          redispatch_migrations={} offline_steered={} unroutable={} lease_expiries={} \
-         scale_ups={} scale_downs={} kv_rebalances={} prefix_hits={} truncated={} \
-         tput_utok_s={}",
+         scale_ups={} scale_downs={} kv_rebalances={} warm_starts={} prefix_hits={} \
+         truncated={} tput_utok_s={}",
         res.submitted,
         res.report.n_requests(),
         res.report.n_completed(),
@@ -59,6 +59,7 @@ fn counters_line(name: &str, res: &FleetResult) -> String {
         c.scale_ups,
         c.scale_downs,
         c.kv_rebalances,
+        c.warm_starts,
         res.prefix_hits(),
         res.truncated,
         // micro-token/s resolution: integral, byte-stable, still
@@ -92,12 +93,32 @@ fn autoscale_case() -> String {
     counters_line("autoscale-tide", &run_fleet(cfg, w))
 }
 
+/// Async-pipelined fleet: every replica keeps one look-ahead iteration
+/// in flight, so the control plane interleaves concurrently pending
+/// completion events — pins that the interleave stays deterministic.
+fn pipelined_fleet_case() -> String {
+    let mut rng = Rng::new(0x9A5F);
+    let w = scenario("tide").unwrap().generate(30.0, 4.0, &mut rng);
+    let mut t = template();
+    t.pipeline_depth = 2;
+    t.host_overhead_s = 0.002;
+    counters_line("pipelined-tide-d2", &run_fleet(FleetConfig::new(t, 2), w))
+}
+
 #[test]
 fn golden_fleet_counters_are_stable() {
-    let got = format!("{}\n{}\n", failover_case(), autoscale_case());
+    let got =
+        format!("{}\n{}\n{}\n", failover_case(), autoscale_case(), pipelined_fleet_case());
     let path = Path::new(GOLDEN_PATH);
     let bless = std::env::var("UPDATE_GOLDEN").is_ok() || !path.exists();
     if bless {
+        // CI guard: a missing fixture must FAIL in CI instead of
+        // self-blessing (GOLDEN_STRICT is set by the workflow)
+        assert!(
+            std::env::var("GOLDEN_STRICT").is_err() || std::env::var("UPDATE_GOLDEN").is_ok(),
+            "golden fixture {GOLDEN_PATH} is not committed — run \
+             UPDATE_GOLDEN=1 cargo test locally and commit the file"
+        );
         fs::create_dir_all(path.parent().unwrap()).unwrap();
         fs::write(path, &got).unwrap();
         eprintln!("blessed golden fleet counters:\n{got}");
@@ -116,4 +137,5 @@ fn golden_fleet_counters_are_stable() {
 fn golden_fleet_runs_are_internally_deterministic() {
     assert_eq!(failover_case(), failover_case());
     assert_eq!(autoscale_case(), autoscale_case());
+    assert_eq!(pipelined_fleet_case(), pipelined_fleet_case());
 }

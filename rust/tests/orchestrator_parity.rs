@@ -84,12 +84,43 @@ fn disaggregated_dynamic_case() -> String {
     counters_line("disaggregated-dynamic", &run(cfg, w))
 }
 
+/// The async pipeline at depth 2 with a nonzero modelled host overhead
+/// — pins the look-ahead planner and the pipelined timeline, the way
+/// the first two cases pin the (depth-1 ≡ blocking) lifecycle.
+fn pipelined_case() -> String {
+    let mut cfg = ClusterConfig::new(
+        2,
+        ascend_910b(),
+        catalog("Qwen3-8B").unwrap(),
+        EngineFeatures::xllm(1),
+    );
+    cfg.prefix_cache = true;
+    cfg.pipeline_depth = 2;
+    cfg.host_overhead_s = 0.002;
+    let mut rng = Rng::new(0xA57C);
+    let w = scenario("customer-service").unwrap().generate(30.0, 1.5, &mut rng);
+    counters_line("colocated-pipelined-d2", &run(cfg, w))
+}
+
 #[test]
 fn golden_seed_counters_are_stable() {
-    let got = format!("{}\n{}\n", colocated_case(), disaggregated_dynamic_case());
+    let got = format!(
+        "{}\n{}\n{}\n",
+        colocated_case(),
+        disaggregated_dynamic_case(),
+        pipelined_case()
+    );
     let path = Path::new(GOLDEN_PATH);
     let bless = std::env::var("UPDATE_GOLDEN").is_ok() || !path.exists();
     if bless {
+        // CI guard: a missing fixture must FAIL in CI instead of
+        // self-blessing — otherwise any behavior change silently becomes
+        // the new baseline (GOLDEN_STRICT is set by the workflow).
+        assert!(
+            std::env::var("GOLDEN_STRICT").is_err() || std::env::var("UPDATE_GOLDEN").is_ok(),
+            "golden fixture {GOLDEN_PATH} is not committed — run \
+             UPDATE_GOLDEN=1 cargo test locally and commit the file"
+        );
         fs::create_dir_all(path.parent().unwrap()).unwrap();
         fs::write(path, &got).unwrap();
         eprintln!("blessed golden counters:\n{got}");
@@ -109,4 +140,5 @@ fn golden_runs_are_internally_deterministic() {
     // the parity pin is only meaningful if back-to-back runs agree
     assert_eq!(colocated_case(), colocated_case());
     assert_eq!(disaggregated_dynamic_case(), disaggregated_dynamic_case());
+    assert_eq!(pipelined_case(), pipelined_case());
 }
