@@ -88,6 +88,10 @@ pub struct ServeConfig {
     /// engine on the orchestrator thread; ≥ 2 moves the engine onto a
     /// worker thread so host scheduling overlaps device execution.
     pub pipeline_depth: usize,
+    /// Prefix-chain block granularity in tokens (§3.4) — must match the
+    /// fleet control plane's global-index granularity when this engine
+    /// serves as a fleet replica (`xllm fleet --backend pjrt`).
+    pub prefix_block_tokens: u64,
 }
 
 impl Default for ServeConfig {
@@ -100,6 +104,7 @@ impl Default for ServeConfig {
             slo: Slo::interactive(2.0, 0.5),
             speculative: false,
             pipeline_depth: 1,
+            prefix_block_tokens: crate::coordinator::orchestrator::DEFAULT_PREFIX_BLOCK_TOKENS,
         }
     }
 }

@@ -177,8 +177,10 @@ impl<X: Executor> Orchestrator<X> {
     pub fn start_at(&mut self, workload: Vec<RequestSpec>, now_s: f64) {
         self.queue.advance_to(now_s);
         self.specs = workload;
-        for (i, spec) in self.specs.iter().enumerate() {
+        for i in 0..self.specs.len() {
+            let spec = self.specs[i];
             self.queue.schedule_at(spec.arrival_s, Ev::Arrive(i));
+            self.executor.admitted(i as RequestId, &spec);
         }
         for (t, inst) in self.cfg.faults.clone() {
             self.queue.schedule_at(t, Ev::Fault(inst));
@@ -209,6 +211,7 @@ impl<X: Executor> Orchestrator<X> {
     pub fn submit_at(&mut self, spec: RequestSpec, earliest_s: f64) {
         let i = self.specs.len();
         self.specs.push(spec);
+        self.executor.admitted(i as RequestId, &spec);
         self.queue.schedule_at(spec.arrival_s.max(earliest_s), Ev::Arrive(i));
         if !self.monitor_live {
             self.queue.schedule_in(self.cfg.monitor_interval_s, Ev::Monitor);

@@ -133,6 +133,27 @@ pub struct IterationTicket {
     pub est: IterationOutcome,
 }
 
+/// Raw KV data for one staged prefix chain, exported by a source
+/// executor and imported by the target (§3.4 real cross-replica KV
+/// movement).  Each entry is `(block hash, flat KV data for that
+/// block's tokens)` — the layout is backend-private; the control plane
+/// only ferries the payload between the two executors' hooks.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct KvChainPayload {
+    pub blocks: Vec<(u64, Vec<f32>)>,
+}
+
+impl KvChainPayload {
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// Payload size in bytes (f32 elements × 4).
+    pub fn bytes(&self) -> usize {
+        self.blocks.iter().map(|(_, d)| d.len() * 4).sum()
+    }
+}
+
 /// Backend executing the orchestrator's planned iterations.
 ///
 /// The orchestrator plans *what* runs each iteration; the executor
@@ -150,7 +171,13 @@ pub struct IterationTicket {
 /// Depth 1 recovers the old blocking behavior exactly: submit is
 /// followed immediately by poll, and the full `host_s + device_s` span
 /// is charged to the timeline.
-pub trait Executor {
+///
+/// Executors are `Send`: the fleet runtime steps each replica (and
+/// therefore its executor) on its own thread in threaded mode, so every
+/// backend must be movable across threads.  The real PJRT backend
+/// already proves this — its engine core crosses onto a worker thread
+/// at pipeline depth ≥ 2.
+pub trait Executor: Send {
     /// Cost model backing the dispatch/prediction/role-switch heuristics
     /// (for real backends, a calibrated stand-in is fine — heuristics
     /// only compare relative magnitudes).
@@ -196,6 +223,37 @@ pub trait Executor {
     /// context (PD handoff / migration).
     fn kv_transfer_s(&self, tokens: u64) -> f64 {
         self.cost().kv_transfer_s(tokens)
+    }
+
+    /// A request spec was admitted to this orchestrator (scheduled at
+    /// `start` or injected by the control plane via `submit`).  Real
+    /// backends materialize per-request inputs here — e.g. the PJRT
+    /// executor synthesizes and queues the prompt for a fleet-routed
+    /// request.  Called before the arrival event fires; default: no-op
+    /// (model-priced executors need only the spec the planner carries).
+    fn admitted(&mut self, req: RequestId, spec: &crate::workload::RequestSpec) {
+        let _ = (req, spec);
+    }
+
+    /// Export the raw KV backing a staged prefix chain so the control
+    /// plane can land it on another replica's executor (§3.4 planned
+    /// rebalancing / warm start / graceful-drain migration).  Default:
+    /// `None` — the movement stays *cost-only* (the control plane
+    /// charges the `TransferEngine` delay and the target adopts the
+    /// chain logically), which is exactly the pre-hook contract for
+    /// model-priced executors.
+    fn export_chain(&mut self, chain: &[u64]) -> Option<KvChainPayload> {
+        let _ = chain;
+        None
+    }
+
+    /// Land KV exported by a peer replica's [`Executor::export_chain`].
+    /// Takes the payload by value — the control plane hands over its
+    /// only copy, so real backends move the blocks in without cloning.
+    /// Default: drop (cost-only contract — the logical adoption happens
+    /// in the orchestrator's prefix cache via `adopt_chain`).
+    fn import_chain(&mut self, payload: KvChainPayload) {
+        let _ = payload;
     }
 
     /// A request left the orchestrator (completed or failed) at virtual

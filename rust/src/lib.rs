@@ -28,7 +28,11 @@
 //!   leases, global prefix-cache index, cache-aware routing, failover
 //!   across N orchestrator replicas, and the elastic **fleet scaler**
 //!   (replica autoscaling + planned cross-replica KV rebalancing; see
-//!   DESIGN.md §Control-Plane).
+//!   DESIGN.md §Control-Plane).  [`service::fleet`] is the
+//!   executor-agnostic **fleet runtime**: a `ReplicaFactory` seam
+//!   builds N replicas (roofline sim or real PJRT engines) behind one
+//!   lock-protected, optionally multi-threaded control plane (see
+//!   DESIGN.md §Fleet-Runtime).
 //! * [`engine`] — xLLM-Engine optimizations (xtensor, specdecode, EPLB,
 //!   DP balance, pipeline, genrec).
 //! * [`sim`] — event clock, roofline cost model, the roofline `Executor`,

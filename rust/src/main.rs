@@ -12,13 +12,21 @@
 //!               --max-replicas 6
 //! xllm fleet    --scenario tide --rate 6 --horizon 40 --replicas 2 \
 //!               --pipeline-depth 2 --host-overhead 0.002
+//! xllm fleet    --scenario tide --rate 6 --horizon 40 --replicas 2 \
+//!               --threads 2 --pipeline-depth 2
+//! xllm fleet    --backend pjrt --replicas 2 --scenario skewed-prefix \
+//!               --rate 1 --horizon 10        # needs artifacts/; skips otherwise
 //! xllm models | scenarios | info
 //! ```
 //!
 //! `--pipeline-depth N` (serve, simulate, fleet) keeps N iterations in
 //! flight per instance (§4.2 async scheduling; 1 = blocking);
 //! `--host-overhead S` (simulate, fleet) models the per-iteration host
-//! planning cost the pipeline hides.
+//! planning cost the pipeline hides; `--threads N` (fleet) steps the
+//! replicas on N worker threads between control events (1 = the
+//! deterministic single-queue interleave); `--backend pjrt` (fleet)
+//! runs N real `PjrtExecutor` replicas over the AOT artifacts behind
+//! the same control plane.
 
 use std::path::Path;
 
@@ -213,7 +221,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_fleet(args: &Args) -> Result<()> {
-    use xllm::service::controlplane::{RoutePolicy, ScalerConfig};
+    use xllm::server::PjrtReplicaFactory;
+    use xllm::service::controlplane::{ControlPlaneConfig, RoutePolicy, ScalerConfig};
+    use xllm::service::fleet::run_fleet_with;
     use xllm::sim::fleet::{run_fleet, FleetConfig};
 
     let scenario_name = args.get_or("scenario", "skewed-prefix");
@@ -222,29 +232,29 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let n_instances = args.get_u64("instances", 1) as usize;
     let rate = args.get_f64("rate", 2.0);
     let horizon = args.get_f64("horizon", 40.0);
-    let spec = model::catalog(&model_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name} (see `xllm models`)"))?;
+    let backend = args.get_or("backend", "roofline");
+    let pipeline_depth = args.get_u64("pipeline-depth", 1).max(1) as usize;
     let sc = scenario(&scenario_name)
         .ok_or_else(|| anyhow::anyhow!("unknown scenario {scenario_name}"))?;
 
-    let mut template =
-        ClusterConfig::new(n_instances, model::ascend_910b(), spec, EngineFeatures::xllm(1));
-    template.prefix_cache = true;
-    template.pipeline_depth = args.get_u64("pipeline-depth", 1).max(1) as usize;
-    template.host_overhead_s = args.get_f64("host-overhead", 0.0).max(0.0);
-    let pipeline_depth = template.pipeline_depth;
-    let mut cfg = FleetConfig::new(template, n_replicas);
-    cfg.routing = match args.get_or("routing", "cache-aware").as_str() {
-        "round-robin" => RoutePolicy::RoundRobin,
-        _ => RoutePolicy::CacheAware,
+    // control-plane policy is backend-agnostic: the same routing,
+    // leases, scaler, and stepping threads drive roofline and real
+    // PJRT replicas alike
+    let mut control = ControlPlaneConfig {
+        routing: match args.get_or("routing", "cache-aware").as_str() {
+            "round-robin" => RoutePolicy::RoundRobin,
+            _ => RoutePolicy::CacheAware,
+        },
+        threads: args.get_u64("threads", 1).max(1) as usize,
+        ..ControlPlaneConfig::default()
     };
     let fail_at = args.get_f64("fail-at", f64::NAN);
     if fail_at.is_finite() {
-        cfg.replica_faults.push((fail_at, args.get_u64("fail-replica", 0) as usize));
+        control.replica_faults.push((fail_at, args.get_u64("fail-replica", 0) as usize));
     }
     if args.has_flag("autoscale") {
         let d = ScalerConfig::default();
-        cfg.scaler = Some(ScalerConfig {
+        control.scaler = Some(ScalerConfig {
             capacity_target_tokens: args
                 .get_u64("capacity-target", d.capacity_target_tokens),
             min_replicas: args.get_u64("min-replicas", 1) as usize,
@@ -260,7 +270,59 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let mut rng = Rng::new(args.get_u64("seed", 7));
     let workload = sc.generate(horizon, rate, &mut rng);
     let n_reqs = workload.len();
-    let res = run_fleet(cfg, workload);
+    let threads = control.threads;
+
+    let res = match backend.as_str() {
+        "pjrt" => {
+            // real engines: N PjrtExecutor replicas behind the same
+            // control plane (skips gracefully without artifacts)
+            let artifacts = args.get_or("artifacts", "artifacts");
+            let dir = Path::new(&artifacts);
+            if !dir.join("manifest.txt").exists() {
+                eprintln!(
+                    "# skipping pjrt fleet: {artifacts}/ not built (run `make artifacts`)"
+                );
+                return Ok(());
+            }
+            let serve_cfg = ServeConfig {
+                artifacts_dir: artifacts.clone(),
+                max_batch: args.get_u64("batch", 8) as usize,
+                max_output_tokens: args.get_u64("max-new", 24) as usize,
+                speculative: args.has_flag("speculative"),
+                pipeline_depth,
+                // finer than the 64-token sim default: the tiny AOT
+                // model's prompts must fully cover a block before its
+                // KV can be stashed/shipped between replicas
+                prefix_block_tokens: args.get_u64("block-tokens", 16).max(1),
+                ..ServeConfig::default()
+            };
+            // the global index granularity must match the replicas'
+            control.block_tokens = serve_cfg.prefix_block_tokens;
+            let factory = PjrtReplicaFactory::new(dir, serve_cfg)?;
+            // scenario specs are clamped to the AOT engine's limits so
+            // the planner and the real engine agree on request shapes
+            let workload = factory.clamp_workload(workload);
+            run_fleet_with(control, n_replicas, factory, workload)
+        }
+        "roofline" => {
+            let spec = model::catalog(&model_name).ok_or_else(|| {
+                anyhow::anyhow!("unknown model {model_name} (see `xllm models`)")
+            })?;
+            let mut template = ClusterConfig::new(
+                n_instances,
+                model::ascend_910b(),
+                spec,
+                EngineFeatures::xllm(1),
+            );
+            template.prefix_cache = true;
+            template.pipeline_depth = pipeline_depth;
+            template.host_overhead_s = args.get_f64("host-overhead", 0.0).max(0.0);
+            let mut cfg = FleetConfig::new(template, n_replicas);
+            cfg.control = control;
+            run_fleet(cfg, workload)
+        }
+        other => bail!("unknown fleet backend {other} (roofline|pjrt)"),
+    };
     let report = &res.report;
     let out = Json::obj()
         .set("scenario", scenario_name)
@@ -283,9 +345,12 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         .set("scale_downs", res.counters.scale_downs)
         .set("kv_rebalances", res.counters.kv_rebalances)
         .set("warm_starts", res.counters.warm_starts)
+        .set("kv_blocks_shipped", res.counters.kv_blocks_shipped)
         .set("replicas_final", res.n_replicas_final)
         .set("replicas_total", res.per_replica.len())
         .set("pipeline_depth", pipeline_depth)
+        .set("backend", backend)
+        .set("threads", threads)
         .set("truncated", res.truncated);
     println!("{}", out.to_string());
     Ok(())

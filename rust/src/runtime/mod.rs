@@ -74,6 +74,27 @@ impl BatchKv {
         }
     }
 
+    /// Overwrite tokens `[start, start+len)` of `slot` from flat
+    /// `[L, H, len, Dh]` K/V buffers (KV-block import: a prefix block
+    /// migrated from a peer replica lands over the recomputed region).
+    pub fn write_range(&mut self, slot: usize, start: usize, len: usize, k: &[f32], v: &[f32]) {
+        let d = self.dims;
+        assert!(slot < self.batch, "slot {slot} out of range");
+        assert!(start + len <= d.max_seq, "range {start}+{len} exceeds max_seq");
+        let n = d.n_layers * d.n_heads * len * d.d_head;
+        assert!(k.len() >= n && v.len() >= n, "short KV block buffer");
+        for l in 0..d.n_layers {
+            for h in 0..d.n_heads {
+                for s in 0..len {
+                    let src = ((l * d.n_heads + h) * len + s) * d.d_head;
+                    let dst = self.slot_offset(l, slot, h, start + s);
+                    self.k[dst..dst + d.d_head].copy_from_slice(&k[src..src + d.d_head]);
+                    self.v[dst..dst + d.d_head].copy_from_slice(&v[src..src + d.d_head]);
+                }
+            }
+        }
+    }
+
     /// Zero a slot (request completed; slot reusable).
     pub fn clear_slot(&mut self, slot: usize) {
         let d = self.dims;

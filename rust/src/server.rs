@@ -21,8 +21,8 @@
 //! the completion event.  Python never runs here; the artifacts were
 //! lowered once by `make artifacts`.
 
-use std::collections::{HashMap, VecDeque};
-use std::path::Path;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::thread;
 use std::time::Instant;
@@ -31,15 +31,17 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::ServeConfig;
 use crate::coordinator::orchestrator::{
-    Executor, IterationOutcome, IterationTicket, IterationWork, Orchestrator, OrchestratorConfig,
-    ServingMode,
+    Executor, IterationOutcome, IterationTicket, IterationWork, KvChainPayload, Orchestrator,
+    OrchestratorConfig, ServingMode,
 };
 use crate::coordinator::{BatchConfig, DispatchPolicy, InstanceId, RequestId};
 use crate::engine::specdecode::{accept_greedy, SpecConfig, SpecStats};
 use crate::engine::xtensor::{MapStats, XTensorManager};
 use crate::metrics::ServingReport;
 use crate::model::{cpu_host, ModelSpec};
-use crate::runtime::{argmax, BatchKv, GraphStats, ModelDims, Runtime};
+use crate::runtime::{argmax, BatchKv, GraphStats, ModelDims, PrefillOutput, Runtime};
+use crate::service::fleet::ReplicaFactory;
+use crate::service::kvstore::{hash_chain, prefix_tokens};
 use crate::sim::executor::model_device_s;
 use crate::sim::roofline::{CostModel, EngineFeatures};
 use crate::workload::RequestSpec;
@@ -68,6 +70,17 @@ pub struct ServerStats {
     pub decode_steps: u64,
     pub tokens_generated: u64,
     pub spec: SpecStats,
+    /// Prefix-chain KV blocks stashed from local prefills (§3.4 —
+    /// exportable to peer replicas in a fleet).
+    pub kv_blocks_stashed: u64,
+    /// KV blocks shipped to a peer replica ([`Executor::export_chain`]).
+    pub kv_blocks_exported: u64,
+    /// KV blocks landed from a peer replica ([`Executor::import_chain`]).
+    pub kv_blocks_imported: u64,
+    /// Prefill prefix regions served from migrated blocks (the imported
+    /// copy overwrote the recomputed region — consistency with the
+    /// fleet's staged KV).
+    pub kv_block_restores: u64,
 }
 
 /// A request admitted into a batch slot.
@@ -84,12 +97,21 @@ struct SlotSeq {
     first_token_s: f64,
 }
 
+/// Bound on chain-store blocks per engine core (FIFO eviction past it):
+/// a long fleet run over many distinct prefixes must not grow host
+/// memory without limit.
+const MAX_CHAIN_BLOCKS: usize = 1024;
+
 /// A submitted request the orchestrator has not prefilled yet.
 #[derive(Debug, Clone)]
 struct PendingReq {
     orig_id: u64,
     prompt: Vec<i32>,
     max_new: usize,
+    /// Prefix hash chain of the prompt's shared prefix (empty when the
+    /// request shares nothing).  Prefilling stashes these blocks' KV
+    /// into the engine's chain store for cross-replica export.
+    chain: Vec<u64>,
 }
 
 /// End-of-run snapshot handed back by the engine core (inline or over
@@ -124,6 +146,22 @@ struct EngineCore {
     pending: HashMap<RequestId, PendingReq>,
     /// Tokens emitted per decode request in the iteration just executed.
     emitted: HashMap<RequestId, u64>,
+    /// Prefix-chain KV store: block hash → flat KV data (K then V, each
+    /// `[L, H, block_tokens, Dh]`).  Filled by local prefills and by
+    /// imports from peer replicas; the export side of real §3.4
+    /// cross-replica KV movement.  Bounded by [`MAX_CHAIN_BLOCKS`] with
+    /// FIFO eviction (`chain_order`), so a long run over many distinct
+    /// prefixes cannot grow host memory without limit.
+    chains: HashMap<u64, Vec<f32>>,
+    /// Insertion order of `chains` entries (FIFO eviction queue).
+    chain_order: VecDeque<u64>,
+    /// Blocks that arrived via [`EngineCore::import_chain`]: only these
+    /// overwrite a recomputed prefill region (a locally stashed block is
+    /// bit-identical to the recomputation — copying it back would be
+    /// pure overhead).
+    imported: HashSet<u64>,
+    /// Prefix-chain block granularity in tokens.
+    block_tokens: usize,
     /// Largest prefill bucket (prompt truncation bound).
     max_prompt: usize,
     stats: ServerStats,
@@ -183,6 +221,10 @@ impl EngineCore {
             pages: XTensorManager::new(total_pages, page_tokens, dims.max_seq as u64),
             pending: HashMap::new(),
             emitted: HashMap::new(),
+            chains: HashMap::new(),
+            chain_order: VecDeque::new(),
+            imported: HashSet::new(),
+            block_tokens: cfg.prefix_block_tokens.max(1) as usize,
             max_prompt,
             stats: ServerStats::default(),
             results: Vec::new(),
@@ -204,6 +246,13 @@ impl EngineCore {
         let out = self.rt.prefill("tiny", &pend.prompt)?;
         self.stats.prefills += 1;
         self.kv.write_prefill(slot, &out.k, &out.v, out.bucket_s, pend.prompt.len());
+        // §3.4 real KV movement: stash the prompt's shared-prefix blocks
+        // (exportable to peer replicas) and land any blocks already in
+        // the chain store — e.g. imported from a peer — over the
+        // recomputed region, so the slot serves the migrated copy
+        if !pend.chain.is_empty() {
+            self.sync_chain_blocks(&pend.chain, slot, &out, pend.prompt.len());
+        }
         // xTensor session: pages for the prompt + expected output
         self.pages.open_with_reuse(req, (pend.prompt.len() + pend.max_new) as u64);
         self.pages.extend(req, pend.prompt.len() as u64);
@@ -232,6 +281,98 @@ impl EngineCore {
         });
         self.slot_of.insert(req, slot);
         Ok(())
+    }
+
+    /// Insert one block into the chain store, FIFO-evicting past the
+    /// cap (evicted imports also lose their `imported` mark).
+    fn store_chain_block(&mut self, hash: u64, data: Vec<f32>) {
+        if self.chains.insert(hash, data).is_none() {
+            self.chain_order.push_back(hash);
+        }
+        while self.chains.len() > MAX_CHAIN_BLOCKS {
+            let Some(old) = self.chain_order.pop_front() else { break };
+            self.chains.remove(&old);
+            self.imported.remove(&old);
+        }
+    }
+
+    /// Per-block chain-store sync at prefill time: blocks imported from
+    /// a peer overwrite the recomputed slot region (the slot serves the
+    /// migrated copy); blocks not yet held are stashed from the freshly
+    /// computed KV.  Locally stashed blocks are left alone — causal
+    /// attention makes prefix KV deterministic in the prefix tokens, so
+    /// re-copying them over an identical recomputation is pure
+    /// overhead.  Only blocks fully covered by the prompt participate —
+    /// a partial block has no complete KV.
+    fn sync_chain_blocks(
+        &mut self,
+        chain: &[u64],
+        slot: usize,
+        out: &PrefillOutput,
+        prompt_len: usize,
+    ) {
+        let d = self.dims;
+        let bt = self.block_tokens;
+        for (bi, &hash) in chain.iter().enumerate() {
+            let start = bi * bt;
+            let end = start + bt;
+            if end > prompt_len {
+                break;
+            }
+            if self.imported.contains(&hash) {
+                let n = d.n_layers * d.n_heads * bt * d.d_head;
+                if let Some(data) = self.chains.get(&hash) {
+                    if data.len() >= 2 * n {
+                        let (k, v) = data.split_at(n);
+                        self.kv.write_range(slot, start, bt, &k[..n], &v[..n]);
+                        self.stats.kv_block_restores += 1;
+                    }
+                }
+            } else if !self.chains.contains_key(&hash) {
+                let mut data = Vec::with_capacity(2 * d.n_layers * d.n_heads * bt * d.d_head);
+                for kv in [&out.k, &out.v] {
+                    for l in 0..d.n_layers {
+                        for h in 0..d.n_heads {
+                            for s in start..end {
+                                let src = ((l * d.n_heads + h) * out.bucket_s + s) * d.d_head;
+                                data.extend_from_slice(&kv[src..src + d.d_head]);
+                            }
+                        }
+                    }
+                }
+                self.store_chain_block(hash, data);
+                self.stats.kv_blocks_stashed += 1;
+            }
+        }
+    }
+
+    /// Export the chain-store blocks backing `chain` (longest stored
+    /// prefix) for the control plane to ship to a peer replica.
+    fn export_chain(&mut self, chain: &[u64]) -> Option<KvChainPayload> {
+        let mut blocks = Vec::new();
+        for &hash in chain {
+            match self.chains.get(&hash) {
+                Some(data) => blocks.push((hash, data.clone())),
+                None => break, // only a contiguous stored prefix ships
+            }
+        }
+        if blocks.is_empty() {
+            return None;
+        }
+        self.stats.kv_blocks_exported += blocks.len() as u64;
+        Some(KvChainPayload { blocks })
+    }
+
+    /// Land blocks exported by a peer replica's engine core (payload
+    /// moved in — no copies beyond the original export).
+    fn import_chain(&mut self, payload: KvChainPayload) {
+        for (hash, data) in payload.blocks {
+            if !self.chains.contains_key(&hash) {
+                self.store_chain_block(hash, data);
+                self.imported.insert(hash);
+                self.stats.kv_blocks_imported += 1;
+            }
+        }
     }
 
     /// One plain decode iteration over the scheduled slots.
@@ -437,6 +578,10 @@ enum Cmd {
     Submit { seq: u64, now_s: f64, work: IterationWork },
     /// A request left the orchestrator (slot release, result record).
     Finished { req: RequestId, now_s: f64 },
+    /// Export a prefix chain's KV blocks; a `Reply::Chain` follows.
+    Export { chain: Vec<u64> },
+    /// Land KV blocks shipped from a peer replica (fire-and-forget).
+    Import(KvChainPayload),
     /// End-of-run snapshot request; a `Reply::Collect` follows.
     Collect,
 }
@@ -444,6 +589,7 @@ enum Cmd {
 /// Replies from the engine worker thread.
 enum Reply {
     Done { seq: u64, device_s: f64, emitted: Vec<(RequestId, u64)> },
+    Chain(Option<KvChainPayload>),
     Collect(Box<Collected>),
 }
 
@@ -461,6 +607,12 @@ fn worker_loop(mut core: EngineCore, rx: mpsc::Receiver<Cmd>, tx: mpsc::Sender<R
                 }
             }
             Cmd::Finished { req, now_s } => core.finish_request(req, now_s),
+            Cmd::Export { chain } => {
+                if tx.send(Reply::Chain(core.export_chain(&chain))).is_err() {
+                    break;
+                }
+            }
+            Cmd::Import(payload) => core.import_chain(payload),
             Cmd::Collect => {
                 if tx.send(Reply::Collect(Box::new(core.collect()))).is_err() {
                     break;
@@ -517,18 +669,30 @@ pub struct PjrtExecutor {
     /// estimating submitted iterations (worker backend only).
     est_spec: Option<SpecConfig>,
     max_prompt: usize,
+    /// Output-token cap for fleet-admitted requests.
+    max_output: usize,
+    /// Prefix-chain granularity for fleet-admitted requests.
+    block_tokens: u64,
     backend: Backend,
     seq: u64,
     /// Outcome of the most recent inline submit, completed at poll.
     inline_last: Option<(u64, IterationOutcome)>,
     /// Emission counts from the most recently completed iteration.
     emitted: HashMap<RequestId, u64>,
+    /// Requests with a prompt already queued (either a caller-supplied
+    /// one via [`Self::queue_request`] or a fleet-synthesized one via
+    /// [`Executor::admitted`]); admitted never overwrites these.
+    queued: HashSet<RequestId>,
     /// The worker channel broke (thread died); reported at collect.
     worker_lost: bool,
 }
 
 impl PjrtExecutor {
-    fn new(artifacts: &Path, cfg: &ServeConfig) -> Result<PjrtExecutor> {
+    /// Load the AOT artifacts and build the engine (inline at pipeline
+    /// depth 1; on a dedicated worker thread at depth ≥ 2).  Public so
+    /// the fleet runtime can stamp real-engine replicas
+    /// ([`PjrtReplicaFactory`]).
+    pub fn new(artifacts: &Path, cfg: &ServeConfig) -> Result<PjrtExecutor> {
         let core = EngineCore::new(artifacts, cfg)?;
         let dims = core.dims;
         let spec_m = core.spec_m;
@@ -563,16 +727,20 @@ impl PjrtExecutor {
             spec_m,
             est_spec,
             max_prompt,
+            max_output: cfg.max_output_tokens,
+            block_tokens: cfg.prefix_block_tokens.max(1),
             backend,
             seq: 0,
             inline_last: None,
             emitted: HashMap::new(),
+            queued: HashSet::new(),
             worker_lost: false,
         })
     }
 
     /// Admit a not-yet-prefilled request.
     fn queue_request(&mut self, req: RequestId, pend: PendingReq) {
+        self.queued.insert(req);
         match &mut self.backend {
             Backend::Inline(core) => {
                 core.pending.insert(req, pend);
@@ -593,7 +761,8 @@ impl PjrtExecutor {
                 Ok(Reply::Done { seq, device_s, emitted }) => {
                     return Some((seq, device_s, emitted))
                 }
-                Ok(Reply::Collect(_)) => continue, // late reply: nothing waits on it
+                // late replies: nothing waits on them
+                Ok(Reply::Collect(_)) | Ok(Reply::Chain(_)) => continue,
                 Err(_) => return None,
             }
         }
@@ -608,6 +777,7 @@ impl PjrtExecutor {
                 loop {
                     match h.rx.recv() {
                         Ok(Reply::Collect(c)) => return *c,
+                        Ok(Reply::Chain(_)) => continue, // stale export reply
                         Ok(Reply::Done { seq, device_s, emitted }) => {
                             h.done_buf.push_back((seq, device_s, emitted));
                         }
@@ -697,6 +867,72 @@ impl Executor for PjrtExecutor {
         self.emitted.remove(&req).unwrap_or(1).max(1)
     }
 
+    fn admitted(&mut self, req: RequestId, spec: &RequestSpec) {
+        // the serving façade queues real prompts before the orchestrator
+        // starts — never clobber those
+        if !self.queued.insert(req) {
+            return;
+        }
+        // fleet path: synthesize a deterministic prompt for the routed
+        // spec.  The shared prefix is group-deterministic, so requests
+        // of one prefix group genuinely share prompt tokens — and
+        // therefore KV blocks — across replicas.
+        let len = (spec.input_tokens as usize).clamp(1, self.max_prompt.max(1));
+        let shared = (spec.shared_prefix.min(spec.input_tokens) as usize).min(len);
+        let mut prompt = synth_prompt(0x9E3779B9u64 ^ spec.prefix_group, shared);
+        let tail_seed = req.wrapping_mul(0x9E3779B97F4A7C15) ^ spec.input_tokens;
+        prompt.extend(synth_prompt(tail_seed, len - shared));
+        let headroom = 1 + self.spec_m;
+        let max_new = (spec.output_tokens as usize)
+            .min(self.dims.max_seq.saturating_sub(len + headroom))
+            .min(self.max_output)
+            .max(1);
+        let chain = if spec.shared_prefix > 0 {
+            hash_chain(
+                &prefix_tokens(spec.prefix_group, spec.shared_prefix),
+                self.block_tokens as usize,
+            )
+        } else {
+            Vec::new()
+        };
+        let pend = PendingReq { orig_id: req, prompt, max_new, chain };
+        match &mut self.backend {
+            Backend::Inline(core) => {
+                core.pending.insert(req, pend);
+            }
+            Backend::Worker(h) => h.send(Cmd::Queue { req, pend }),
+        }
+    }
+
+    fn export_chain(&mut self, chain: &[u64]) -> Option<KvChainPayload> {
+        match &mut self.backend {
+            Backend::Inline(core) => core.export_chain(chain),
+            Backend::Worker(h) => {
+                h.send(Cmd::Export { chain: chain.to_vec() });
+                loop {
+                    match h.rx.recv() {
+                        Ok(Reply::Chain(p)) => return p,
+                        Ok(Reply::Done { seq, device_s, emitted }) => {
+                            h.done_buf.push_back((seq, device_s, emitted));
+                        }
+                        Ok(Reply::Collect(_)) => continue, // stale: nothing waits on it
+                        Err(_) => {
+                            self.worker_lost = true;
+                            return None;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn import_chain(&mut self, payload: KvChainPayload) {
+        match &mut self.backend {
+            Backend::Inline(core) => core.import_chain(payload),
+            Backend::Worker(h) => h.send(Cmd::Import(payload)),
+        }
+    }
+
     fn kv_transfer_s(&self, _tokens: u64) -> f64 {
         0.0 // single instance: no PD handoff on this backend (yet)
     }
@@ -720,6 +956,128 @@ impl Executor for PjrtExecutor {
             Backend::Inline(core) => core.pages.check_invariants(),
             Backend::Worker(_) => Ok(()),
         }
+    }
+}
+
+/// Orchestrator policy for one PJRT engine replica: single instance,
+/// colocated, whole-prompt prefill (the AOT graphs cannot resume a
+/// partial chunk), physical batch slots capped at the decode bucket.
+/// Shared by the serving façade ([`Server`]) and the fleet factory
+/// ([`PjrtReplicaFactory`]) so both paths run the identical lifecycle
+/// policy.
+fn engine_orchestrator_config(
+    cfg: &ServeConfig,
+    dims: ModelDims,
+    prefix_cache: bool,
+) -> OrchestratorConfig {
+    OrchestratorConfig {
+        n_instances: 1,
+        mode: ServingMode::Colocated,
+        dispatch: DispatchPolicy::SloAware,
+        slo: cfg.slo,
+        batch: BatchConfig {
+            max_decode_seqs: cfg.max_batch,
+            // whole-prompt prefill: the AOT graphs cannot resume a
+            // partial chunk, so never split a prompt across iterations
+            token_budget: u64::MAX,
+            kv_capacity_tokens: (cfg.max_batch * dims.max_seq) as u64,
+            // a prefilled request occupies a physical batch slot
+            max_seqs: cfg.max_batch,
+            ..BatchConfig::default()
+        },
+        monitor_interval_s: 1.0,
+        pipeline_depth: cfg.pipeline_depth.max(1),
+        prefix_cache,
+        prefix_block_tokens: cfg.prefix_block_tokens.max(1),
+        ..OrchestratorConfig::default()
+    }
+}
+
+/// [`ReplicaFactory`] stamping N real PJRT engine replicas for the
+/// shared fleet runtime (`xllm fleet --backend pjrt`): each replica is
+/// a full [`Orchestrator`] over its own [`PjrtExecutor`] — its own
+/// runtime, KV batch, xTensor pages, and (at pipeline depth ≥ 2) its
+/// own engine worker thread.  Construction preflights the artifacts
+/// once, so later builds (including mid-run scale-up spawns) can only
+/// fail on environmental loss of the artifact directory.
+pub struct PjrtReplicaFactory {
+    artifacts: PathBuf,
+    cfg: ServeConfig,
+    /// Engine limits from the preflight probe (largest prefill bucket,
+    /// cache length, verify headroom).
+    max_prompt: usize,
+    max_seq: usize,
+    spec_m: usize,
+    /// The preflight engine, handed out as the first replica so the
+    /// probe's artifact load (and, at depth ≥ 2, its worker thread) is
+    /// not wasted.
+    probe: Option<PjrtExecutor>,
+}
+
+impl PjrtReplicaFactory {
+    /// Validate the artifacts load and return the factory.
+    pub fn new(artifacts: &Path, cfg: ServeConfig) -> Result<PjrtReplicaFactory> {
+        let probe = PjrtExecutor::new(artifacts, &cfg)
+            .with_context(|| format!("loading PJRT artifacts from {}", artifacts.display()))?;
+        Ok(PjrtReplicaFactory {
+            artifacts: artifacts.to_path_buf(),
+            max_prompt: probe.max_prompt,
+            max_seq: probe.dims.max_seq,
+            spec_m: probe.spec_m,
+            probe: Some(probe),
+            cfg,
+        })
+    }
+
+    /// Clamp scenario specs to the engine's AOT limits — prompts to the
+    /// largest prefill bucket, outputs to the cache headroom and the
+    /// configured cap — so the orchestrator's planner (KV accounting,
+    /// chunk sizes) sees the same request shape the engine actually
+    /// runs.  Mirrors the clamping [`Executor::admitted`] applies to
+    /// the synthesized prompt.
+    pub fn clamp_workload(&self, specs: Vec<RequestSpec>) -> Vec<RequestSpec> {
+        let headroom = 1 + self.spec_m;
+        specs
+            .into_iter()
+            .map(|mut s| {
+                s.input_tokens = s.input_tokens.clamp(1, (self.max_prompt as u64).max(1));
+                s.shared_prefix = s.shared_prefix.min(s.input_tokens);
+                let cap = self.max_seq.saturating_sub(s.input_tokens as usize + headroom);
+                s.output_tokens = s
+                    .output_tokens
+                    .min(cap as u64)
+                    .min(self.cfg.max_output_tokens as u64)
+                    .max(1);
+                s
+            })
+            .collect()
+    }
+}
+
+impl ReplicaFactory for PjrtReplicaFactory {
+    type Exec = PjrtExecutor;
+
+    fn build(&mut self, id: usize) -> Orchestrator<PjrtExecutor> {
+        // startup builds fail fast: the preflight already proved the
+        // artifacts load, so a failure here is immediate and fatal
+        self.try_build(id).expect("preflighted PJRT artifacts must load")
+    }
+
+    fn try_build(&mut self, _id: usize) -> Option<Orchestrator<PjrtExecutor>> {
+        let exec = match self.probe.take() {
+            Some(probe) => probe, // first build reuses the preflight engine
+            None => match PjrtExecutor::new(&self.artifacts, &self.cfg) {
+                Ok(exec) => exec,
+                Err(e) => {
+                    // mid-run spawn declined (e.g. the artifacts dir went
+                    // away): the fleet keeps serving at its current size
+                    eprintln!("# pjrt replica spawn declined: {e:#}");
+                    return None;
+                }
+            },
+        };
+        let ocfg = engine_orchestrator_config(&self.cfg, exec.dims, true);
+        Some(Orchestrator::new(ocfg, exec))
     }
 }
 
@@ -817,28 +1175,13 @@ impl Server {
                 .max(1);
             let rid = idx as RequestId;
             specs.push(RequestSpec::text(0.0, prompt.len() as u64, max_new as u64));
-            exec.queue_request(rid, PendingReq { orig_id: req.id, prompt, max_new });
+            exec.queue_request(
+                rid,
+                PendingReq { orig_id: req.id, prompt, max_new, chain: Vec::new() },
+            );
         }
 
-        let ocfg = OrchestratorConfig {
-            n_instances: 1,
-            mode: ServingMode::Colocated,
-            dispatch: DispatchPolicy::SloAware,
-            slo: self.cfg.slo,
-            batch: BatchConfig {
-                max_decode_seqs: self.cfg.max_batch,
-                // whole-prompt prefill: the AOT graphs cannot resume a
-                // partial chunk, so never split a prompt across iterations
-                token_budget: u64::MAX,
-                kv_capacity_tokens: (self.cfg.max_batch * self.dims.max_seq) as u64,
-                // a prefilled request occupies a physical batch slot
-                max_seqs: self.cfg.max_batch,
-                ..BatchConfig::default()
-            },
-            monitor_interval_s: 1.0,
-            pipeline_depth: self.cfg.pipeline_depth.max(1),
-            ..OrchestratorConfig::default()
-        };
+        let ocfg = engine_orchestrator_config(&self.cfg, self.dims, false);
         let orch = Orchestrator::new(ocfg, exec);
         let (res, mut exec) = orch.run(specs);
         let collected = exec.collect();

@@ -28,9 +28,18 @@
 //! replicas (`pipeline_depth ≥ 2`) several replicas hold in-flight
 //! iterations *concurrently* — their pending `IterDone` events overlap
 //! in fleet time — and the same `next_event_time` interleave drives
-//! them without any special casing: the sim stays deterministic, and a
-//! real multi-replica deployment would step each replica on its own
-//! thread against the same ordering contract.
+//! them without any special casing.
+//!
+//! The control plane is also *thread-capable*: the registry and global
+//! index live behind `Arc<RwLock<…>>`, executors are `Send`, and
+//! [`ControlPlaneConfig::threads`] ≥ 2 steps each replica on its own
+//! worker thread between control events — the same `next_event_time`
+//! ordering contract (every replica event strictly before the next
+//! control event runs before it fires), with real parallelism across
+//! replica backends.  Threaded and single-threaded runs agree on
+//! conservation (routed = completed + lost) and on which requests
+//! complete; the single-threaded interleave remains the deterministic
+//! default.
 
 pub mod index;
 pub mod registry;
@@ -43,9 +52,11 @@ pub use router::{FleetRouter, RouteDecision, RoutePolicy, RouterCtx};
 pub use scaler::{FleetScaler, ScaleAction, ScalerConfig};
 
 use std::cmp::Ordering;
+use std::collections::HashSet;
+use std::sync::{Arc, RwLock};
 
 use crate::coordinator::orchestrator::{
-    Executor, InFlightSnapshot, Orchestrator, RunResult, DEFAULT_MAX_EVENTS,
+    Executor, InFlightSnapshot, KvChainPayload, Orchestrator, RunResult, DEFAULT_MAX_EVENTS,
     DEFAULT_PREFIX_BLOCK_TOKENS,
 };
 use crate::metrics::{RequestOutcome, ServingReport};
@@ -69,8 +80,11 @@ enum CtlEv {
     /// stops heartbeating; detection happens via lease expiry.
     Fault(usize),
     /// A planned KV rebalance finished staging: the chain lands on the
-    /// target replica (global index + local cache adoption).
-    RebalanceDone { to: usize, chain: Vec<u64> },
+    /// target replica (global index + local cache adoption).  `payload`
+    /// carries the source executor's exported KV when the backend ships
+    /// real blocks ([`Executor::export_chain`]); `None` keeps the
+    /// movement cost-only (model-priced executors).
+    RebalanceDone { to: usize, chain: Vec<u64>, payload: Option<KvChainPayload> },
 }
 
 /// Control-plane configuration.
@@ -94,6 +108,12 @@ pub struct ControlPlaneConfig {
     /// Elastic fleet scaling + planned KV rebalancing (None = fixed
     /// fleet, the pre-scaler behavior).
     pub scaler: Option<ScalerConfig>,
+    /// Replica stepping threads.  1 (the default) is the deterministic
+    /// single-queue interleave; N ≥ 2 steps the replicas on worker
+    /// threads between control events (see [`ControlPlane::run`]) —
+    /// same `next_event_time` ordering contract, real parallelism
+    /// across replica backends.
+    pub threads: usize,
     /// Cap on control-plane scheduling turns (safety net).
     pub max_events: u64,
 }
@@ -109,6 +129,7 @@ impl Default for ControlPlaneConfig {
             colocation: ColocationConfig::default(),
             xfer: TransferEngine::default(),
             scaler: None,
+            threads: 1,
             max_events: DEFAULT_MAX_EVENTS,
         }
     }
@@ -147,6 +168,10 @@ pub struct ControlCounters {
     /// Hot chains pre-staged onto freshly spawned replicas (scale-up
     /// warm start; distinct from `kv_rebalances`).
     pub warm_starts: u64,
+    /// KV blocks physically shipped between replica executors (payloads
+    /// from [`Executor::export_chain`] landed via `import_chain`).
+    /// Stays 0 for cost-only backends like the roofline executor.
+    pub kv_blocks_shipped: u64,
     /// Total staging + transfer time charged for planned rebalances and
     /// warm starts.
     pub rebalance_staging_s: f64,
@@ -196,8 +221,13 @@ struct Replica<X: Executor> {
 pub struct ControlPlane<X: Executor> {
     cfg: ControlPlaneConfig,
     replicas: Vec<Replica<X>>,
-    registry: InstanceRegistry,
-    index: GlobalPrefixIndex,
+    /// Registry and index are the shared control-plane state proper —
+    /// lock-protected so heartbeat publishes, routing decisions, and
+    /// scaler reads stay consistent while replica stepping runs on
+    /// worker threads (`cfg.threads ≥ 2`).  The single-threaded
+    /// interleave takes the same locks, uncontended.
+    registry: Arc<RwLock<InstanceRegistry>>,
+    index: Arc<RwLock<GlobalPrefixIndex>>,
     router: FleetRouter,
     clock: EventQueue<CtlEv>,
     workload: Vec<RequestSpec>,
@@ -209,8 +239,12 @@ pub struct ControlPlane<X: Executor> {
     /// Elastic-scaling policy (built from `cfg.scaler`).
     scaler: Option<FleetScaler>,
     /// Factory for scale-up replicas (`id -> fresh orchestrator`); without
-    /// one the scaler can still decommission but never spawn.
-    spawner: Option<Box<dyn FnMut(usize) -> Orchestrator<X>>>,
+    /// one the scaler can still decommission but never spawn.  Returning
+    /// `None` declines the spawn (e.g. the backend's artifacts became
+    /// unavailable mid-run) — the fleet keeps serving at its current
+    /// size instead of crashing.  `Send` so the whole control plane
+    /// stays movable across threads.
+    spawner: Option<Box<dyn FnMut(usize) -> Option<Orchestrator<X>> + Send>>,
 }
 
 impl<X: Executor> ControlPlane<X> {
@@ -230,8 +264,8 @@ impl<X: Executor> ControlPlane<X> {
         ControlPlane {
             cfg,
             replicas,
-            registry,
-            index: GlobalPrefixIndex::new(),
+            registry: Arc::new(RwLock::new(registry)),
+            index: Arc::new(RwLock::new(GlobalPrefixIndex::new())),
             router,
             clock: EventQueue::new(),
             workload: Vec::new(),
@@ -247,16 +281,39 @@ impl<X: Executor> ControlPlane<X> {
     /// factory gets the new replica's id and returns an orchestrator that
     /// has NOT been started (the control plane aligns its clock with
     /// fleet time and registers it; it becomes routable after its first
-    /// heartbeat).
+    /// heartbeat), or `None` to decline the spawn — the scale-up is
+    /// skipped and the fleet keeps serving at its current size.
     pub fn with_spawner(
         mut self,
-        f: impl FnMut(usize) -> Orchestrator<X> + 'static,
+        f: impl FnMut(usize) -> Option<Orchestrator<X>> + Send + 'static,
     ) -> ControlPlane<X> {
         self.spawner = Some(Box::new(f));
         self
     }
 
+    /// Shared handle to the lock-protected instance registry.
+    pub fn shared_registry(&self) -> Arc<RwLock<InstanceRegistry>> {
+        Arc::clone(&self.registry)
+    }
+
+    /// Shared handle to the lock-protected global prefix index.
+    pub fn shared_index(&self) -> Arc<RwLock<GlobalPrefixIndex>> {
+        Arc::clone(&self.index)
+    }
+
     /// Serve the workload across the fleet to completion.
+    ///
+    /// With `cfg.threads == 1` (the default) this is the deterministic
+    /// single-queue interleave: always advance whichever head event —
+    /// control queue or a live replica's queue — is earliest.  With
+    /// `cfg.threads ≥ 2` replicas step on worker threads between
+    /// control events under the same ordering contract: every replica
+    /// event strictly before the next control event runs (in parallel,
+    /// replicas are mutually independent between control events), then
+    /// the control event fires against the settled fleet state.  Ties
+    /// break control-first in both modes, so the two agree on
+    /// conservation (routed = completed + lost) and on which requests
+    /// complete; only wall-clock concurrency differs.
     pub fn run(mut self, workload: Vec<RequestSpec>) -> FleetResult {
         for (g, spec) in workload.iter().enumerate() {
             self.clock.schedule_at(spec.arrival_s, CtlEv::Arrive(g));
@@ -265,8 +322,11 @@ impl<X: Executor> ControlPlane<X> {
         for (t, r) in self.cfg.replica_faults.clone() {
             self.clock.schedule_at(t, CtlEv::Fault(r));
         }
-        for r in 0..self.replicas.len() {
-            self.registry.register(r, 0.0);
+        {
+            let mut reg = self.registry.write().expect("registry lock");
+            for r in 0..self.replicas.len() {
+                reg.register(r, 0.0);
+            }
         }
         // initial report sync: registration alone does not grant
         // liveness (a never-heartbeated replica must not be routable),
@@ -275,13 +335,23 @@ impl<X: Executor> ControlPlane<X> {
         self.publish_reports(0.0);
         self.clock.schedule_at(self.cfg.heartbeat_s, CtlEv::Heartbeat);
 
+        let truncated = if self.cfg.threads >= 2 {
+            self.run_threaded()
+        } else {
+            self.run_interleaved()
+        };
+        self.finish(truncated)
+    }
+
+    /// The deterministic default: one global event order across the
+    /// control queue and every replica queue.  Returns `true` when the
+    /// turn cap was hit.
+    fn run_interleaved(&mut self) -> bool {
         let mut turns = 0u64;
-        let mut truncated = false;
         loop {
             turns += 1;
             if turns > self.cfg.max_events {
-                truncated = true;
-                break;
+                return true;
             }
             // advance whichever head event is earliest: the control
             // queue or a live replica's queue (ties: control first,
@@ -299,7 +369,7 @@ impl<X: Executor> ControlPlane<X> {
                     a.0.partial_cmp(&b.0).unwrap_or(Ordering::Equal).then_with(|| a.1.cmp(&b.1))
                 });
             match (tc, tr) {
-                (None, None) => break,
+                (None, None) => return false,
                 (Some(_), None) => self.control_event(),
                 (None, Some((_, i))) => self.step_replica(i),
                 (Some(c), Some((t, i))) => {
@@ -311,7 +381,90 @@ impl<X: Executor> ControlPlane<X> {
                 }
             }
         }
-        self.finish(truncated)
+    }
+
+    /// Threaded stepping: between control events, every live replica
+    /// drains its own queue strictly below the next control-event time
+    /// on a worker thread (replicas only touch replica-local state, so
+    /// the window is race-free by construction; the lock-protected
+    /// registry/index are only written by the control thread).  Returns
+    /// `true` when the turn cap was hit.
+    ///
+    /// Threads are scoped per window rather than pooled: a window's
+    /// workers borrow `&mut` into `self.replicas` directly, which a
+    /// persistent pool cannot do safely.  The spawn/join cost per
+    /// window only matters when replica steps are far cheaper than
+    /// thread creation (tiny sim steps); real engine iterations dwarf
+    /// it, and the deterministic `threads == 1` interleave remains the
+    /// right mode for cheap-step simulation.
+    fn run_threaded(&mut self) -> bool {
+        let threads = self.cfg.threads.max(1);
+        let mut turns = 0u64;
+        loop {
+            // the cap counts processed events like the interleave does:
+            // one per control event plus one per replica event stepped
+            // in the windows (checked per window, not per event)
+            turns += 1;
+            if turns > self.cfg.max_events {
+                return true;
+            }
+            // horizon: replica events at exactly the control time wait
+            // (ties break control-first, same as the interleave)
+            let horizon = self.clock.peek_time();
+            let mut stepped_events = 0u64;
+            {
+                let mut live: Vec<&mut Replica<X>> = self
+                    .replicas
+                    .iter_mut()
+                    .filter(|rep| rep.alive && rep.orch.is_some())
+                    .collect();
+                let chunk = live.len().div_ceil(threads).max(1);
+                std::thread::scope(|s| {
+                    let mut handles = Vec::new();
+                    for group in live.chunks_mut(chunk) {
+                        handles.push(s.spawn(move || {
+                            let mut stepped = 0u64;
+                            for rep in group.iter_mut() {
+                                let orch =
+                                    rep.orch.as_mut().expect("live replica has an orchestrator");
+                                while orch
+                                    .next_event_time()
+                                    .is_some_and(|t| horizon.is_none_or(|h| t < h))
+                                {
+                                    stepped += 1;
+                                    if !orch.step() && orch.truncated() {
+                                        break;
+                                    }
+                                }
+                            }
+                            stepped
+                        }));
+                    }
+                    for h in handles {
+                        stepped_events += h.join().expect("replica stepping thread panicked");
+                    }
+                });
+            }
+            turns = turns.saturating_add(stepped_events);
+            // event-cap wedges fail over on the control thread, exactly
+            // as the interleave does right after the wedging step
+            let wedged: Vec<usize> = self
+                .replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, rep)| rep.alive && rep.orch.as_ref().is_some_and(|o| o.truncated()))
+                .map(|(i, _)| i)
+                .collect();
+            for i in wedged {
+                let now = self.clock.now();
+                self.fail_replica(i, now);
+            }
+            match horizon {
+                Some(_) => self.control_event(),
+                None if stepped_events == 0 => return false,
+                None => {}
+            }
+        }
     }
 
     fn control_event(&mut self) {
@@ -332,13 +485,20 @@ impl<X: Executor> ControlPlane<X> {
                 }
             }
             CtlEv::Heartbeat => self.on_heartbeat(t),
-            CtlEv::RebalanceDone { to, chain } => {
+            CtlEv::RebalanceDone { to, chain, payload } => {
                 // staging finished: the chain is now resident on the
                 // target (skip if it died while the transfer ran)
                 if self.replicas.get(to).map(|r| r.orch.is_some()).unwrap_or(false) {
-                    self.index.record(to, &chain);
+                    self.index.write().expect("index lock").record(to, &chain);
                     if let Some(orch) = self.replicas[to].orch.as_mut() {
                         orch.adopt_chain(&chain);
+                        // real backends land the shipped blocks in the
+                        // target engine core; cost-only backends had no
+                        // payload to ship
+                        if let Some(p) = payload {
+                            self.counters.kv_blocks_shipped += p.blocks.len() as u64;
+                            orch.executor_mut().import_chain(p);
+                        }
                     }
                 }
             }
@@ -370,9 +530,11 @@ impl<X: Executor> ControlPlane<X> {
 
     /// Run the routing policy over the current registry + index state.
     fn decide(&mut self, spec: &RequestSpec) -> Option<RouteDecision> {
+        let registry = self.registry.read().expect("registry lock");
+        let index = self.index.read().expect("index lock");
         let ctx = RouterCtx {
-            registry: &self.registry,
-            index: &self.index,
+            registry: &registry,
+            index: &index,
             cost: &self.cost,
             xfer: &self.cfg.xfer,
             coloc: &self.cfg.colocation,
@@ -406,12 +568,12 @@ impl<X: Executor> ControlPlane<X> {
         let chain = FleetRouter::chain_for(&spec, self.cfg.block_tokens);
         if !chain.is_empty() {
             // optimistic: the target caches this chain on admit
-            self.index.record(d.replica, &chain);
+            self.index.write().expect("index lock").record(d.replica, &chain);
             if let Some(s) = self.scaler.as_mut() {
                 s.note_route(&chain, d.replica);
             }
         }
-        self.registry.note_dispatch(d.replica, spec.input_tokens);
+        self.registry.write().expect("registry lock").note_dispatch(d.replica, spec.input_tokens);
         self.replicas[d.replica]
             .orch
             .as_mut()
@@ -423,6 +585,8 @@ impl<X: Executor> ControlPlane<X> {
     /// heartbeat publish; also run once at t=0 so the starting fleet is
     /// routable before its first tick).
     fn publish_reports(&mut self, now: f64) {
+        let mut registry = self.registry.write().expect("registry lock");
+        let mut index = self.index.write().expect("index lock");
         for r in 0..self.replicas.len() {
             if !self.replicas[r].alive {
                 continue; // crashed or wedged: no lease renewal
@@ -432,15 +596,16 @@ impl<X: Executor> ControlPlane<X> {
             };
             let report = orch.load_report();
             let summary = orch.cache_summary();
-            self.registry.heartbeat(r, report, now);
-            self.index.publish(r, &summary);
+            registry.heartbeat(r, report, now);
+            index.publish(r, &summary);
         }
     }
 
     fn on_heartbeat(&mut self, now: f64) {
         self.counters.heartbeats += 1;
         self.publish_reports(now);
-        for r in self.registry.sweep(now) {
+        let dead = self.registry.write().expect("registry lock").sweep(now);
+        for r in dead {
             if self.replicas[r].orch.is_some() {
                 self.counters.lease_expiries += 1;
                 self.fail_replica(r, now);
@@ -450,7 +615,9 @@ impl<X: Executor> ControlPlane<X> {
         // published, then apply (spawn / decommission / rebalance)
         let mut actions = Vec::new();
         if let Some(s) = self.scaler.as_mut() {
-            actions = s.plan(now, &self.registry, &self.index);
+            let registry = self.registry.read().expect("registry lock");
+            let index = self.index.read().expect("index lock");
+            actions = s.plan(now, &registry, &index);
         }
         for a in actions {
             self.apply_scale_action(a, now);
@@ -500,10 +667,12 @@ impl<X: Executor> ControlPlane<X> {
             return; // no factory: the scaler can only shrink this fleet
         };
         let id = self.replicas.len();
-        let mut orch = spawn(id);
+        let Some(mut orch) = spawn(id) else {
+            return; // factory declined (e.g. backend lost its artifacts)
+        };
         orch.start_at(Vec::new(), now);
         self.replicas.push(Replica { orch: Some(orch), alive: true, result: None });
-        self.registry.register(id, now);
+        self.registry.write().expect("registry lock").register(id, now);
         self.counters.scale_ups += 1;
         // warm start (§3.4 proactive movement): pre-stage the hottest
         // prefix chains onto the spawned replica while it waits for its
@@ -516,7 +685,8 @@ impl<X: Executor> ControlPlane<X> {
             let chains = self.scaler.as_ref().map(|s| s.hottest_chains(k)).unwrap_or_default();
             for chain in chains {
                 // only chains some live replica still holds can ship KV
-                let Some((src, _, _)) = self.index.best_match(&chain) else { continue };
+                let best = self.index.read().expect("index lock").best_match(&chain);
+                let Some((src, _, _)) = best else { continue };
                 self.counters.warm_starts += 1;
                 self.stage_chain(chain, src, id);
             }
@@ -533,20 +703,21 @@ impl<X: Executor> ControlPlane<X> {
             return; // already gone
         };
         self.replicas[r].alive = false;
-        self.registry.deregister(r);
+        self.registry.write().expect("registry lock").deregister(r);
         self.router.forget(r);
         if let Some(s) = self.scaler.as_mut() {
             s.forget_replica(r);
         }
         self.counters.scale_downs += 1;
         let drained = orch.drain_in_flight();
-        let (result, _executor) = orch.finish();
+        let (result, mut executor) = orch.finish();
         self.replicas[r].result = Some(result);
         // the victim's index entries stay visible during re-dispatch so
         // the recompute-vs-migrate decision can see the staging tier of
-        // the still-live source copies
-        self.redispatch_drained(r, drained, now, true);
-        self.index.remove(r);
+        // the still-live source copies — and the drained executor is
+        // kept alive as the KV export source for migrating targets
+        self.redispatch_drained(r, drained, now, Some(&mut executor));
+        self.index.write().expect("index lock").remove(r);
     }
 
     /// Begin a planned hot-prefix migration: charge the staging +
@@ -563,19 +734,26 @@ impl<X: Executor> ControlPlane<X> {
     /// The chain is truncated to the prefix `from` actually holds —
     /// staging the unmatched tail would land (and bill for) KV that
     /// exists nowhere in the fleet, crediting the target with phantom
-    /// prefix hits.
+    /// prefix hits.  When the source backend can ship real blocks
+    /// ([`Executor::export_chain`]), the payload rides the staging event
+    /// and lands in the target's engine core at adoption.
     fn stage_chain(&mut self, mut chain: Vec<u64>, from: usize, to: usize) {
-        let (matched, tier) = self.index.match_prefix(from, &chain);
+        let (matched, tier) = self.index.read().expect("index lock").match_prefix(from, &chain);
         chain.truncate(matched);
         if chain.is_empty() {
             return; // the source no longer holds any of it
         }
+        let payload = self
+            .replicas
+            .get_mut(from)
+            .and_then(|r| r.orch.as_mut())
+            .and_then(|o| o.executor_mut().export_chain(&chain));
         let tier = tier.unwrap_or(Tier::Dram);
         let bytes =
             chain.len() as f64 * self.cfg.block_tokens as f64 * self.cost.model.kv_bytes_per_token();
         let delay = self.cfg.xfer.load_to_hbm_s(tier, bytes) + self.cfg.xfer.migrate_s(bytes);
         self.counters.rebalance_staging_s += delay;
-        self.clock.schedule_in(delay, CtlEv::RebalanceDone { to, chain });
+        self.clock.schedule_in(delay, CtlEv::RebalanceDone { to, chain, payload });
     }
 
     /// A replica is dead: finalize it, then re-dispatch everything it
@@ -587,8 +765,9 @@ impl<X: Executor> ControlPlane<X> {
             return; // already failed over
         };
         self.replicas[r].alive = false;
-        self.registry.deregister(r);
-        self.index.remove(r); // HBM/DRAM copies died with the replica
+        self.registry.write().expect("registry lock").deregister(r);
+        // HBM/DRAM copies died with the replica
+        self.index.write().expect("index lock").remove(r);
         self.router.forget(r);
         if let Some(s) = self.scaler.as_mut() {
             s.forget_replica(r);
@@ -597,7 +776,8 @@ impl<X: Executor> ControlPlane<X> {
         let drained = orch.drain_in_flight();
         let (result, _executor) = orch.finish();
         self.replicas[r].result = Some(result);
-        self.redispatch_drained(r, drained, now, false);
+        // crash: no export source — the KV is gone, survivors recompute
+        self.redispatch_drained(r, drained, now, None);
     }
 
     /// Re-dispatch a drained replica's in-flight work onto the
@@ -607,19 +787,26 @@ impl<X: Executor> ControlPlane<X> {
     /// chose: if THAT replica still holds (part of) the request's
     /// prefix, migration charges the staging + transfer delay up front
     /// and the survivor then serves the prefix from its own cache.  On
-    /// crash failover (`planned = false`) a cache-cold target simply
+    /// crash failover (`source = None`) a cache-cold target simply
     /// recomputes (re-runs prefill on admit) with no phantom delay — so
     /// round-robin failover is never billed for KV it cannot reuse.  On
-    /// a planned drain (`planned = true`) the source is still alive, so
+    /// a planned drain (`source = Some`) the source is still alive, so
     /// a cold target can additionally weigh staging the KV from the
-    /// source's surviving copy against recomputing.
+    /// source's surviving copy against recomputing — and when the
+    /// backend ships real blocks, they are exported from the drained
+    /// source executor before it is dropped.
     fn redispatch_drained(
         &mut self,
         victim: usize,
         drained: Vec<InFlightSnapshot>,
         now: f64,
-        planned: bool,
+        mut source: Option<&mut X>,
     ) {
+        let planned = source.is_some();
+        // one physical export per (chain, target): drained requests
+        // sharing a hot prefix would otherwise queue N identical block
+        // copies; later events still adopt the chain logically
+        let mut shipped: HashSet<(u64, usize)> = HashSet::new();
         for snap in drained {
             self.counters.redispatched_requests += 1;
             self.counters.redispatched_tokens += snap.context_tokens;
@@ -630,16 +817,20 @@ impl<X: Executor> ControlPlane<X> {
             let mut earliest = now;
             if snap.context_tokens > 0 {
                 let chain = FleetRouter::chain_for(&snap.spec, self.cfg.block_tokens);
-                let (matched, tier) = self.index.match_prefix(d.replica, &chain);
+                let index = self.index.read().expect("index lock");
+                let (matched, tier) = index.match_prefix(d.replica, &chain);
                 let replica_tier = if matched > 0 {
                     tier
                 } else if planned {
                     // graceful drain: the source still holds the KV
-                    // (worst case a DRAM copy) and can ship it
-                    self.index.match_prefix(victim, &chain).1.or(Some(Tier::Dram))
+                    // (worst case a DRAM copy) and can ship it — on a
+                    // crash the victim's index entries are already gone,
+                    // so this lookup only runs on the planned path
+                    index.match_prefix(victim, &chain).1.or(Some(Tier::Dram))
                 } else {
                     None
                 };
+                drop(index);
                 let interrupted = InterruptedRequest {
                     request: 0, // fleet-level: per-request ids stay replica-local
                     context_tokens: snap.context_tokens,
@@ -656,8 +847,15 @@ impl<X: Executor> ControlPlane<X> {
                         // planned rebalancing), so the request does not
                         // pay the transfer delay AND a from-scratch
                         // prefill of the shared prefix
-                        self.clock
-                            .schedule_in(delay, CtlEv::RebalanceDone { to: d.replica, chain });
+                        let payload = chain
+                            .last()
+                            .map(|&h| (h, d.replica))
+                            .filter(|&key| shipped.insert(key))
+                            .and_then(|_| source.as_mut().and_then(|x| x.export_chain(&chain)));
+                        self.clock.schedule_in(
+                            delay,
+                            CtlEv::RebalanceDone { to: d.replica, chain, payload },
+                        );
                     }
                 }
             }
@@ -840,7 +1038,7 @@ mod tests {
             (0..16).map(|i| RequestSpec::text(i as f64 * 0.2, 2048, 32)).collect();
         w.push(RequestSpec::text(14.0, 64, 4));
         let n = w.len();
-        let res = ControlPlane::new(cfg, vec![mk()]).with_spawner(move |_| mk()).run(w);
+        let res = ControlPlane::new(cfg, vec![mk()]).with_spawner(move |_| Some(mk())).run(w);
         assert!(res.all_accounted());
         assert_eq!(
             res.report.n_completed(),
@@ -901,7 +1099,7 @@ mod tests {
             })
             .collect();
         let n = w.len();
-        let res = ControlPlane::new(cfg, vec![mk()]).with_spawner(move |_| mk()).run(w);
+        let res = ControlPlane::new(cfg, vec![mk()]).with_spawner(move |_| Some(mk())).run(w);
         assert!(res.all_accounted());
         assert_eq!(res.report.n_completed(), n, "warm start must lose nothing: {:?}", res.counters);
         assert!(res.counters.scale_ups >= 1, "burst must grow the fleet: {:?}", res.counters);
@@ -968,5 +1166,68 @@ mod tests {
         let i1: Vec<u64> = r1.per_replica.iter().map(|r| r.iterations).collect();
         let i2: Vec<u64> = r2.per_replica.iter().map(|r| r.iterations).collect();
         assert_eq!(i1, i2);
+    }
+
+    #[test]
+    fn threaded_stepping_matches_the_interleave() {
+        // replicas are mutually independent between control events, so
+        // the threaded window (all replica events strictly before the
+        // next control event, control-first on ties) must agree with
+        // the single-queue interleave on conservation and completions
+        let workload: Vec<RequestSpec> = (0..14)
+            .map(|i| {
+                let mut s = RequestSpec::text(i as f64 * 0.07, 512, 24);
+                s.prefix_group = 1 + (i % 3);
+                s.shared_prefix = 256;
+                s
+            })
+            .collect();
+        let single = ControlPlane::new(ControlPlaneConfig::default(), fleet(3))
+            .run(workload.clone());
+        let cfg = ControlPlaneConfig { threads: 2, ..Default::default() };
+        let threaded = ControlPlane::new(cfg, fleet(3)).run(workload);
+        assert_eq!(threaded.submitted, single.submitted);
+        assert!(single.all_accounted() && threaded.all_accounted());
+        assert_eq!(threaded.report.n_completed(), single.report.n_completed());
+        assert_eq!(threaded.counters.unroutable, single.counters.unroutable);
+        assert_eq!(threaded.counters.routed_by_cache_hit, single.counters.routed_by_cache_hit);
+        assert_eq!(threaded.prefix_hits(), single.prefix_hits());
+        let i1: Vec<u64> = single.per_replica.iter().map(|r| r.iterations).collect();
+        let i2: Vec<u64> = threaded.per_replica.iter().map(|r| r.iterations).collect();
+        assert_eq!(i1, i2, "per-replica work must be identical across modes");
+    }
+
+    #[test]
+    fn threaded_stepping_survives_a_replica_crash() {
+        let workload: Vec<RequestSpec> =
+            (0..10).map(|i| RequestSpec::text(i as f64 * 0.05, 256, 400)).collect();
+        let n = workload.len();
+        let cfg = ControlPlaneConfig {
+            replica_faults: vec![(1.0, 0)],
+            threads: 3,
+            ..Default::default()
+        };
+        let res = ControlPlane::new(cfg, fleet(2)).run(workload);
+        assert!(res.all_accounted(), "{} recorded != {n}", res.report.n_requests());
+        assert_eq!(res.report.n_completed(), n, "survivors must finish everything");
+        assert_eq!(res.counters.failovers, 1);
+    }
+
+    #[test]
+    fn control_plane_state_is_thread_capable() {
+        // compile-time capability pins: executors (and therefore
+        // orchestrators and the whole control plane) cross threads, and
+        // the shared registry/index handles are lock-protected
+        fn assert_send<T: Send>() {}
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send::<Orchestrator<FixedCost>>();
+        assert_send::<ControlPlane<FixedCost>>();
+        assert_send_sync::<Arc<RwLock<InstanceRegistry>>>();
+        assert_send_sync::<Arc<RwLock<GlobalPrefixIndex>>>();
+        let cp = ControlPlane::new(ControlPlaneConfig::default(), fleet(1));
+        let reg = cp.shared_registry();
+        let ix = cp.shared_index();
+        assert_eq!(reg.read().expect("registry lock").alive(), Vec::<usize>::new());
+        assert_eq!(ix.read().expect("index lock").blocks(0), 0);
     }
 }

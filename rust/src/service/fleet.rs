@@ -1,0 +1,139 @@
+//! Executor-agnostic fleet runtime: the factory seam between the
+//! control plane and *how replicas are built*.
+//!
+//! The [`ControlPlane`] is generic over the executor but still needs a
+//! way to stamp replicas — both the initial fleet and the scale-up
+//! spawns.  [`ReplicaFactory`] is that seam: a factory builds one
+//! not-yet-started [`Orchestrator`] per replica id, and
+//! [`run_fleet_with`] wires N of them (plus the factory itself, as the
+//! scaler's spawner) into a control plane and serves the workload.
+//!
+//! Instantiations:
+//!
+//! * `sim::fleet::run_fleet` — roofline replicas stamped from a
+//!   `ClusterConfig` template (the discrete-event fleet simulation).
+//! * `server::PjrtReplicaFactory` — N real `PjrtExecutor` replicas over
+//!   the AOT PJRT artifacts (`xllm fleet --backend pjrt`): the same
+//!   registry/index/router/scaler drive real engines, and with
+//!   [`ControlPlaneConfig::threads`] ≥ 2 each replica's engine steps on
+//!   its own worker thread.
+//!
+//! Factories are `Send + 'static` because the control plane keeps the
+//! factory as its scale-up spawner and the whole control plane must
+//! stay movable across threads.
+
+use crate::coordinator::orchestrator::{Executor, Orchestrator};
+use crate::service::controlplane::{ControlPlane, ControlPlaneConfig, FleetResult};
+use crate::workload::RequestSpec;
+
+/// Builds fleet replicas: one orchestrator (over a fresh executor) per
+/// replica id.  The returned orchestrator must NOT be started — the
+/// control plane aligns its clock with fleet time and registers it.
+pub trait ReplicaFactory: Send {
+    type Exec: Executor;
+
+    /// Build replica `id`.  Ids are assigned densely by the control
+    /// plane: `0..n_replicas` at startup, then one per scale-up.
+    fn build(&mut self, id: usize) -> Orchestrator<Self::Exec>;
+
+    /// Fallible build for mid-run scale-up spawns: `None` declines the
+    /// spawn and the fleet keeps serving at its current size (a startup
+    /// build may fail fast; a mid-run crash would lose every in-flight
+    /// request on the healthy replicas).  Default: infallible
+    /// [`Self::build`].
+    fn try_build(&mut self, id: usize) -> Option<Orchestrator<Self::Exec>> {
+        Some(self.build(id))
+    }
+}
+
+/// Build `n_replicas` replicas with `factory`, install the factory as
+/// the scale-up spawner, and serve `workload` across the fleet.  This
+/// is the one fleet entry point every backend shares; policy (routing,
+/// leases, scaler, threads) comes in through `cfg`.
+pub fn run_fleet_with<F>(
+    cfg: ControlPlaneConfig,
+    n_replicas: usize,
+    mut factory: F,
+    workload: Vec<RequestSpec>,
+) -> FleetResult
+where
+    F: ReplicaFactory + 'static,
+{
+    let replicas: Vec<Orchestrator<F::Exec>> =
+        (0..n_replicas).map(|i| factory.build(i)).collect();
+    ControlPlane::new(cfg, replicas).with_spawner(move |i| factory.try_build(i)).run(workload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::orchestrator::OrchestratorConfig;
+    use crate::service::controlplane::ScalerConfig;
+    use crate::testutil::FixedCostExecutor as FixedCost;
+
+    struct FixedFactory {
+        step_s: f64,
+    }
+
+    impl ReplicaFactory for FixedFactory {
+        type Exec = FixedCost;
+
+        fn build(&mut self, _id: usize) -> Orchestrator<FixedCost> {
+            let cfg = OrchestratorConfig {
+                n_instances: 1,
+                prefix_cache: true,
+                ..Default::default()
+            };
+            Orchestrator::new(cfg, FixedCost::new(self.step_s))
+        }
+    }
+
+    #[test]
+    fn factory_builds_the_initial_fleet_and_serves() {
+        let workload: Vec<RequestSpec> =
+            (0..12).map(|i| RequestSpec::text(i as f64 * 0.05, 256, 16)).collect();
+        let n = workload.len();
+        let res = run_fleet_with(
+            ControlPlaneConfig::default(),
+            3,
+            FixedFactory { step_s: 0.01 },
+            workload,
+        );
+        assert!(res.all_accounted());
+        assert_eq!(res.report.n_completed(), n);
+        assert_eq!(res.per_replica.len(), 3, "factory stamped the initial fleet");
+    }
+
+    #[test]
+    fn factory_doubles_as_the_scale_up_spawner() {
+        let cfg = ControlPlaneConfig {
+            scaler: Some(ScalerConfig {
+                capacity_target_tokens: 512,
+                min_replicas: 1,
+                max_replicas: 3,
+                cooldown_s: 0.3,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let w: Vec<RequestSpec> =
+            (0..16).map(|i| RequestSpec::text(i as f64 * 0.2, 2048, 32)).collect();
+        let n = w.len();
+        let res = run_fleet_with(cfg, 1, FixedFactory { step_s: 0.05 }, w);
+        assert_eq!(res.report.n_completed(), n);
+        assert!(res.counters.scale_ups >= 1, "burst must grow the fleet: {:?}", res.counters);
+        assert!(res.per_replica.len() > 1, "the factory spawned mid-run replicas");
+    }
+
+    #[test]
+    fn threaded_runtime_serves_through_the_same_factory() {
+        let workload: Vec<RequestSpec> =
+            (0..12).map(|i| RequestSpec::text(i as f64 * 0.05, 256, 16)).collect();
+        let n = workload.len();
+        let cfg = ControlPlaneConfig { threads: 2, ..Default::default() };
+        let res = run_fleet_with(cfg, 3, FixedFactory { step_s: 0.01 }, workload);
+        assert!(res.all_accounted());
+        assert_eq!(res.report.n_completed(), n, "zero lost requests in threaded mode");
+        assert_eq!(res.counters.unroutable, 0);
+    }
+}

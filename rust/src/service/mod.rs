@@ -11,11 +11,16 @@
 //!   above across N orchestrator replicas: instance registry with
 //!   heartbeat leases, global prefix-cache index, cache-aware routing,
 //!   and lease-expiry failover with re-dispatch (§3.4–§3.5).
+//! * [`fleet`]        — the executor-agnostic fleet runtime: the
+//!   [`fleet::ReplicaFactory`] seam builds N replicas (roofline or real
+//!   PJRT) behind one control plane, single-threaded or with
+//!   per-replica stepping threads.
 
 pub mod colocation;
 pub mod controlplane;
 pub mod epd;
 pub mod fault;
+pub mod fleet;
 pub mod kvstore;
 pub mod meta;
 
@@ -26,5 +31,6 @@ pub use controlplane::{
 };
 pub use epd::{EpdProfile, EpdStrategy};
 pub use fault::{FailureDetector, RecoveryAction};
+pub use fleet::{run_fleet_with, ReplicaFactory};
 pub use kvstore::{hash_chain, prefix_tokens, Tier, TieredCache, TransferEngine};
 pub use meta::{MetaEvent, MetaStore};

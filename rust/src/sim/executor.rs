@@ -162,6 +162,19 @@ mod tests {
     }
 
     #[test]
+    fn default_kv_hooks_are_cost_only() {
+        use crate::coordinator::orchestrator::KvChainPayload;
+        // the roofline backend ships no real blocks: movement stays a
+        // pure `TransferEngine` cost at the control plane, so golden
+        // fixtures are untouched by the export/import seam
+        let mut e = exec(None);
+        assert!(e.export_chain(&[1, 2, 3]).is_none());
+        e.import_chain(KvChainPayload::default()); // no-op by contract
+        e.admitted(0, &crate::workload::RequestSpec::text(0.0, 64, 4)); // no-op
+        assert_eq!(e.begin_iteration(0, 0.0, &IterationWork::default()), 0.0);
+    }
+
+    #[test]
     fn plain_decode_emits_one_token() {
         let mut e = exec(None);
         for _ in 0..10 {

@@ -4,16 +4,18 @@
 //! [`FleetConfig`] stamps `n_replicas` copies of a [`ClusterConfig`]
 //! template (each replica is a full orchestrator over its own
 //! [`RooflineExecutor`], with `template.n_instances` engine instances)
-//! and wires them into a [`ControlPlane`] — the first configuration in
-//! the repo where traffic is served across more than one engine.  This
-//! is the fleet-scope analogue of `sim::cluster::run`: paper-shaped
+//! and runs them through the shared executor-agnostic fleet runtime
+//! ([`crate::service::fleet::run_fleet_with`]).  This is the roofline
+//! instantiation of the [`ReplicaFactory`] seam — the real-engine
+//! instantiation is `server::PjrtReplicaFactory` (`xllm fleet
+//! --backend pjrt`); both drive the exact same
+//! registry/index/router/scaler control plane.  Paper-shaped
 //! experiments (cache-aware vs round-robin routing, replica failure
 //! mid-run) are configurations of this driver plus a scenario from
 //! `workload::scenarios` (e.g. `skewed-prefix`).
 
-use crate::service::controlplane::{
-    ControlPlane, ControlPlaneConfig, FleetResult, RoutePolicy, ScalerConfig,
-};
+use crate::service::controlplane::{ControlPlaneConfig, FleetResult};
+use crate::service::fleet::{run_fleet_with, ReplicaFactory};
 use crate::sim::cluster::ClusterConfig;
 use crate::sim::executor::RooflineExecutor;
 use crate::sim::roofline::CostModel;
@@ -21,8 +23,14 @@ use crate::workload::RequestSpec;
 
 pub use crate::coordinator::orchestrator::Orchestrator;
 
-/// Fleet configuration: a per-replica cluster template + control-plane
-/// policy.
+/// Fleet configuration: a per-replica cluster template + the embedded
+/// control-plane policy.
+///
+/// The policy is a whole [`ControlPlaneConfig`] rather than a copied
+/// subset, so every control-plane knob (routing, leases, faults,
+/// scaler, stepping threads — and any future ones) flows to the fleet
+/// path automatically; only the template-derived fields
+/// (`block_tokens`, `colocation`) are stamped over it at run time.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
     /// Per-replica cluster (hardware, model, features, serving mode,
@@ -30,73 +38,60 @@ pub struct FleetConfig {
     pub template: ClusterConfig,
     /// Replicas at start (the autoscaler may grow/shrink from here).
     pub n_replicas: usize,
-    pub routing: RoutePolicy,
-    pub heartbeat_s: f64,
-    pub lease_ttl_s: f64,
-    /// Whole-replica crash injections: (time, replica).
-    pub replica_faults: Vec<(f64, usize)>,
-    /// Elastic autoscaling + planned KV rebalancing (None = fixed fleet).
-    pub scaler: Option<ScalerConfig>,
+    /// Control-plane policy (routing, heartbeat/lease timing, replica
+    /// faults, elastic scaler, stepping threads, …).
+    pub control: ControlPlaneConfig,
 }
 
 impl FleetConfig {
     pub fn new(template: ClusterConfig, n_replicas: usize) -> FleetConfig {
-        // policy defaults come from the control plane, not re-hardcoded
-        let d = ControlPlaneConfig::default();
-        FleetConfig {
-            template,
-            n_replicas,
-            routing: d.routing,
-            heartbeat_s: d.heartbeat_s,
-            lease_ttl_s: d.lease_ttl_s,
-            replica_faults: Vec::new(),
-            scaler: d.scaler,
-        }
+        FleetConfig { template, n_replicas, control: ControlPlaneConfig::default() }
     }
 
+    /// The embedded policy with the template-derived fields stamped in
+    /// (prefix-chain granularity and co-location thresholds must match
+    /// the replicas' own configuration).
     fn control_plane_config(&self) -> ControlPlaneConfig {
         ControlPlaneConfig {
-            routing: self.routing,
-            heartbeat_s: self.heartbeat_s,
-            lease_ttl_s: self.lease_ttl_s,
-            replica_faults: self.replica_faults.clone(),
             block_tokens: self.template.orchestrator_config().prefix_block_tokens,
             colocation: self
                 .template
                 .colocation
                 .map(|(_, c)| c)
                 .unwrap_or_default(),
-            scaler: self.scaler,
-            ..ControlPlaneConfig::default()
+            ..self.control.clone()
         }
     }
 }
 
-/// Stamp one replica from the template (also the scale-up factory: the
+/// Stamps one roofline replica per id from the cluster template (the
 /// per-replica seed offset keeps speculative draws independent even for
 /// replicas spawned mid-run).  The template's `pipeline_depth` and
 /// `host_overhead_s` carry through, so a fleet of async-pipelined
 /// replicas keeps one in-flight iteration per instance per replica —
 /// the control plane interleaves their concurrently pending completion
 /// events deterministically by `next_event_time`.
-fn stamp_replica(template: &ClusterConfig, i: usize) -> Orchestrator<RooflineExecutor> {
-    let cost =
-        CostModel::new(template.hw.clone(), template.model.clone(), template.features.clone());
-    let executor =
-        RooflineExecutor::new(cost, template.spec, template.seed.wrapping_add(i as u64))
-            .with_host_overhead(template.host_overhead_s);
-    Orchestrator::new(template.orchestrator_config(), executor)
+pub struct RooflineReplicaFactory {
+    pub template: ClusterConfig,
+}
+
+impl ReplicaFactory for RooflineReplicaFactory {
+    type Exec = RooflineExecutor;
+
+    fn build(&mut self, id: usize) -> Orchestrator<RooflineExecutor> {
+        let t = &self.template;
+        let cost = CostModel::new(t.hw.clone(), t.model.clone(), t.features.clone());
+        let executor = RooflineExecutor::new(cost, t.spec, t.seed.wrapping_add(id as u64))
+            .with_host_overhead(t.host_overhead_s);
+        Orchestrator::new(t.orchestrator_config(), executor)
+    }
 }
 
 /// Build the replicas and run the workload through the control plane.
 pub fn run_fleet(cfg: FleetConfig, workload: Vec<RequestSpec>) -> FleetResult {
-    let replicas: Vec<Orchestrator<RooflineExecutor>> =
-        (0..cfg.n_replicas).map(|i| stamp_replica(&cfg.template, i)).collect();
     let cp_cfg = cfg.control_plane_config();
-    let template = cfg.template;
-    ControlPlane::new(cp_cfg, replicas)
-        .with_spawner(move |i| stamp_replica(&template, i))
-        .run(workload)
+    let factory = RooflineReplicaFactory { template: cfg.template };
+    run_fleet_with(cp_cfg, cfg.n_replicas, factory, workload)
 }
 
 #[cfg(test)]
@@ -152,5 +147,20 @@ mod tests {
             "mixed load must trigger the cross-replica tide rule: {:?}",
             res.counters
         );
+    }
+
+    #[test]
+    fn threaded_fleet_matches_single_threaded_conservation() {
+        let mut rng = Rng::new(33);
+        let w = scenario("skewed-prefix").unwrap().generate(15.0, 2.0, &mut rng);
+        let n = w.len();
+        let single = run_fleet(FleetConfig::new(template(1), 3), w.clone());
+        let mut cfg = FleetConfig::new(template(1), 3);
+        cfg.control.threads = 2;
+        let threaded = run_fleet(cfg, w);
+        assert_eq!(single.report.n_completed(), n);
+        assert_eq!(threaded.report.n_completed(), n);
+        assert_eq!(threaded.counters.unroutable, single.counters.unroutable);
+        assert_eq!(threaded.prefix_hits(), single.prefix_hits());
     }
 }

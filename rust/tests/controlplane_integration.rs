@@ -39,9 +39,9 @@ fn cache_aware_routing_beats_round_robin_on_prefix_hits() {
     assert!(n > 40, "need a meaningful sample, got {n}");
 
     let mut aware = FleetConfig::new(template(), 4);
-    aware.routing = RoutePolicy::CacheAware;
+    aware.control.routing = RoutePolicy::CacheAware;
     let mut rr = FleetConfig::new(template(), 4);
-    rr.routing = RoutePolicy::RoundRobin;
+    rr.control.routing = RoutePolicy::RoundRobin;
 
     let res_aware = run_fleet(aware, w.clone());
     let res_rr = run_fleet(rr, w);
@@ -68,7 +68,7 @@ fn replica_failure_mid_run_loses_no_requests() {
     let n = w.len();
 
     let mut cfg = FleetConfig::new(template(), 3);
-    cfg.replica_faults = vec![(10.0, 1)];
+    cfg.control.replica_faults = vec![(10.0, 1)];
     let res = run_fleet(cfg, w);
 
     assert!(res.all_accounted(), "{} of {n} accounted", res.report.n_requests());
@@ -107,7 +107,7 @@ fn tide_autoscaling_beats_the_fixed_fleet_it_started_as() {
     // fixed fleet: the size the autoscaled fleet starts at
     let fixed = FleetConfig::new(template(), 1);
     let mut elastic = FleetConfig::new(template(), 1);
-    elastic.scaler = Some(ScalerConfig {
+    elastic.control.scaler = Some(ScalerConfig {
         capacity_target_tokens: 4096,
         min_replicas: 1,
         max_replicas: 6,
@@ -166,7 +166,7 @@ fn skewed_prefix_planned_rebalance_fires_and_keeps_hits() {
     // the scaler from autoscaling
     let baseline = FleetConfig::new(template(), 3);
     let mut rebal = FleetConfig::new(template(), 3);
-    rebal.scaler = Some(ScalerConfig {
+    rebal.control.scaler = Some(ScalerConfig {
         min_replicas: 3,
         max_replicas: 3,
         capacity_target_tokens: u64::MAX / 4,
@@ -193,6 +193,74 @@ fn skewed_prefix_planned_rebalance_fires_and_keeps_hits() {
         res_rebal.prefix_hits(),
         res_base.prefix_hits()
     );
+}
+
+/// Sorted, comparable key set of every completed request in a report
+/// (arrival + shape identify a request across runs; f64 via to_bits for
+/// exact equality).
+fn completed_set(res: &xllm::service::controlplane::FleetResult) -> Vec<(u64, u64, u64)> {
+    let mut v: Vec<(u64, u64, u64)> = res
+        .report
+        .outcomes
+        .iter()
+        .filter(|o| !o.failed)
+        .map(|o| (o.arrival_s.to_bits(), o.input_tokens, o.output_tokens))
+        .collect();
+    v.sort_unstable();
+    v
+}
+
+/// ISSUE 5: threaded stepping (each replica's queue drained on a worker
+/// thread between control events) must agree with the deterministic
+/// single-queue interleave on conservation counters — routed =
+/// completed + lost, zero lost here — and on the completed-request set.
+/// Per-event wall timing may differ; the virtual-time outcome may not.
+fn assert_threaded_matches(scenario_name: &str, seed: u64, horizon: f64, rate: f64) {
+    let mut rng = Rng::new(seed);
+    let w = scenario(scenario_name).unwrap().generate(horizon, rate, &mut rng);
+    let n = w.len();
+    let single = run_fleet(FleetConfig::new(template(), 3), w.clone());
+    let mut cfg = FleetConfig::new(template(), 3);
+    cfg.control.threads = 2;
+    let threaded = run_fleet(cfg, w);
+    // conservation: everything routed is completed or lost, nothing lost
+    assert!(single.all_accounted() && threaded.all_accounted());
+    assert_eq!(single.report.n_completed(), n, "{scenario_name}: single lost requests");
+    assert_eq!(threaded.report.n_completed(), n, "{scenario_name}: threaded lost requests");
+    assert_eq!(threaded.counters.unroutable, 0);
+    assert_eq!(threaded.counters.unroutable, single.counters.unroutable);
+    assert_eq!(
+        completed_set(&threaded),
+        completed_set(&single),
+        "{scenario_name}: completed-request sets diverged across stepping modes"
+    );
+}
+
+#[test]
+fn threaded_fleet_matches_single_threaded_on_tide() {
+    assert_threaded_matches("tide", 0x7117EAD, 30.0, 4.0);
+}
+
+#[test]
+fn threaded_fleet_matches_single_threaded_on_skewed_prefix() {
+    assert_threaded_matches("skewed-prefix", 0x5EED2, 30.0, 2.5);
+}
+
+#[test]
+fn fleet_types_are_send() {
+    // compile-time pin: replicas (and the whole control plane) must be
+    // movable onto stepping threads, and the registry/index handles
+    // must be shareable across them
+    use std::sync::{Arc, RwLock};
+    use xllm::coordinator::orchestrator::Orchestrator;
+    use xllm::service::controlplane::{ControlPlane, GlobalPrefixIndex, InstanceRegistry};
+    use xllm::sim::executor::RooflineExecutor;
+    fn assert_send<T: Send>() {}
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send::<Orchestrator<RooflineExecutor>>();
+    assert_send::<ControlPlane<RooflineExecutor>>();
+    assert_send_sync::<Arc<RwLock<InstanceRegistry>>>();
+    assert_send_sync::<Arc<RwLock<GlobalPrefixIndex>>>();
 }
 
 #[test]

@@ -74,8 +74,8 @@ fn failover_case() -> String {
     let mut rng = Rng::new(0xF1EE7);
     let w = scenario("skewed-prefix").unwrap().generate(25.0, 2.5, &mut rng);
     let mut cfg = FleetConfig::new(template(), 3);
-    cfg.routing = RoutePolicy::CacheAware;
-    cfg.replica_faults = vec![(8.0, 1)];
+    cfg.control.routing = RoutePolicy::CacheAware;
+    cfg.control.replica_faults = vec![(8.0, 1)];
     counters_line("failover", &run_fleet(cfg, w))
 }
 
@@ -83,7 +83,7 @@ fn autoscale_case() -> String {
     let mut rng = Rng::new(0x71DA1);
     let w = scenario("tide").unwrap().generate(40.0, 5.0, &mut rng);
     let mut cfg = FleetConfig::new(template(), 1);
-    cfg.scaler = Some(ScalerConfig {
+    cfg.control.scaler = Some(ScalerConfig {
         capacity_target_tokens: 4096,
         min_replicas: 1,
         max_replicas: 4,

@@ -107,3 +107,51 @@ fn rejects_non_bucket_batch() {
     let cfg = ServeConfig { max_batch: 3, ..ServeConfig::default() };
     assert!(Server::new(dir, cfg).is_err(), "batch=3 is not an AOT bucket");
 }
+
+#[test]
+fn fleet_kv_chain_blocks_move_between_engines() {
+    // ISSUE 5: real cross-replica KV movement at the executor seam —
+    // a prefill with a shared prefix stashes its blocks, export ships
+    // them, and a second engine core serves them back after import.
+    let Some(dir) = artifacts_dir() else { return };
+    use xllm::coordinator::orchestrator::{Executor, IterationWork, PrefillWork};
+    use xllm::server::PjrtExecutor;
+    use xllm::service::kvstore::{hash_chain, prefix_tokens};
+    use xllm::workload::RequestSpec;
+
+    let bt = 4u64; // tiny blocks so the tiny model's prompts cover them
+    let cfg = ServeConfig {
+        max_batch: 1,
+        max_output_tokens: 2,
+        prefix_block_tokens: bt,
+        ..ServeConfig::default()
+    };
+    let mut spec = RequestSpec::text(0.0, 12, 2);
+    spec.prefix_group = 5;
+    spec.shared_prefix = 8; // two full blocks
+    let chain = hash_chain(&prefix_tokens(spec.prefix_group, spec.shared_prefix), bt as usize);
+    assert_eq!(chain.len(), 2);
+
+    let mut src = PjrtExecutor::new(dir, &cfg).unwrap();
+    assert!(src.export_chain(&chain).is_none(), "nothing stashed before any prefill");
+    // fleet-style admission synthesizes the prompt; one prefill
+    // iteration stashes the shared-prefix blocks
+    src.admitted(0, &spec);
+    let work = IterationWork {
+        prefills: vec![PrefillWork { req: 0, tokens: spec.input_tokens, context_tokens: 0 }],
+        ..Default::default()
+    };
+    let ticket = src.submit_iteration(0, 0.0, &work);
+    let _ = src.poll_complete(ticket);
+    let payload = src.export_chain(&chain).expect("prefilled prefix must be exportable");
+    assert_eq!(payload.blocks.len(), 2, "both fully-covered blocks ship");
+    assert!(payload.bytes() > 0);
+
+    // the payload lands in a second engine core and is re-exportable
+    // from there — the blocks physically moved between engines
+    let mut dst = PjrtExecutor::new(dir, &cfg).unwrap();
+    assert!(dst.export_chain(&chain).is_none());
+    dst.import_chain(payload.clone());
+    let back = dst.export_chain(&chain).expect("imported blocks must be resident");
+    assert_eq!(back.blocks, payload.blocks, "blocks survive the hop bit-exactly");
+}
