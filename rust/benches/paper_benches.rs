@@ -10,18 +10,20 @@
 
 use std::time::Instant;
 
+use xllm::coordinator::orchestrator::{ColocationMode, ServingMode};
 use xllm::coordinator::DispatchPolicy;
 use xllm::engine::dpbalance;
 use xllm::engine::genrec::BeamSearcher;
 use xllm::engine::pipeline::{simulate_dual_stream, simulate_single_stream};
 use xllm::engine::specdecode::{expected_tokens_per_round, verify_cost_multiplier, SpecConfig};
+use xllm::engine::EnginePolicies;
 use xllm::metrics::Slo;
 use xllm::model::{ascend_910b, ascend_910c, catalog, HardwareSpec, ModelSpec};
 use xllm::service::colocation::ColocationConfig;
 use xllm::service::epd::EpdStrategy;
-use xllm::coordinator::orchestrator::{ColocationMode, ServingMode};
 use xllm::sim::cluster::{run as sim_run, ClusterConfig};
 use xllm::sim::{CostModel, EngineFeatures, GraphMode};
+use xllm::util::json::Json;
 use xllm::util::Rng;
 use xllm::workload::scenario;
 
@@ -88,6 +90,9 @@ fn main() {
     }
     if want("perf") {
         bench_perf();
+    }
+    if want("perfjson") {
+        bench_perfjson();
     }
     println!("\n# total bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
 }
@@ -1161,4 +1166,86 @@ fn bench_perf() {
             dt / n as f64 * 1e3
         );
     }
+}
+
+// ---------------------------------------------------------------------
+// perfjson: the BENCH_*.json perf trajectory — per-policy engine deltas
+// on an MoE overload scenario, written to the repo root for CI's
+// bench-smoke regression gate
+// ---------------------------------------------------------------------
+
+fn bench_perfjson() {
+    header("perfjson — engine-policy deltas (writes BENCH_6.json)");
+    let slo = Slo::tpot(0.08);
+    let scenario_name = "sharegpt";
+    let model = catalog("DeepSeek-R1").unwrap();
+    let instances = 2usize;
+    // heavy overload: arrivals far above capacity, so tokens/s measures
+    // iteration speed (what the policies change), not the arrival rate
+    let mut rng = Rng::new(0x6001);
+    let workload = scenario(scenario_name).unwrap().generate(20.0, 30.0, &mut rng);
+
+    let run_with = |label: &str| {
+        let mut cfg =
+            ClusterConfig::new(instances, ascend_910b(), model.clone(), EngineFeatures::xllm(16));
+        cfg.slo = slo;
+        cfg.policies = EnginePolicies::parse(label).unwrap();
+        sim_run(cfg, workload.clone())
+    };
+
+    let off = run_with("none");
+    let off_tput = off.report.output_throughput();
+    let off_p99 = off.report.tpot_summary().percentile(99.0);
+    println!("  {:10}: {off_tput:8.0} tok/s  p99 TPOT {:6.1} ms", "off", off_p99 * 1e3);
+    let mut policies_obj = Json::obj().set(
+        "off",
+        Json::obj()
+            .set("tokens_per_s", off_tput)
+            .set("tpot_p99_s", off_p99)
+            .set("delta_vs_off_pct", 0.0),
+    );
+
+    let mut all = None;
+    for v in ["eplb", "dp-balance", "op-overlap", "graph", "all"] {
+        let res = run_with(v);
+        let tput = res.report.output_throughput();
+        let p99 = res.report.tpot_summary().percentile(99.0);
+        let delta = (tput / off_tput - 1.0) * 100.0;
+        println!("  {v:10}: {tput:8.0} tok/s  p99 TPOT {:6.1} ms  ({delta:+.1}% vs off)", p99 * 1e3);
+        policies_obj = policies_obj.set(
+            v,
+            Json::obj()
+                .set("tokens_per_s", tput)
+                .set("tpot_p99_s", p99)
+                .set("delta_vs_off_pct", delta),
+        );
+        if v == "all" {
+            all = Some(res);
+        }
+    }
+    let all = all.unwrap();
+    let report = &all.report;
+
+    let out = Json::obj()
+        .set("bench", "BENCH_6")
+        .set("measured", true)
+        .set("scenario", scenario_name)
+        .set("model", model.name)
+        .set("framework", "xllm")
+        .set("instances", instances)
+        .set("requests", report.n_requests())
+        .set("slo_tpot_s", slo.tpot())
+        .set("tokens_per_s", report.output_throughput())
+        .set("ttft_p50_s", report.ttft_summary().percentile(50.0))
+        .set("ttft_p99_s", report.ttft_summary().percentile(99.0))
+        .set("tpot_p50_s", report.tpot_summary().percentile(50.0))
+        .set("tpot_p99_s", report.tpot_summary().percentile(99.0))
+        .set("goodput_req_s", report.goodput(&slo))
+        .set("policies", policies_obj);
+    // cargo bench runs with cwd = the package root (rust/), so the
+    // default lands at the repo root next to the committed baseline
+    let path =
+        std::env::var("BENCH_JSON_PATH").unwrap_or_else(|_| "../BENCH_6.json".to_string());
+    std::fs::write(&path, out.to_string()).expect("writing the bench JSON");
+    println!("  wrote {path}");
 }

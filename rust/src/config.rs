@@ -6,6 +6,7 @@
 
 use std::collections::HashMap;
 
+use crate::engine::policies::EnginePolicies;
 use crate::metrics::Slo;
 
 /// Parsed command-line arguments: one subcommand + `--key value` options.
@@ -92,6 +93,11 @@ pub struct ServeConfig {
     /// fleet control plane's global-index granularity when this engine
     /// serves as a fleet replica (`xllm fleet --backend pjrt`).
     pub prefix_block_tokens: u64,
+    /// Executor-level engine policies (§4).  On the real engine path
+    /// only `graph_mode` changes behavior today (per-batch graph/eager
+    /// selection against the AOT buckets, counted in `ServerStats`);
+    /// the rest are accepted for CLI symmetry with `simulate`.
+    pub policies: EnginePolicies,
 }
 
 impl Default for ServeConfig {
@@ -105,6 +111,7 @@ impl Default for ServeConfig {
             speculative: false,
             pipeline_depth: 1,
             prefix_block_tokens: crate::coordinator::orchestrator::DEFAULT_PREFIX_BLOCK_TOKENS,
+            policies: EnginePolicies::default(),
         }
     }
 }

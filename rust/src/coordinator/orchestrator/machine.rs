@@ -1126,6 +1126,9 @@ impl<X: Executor> Orchestrator<X> {
     // --- monitoring / role switching -----------------------------------
 
     fn on_monitor(&mut self) {
+        // executor policy re-planning rides the monitor cadence (EPLB
+        // rebalances etc. — a default no-op for policy-free executors)
+        self.executor.on_control_tick(self.queue.now());
         // settle drained transitional instances
         for id in 0..self.instances.len() {
             let kind = self.pools.kind(id);

@@ -269,6 +269,15 @@ pub trait Executor: Send {
     fn debug_check(&self) -> Result<(), String> {
         Ok(())
     }
+
+    /// Periodic control-plane tick, fired from the orchestrator's
+    /// monitor cadence: executor policy re-planning (e.g. EPLB
+    /// routing-table rebalances with staged weight swaps, §4.4.2)
+    /// runs here, off the per-iteration hot path.  Default: no
+    /// policies to re-plan.
+    fn on_control_tick(&mut self, now_s: f64) {
+        let _ = now_s;
+    }
 }
 
 /// Executor-agnostic orchestrator configuration: everything about the

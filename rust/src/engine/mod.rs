@@ -9,6 +9,8 @@
 //! * [`eplb`]       — dynamic expert-parallel load balance (§4.4.2).
 //! * [`dpbalance`]  — hierarchical DP load balance (§4.4.3).
 //! * [`genrec`]     — generative-recommendation beam search (§4.5).
+//! * [`policies`]   — executor-level switches threading eplb /
+//!   dpbalance / opoverlap / graph mode into the serving hot path.
 //!
 //! The adaptive graph mode (§4.2) lives in `runtime::graph` because it
 //! wraps the PJRT executable cache directly.
@@ -18,8 +20,10 @@ pub mod eplb;
 pub mod genrec;
 pub mod opoverlap;
 pub mod pipeline;
+pub mod policies;
 pub mod specdecode;
 pub mod xtensor;
 
+pub use policies::EnginePolicies;
 pub use specdecode::SpecConfig;
 pub use xtensor::XTensorManager;

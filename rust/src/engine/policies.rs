@@ -1,0 +1,137 @@
+//! Executor-level engine policy switches (paper §4).
+//!
+//! Each flag activates one of the formerly dormant engine modules on
+//! the serving hot path:
+//!
+//! * `eplb`       — dynamic expert-parallel load balancing (§4.4.2):
+//!   [`crate::engine::eplb`] routing tables re-planned on the
+//!   orchestrator's control cadence, with staged double-buffer weight
+//!   swaps; the achieved imbalance scales the MoE iteration cost.
+//! * `dp_balance` — hierarchical DP load balance (§4.4.3):
+//!   [`crate::engine::dpbalance::balanced_cores`] vs
+//!   [`crate::engine::dpbalance::round_robin_cores`] straggler factors
+//!   scale the attention share of decode.
+//! * `op_overlap` — operator-layer cube/vector overlap, Eq. (1)
+//!   (§4.1): [`crate::engine::opoverlap::allocate`] vs
+//!   [`crate::engine::opoverlap::serial_makespan`] shrinks the
+//!   overlappable share of the step.
+//! * `graph_mode` — adaptive graph-vs-eager launch per batch shape
+//!   (§4.2): [`crate::runtime::graph::select_mode`] over the bucket
+//!   list, with warm-graph launch savings and per-bucket compile cost.
+//!
+//! The default is **all off**, and every consumer treats that as "no
+//! policy state allocated at all" — behavior stays bit-identical to
+//! the pre-policy executors (the golden parity fixtures enforce it).
+
+/// Which engine policies run on the executor hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct EnginePolicies {
+    /// Dynamic expert-parallel load balancing (§4.4.2).
+    pub eplb: bool,
+    /// Hierarchical DP load balance (§4.4.3).
+    pub dp_balance: bool,
+    /// Operator-layer cube/vector overlap (§4.1 Eq. (1)).
+    pub op_overlap: bool,
+    /// Adaptive graph-vs-eager launch selection (§4.2).
+    pub graph_mode: bool,
+}
+
+impl EnginePolicies {
+    /// Every policy enabled.
+    pub fn all() -> EnginePolicies {
+        EnginePolicies { eplb: true, dp_balance: true, op_overlap: true, graph_mode: true }
+    }
+
+    /// Is any policy enabled?  (False ⇒ consumers allocate no policy
+    /// state and the hot path is untouched.)
+    pub fn any(&self) -> bool {
+        self.eplb || self.dp_balance || self.op_overlap || self.graph_mode
+    }
+
+    /// Parse a CLI spec: a comma-separated list of
+    /// `eplb|dp-balance|op-overlap|graph`, or the shorthands
+    /// `all`/`none`.  Underscore spellings are accepted.
+    pub fn parse(spec: &str) -> Result<EnginePolicies, String> {
+        let mut p = EnginePolicies::default();
+        for part in spec.split(',') {
+            match part.trim() {
+                "" | "none" => {}
+                "all" => p = EnginePolicies::all(),
+                "eplb" => p.eplb = true,
+                "dp-balance" | "dp_balance" => p.dp_balance = true,
+                "op-overlap" | "op_overlap" => p.op_overlap = true,
+                "graph" | "graph-mode" | "graph_mode" => p.graph_mode = true,
+                other => {
+                    return Err(format!(
+                        "unknown engine policy {other:?} \
+                         (eplb|dp-balance|op-overlap|graph|all|none)"
+                    ))
+                }
+            }
+        }
+        Ok(p)
+    }
+
+    /// Canonical spec string (round-trips through [`Self::parse`]).
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        if self.eplb {
+            parts.push("eplb");
+        }
+        if self.dp_balance {
+            parts.push("dp-balance");
+        }
+        if self.op_overlap {
+            parts.push("op-overlap");
+        }
+        if self.graph_mode {
+            parts.push("graph");
+        }
+        if parts.is_empty() {
+            "none".to_string()
+        } else {
+            parts.join(",")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_all_off() {
+        let p = EnginePolicies::default();
+        assert!(!p.any());
+        assert_eq!(p.label(), "none");
+    }
+
+    #[test]
+    fn parse_individual_and_combined() {
+        let p = EnginePolicies::parse("eplb,graph").unwrap();
+        assert!(p.eplb && p.graph_mode && !p.dp_balance && !p.op_overlap);
+        assert_eq!(EnginePolicies::parse("all").unwrap(), EnginePolicies::all());
+        assert_eq!(EnginePolicies::parse("none").unwrap(), EnginePolicies::default());
+        assert_eq!(
+            EnginePolicies::parse("dp_balance,op_overlap").unwrap(),
+            EnginePolicies::parse("dp-balance,op-overlap").unwrap()
+        );
+    }
+
+    #[test]
+    fn parse_rejects_unknown() {
+        assert!(EnginePolicies::parse("warp-drive").is_err());
+    }
+
+    #[test]
+    fn label_round_trips() {
+        for p in [
+            EnginePolicies::default(),
+            EnginePolicies::all(),
+            EnginePolicies { eplb: true, ..Default::default() },
+            EnginePolicies { dp_balance: true, graph_mode: true, ..Default::default() },
+        ] {
+            assert_eq!(EnginePolicies::parse(&p.label()).unwrap(), p);
+        }
+    }
+}

@@ -19,8 +19,13 @@
 //! xllm models | scenarios | info
 //! ```
 //!
-//! `--pipeline-depth N` (serve, simulate, fleet) keeps N iterations in
-//! flight per instance (§4.2 async scheduling; 1 = blocking);
+//! `--engine-policies eplb,op-overlap,graph` (serve, simulate, fleet)
+//! switches the §4 executor-level engine policies on individually
+//! (`all` / `none`; default `none` — the seed behavior, bit for bit);
+//! `--engine-features xllm|vllm|mindie` (simulate) is an alias of
+//! `--framework`; `--pipeline-depth N` (serve, simulate, fleet) keeps
+//! N iterations in flight per instance (§4.2 async scheduling; 1 =
+//! blocking);
 //! `--host-overhead S` (simulate, fleet) models the per-iteration host
 //! planning cost the pipeline hides; `--threads N` (fleet) steps the
 //! replicas on N worker threads between control events (1 = the
@@ -35,6 +40,7 @@ use anyhow::{bail, Result};
 use xllm::config::{Args, ServeConfig};
 use xllm::coordinator::orchestrator::ServingMode;
 use xllm::coordinator::DispatchPolicy;
+use xllm::engine::EnginePolicies;
 use xllm::metrics::Slo;
 use xllm::model;
 use xllm::server::{synth_prompt, GenRequest, Server};
@@ -101,6 +107,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         speculative,
         // ≥ 2 moves the engine onto a worker thread (async pipeline §4.2)
         pipeline_depth: args.get_u64("pipeline-depth", 1).max(1) as usize,
+        policies: EnginePolicies::parse(&args.get_or("engine-policies", "none"))
+            .map_err(|e| anyhow::anyhow!(e))?,
         ..ServeConfig::default()
     };
     let mut server = Server::new(Path::new(&artifacts), cfg)?;
@@ -130,7 +138,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .set("page_maps", server.page_stats().maps)
         .set("page_reuse", server.page_stats().remaps_from_reusable)
         .set("graph_compiles", server.graph_stats().compiles)
-        .set("graph_hits", server.graph_stats().hits);
+        .set("graph_hits", server.graph_stats().hits)
+        .set("graph_full_hits", server.stats.graph_full_hits)
+        .set("graph_padded_hits", server.stats.graph_padded_hits)
+        .set("graph_eager_fallbacks", server.stats.graph_eager_fallbacks)
+        .set("calibration_updates", server.stats.calibration_updates);
     println!("{}", out.to_string());
     if let Some(r) = results.first() {
         println!("# sample generation (req {}): {:?}", r.id, &r.tokens);
@@ -146,7 +158,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let horizon = args.get_f64("horizon", 60.0);
     let tp = args.get_u64("tp", 1) as u32;
     let mode = args.get_or("mode", "colocated");
-    let framework = args.get_or("framework", "xllm");
+    // `--engine-features` is the paper-facing alias of `--framework`
+    let framework = args
+        .get("engine-features")
+        .map(str::to_string)
+        .unwrap_or_else(|| args.get_or("framework", "xllm"));
     let tpot = args.get_f64("tpot", f64::INFINITY);
     let ttft = args.get_f64("ttft", f64::INFINITY);
     let hw = match args.get_or("hw", "910B").as_str() {
@@ -188,6 +204,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     cfg.prefix_cache = args.has_flag("prefix-cache");
     cfg.pipeline_depth = args.get_u64("pipeline-depth", 1).max(1) as usize;
     cfg.host_overhead_s = args.get_f64("host-overhead", 0.0).max(0.0);
+    cfg.policies = EnginePolicies::parse(&args.get_or("engine-policies", "none"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let policies_label = cfg.policies.label();
 
     let mut rng = Rng::new(args.get_u64("seed", 7));
     let workload = sc.generate(horizon, rate, &mut rng);
@@ -200,6 +219,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         .set("scenario", scenario_name)
         .set("model", model_name)
         .set("framework", framework)
+        .set("engine_policies", policies_label)
         .set("instances", n)
         .set("requests", n_reqs)
         .set("completed", report.n_completed())
@@ -234,6 +254,8 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let horizon = args.get_f64("horizon", 40.0);
     let backend = args.get_or("backend", "roofline");
     let pipeline_depth = args.get_u64("pipeline-depth", 1).max(1) as usize;
+    let policies = EnginePolicies::parse(&args.get_or("engine-policies", "none"))
+        .map_err(|e| anyhow::anyhow!(e))?;
     let sc = scenario(&scenario_name)
         .ok_or_else(|| anyhow::anyhow!("unknown scenario {scenario_name}"))?;
 
@@ -294,6 +316,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                 // model's prompts must fully cover a block before its
                 // KV can be stashed/shipped between replicas
                 prefix_block_tokens: args.get_u64("block-tokens", 16).max(1),
+                policies,
                 ..ServeConfig::default()
             };
             // the global index granularity must match the replicas'
@@ -317,6 +340,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             template.prefix_cache = true;
             template.pipeline_depth = pipeline_depth;
             template.host_overhead_s = args.get_f64("host-overhead", 0.0).max(0.0);
+            template.policies = policies;
             let mut cfg = FleetConfig::new(template, n_replicas);
             cfg.control = control;
             run_fleet(cfg, workload)
@@ -349,6 +373,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         .set("replicas_final", res.n_replicas_final)
         .set("replicas_total", res.per_replica.len())
         .set("pipeline_depth", pipeline_depth)
+        .set("engine_policies", policies.label())
         .set("backend", backend)
         .set("threads", threads)
         .set("truncated", res.truncated);

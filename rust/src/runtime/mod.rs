@@ -17,7 +17,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-pub use graph::{GraphCache, GraphStats, LaunchMode};
+pub use graph::{select_mode, GraphCache, GraphStats, LaunchMode};
 pub use manifest::{GraphInfo, GraphKind, Manifest};
 pub use weights::WeightStore;
 

@@ -39,7 +39,9 @@ use crate::engine::specdecode::{accept_greedy, SpecConfig, SpecStats};
 use crate::engine::xtensor::{MapStats, XTensorManager};
 use crate::metrics::ServingReport;
 use crate::model::{cpu_host, ModelSpec};
-use crate::runtime::{argmax, BatchKv, GraphStats, ModelDims, PrefillOutput, Runtime};
+use crate::runtime::{
+    argmax, select_mode, BatchKv, GraphStats, LaunchMode, ModelDims, PrefillOutput, Runtime,
+};
 use crate::service::fleet::ReplicaFactory;
 use crate::service::kvstore::{hash_chain, prefix_tokens};
 use crate::sim::executor::model_device_s;
@@ -81,6 +83,16 @@ pub struct ServerStats {
     /// copy overwrote the recomputed region — consistency with the
     /// fleet's staged KV).
     pub kv_block_restores: u64,
+    /// Batches whose shape matched an AOT bucket exactly (§4.2
+    /// graph-mode selection: one full-graph launch, no padding).
+    pub graph_full_hits: u64,
+    /// Batches launched through a larger bucket with padded work.
+    pub graph_padded_hits: u64,
+    /// Batches no bucket fits: per-op eager dispatch fallback.
+    pub graph_eager_fallbacks: u64,
+    /// Measured decode iterations fed back into the roofline cost
+    /// model's learned factors (§3.1 online calibration).
+    pub calibration_updates: u64,
 }
 
 /// A request admitted into a batch slot.
@@ -164,6 +176,13 @@ struct EngineCore {
     block_tokens: usize,
     /// Largest prefill bucket (prompt truncation bound).
     max_prompt: usize,
+    /// `cfg.policies.graph_mode`: classify every batch shape against
+    /// the AOT buckets (§4.2) and count the launch modes in `stats`.
+    graph_policy: bool,
+    /// Sorted prefill bucket sizes (dynamic dim `s`) from the manifest.
+    prefill_buckets: Vec<u64>,
+    /// Sorted decode bucket sizes (dynamic dim `b`) from the manifest.
+    decode_buckets: Vec<u64>,
     stats: ServerStats,
     results: Vec<GenResult>,
     /// First runtime error; surfaced by the façade after the run (the
@@ -208,6 +227,20 @@ impl EngineCore {
             let graphs = rt.manifest.graphs_of(crate::runtime::GraphKind::Prefill, "tiny");
             graphs.iter().filter_map(|g| g.dim("s")).max().unwrap_or(0) as usize
         };
+        let mut prefill_buckets: Vec<u64> = rt
+            .manifest
+            .graphs_of(crate::runtime::GraphKind::Prefill, "tiny")
+            .iter()
+            .filter_map(|g| g.dim("s"))
+            .collect();
+        prefill_buckets.sort_unstable();
+        let mut decode_buckets: Vec<u64> = rt
+            .manifest
+            .graphs_of(crate::runtime::GraphKind::Decode, "tiny")
+            .iter()
+            .filter_map(|g| g.dim("b"))
+            .collect();
+        decode_buckets.sort_unstable();
         Ok(EngineCore {
             rt,
             dims,
@@ -226,6 +259,9 @@ impl EngineCore {
             imported: HashSet::new(),
             block_tokens: cfg.prefix_block_tokens.max(1) as usize,
             max_prompt,
+            graph_policy: cfg.policies.graph_mode,
+            prefill_buckets,
+            decode_buckets,
             stats: ServerStats::default(),
             results: Vec::new(),
             error: None,
@@ -236,6 +272,15 @@ impl EngineCore {
         self.slots.iter().position(|s| s.is_none())
     }
 
+    /// Count the §4.2 launch-mode decision for one batch shape.
+    fn count_launch_mode(stats: &mut ServerStats, requested: u64, buckets: &[u64]) {
+        match select_mode(requested, buckets) {
+            LaunchMode::FullGraph => stats.graph_full_hits += 1,
+            LaunchMode::PartialGraph { .. } => stats.graph_padded_hits += 1,
+            LaunchMode::Eager => stats.graph_eager_fallbacks += 1,
+        }
+    }
+
     /// Prefill one request into a free slot (first token included).
     fn run_prefill(&mut self, req: RequestId, now_s: f64, iter_start: Instant) -> Result<()> {
         let pend = self
@@ -243,6 +288,13 @@ impl EngineCore {
             .remove(&req)
             .ok_or_else(|| anyhow!("prefill for unknown request {req}"))?;
         let slot = self.free_slot().ok_or_else(|| anyhow!("no free batch slot"))?;
+        if self.graph_policy {
+            Self::count_launch_mode(
+                &mut self.stats,
+                pend.prompt.len() as u64,
+                &self.prefill_buckets,
+            );
+        }
         let out = self.rt.prefill("tiny", &pend.prompt)?;
         self.stats.prefills += 1;
         self.kv.write_prefill(slot, &out.k, &out.v, out.bucket_s, pend.prompt.len());
@@ -393,6 +445,9 @@ impl EngineCore {
         }
         if live.is_empty() {
             return Ok(());
+        }
+        if self.graph_policy {
+            Self::count_launch_mode(&mut self.stats, live.len() as u64, &self.decode_buckets);
         }
         let out = self.rt.decode("tiny", &mut self.kv, &tokens, &pos)?;
         self.stats.decode_steps += 1;
@@ -683,8 +738,25 @@ pub struct PjrtExecutor {
     /// one via [`Self::queue_request`] or a fleet-synthesized one via
     /// [`Executor::admitted`]); admitted never overwrites these.
     queued: HashSet<RequestId>,
+    /// Decode-only batch shapes in flight on the worker backend, keyed
+    /// by submission seq: (n_seqs, kv_tokens) for §3.1 calibration when
+    /// the measured time joins at `poll_complete`.
+    pending_shapes: HashMap<u64, (u64, u64)>,
+    /// Measured decode iterations fed into `CostModel::learn_decode`.
+    calibration_updates: u64,
     /// The worker channel broke (thread died); reported at collect.
     worker_lost: bool,
+}
+
+/// The shape fed to §3.1 calibration: decode-only iterations (mixed
+/// iterations fold prefill time into the measurement and would skew the
+/// learned decode factors).
+fn decode_only_shape(work: &IterationWork) -> Option<(u64, u64)> {
+    if work.decodes.is_empty() || !work.prefills.is_empty() || !work.encodes.is_empty() {
+        return None;
+    }
+    let kv: u64 = work.decodes.iter().map(|d| d.context_tokens).sum();
+    Some((work.decodes.len() as u64, kv))
 }
 
 impl PjrtExecutor {
@@ -734,6 +806,8 @@ impl PjrtExecutor {
             inline_last: None,
             emitted: HashMap::new(),
             queued: HashSet::new(),
+            pending_shapes: HashMap::new(),
+            calibration_updates: 0,
             worker_lost: false,
         })
     }
@@ -818,12 +892,21 @@ impl Executor for PjrtExecutor {
                 for (r, n) in core.drain_emitted() {
                     self.emitted.insert(r, n);
                 }
+                // §3.1: the measurement is already in hand — calibrate
+                // the roofline's learned factors on the spot
+                if let Some((n, kv)) = decode_only_shape(work) {
+                    self.cost.learn_decode(n, kv, device_s);
+                    self.calibration_updates += 1;
+                }
                 let out = IterationOutcome { host_s: 0.0, device_s };
                 self.inline_last = Some((seq, out));
                 IterationTicket { instance, seq, est: out }
             }
             Backend::Worker(h) => {
                 h.send(Cmd::Submit { seq, now_s, work: work.clone() });
+                if let Some(shape) = decode_only_shape(work) {
+                    self.pending_shapes.insert(seq, shape);
+                }
                 // the estimate orders the completion event in virtual
                 // time; the measured span arrives at poll_complete
                 let device_s = model_device_s(&self.cost, self.est_spec, work);
@@ -848,6 +931,12 @@ impl Executor for PjrtExecutor {
                     debug_assert_eq!(seq, ticket.seq, "worker completion out of order");
                     for (r, n) in emitted {
                         self.emitted.insert(r, n);
+                    }
+                    // §3.1: the measured span just joined — feed it back
+                    // so later submit estimates track the real engine
+                    if let Some((n, kv)) = self.pending_shapes.remove(&seq) {
+                        self.cost.learn_decode(n, kv, device_s);
+                        self.calibration_updates += 1;
                     }
                     IterationOutcome { host_s: 0.0, device_s }
                 }
@@ -1188,6 +1277,9 @@ impl Server {
         let worker_lost = exec.worker_lost;
         self.report = res.report;
         self.stats = collected.stats;
+        // calibration lives façade-side (the cost model never crosses
+        // the worker channel) — stitch it into the snapshot
+        self.stats.calibration_updates = exec.calibration_updates;
         self.page_stats = collected.page_stats;
         self.graph_stats = collected.graph_stats;
         let results = collected.results;

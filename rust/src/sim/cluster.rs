@@ -14,6 +14,7 @@
 
 use crate::coordinator::orchestrator::{Orchestrator, OrchestratorConfig, DEFAULT_MAX_EVENTS};
 use crate::coordinator::{BatchConfig, DispatchPolicy};
+use crate::engine::policies::EnginePolicies;
 use crate::engine::specdecode::SpecConfig;
 use crate::metrics::Slo;
 use crate::model::{HardwareSpec, ModelSpec};
@@ -61,6 +62,10 @@ pub struct ClusterConfig {
     /// when hit instead of silently breaking out).
     pub max_events: u64,
     pub seed: u64,
+    /// Executor-level engine policies (§4): EPLB, DP balance, op
+    /// overlap, adaptive graph mode.  All off by default — the seed
+    /// behavior, bit for bit.
+    pub policies: EnginePolicies,
 }
 
 impl ClusterConfig {
@@ -97,6 +102,7 @@ impl ClusterConfig {
             host_overhead_s: 0.0,
             max_events: DEFAULT_MAX_EVENTS,
             seed: 0xD15EA5E,
+            policies: EnginePolicies::default(),
         }
     }
 
@@ -132,13 +138,20 @@ impl ClusterSim {
     pub fn new(cfg: ClusterConfig) -> ClusterSim {
         let cost = CostModel::new(cfg.hw.clone(), cfg.model.clone(), cfg.features.clone());
         let executor = RooflineExecutor::new(cost, cfg.spec, cfg.seed)
-            .with_host_overhead(cfg.host_overhead_s);
+            .with_host_overhead(cfg.host_overhead_s)
+            .with_policies(cfg.policies);
         ClusterSim { orch: Orchestrator::new(cfg.orchestrator_config(), executor) }
     }
 
     /// Run the workload to completion; returns metrics + counters.
     pub fn run(self, workload: Vec<RequestSpec>) -> SimResult {
         self.orch.run(workload).0
+    }
+
+    /// Like [`Self::run`] but also hands back the executor, so callers
+    /// can inspect [`RooflineExecutor::policy_counters`].
+    pub fn run_with_executor(self, workload: Vec<RequestSpec>) -> (SimResult, RooflineExecutor) {
+        self.orch.run(workload)
     }
 }
 

@@ -18,17 +18,197 @@
 //! already part of the modelled step via `CostModel::exposed_sched` —
 //! this term is specifically the host work *outside* the engine step.)
 
+use std::collections::HashSet;
+
 use crate::coordinator::orchestrator::{
     Executor, IterationOutcome, IterationTicket, IterationWork,
 };
 use crate::coordinator::pools::InstanceId;
 use crate::coordinator::request::RequestId;
+use crate::engine::dpbalance::{
+    balanced_cores, round_robin_cores, straggler_factor, CoreAssignment, DpGroup,
+};
+use crate::engine::eplb::{
+    rebalance_round, static_table, DoubleBuffer, ExpertStats, RoutingTable,
+    WeightUpdateController,
+};
+use crate::engine::opoverlap::{allocate, serial_makespan, OpLoad};
+use crate::engine::policies::EnginePolicies;
 use crate::engine::specdecode::{
     draft_cost_fraction, expected_tokens_per_round, verify_cost_multiplier, SpecConfig,
 };
+use crate::runtime::{select_mode, LaunchMode};
 use crate::service::epd::dual_stream_encode_exposure;
 use crate::sim::roofline::CostModel;
 use crate::util::Rng;
+
+// ---------------------------------------------------------------------
+// Engine-policy tuning constants
+// ---------------------------------------------------------------------
+
+/// XOR salt deriving the policy RNG stream from the executor seed: the
+/// emission RNG's draw order is pinned by the golden fixtures and must
+/// never observe a policy-dependent draw.
+const POLICY_RNG_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+/// Dynamic EPLB can at best recover this fraction of the step (floor on
+/// the imbalance-vs-assumption cost multiplier).
+const EPLB_MIN_FACTOR: f64 = 0.75;
+/// Zipf skew of simulated expert routing (hot-expert traffic, §4.4.2).
+const EXPERT_ZIPF_ALPHA: f64 = 1.2;
+/// Sequences longer than this are split across cores by the balanced
+/// layer-3 assignment (§4.4.3).
+const DP_CORE_SPLIT_TOKENS: u64 = 512;
+/// Share of the decode step governed by per-core attention stragglers.
+const DP_ATTENTION_SHARE: f64 = 0.30;
+/// Floor on the balanced/round-robin straggler ratio.
+const DP_MIN_RATIO: f64 = 0.5;
+/// Share of the decode step where Cube/Vector overlap (Eq. 1) applies.
+const OP_OVERLAP_SHARE: f64 = 0.25;
+/// Floor on the overlapped/serial makespan ratio.
+const OP_MIN_RATIO: f64 = 0.4;
+/// Fraction of the memory-bound time treated as vector-unit work.
+const VECTOR_WORK_SHARE: f64 = 0.35;
+/// Pre-compiled decode batch buckets mirrored from the PJRT manifest.
+const SIM_DECODE_BUCKETS: [u64; 10] = [1, 2, 4, 8, 16, 32, 64, 128, 256, 512];
+/// One-time cost of compiling a cold graph bucket (§4.2).
+const GRAPH_COMPILE_PENALTY_S: f64 = 2e-3;
+/// A warm graph hit never removes more than this fraction of the step.
+const GRAPH_GAIN_CAP: f64 = 0.3;
+
+/// Dynamic EPLB state: routing table + expert stats + the staged
+/// double-buffer weight-swap machinery (§4.4.2).
+struct EplbState {
+    stats: ExpertStats,
+    table: RoutingTable,
+    controller: WeightUpdateController,
+    buffers: Vec<DoubleBuffer>,
+    /// Current decode-cost multiplier: achieved imbalance relative to
+    /// the static assumption baked into the roofline (≤ 1.0).
+    factor: f64,
+    replans: u64,
+}
+
+/// Per-executor policy state, present only when at least one
+/// [`EnginePolicies`] switch is on — `None` keeps the seed behavior
+/// bit-identical.
+struct PolicyState {
+    policies: EnginePolicies,
+    rng: Rng,
+    eplb: Option<EplbState>,
+    warm_buckets: HashSet<u64>,
+    graph_hits: u64,
+    graph_compiles: u64,
+    graph_fallbacks: u64,
+}
+
+/// Straggler factor of a layer-3 core assignment (per-core token loads
+/// viewed as DP groups with unbounded capacity).
+fn core_straggler(a: &CoreAssignment) -> f64 {
+    let groups: Vec<DpGroup> = a
+        .core_loads
+        .iter()
+        .enumerate()
+        .map(|(id, &load)| DpGroup {
+            id,
+            kv_tokens: load,
+            kv_capacity: u64::MAX,
+            n_requests: 0,
+        })
+        .collect();
+    straggler_factor(&groups)
+}
+
+impl PolicyState {
+    /// Apply the enabled policies to one iteration's modelled device
+    /// time.  Decode-shaped policies (DP balance, op overlap, graph
+    /// mode) only act on iterations that decode; the EPLB imbalance
+    /// factor applies to every MoE forward pass, prefill included.
+    fn scale_device_s(&mut self, cost: &CostModel, work: &IterationWork, device_s: f64) -> f64 {
+        let n_decode = work.decodes.len() as u64;
+        if n_decode == 0 {
+            return match &self.eplb {
+                Some(e) => device_s * e.factor,
+                None => device_s,
+            };
+        }
+        let mut scaled = device_s;
+
+        if let Some(e) = &mut self.eplb {
+            // route this iteration's decode tokens through a zipf-skewed
+            // expert distribution so the rebalancer sees hot experts
+            let n_experts = e.stats.n_experts.max(1) as u64;
+            let per_tok = cost.model.experts_per_tok.max(1) as u64;
+            for _ in 0..n_decode {
+                let ex = (self.rng.zipf(n_experts, EXPERT_ZIPF_ALPHA) - 1) as usize;
+                e.stats.record(ex, per_tok);
+            }
+            scaled *= e.factor;
+        }
+
+        if self.policies.dp_balance && work.decodes.len() >= 2 {
+            let reqs: Vec<u64> =
+                work.decodes.iter().map(|d| d.context_tokens.max(1)).collect();
+            let n_cores = cost.hw.n_cube.max(1) as usize;
+            let rr = core_straggler(&round_robin_cores(&reqs, n_cores));
+            let bal = core_straggler(&balanced_cores(&reqs, n_cores, DP_CORE_SPLIT_TOKENS));
+            if rr > 0.0 {
+                let ratio = (bal / rr).clamp(DP_MIN_RATIO, 1.0);
+                scaled *= 1.0 - DP_ATTENTION_SHARE + DP_ATTENTION_SHARE * ratio;
+            }
+        }
+
+        if self.policies.op_overlap {
+            let kv_tokens: u64 = work.decodes.iter().map(|d| d.context_tokens).sum();
+            let step = cost.decode_step(n_decode, kv_tokens);
+            let n_cube = cost.hw.n_cube.max(2);
+            let n_vector = cost.hw.n_vector.max(2);
+            let cube_work = step.compute_s * n_cube as f64;
+            let vector_work = step.memory_s * VECTOR_WORK_SHARE * n_vector as f64;
+            let cube_ops =
+                [OpLoad { workload: 0.65 * cube_work }, OpLoad { workload: 0.35 * cube_work }];
+            let vector_ops =
+                [OpLoad { workload: 0.7 * vector_work }, OpLoad { workload: 0.3 * vector_work }];
+            let serial = serial_makespan(&cube_ops, &vector_ops, 1.0, 1.0, n_cube, n_vector);
+            if serial > 0.0 {
+                let overlapped =
+                    allocate(&cube_ops, &vector_ops, 1.0, 1.0, n_cube, n_vector).makespan;
+                let ratio = (overlapped / serial).clamp(OP_MIN_RATIO, 1.0);
+                scaled *= 1.0 - OP_OVERLAP_SHARE + OP_OVERLAP_SHARE * ratio;
+            }
+        }
+
+        if self.policies.graph_mode {
+            match select_mode(n_decode, &SIM_DECODE_BUCKETS) {
+                LaunchMode::Eager => self.graph_fallbacks += 1,
+                mode => {
+                    let bucket = match mode {
+                        LaunchMode::PartialGraph { bucket, .. } => bucket,
+                        _ => n_decode,
+                    };
+                    if self.warm_buckets.insert(bucket) {
+                        self.graph_compiles += 1;
+                        scaled += GRAPH_COMPILE_PENALTY_S;
+                    } else {
+                        self.graph_hits += 1;
+                        scaled -= cost.graph_warm_gain_s().min(GRAPH_GAIN_CAP * scaled);
+                    }
+                }
+            }
+        }
+        scaled
+    }
+}
+
+/// Observable counters from the executor's policy layer (surfaced by
+/// the `simulate` CLI and the policy integration tests).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PolicyCounters {
+    pub eplb_replans: u64,
+    pub weight_switches: u64,
+    pub graph_compiles: u64,
+    pub graph_hits: u64,
+    pub graph_fallbacks: u64,
+}
 
 /// Price one planned iteration's device time with the roofline model
 /// (shared with `server::PjrtExecutor`, which uses it as the submit-time
@@ -72,11 +252,24 @@ pub struct RooflineExecutor {
     /// contract).
     host_overhead_s: f64,
     seq: u64,
+    /// Seed kept for deriving the (independent) policy RNG stream.
+    seed: u64,
+    /// Engine-policy state; `None` (the default) prices every iteration
+    /// exactly as the seed executor did, bit for bit.
+    policy: Option<PolicyState>,
 }
 
 impl RooflineExecutor {
     pub fn new(cost: CostModel, spec: Option<SpecConfig>, seed: u64) -> RooflineExecutor {
-        RooflineExecutor { cost, spec, rng: Rng::new(seed), host_overhead_s: 0.0, seq: 0 }
+        RooflineExecutor {
+            cost,
+            spec,
+            rng: Rng::new(seed),
+            host_overhead_s: 0.0,
+            seq: 0,
+            seed,
+            policy: None,
+        }
     }
 
     /// Model a nonzero per-iteration host overhead, the share the async
@@ -84,6 +277,52 @@ impl RooflineExecutor {
     pub fn with_host_overhead(mut self, host_s: f64) -> RooflineExecutor {
         self.host_overhead_s = host_s.max(0.0);
         self
+    }
+
+    /// Enable executor-level engine policies (§4).  With every switch
+    /// off this is a no-op: no policy state is allocated and pricing
+    /// stays bit-identical to the policy-free executor.  EPLB state is
+    /// only built when the model is MoE and at least two devices share
+    /// the expert placement.
+    pub fn with_policies(mut self, policies: EnginePolicies) -> RooflineExecutor {
+        if !policies.any() {
+            return self;
+        }
+        let n_devices = self.cost.features.tp.max(1) as usize;
+        let eplb = if policies.eplb && self.cost.model.is_moe && n_devices >= 2 {
+            let n_experts = self.cost.model.n_experts.max(1) as usize;
+            Some(EplbState {
+                stats: ExpertStats::new(n_experts),
+                table: static_table(n_experts, n_devices),
+                controller: WeightUpdateController::new(n_devices),
+                buffers: (0..n_devices).map(|_| DoubleBuffer::new()).collect(),
+                factor: 1.0,
+                replans: 0,
+            })
+        } else {
+            None
+        };
+        self.policy = Some(PolicyState {
+            policies,
+            rng: Rng::new(self.seed ^ POLICY_RNG_SALT),
+            eplb,
+            warm_buckets: HashSet::new(),
+            graph_hits: 0,
+            graph_compiles: 0,
+            graph_fallbacks: 0,
+        });
+        self
+    }
+
+    /// Policy-layer counters, `None` when no policy is enabled.
+    pub fn policy_counters(&self) -> Option<PolicyCounters> {
+        self.policy.as_ref().map(|p| PolicyCounters {
+            eplb_replans: p.eplb.as_ref().map_or(0, |e| e.replans),
+            weight_switches: p.eplb.as_ref().map_or(0, |e| e.controller.switches),
+            graph_compiles: p.graph_compiles,
+            graph_hits: p.graph_hits,
+            graph_fallbacks: p.graph_fallbacks,
+        })
     }
 }
 
@@ -98,7 +337,10 @@ impl Executor for RooflineExecutor {
         _now_s: f64,
         work: &IterationWork,
     ) -> IterationTicket {
-        let device_s = model_device_s(&self.cost, self.spec, work);
+        let mut device_s = model_device_s(&self.cost, self.spec, work);
+        if let Some(p) = &mut self.policy {
+            device_s = p.scale_device_s(&self.cost, work, device_s);
+        }
         let host_s = if work.is_empty() { 0.0 } else { self.host_overhead_s };
         self.seq += 1;
         IterationTicket { instance, seq: self.seq, est: IterationOutcome { host_s, device_s } }
@@ -108,6 +350,42 @@ impl Executor for RooflineExecutor {
         // modelled prices are exact at submit time: the estimate is the
         // outcome, at any pipeline depth
         ticket.est
+    }
+
+    fn on_control_tick(&mut self, _now_s: f64) {
+        let Some(p) = &mut self.policy else { return };
+        let Some(e) = &mut p.eplb else { return };
+        // no routed traffic since the last tick: imbalance over an
+        // all-zero window is meaningless, hold the current table
+        if e.stats.window_counts().iter().all(|&c| c == 0) {
+            return;
+        }
+        e.stats.roll_window();
+        let n_devices = e.table.n_devices;
+        let (before, after, table) = rebalance_round(&e.stats, n_devices, n_devices, &e.table);
+        if after <= before {
+            // stage the new placement: preload every worker's spare
+            // buffer, switch all of them only once the controller has
+            // seen every worker ready (§4.4.2 transactional swap)
+            let mut switch_all = false;
+            for (w, b) in e.buffers.iter_mut().enumerate() {
+                b.preload(table.version);
+                if e.controller.worker_ready(w) {
+                    switch_all = true;
+                }
+            }
+            if switch_all {
+                for b in &mut e.buffers {
+                    let _ = b.switch();
+                }
+            }
+            e.table = table;
+            e.replans += 1;
+        }
+        // cost multiplier: achieved imbalance vs the static assumption
+        // already priced into the roofline's MoE FLOP term
+        let assumed = self.cost.moe_imbalance_assumed();
+        e.factor = (e.table.imbalance(&e.stats.load()) / assumed).clamp(EPLB_MIN_FACTOR, 1.0);
     }
 
     fn decode_emission(&mut self, _instance: InstanceId, _req: RequestId) -> u64 {
@@ -172,6 +450,81 @@ mod tests {
         e.import_chain(KvChainPayload::default()); // no-op by contract
         e.admitted(0, &crate::workload::RequestSpec::text(0.0, 64, 4)); // no-op
         assert_eq!(e.begin_iteration(0, 0.0, &IterationWork::default()), 0.0);
+    }
+
+    fn moe_exec(policies: EnginePolicies) -> RooflineExecutor {
+        let cost = CostModel::new(
+            ascend_910b(),
+            catalog("DeepSeek-R1").unwrap(),
+            EngineFeatures::xllm(16),
+        );
+        RooflineExecutor::new(cost, None, 42).with_policies(policies)
+    }
+
+    fn decode_work(n: u64) -> IterationWork {
+        IterationWork {
+            decodes: (0..n).map(|i| DecodeWork { req: i, context_tokens: 256 + 64 * i }).collect(),
+            prefills: vec![],
+            encodes: vec![],
+        }
+    }
+
+    #[test]
+    fn policies_off_prices_bit_identically() {
+        let work = IterationWork {
+            decodes: vec![DecodeWork { req: 1, context_tokens: 512 }],
+            prefills: vec![PrefillWork { req: 2, tokens: 256, context_tokens: 0 }],
+            encodes: vec![],
+        };
+        let mut plain = exec(None);
+        let mut off = exec(None).with_policies(EnginePolicies::default());
+        assert!(off.policy_counters().is_none(), "all-off must allocate no policy state");
+        let a = plain.begin_iteration(0, 0.0, &work);
+        let b = off.begin_iteration(0, 0.0, &work);
+        assert_eq!(a.to_bits(), b.to_bits(), "all-off pricing must be bit-identical");
+    }
+
+    #[test]
+    fn eplb_factor_never_regresses_and_replans() {
+        let mut e = moe_exec(EnginePolicies { eplb: true, ..EnginePolicies::default() });
+        let work = decode_work(32);
+        let base = model_device_s(&e.cost, None, &work);
+        for _ in 0..8 {
+            e.begin_iteration(0, 0.0, &work);
+            e.on_control_tick(0.0);
+        }
+        let priced = e.begin_iteration(0, 0.0, &work);
+        assert!(priced <= base + 1e-12, "eplb must never regress: {priced} vs {base}");
+        let c = e.policy_counters().unwrap();
+        assert!(c.eplb_replans > 0, "skewed routing should trigger a re-plan");
+        assert!(c.weight_switches > 0, "installed tables ride the staged weight swap");
+    }
+
+    #[test]
+    fn graph_warm_hit_cheaper_than_cold_compile() {
+        let mut e = moe_exec(EnginePolicies { graph_mode: true, ..EnginePolicies::default() });
+        let work = decode_work(16); // exact bucket: full-graph launch
+        let first = e.begin_iteration(0, 0.0, &work);
+        let second = e.begin_iteration(0, 0.0, &work);
+        assert!(second < first, "warm hit {second} should undercut cold compile {first}");
+        let c = e.policy_counters().unwrap();
+        assert_eq!(c.graph_compiles, 1);
+        assert_eq!(c.graph_hits, 1);
+        assert_eq!(c.graph_fallbacks, 0);
+    }
+
+    #[test]
+    fn dp_and_overlap_scale_down_decode_steps() {
+        let mut on = moe_exec(EnginePolicies {
+            dp_balance: true,
+            op_overlap: true,
+            ..EnginePolicies::default()
+        });
+        let mut off = moe_exec(EnginePolicies::default());
+        let work = decode_work(48); // skewed context lengths straggle round-robin cores
+        let a = on.begin_iteration(0, 0.0, &work);
+        let b = off.begin_iteration(0, 0.0, &work);
+        assert!(a <= b, "balanced cores + Eq.(1) overlap must not slow decode: {a} vs {b}");
     }
 
     #[test]

@@ -82,7 +82,8 @@ impl ReplicaFactory for RooflineReplicaFactory {
         let t = &self.template;
         let cost = CostModel::new(t.hw.clone(), t.model.clone(), t.features.clone());
         let executor = RooflineExecutor::new(cost, t.spec, t.seed.wrapping_add(id as u64))
-            .with_host_overhead(t.host_overhead_s);
+            .with_host_overhead(t.host_overhead_s)
+            .with_policies(t.policies);
         Orchestrator::new(t.orchestrator_config(), executor)
     }
 }

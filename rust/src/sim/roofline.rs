@@ -396,6 +396,36 @@ impl CostModel {
         }
     }
 
+    /// The EP imbalance multiplier the static feature flags already
+    /// bake into [`Self::decode_step`] (1.0 for dense models).  The
+    /// dynamic EPLB executor policy divides its *achieved* imbalance
+    /// by this assumption so the two mechanisms compose instead of
+    /// double-counting.
+    pub fn moe_imbalance_assumed(&self) -> f64 {
+        if !self.model.is_moe {
+            return 1.0;
+        }
+        if self.features.eplb {
+            EP_IMBALANCE_EPLB
+        } else {
+            EP_IMBALANCE_STATIC
+        }
+    }
+
+    /// Launch-time reduction a warm cached graph gives one step over
+    /// the configured launch path (the §4.2 adaptive-graph executor
+    /// policy credits this on bucket cache hits; Full graph mode
+    /// already pays only the single launch, so the gain is zero).
+    pub fn graph_warm_gain_s(&self) -> f64 {
+        let n_ops = OPS_PER_LAYER * self.model.n_layers as f64;
+        let eager = EAGER_EXPOSED_FRACTION * n_ops * self.hw.kernel_launch_s;
+        match self.features.graph_mode {
+            GraphMode::Eager => (eager - GRAPH_LAUNCH_S).max(0.0),
+            GraphMode::Full => 0.0,
+            GraphMode::Adaptive => ADAPTIVE_EAGER_FRACTION * eager,
+        }
+    }
+
     /// Which resource binds a decode step (for co-location batch mixing).
     pub fn decode_bound(&self, n_seqs: u64, kv_tokens: u64) -> Bound {
         let s = self.decode_step(n_seqs, kv_tokens);

@@ -1,0 +1,169 @@
+//! Engine-policy integration tests (ISSUE 6): the §4 executor policies
+//! must (a) change nothing at all when disabled — the seed behavior,
+//! bit for bit — and (b) strictly help an MoE overload scenario when
+//! enabled, with the policy counters proving each mechanism actually
+//! ran.  Plus unit coverage for the dormant-module edges the policies
+//! lean on: `graph::select_mode` bucket edges, `eplb::rebalance_round`
+//! determinism, `opoverlap::allocate` degenerate loads.
+
+use xllm::engine::eplb::{rebalance_round, static_table, ExpertStats};
+use xllm::engine::opoverlap::{allocate, serial_makespan, OpLoad};
+use xllm::engine::EnginePolicies;
+use xllm::metrics::Slo;
+use xllm::model::{ascend_910b, catalog};
+use xllm::runtime::{select_mode, LaunchMode};
+use xllm::sim::cluster::{run as sim_run, ClusterConfig, ClusterSim};
+use xllm::sim::EngineFeatures;
+use xllm::util::Rng;
+use xllm::workload::scenario;
+
+fn moe_cfg(policies: EnginePolicies) -> ClusterConfig {
+    let mut cfg = ClusterConfig::new(
+        2,
+        ascend_910b(),
+        catalog("DeepSeek-R1").unwrap(),
+        EngineFeatures::xllm(16),
+    );
+    cfg.slo = Slo::tpot(0.08);
+    cfg.policies = policies;
+    cfg
+}
+
+/// Heavy overload so tokens/s reflects iteration speed, not arrival
+/// rate — at low load every variant would finish the same workload in
+/// the same horizon and the policy deltas would be invisible.
+fn overload_workload(seed: u64) -> Vec<xllm::workload::RequestSpec> {
+    let mut rng = Rng::new(seed);
+    scenario("sharegpt").unwrap().generate(20.0, 30.0, &mut rng)
+}
+
+#[test]
+fn policies_off_is_bit_identical_to_seed_config() {
+    assert!(!EnginePolicies::default().any(), "default must be all-off");
+    let w = overload_workload(0x601D);
+    let base = {
+        let cfg = ClusterConfig::new(
+            2,
+            ascend_910b(),
+            catalog("Qwen3-8B").unwrap(),
+            EngineFeatures::xllm(1),
+        );
+        sim_run(cfg, w.clone())
+    };
+    let explicit_off = {
+        let mut cfg = ClusterConfig::new(
+            2,
+            ascend_910b(),
+            catalog("Qwen3-8B").unwrap(),
+            EngineFeatures::xllm(1),
+        );
+        cfg.policies = EnginePolicies::default();
+        sim_run(cfg, w)
+    };
+    assert_eq!(base.iterations, explicit_off.iterations);
+    assert_eq!(base.report.n_completed(), explicit_off.report.n_completed());
+    assert_eq!(
+        base.report.output_throughput().to_bits(),
+        explicit_off.report.output_throughput().to_bits(),
+        "all-off must reproduce the seed executor bit for bit"
+    );
+}
+
+#[test]
+fn moe_policies_raise_throughput_without_hurting_p99_tpot() {
+    let w = overload_workload(7702);
+    let off = sim_run(moe_cfg(EnginePolicies::default()), w.clone());
+    let on_policies = EnginePolicies {
+        eplb: true,
+        op_overlap: true,
+        graph_mode: true,
+        dp_balance: false,
+    };
+    let (on, exec) = ClusterSim::new(moe_cfg(on_policies)).run_with_executor(w);
+
+    let tput_off = off.report.output_throughput();
+    let tput_on = on.report.output_throughput();
+    assert!(
+        tput_on > tput_off,
+        "EPLB + op-overlap + graph mode must raise MoE tokens/s: {tput_on} !> {tput_off}"
+    );
+    let p99_off = off.report.tpot_summary().percentile(99.0);
+    let p99_on = on.report.tpot_summary().percentile(99.0);
+    assert!(
+        p99_on <= p99_off + 1e-9,
+        "policies must not degrade p99 TPOT: {p99_on} !<= {p99_off}"
+    );
+
+    let c = exec.policy_counters().expect("policy state present when enabled");
+    assert!(c.eplb_replans > 0, "monitor cadence should have re-planned EPLB: {c:?}");
+    assert!(c.weight_switches > 0, "re-plans ride the staged weight swap: {c:?}");
+    assert!(c.graph_compiles > 0, "first warm bucket must compile: {c:?}");
+    assert!(c.graph_hits > 0, "repeated shapes must hit warm graphs: {c:?}");
+}
+
+#[test]
+fn select_mode_handles_empty_and_oversized_buckets() {
+    // empty bucket list: nothing pre-compiled, always eager
+    assert_eq!(select_mode(4, &[]), LaunchMode::Eager);
+    // request larger than every bucket: eager fallback
+    assert_eq!(select_mode(512, &[16, 64, 256]), LaunchMode::Eager);
+    // exact match: full graph
+    assert_eq!(select_mode(64, &[16, 64, 256]), LaunchMode::FullGraph);
+    // between buckets: padded into the smallest fitting one, even when
+    // the list is unsorted
+    assert_eq!(
+        select_mode(17, &[256, 16, 64]),
+        LaunchMode::PartialGraph { padded_from: 17, bucket: 64 }
+    );
+    // zero-sized request fits the smallest bucket (padded)
+    assert_eq!(
+        select_mode(0, &[16, 64]),
+        LaunchMode::PartialGraph { padded_from: 0, bucket: 16 }
+    );
+}
+
+#[test]
+fn eplb_rebalance_round_is_deterministic_and_improves_skew() {
+    for seed in [1u64, 42, 0xA57C] {
+        let mut rng = Rng::new(seed);
+        let n_experts = 64;
+        let n_devices = 8;
+        let mut stats = ExpertStats::new(n_experts);
+        for _ in 0..4096 {
+            let e = (rng.zipf(n_experts as u64, 1.2) - 1) as usize;
+            stats.record(e, 8);
+        }
+        stats.roll_window();
+        let table = static_table(n_experts, n_devices);
+        let (b1, a1, t1) = rebalance_round(&stats, n_devices, n_devices, &table);
+        let (b2, a2, t2) = rebalance_round(&stats, n_devices, n_devices, &table);
+        assert_eq!(b1.to_bits(), b2.to_bits(), "seed {seed}: before must be deterministic");
+        assert_eq!(a1.to_bits(), a2.to_bits(), "seed {seed}: after must be deterministic");
+        assert_eq!(t1.placements, t2.placements, "seed {seed}: placements must repeat");
+        assert!(
+            a1 <= b1,
+            "seed {seed}: rebalance must not worsen imbalance ({a1} !<= {b1})"
+        );
+    }
+}
+
+#[test]
+fn opoverlap_allocate_degenerate_single_op_loads() {
+    // one op per class: everything overlaps, makespan bounded by serial
+    let cube = [OpLoad { workload: 10.0 }];
+    let vector = [OpLoad { workload: 2.0 }];
+    let serial = serial_makespan(&cube, &vector, 1.0, 1.0, 8, 4);
+    let a = allocate(&cube, &vector, 1.0, 1.0, 8, 4);
+    assert!(a.makespan > 0.0);
+    assert!(a.makespan <= serial + 1e-12, "{} !<= {serial}", a.makespan);
+
+    // a single cube op against no vector work at all
+    let a = allocate(&cube, &[], 1.0, 1.0, 8, 4);
+    assert!(a.makespan > 0.0);
+    assert!(a.cube_units.iter().sum::<u32>() <= 8);
+
+    // vanishingly small workloads must not divide by zero or hang
+    let tiny = [OpLoad { workload: 1e-12 }];
+    let a = allocate(&tiny, &tiny, 1.0, 1.0, 2, 2);
+    assert!(a.makespan >= 0.0 && a.makespan.is_finite());
+}
