@@ -34,6 +34,7 @@ use crate::coordinator::{
     InstanceState, InstanceView, Phase, Placement, PoolKind, Request, RequestId, RoleFlip,
 };
 use crate::metrics::{ServingReport, Slo};
+use crate::obs::{InstantKind, SpanPhase, TraceHandle};
 use crate::service::colocation::admit_offline_decodes;
 use crate::service::fault::{plan_recovery, InterruptedRequest, RecoveryAction};
 use crate::service::kvstore::{hash_chain, prefix_tokens, Tier, TieredCache, TransferEngine};
@@ -99,6 +100,9 @@ pub struct Orchestrator<X: Executor> {
     /// A monitor event is pending in the queue (so incremental `submit`
     /// can revive monitoring after the replica drains).
     monitor_live: bool,
+    /// Lifecycle trace emission (off by default — every emission is one
+    /// `Option` check and never touches simulation state).
+    trace: TraceHandle,
 }
 
 impl<X: Executor> Orchestrator<X> {
@@ -144,8 +148,16 @@ impl<X: Executor> Orchestrator<X> {
             iterations: 0,
             truncated: false,
             monitor_live: false,
+            trace: TraceHandle::off(),
             cfg,
         }
+    }
+
+    /// Install the trace handle (and hand a clone to the executor for
+    /// its own policy events).  Call before `start`/`run`.
+    pub fn set_trace(&mut self, trace: TraceHandle) {
+        self.executor.set_trace(trace.clone());
+        self.trace = trace;
     }
 
     pub fn executor(&self) -> &X {
@@ -340,16 +352,25 @@ impl<X: Executor> Orchestrator<X> {
     /// survivors can re-run them (§3.5 re-dispatch).  The drained
     /// requests never reach this replica's report.
     pub fn drain_in_flight(&mut self) -> Vec<InFlightSnapshot> {
+        let now = self.queue.now();
         let mut out = Vec::new();
         for (idx, spec) in self.specs.iter().enumerate() {
             let id = idx as RequestId;
             match self.requests.get(&id) {
                 Some(r) if matches!(r.phase, Phase::Done | Phase::Failed) => {}
-                Some(r) => out.push(InFlightSnapshot {
-                    spec: *spec,
-                    context_tokens: r.context_len(),
-                    decoding: matches!(r.phase, Phase::Decode),
-                }),
+                Some(r) => {
+                    // the snapshot leaves this replica: close its span so
+                    // the re-dispatched copy (a fresh request id on the
+                    // survivor) starts a clean lifecycle
+                    if let Some(p) = r.open_span() {
+                        self.trace.end(now, None, Some(id), p);
+                    }
+                    out.push(InFlightSnapshot {
+                        spec: *spec,
+                        context_tokens: r.context_len(),
+                        decoding: matches!(r.phase, Phase::Decode),
+                    });
+                }
                 // arrival event still pending: nothing computed yet
                 None => out.push(InFlightSnapshot {
                     spec: *spec,
@@ -405,7 +426,12 @@ impl<X: Executor> Orchestrator<X> {
     fn fail_request(&mut self, rid: RequestId) {
         let now = self.queue.now();
         let r = self.requests.get_mut(&rid).unwrap();
+        let open = r.open_span();
         r.fail(now);
+        if let Some(p) = open {
+            self.trace.end(now, None, Some(rid), p);
+        }
+        self.trace.instant(now, None, Some(rid), InstantKind::Failure);
         if let Some(o) = r.outcome() {
             self.report.record(o);
         }
@@ -436,6 +462,9 @@ impl<X: Executor> Orchestrator<X> {
 
         let multimodal = spec.is_multimodal();
         self.requests.insert(id, req);
+        let now = self.queue.now();
+        self.trace.instant(now, None, Some(id), InstantKind::Arrival);
+        self.trace.begin(now, None, Some(id), SpanPhase::Queue);
         if multimodal && self.cfg.epd.is_some() {
             self.route_encode(id);
         } else {
@@ -714,12 +743,22 @@ impl<X: Executor> Orchestrator<X> {
                 ) as usize;
                 if admit < offline.len() {
                     self.preemptions += (offline.len() - admit) as u64;
+                    let t = self.queue.now();
+                    for rid in &offline[admit..] {
+                        self.trace.instant(t, Some(id), Some(*rid), InstantKind::Preemption);
+                    }
                     let keep: Vec<RequestId> = offline.iter().copied().take(admit).collect();
                     plan.decode_ids = online.into_iter().chain(keep).collect();
                 }
             }
         }
         self.preemptions += plan.preempted.len() as u64;
+        if !plan.preempted.is_empty() {
+            let t = self.queue.now();
+            for rid in &plan.preempted {
+                self.trace.instant(t, Some(id), Some(*rid), InstantKind::Preemption);
+            }
+        }
 
         if plan.is_empty() {
             return false;
@@ -752,6 +791,7 @@ impl<X: Executor> Orchestrator<X> {
                 .collect(),
         };
         let now = self.queue.now();
+        self.note_phase_starts(id, now, &work);
         let ticket = self.executor.submit_iteration(id, now, &work);
         let (outcome, pending) = if self.cfg.pipeline_depth.max(1) == 1 {
             // depth 1 recovers the blocking contract: complete in-line
@@ -778,6 +818,14 @@ impl<X: Executor> Orchestrator<X> {
         let done = host_done.max(self.device_free[id]) + outcome.device_s;
         self.host_free[id] = host_done;
         self.device_free[id] = done;
+        // instance-utilization track: one span per device iteration
+        self.trace.complete(
+            done - outcome.device_s,
+            Some(id),
+            None,
+            SpanPhase::Iteration,
+            outcome.device_s,
+        );
         self.inflight.entry(id).or_default().push_back(InFlight {
             seq: ticket.seq,
             work,
@@ -786,6 +834,40 @@ impl<X: Executor> Orchestrator<X> {
         });
         self.queue.schedule_at(done, Ev::IterDone(id, ticket.seq));
         true
+    }
+
+    /// Stamp first-submit phase starts on the live requests and emit the
+    /// matching span transitions.  The timestamp writes are unconditional
+    /// pure bookkeeping — they feed the per-phase latency breakdown and
+    /// are never read by a scheduling decision — so trace-on and
+    /// trace-off runs stay bit-identical.
+    fn note_phase_starts(&mut self, id: InstanceId, now: f64, work: &IterationWork) {
+        for e in &work.encodes {
+            if let Some(r) = self.requests.get_mut(&e.req) {
+                if matches!(r.phase, Phase::Encode) && r.encode_start_s.is_none() {
+                    r.encode_start_s = Some(now);
+                    self.trace.end(now, Some(id), Some(e.req), SpanPhase::Queue);
+                    self.trace.begin(now, Some(id), Some(e.req), SpanPhase::Encode);
+                }
+            }
+        }
+        for p in &work.prefills {
+            if let Some(r) = self.requests.get_mut(&p.req) {
+                if matches!(r.phase, Phase::Prefill) && r.prefill_start_s.is_none() {
+                    r.prefill_start_s = Some(now);
+                    self.trace.end(now, Some(id), Some(p.req), SpanPhase::Queue);
+                    self.trace.begin(now, Some(id), Some(p.req), SpanPhase::Prefill);
+                }
+            }
+        }
+        for d in &work.decodes {
+            if let Some(r) = self.requests.get_mut(&d.req) {
+                if matches!(r.phase, Phase::Decode) && r.decode_start_s.is_none() {
+                    r.decode_start_s = Some(now);
+                    self.trace.begin(now, Some(id), Some(d.req), SpanPhase::Decode);
+                }
+            }
+        }
     }
 
     fn on_iter_done(&mut self, id: InstanceId, seq: u64) {
@@ -831,6 +913,8 @@ impl<X: Executor> Orchestrator<X> {
             };
             if advanced {
                 self.instances[id].encode_queue.retain(|x| *x != rid);
+                self.trace.end(now, Some(id), Some(rid), SpanPhase::Encode);
+                self.trace.begin(now, Some(id), Some(rid), SpanPhase::Queue);
                 self.route_prefill(rid);
             }
         }
@@ -852,15 +936,21 @@ impl<X: Executor> Orchestrator<X> {
                 r.advance_prefill(p.tokens, now)
             };
             if done {
-                let (finished, ttft, ctx, input) = {
+                let (finished, ttft, ctx, input, ft) = {
                     let r = &self.requests[&rid];
                     (
                         r.phase == Phase::Done,
                         r.first_token_s.unwrap_or(now) - r.spec.arrival_s,
                         r.context_len(),
                         r.spec.input_tokens,
+                        r.first_token_s,
                     )
                 };
+                self.trace.end(now, Some(id), Some(rid), SpanPhase::Prefill);
+                if ft == Some(now) {
+                    // just stamped (not a fault-recovery re-run)
+                    self.trace.instant(now, Some(id), Some(rid), InstantKind::FirstToken);
+                }
                 self.instances[id].prefill_queue.retain(|x| *x != rid);
                 self.instances[id].monitor.observe_ttft(ttft);
                 // feed the TTFT predictor (online factor learning)
@@ -1057,6 +1147,9 @@ impl<X: Executor> Orchestrator<X> {
             }
             self.migrations += 1;
             let delay = self.executor.kv_transfer_s(ctx);
+            let t = self.queue.now();
+            self.trace.instant(t, Some(target), Some(rid), InstantKind::Migration);
+            self.trace.complete(t, Some(target), Some(rid), SpanPhase::KvHandoff, delay);
             self.queue.schedule_in(delay, Ev::KvReady(target));
             my_load -= ctx as f64;
             moved += 1;
@@ -1106,6 +1199,9 @@ impl<X: Executor> Orchestrator<X> {
             self.instances[target].kv_tokens += ctx;
             self.instances[target].running.push(rid);
             self.requests.get_mut(&rid).unwrap().migrations += 1;
+            let t = self.queue.now();
+            self.trace.instant(t, Some(target), Some(rid), InstantKind::Migration);
+            self.trace.complete(t, Some(target), Some(rid), SpanPhase::KvHandoff, delay);
             self.queue.schedule_in(delay, Ev::KvReady(target));
         }
     }
@@ -1115,20 +1211,26 @@ impl<X: Executor> Orchestrator<X> {
     /// the two used to collide under one name, which never compiled.)
     fn complete_request(&mut self, rid: RequestId) {
         self.prefill_home.remove(&rid);
+        let now = self.queue.now();
         if let Some(r) = self.requests.get(&rid) {
+            if r.decode_start_s.is_some() {
+                self.trace.end(now, None, Some(rid), SpanPhase::Decode);
+            }
+            self.trace.instant(now, None, Some(rid), InstantKind::Completion);
             if let Some(o) = r.outcome() {
                 self.report.record(o);
             }
         }
-        self.executor.finished(rid, self.queue.now());
+        self.executor.finished(rid, now);
     }
 
     // --- monitoring / role switching -----------------------------------
 
     fn on_monitor(&mut self) {
+        let now = self.queue.now();
         // executor policy re-planning rides the monitor cadence (EPLB
         // rebalances etc. — a default no-op for policy-free executors)
-        self.executor.on_control_tick(self.queue.now());
+        self.executor.on_control_tick(now);
         // settle drained transitional instances
         for id in 0..self.instances.len() {
             let kind = self.pools.kind(id);
@@ -1157,14 +1259,17 @@ impl<X: Executor> Orchestrator<X> {
                 2,
             );
             for f in flips {
-                match f {
+                let inst = match f {
                     RoleFlip::ToPrefill(i) => {
                         self.pools.flip_to_prefill(i, 2);
+                        i
                     }
                     RoleFlip::ToDecode(i) => {
                         self.pools.flip_to_decode(i);
+                        i
                     }
-                }
+                };
+                self.trace.instant(now, Some(inst), None, InstantKind::RoleFlip);
             }
         }
         // keep kicking idle instances with queued work (e.g. after flips)
@@ -1182,6 +1287,7 @@ impl<X: Executor> Orchestrator<X> {
 
     fn on_fault(&mut self, id: InstanceId) {
         let now = self.queue.now();
+        self.trace.instant(now, Some(id), None, InstantKind::Fault);
         self.instances[id].failed = true;
         self.instances[id].busy = false;
         // drain the pipeline: the device work is lost, but every still
@@ -1227,22 +1333,42 @@ impl<X: Executor> Orchestrator<X> {
                     self.place_decode_for(rid, home, ctx);
                 }
                 (Phase::Decode, _) => {
-                    // recompute: back to prefill from scratch
+                    // recompute: back to prefill from scratch.  Close
+                    // whatever span is open and restart the attribution
+                    // stamps — the re-run re-opens Prefill at its first
+                    // re-submitted chunk.
                     if let Some(r) = self.requests.get_mut(&rid) {
+                        if let Some(p) = r.open_span() {
+                            self.trace.end(now, Some(id), Some(rid), p);
+                        }
                         r.phase = Phase::Prefill;
                         r.prefilled = 0;
                         r.prefix_hit_tokens = 0;
                         r.preemptions += 1;
+                        r.prefill_start_s = None;
+                        r.decode_start_s = None;
+                        self.trace.begin(now, Some(id), Some(rid), SpanPhase::Queue);
+                        self.trace.instant(now, Some(id), Some(rid), InstantKind::Preemption);
                     }
                     self.route_prefill(rid);
                 }
                 (Phase::Prefill, _) => {
                     if let Some(r) = self.requests.get_mut(&rid) {
+                        if r.prefill_start_s.take().is_some() {
+                            self.trace.end(now, Some(id), Some(rid), SpanPhase::Prefill);
+                            self.trace.begin(now, Some(id), Some(rid), SpanPhase::Queue);
+                        }
                         r.prefilled = 0;
                     }
                     self.route_prefill(rid);
                 }
                 (Phase::Encode, _) => {
+                    if let Some(r) = self.requests.get_mut(&rid) {
+                        if r.encode_start_s.take().is_some() {
+                            self.trace.end(now, Some(id), Some(rid), SpanPhase::Encode);
+                            self.trace.begin(now, Some(id), Some(rid), SpanPhase::Queue);
+                        }
+                    }
                     self.route_encode(rid);
                 }
                 _ => {}
@@ -1255,6 +1381,7 @@ impl<X: Executor> Orchestrator<X> {
     }
 
     fn on_recover(&mut self, id: InstanceId) {
+        self.trace.instant(self.queue.now(), Some(id), None, InstantKind::Recovery);
         self.instances[id].failed = false;
         self.kick(id);
     }

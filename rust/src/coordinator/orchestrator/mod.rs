@@ -278,6 +278,14 @@ pub trait Executor: Send {
     fn on_control_tick(&mut self, now_s: f64) {
         let _ = now_s;
     }
+
+    /// Install the trace handle executor-internal events (EPLB replans,
+    /// calibration updates) are emitted through.  Installed by
+    /// [`Orchestrator::set_trace`] alongside the orchestrator's own
+    /// handle.  Default: executor has nothing to trace.
+    fn set_trace(&mut self, trace: crate::obs::TraceHandle) {
+        let _ = trace;
+    }
 }
 
 /// Executor-agnostic orchestrator configuration: everything about the
@@ -371,6 +379,40 @@ pub struct RunResult {
     pub truncated: bool,
     /// Per-instance (iterations, tokens generated) for utilization checks.
     pub per_instance: Vec<(u64, u64)>,
+}
+
+impl RunResult {
+    /// Export the run's policy counters into the unified registry under
+    /// stable `xllm_*` names (the serving-quality metrics come from
+    /// [`ServingReport::export_metrics`]).
+    pub fn export_metrics(&self, reg: &mut crate::obs::MetricsRegistry) {
+        self.export_metrics_replica(reg, None);
+    }
+
+    /// Like [`Self::export_metrics`], but per-instance gauges carry a
+    /// `replica` label so N fleet replicas don't overwrite each other
+    /// (counters accumulate either way).
+    pub fn export_metrics_replica(
+        &self,
+        reg: &mut crate::obs::MetricsRegistry,
+        replica: Option<usize>,
+    ) {
+        reg.inc("xllm_role_flips_total", self.role_flips);
+        reg.inc("xllm_preemptions_total", self.preemptions);
+        reg.inc("xllm_migrations_total", self.migrations);
+        reg.inc("xllm_recoveries_total", self.recoveries);
+        reg.inc("xllm_prefix_hits_total", self.prefix_hits);
+        reg.inc("xllm_iterations_total", self.iterations);
+        reg.inc("xllm_events_total", self.events);
+        let label = |i: usize| match replica {
+            Some(r) => format!("{{replica=\"{r}\",instance=\"{i}\"}}"),
+            None => format!("{{instance=\"{i}\"}}"),
+        };
+        for (i, (iters, tokens)) in self.per_instance.iter().enumerate() {
+            reg.set_gauge(&format!("xllm_instance_iterations{}", label(i)), *iters as f64);
+            reg.set_gauge(&format!("xllm_instance_tokens{}", label(i)), *tokens as f64);
+        }
+    }
 }
 
 /// Aggregate load snapshot a replica publishes with each heartbeat

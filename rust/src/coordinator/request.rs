@@ -5,7 +5,8 @@
 //! (paper §3.2 "stateless instance"), which is what lets any instance
 //! serve any phase and pools flip roles with zero wait.
 
-use crate::metrics::{RequestOutcome, Slo};
+use crate::metrics::{PhaseBreakdown, RequestOutcome, Slo};
+use crate::obs::SpanPhase;
 use crate::workload::{RequestClass, RequestSpec};
 
 pub type RequestId = u64;
@@ -40,6 +41,13 @@ pub struct Request {
     /// Timestamps (simulated seconds).
     pub first_token_s: Option<f64>,
     pub finish_s: Option<f64>,
+    /// Phase-start timestamps (first submitted work per phase) — pure
+    /// bookkeeping for the per-phase latency breakdown and the trace
+    /// spans; never read by scheduling decisions.  Fault-recovery
+    /// recompute resets them so the re-run restarts the attribution.
+    pub encode_start_s: Option<f64>,
+    pub prefill_start_s: Option<f64>,
+    pub decode_start_s: Option<f64>,
     /// Prefix tokens satisfied from the global KV cache (skip prefill).
     pub prefix_hit_tokens: u64,
     /// Times this request was preempted (offline co-location).
@@ -61,6 +69,9 @@ impl Request {
             encoded: false,
             first_token_s: None,
             finish_s: None,
+            encode_start_s: None,
+            prefill_start_s: None,
+            decode_start_s: None,
             prefix_hit_tokens: 0,
             preemptions: 0,
             migrations: 0,
@@ -138,6 +149,54 @@ impl Request {
         self.finish_s = Some(now_s);
     }
 
+    /// The lifecycle span currently open for this request, derived from
+    /// the phase + the phase-start stamps (the trace layer closes it on
+    /// failure/fault/drain).  `None` between prefill completion and the
+    /// first decode submit — the handoff gap, traced as its own
+    /// known-duration span.
+    pub fn open_span(&self) -> Option<SpanPhase> {
+        match self.phase {
+            Phase::Decode if self.decode_start_s.is_some() => Some(SpanPhase::Decode),
+            Phase::Decode => None,
+            Phase::Prefill if self.prefill_start_s.is_some() => Some(SpanPhase::Prefill),
+            Phase::Prefill => Some(SpanPhase::Queue),
+            Phase::Encode if self.encode_start_s.is_some() => Some(SpanPhase::Encode),
+            Phase::Encode => Some(SpanPhase::Queue),
+            Phase::Done | Phase::Failed => None,
+        }
+    }
+
+    /// Per-phase latency attribution from the recorded stamps.  Each
+    /// component clamps non-negative (fault recovery can re-run prefill
+    /// after the first token) and `queue_s` takes the residual, so the
+    /// four parts never exceed the E2E span.
+    fn phase_breakdown(&self, finish: f64) -> PhaseBreakdown {
+        let e2e = (finish - self.spec.arrival_s).max(0.0);
+        let prefill_s = match (self.prefill_start_s, self.first_token_s) {
+            (Some(p0), Some(ft)) => (ft - p0).max(0.0),
+            _ => 0.0,
+        };
+        let decode_s = self.decode_start_s.map_or(0.0, |d0| (finish - d0).max(0.0));
+        let handoff_s = match (self.first_token_s, self.decode_start_s) {
+            (Some(ft), Some(d0)) => (d0 - ft).max(0.0),
+            _ => 0.0,
+        };
+        let attributed = prefill_s + handoff_s + decode_s;
+        let (prefill_s, handoff_s, decode_s) = if attributed > e2e && attributed > 0.0 {
+            // recovery overlap: scale the parts into the E2E budget
+            let k = e2e / attributed;
+            (prefill_s * k, handoff_s * k, decode_s * k)
+        } else {
+            (prefill_s, handoff_s, decode_s)
+        };
+        PhaseBreakdown {
+            queue_s: (e2e - prefill_s - handoff_s - decode_s).max(0.0),
+            prefill_s,
+            handoff_s,
+            decode_s,
+        }
+    }
+
     /// Completion record for the metrics layer.
     pub fn outcome(&self) -> Option<RequestOutcome> {
         let finish = self.finish_s?;
@@ -148,6 +207,7 @@ impl Request {
             input_tokens: self.spec.input_tokens,
             output_tokens: self.decoded,
             failed: matches!(self.phase, Phase::Failed),
+            phases: self.phase_breakdown(finish),
         })
     }
 }

@@ -51,6 +51,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod service;

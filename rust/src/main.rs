@@ -32,6 +32,13 @@
 //! deterministic single-queue interleave); `--backend pjrt` (fleet)
 //! runs N real `PjrtExecutor` replicas over the AOT artifacts behind
 //! the same control plane.
+//!
+//! Observability (serve, simulate, fleet): `--trace-out PATH` records
+//! the request-lifecycle trace and writes Perfetto-loadable Chrome
+//! trace JSON; `--metrics-out PATH` writes the unified metrics registry
+//! as Prometheus text exposition.  Tracing is off unless requested —
+//! untraced runs stay bit-identical to pre-observability builds.
+//! `--quiet` / `-v` gate the stderr progress log.
 
 use std::path::Path;
 
@@ -43,8 +50,9 @@ use xllm::coordinator::DispatchPolicy;
 use xllm::engine::EnginePolicies;
 use xllm::metrics::Slo;
 use xllm::model;
+use xllm::obs::{self, chrome_trace_json, prometheus_text, MetricsRegistry, TraceHandle};
 use xllm::server::{synth_prompt, GenRequest, Server};
-use xllm::sim::cluster::{run as sim_run, ClusterConfig};
+use xllm::sim::cluster::{ClusterConfig, ClusterSim};
 use xllm::sim::EngineFeatures;
 use xllm::util::json::Json;
 use xllm::util::Rng;
@@ -52,6 +60,13 @@ use xllm::workload::scenarios::{scenario, SCENARIO_NAMES};
 
 fn main() {
     let args = Args::from_env();
+    // --quiet / -v gate every progress notice (stderr only; command
+    // stdout stays the machine-readable JSON result)
+    if args.has_flag("quiet") {
+        obs::log::set_verbosity(obs::log::QUIET);
+    } else if args.has_flag("-v") || args.has_flag("verbose") {
+        obs::log::set_verbosity(obs::log::DEBUG);
+    }
     let code = match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
         Some("simulate") => cmd_simulate(&args),
@@ -92,6 +107,42 @@ fn main() {
     }
 }
 
+/// `--trace-out PATH` / `--metrics-out PATH` (serve, simulate, fleet).
+/// The recording trace handle exists only when `--trace-out` was given —
+/// the default stays the zero-overhead no-op sink, so untraced runs are
+/// bit-identical to pre-observability builds.
+fn obs_outputs(args: &Args) -> (TraceHandle, Option<String>, Option<String>) {
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let metrics_out = args.get("metrics-out").map(str::to_string);
+    let trace = if trace_out.is_some() { TraceHandle::recording() } else { TraceHandle::off() };
+    (trace, trace_out, metrics_out)
+}
+
+/// Drain the recorded events into a Perfetto-loadable Chrome trace file.
+fn write_trace(path: &str, trace: &TraceHandle) -> Result<()> {
+    let events = trace.drain();
+    std::fs::write(path, chrome_trace_json(&events))?;
+    obs::log::info(format!("# trace: {} events -> {path}", events.len()));
+    Ok(())
+}
+
+/// Write the registry as Prometheus text exposition.
+fn write_metrics(path: &str, reg: &MetricsRegistry) -> Result<()> {
+    std::fs::write(path, prometheus_text(reg))?;
+    obs::log::info(format!("# metrics -> {path}"));
+    Ok(())
+}
+
+/// Mean per-phase latency breakdown (queue/prefill/handoff/decode) as a
+/// JSON object for the command result.
+fn phase_seconds_json(report: &xllm::metrics::ServingReport) -> Json {
+    let mut pj = Json::obj();
+    for (name, s) in report.phase_summaries() {
+        pj = pj.set(name, s.mean());
+    }
+    pj
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let artifacts = args.get_or("artifacts", "artifacts");
     let n_requests = args.get_u64("requests", 16) as usize;
@@ -111,7 +162,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .map_err(|e| anyhow::anyhow!(e))?,
         ..ServeConfig::default()
     };
+    let (trace, trace_out, metrics_out) = obs_outputs(args);
     let mut server = Server::new(Path::new(&artifacts), cfg)?;
+    if trace.enabled() {
+        server.set_trace(trace.clone());
+    }
     for i in 0..n_requests {
         server.submit(GenRequest {
             id: i as u64,
@@ -142,10 +197,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .set("graph_full_hits", server.stats.graph_full_hits)
         .set("graph_padded_hits", server.stats.graph_padded_hits)
         .set("graph_eager_fallbacks", server.stats.graph_eager_fallbacks)
-        .set("calibration_updates", server.stats.calibration_updates);
+        .set("calibration_updates", server.stats.calibration_updates)
+        .set("phase_seconds", phase_seconds_json(&report));
     println!("{}", out.to_string());
     if let Some(r) = results.first() {
-        println!("# sample generation (req {}): {:?}", r.id, &r.tokens);
+        obs::log::info(format!("# sample generation (req {}): {:?}", r.id, &r.tokens));
+    }
+    if let Some(p) = &metrics_out {
+        let mut reg = MetricsRegistry::new();
+        report.export_metrics(&mut reg);
+        server.stats.export_metrics(&mut reg);
+        write_metrics(p, &reg)?;
+    }
+    if let Some(p) = &trace_out {
+        write_trace(p, &trace)?;
     }
     Ok(())
 }
@@ -212,9 +277,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let workload = sc.generate(horizon, rate, &mut rng);
     let n_reqs = workload.len();
     let pipeline_depth = cfg.pipeline_depth;
-    let res = sim_run(cfg, workload);
+    let (trace, trace_out, metrics_out) = obs_outputs(args);
+    let mut sim = ClusterSim::new(cfg);
+    if trace.enabled() {
+        sim.set_trace(trace.clone());
+    }
+    let (res, exec) = sim.run_with_executor(workload);
     let slo = Slo::interactive(ttft, tpot);
-    let report = res.report;
+    let report = res.report.clone();
     let out = Json::obj()
         .set("scenario", scenario_name)
         .set("model", model_name)
@@ -235,8 +305,19 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         .set("migrations", res.migrations)
         .set("preemptions", res.preemptions)
         .set("iterations", res.iterations)
-        .set("pipeline_depth", pipeline_depth);
+        .set("pipeline_depth", pipeline_depth)
+        .set("phase_seconds", phase_seconds_json(&report));
     println!("{}", out.to_string());
+    if let Some(p) = &metrics_out {
+        let mut reg = MetricsRegistry::new();
+        report.export_metrics(&mut reg);
+        res.export_metrics(&mut reg);
+        exec.policy_counters().export_metrics(&mut reg);
+        write_metrics(p, &reg)?;
+    }
+    if let Some(p) = &trace_out {
+        write_trace(p, &trace)?;
+    }
     Ok(())
 }
 
@@ -270,6 +351,8 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         threads: args.get_u64("threads", 1).max(1) as usize,
         ..ControlPlaneConfig::default()
     };
+    let (trace, trace_out, metrics_out) = obs_outputs(args);
+    control.trace = trace.clone();
     let fail_at = args.get_f64("fail-at", f64::NAN);
     if fail_at.is_finite() {
         control.replica_faults.push((fail_at, args.get_u64("fail-replica", 0) as usize));
@@ -301,9 +384,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             let artifacts = args.get_or("artifacts", "artifacts");
             let dir = Path::new(&artifacts);
             if !dir.join("manifest.txt").exists() {
-                eprintln!(
+                obs::log::info(format!(
                     "# skipping pjrt fleet: {artifacts}/ not built (run `make artifacts`)"
-                );
+                ));
                 return Ok(());
             }
             let serve_cfg = ServeConfig {
@@ -376,8 +459,23 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         .set("engine_policies", policies.label())
         .set("backend", backend)
         .set("threads", threads)
-        .set("truncated", res.truncated);
+        .set("truncated", res.truncated)
+        .set("phase_seconds", phase_seconds_json(report));
     println!("{}", out.to_string());
+    if let Some(p) = &metrics_out {
+        let mut reg = MetricsRegistry::new();
+        res.report.export_metrics(&mut reg);
+        res.counters.export_metrics(&mut reg);
+        for (r, rep) in res.per_replica.iter().enumerate() {
+            rep.export_metrics_replica(&mut reg, Some(r));
+        }
+        reg.set_gauge("xllm_replicas_final", res.n_replicas_final as f64);
+        reg.set_gauge("xllm_replicas_total", res.per_replica.len() as f64);
+        write_metrics(p, &reg)?;
+    }
+    if let Some(p) = &trace_out {
+        write_trace(p, &trace)?;
+    }
     Ok(())
 }
 

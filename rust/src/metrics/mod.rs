@@ -4,6 +4,7 @@
 //! throughput under a TPOT (or E2E) constraint, request rate, SLO
 //! attainment, and goodput (requests/s that met their SLO).
 
+use crate::obs::{MetricsRegistry, LATENCY_BUCKETS_S, TPOT_BUCKETS_S};
 use crate::util::Summary;
 
 /// SLO targets for a request class (seconds). `f64::INFINITY` = unconstrained.
@@ -37,6 +38,27 @@ impl Slo {
     }
 }
 
+/// Where one request's time went, in seconds (§3 phase attribution).
+///
+/// `queue_s` is the residual: everything not attributable to prefill,
+/// handoff, or decode — dispatch wait, encode time, and fault-recovery
+/// re-queueing all land there.  Components are clamped non-negative
+/// (recovery recompute can restart prefill after the first token), so
+/// the four fields sum to at most the E2E latency.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseBreakdown {
+    pub queue_s: f64,
+    pub prefill_s: f64,
+    pub handoff_s: f64,
+    pub decode_s: f64,
+}
+
+impl PhaseBreakdown {
+    pub fn total_s(&self) -> f64 {
+        self.queue_s + self.prefill_s + self.handoff_s + self.decode_s
+    }
+}
+
 /// Completion record for one request.
 #[derive(Debug, Clone, Copy)]
 pub struct RequestOutcome {
@@ -47,6 +69,8 @@ pub struct RequestOutcome {
     pub output_tokens: u64,
     /// True if the request was dropped/failed rather than completed.
     pub failed: bool,
+    /// Per-phase latency attribution (queue/prefill/handoff/decode).
+    pub phases: PhaseBreakdown,
 }
 
 impl RequestOutcome {
@@ -105,7 +129,15 @@ impl ServingReport {
 
     fn horizon(&self) -> f64 {
         let start = self.outcomes.iter().map(|o| o.arrival_s).fold(f64::INFINITY, f64::min);
-        let end = self.outcomes.iter().map(|o| o.finish_s).fold(0.0, f64::max);
+        // failed requests contribute no useful work, so their (possibly
+        // very late) failure time must not stretch the horizon and
+        // deflate every throughput/goodput rate computed over it
+        let end = self
+            .outcomes
+            .iter()
+            .filter(|o| !o.failed)
+            .map(|o| o.finish_s)
+            .fold(0.0, f64::max);
         (end - start).max(1e-9)
     }
 
@@ -167,6 +199,49 @@ impl ServingReport {
         }
         s
     }
+
+    /// Per-phase latency distributions over completed requests, in
+    /// canonical order: `[queue, prefill, handoff, decode]`, each named.
+    pub fn phase_summaries(&self) -> [(&'static str, Summary); 4] {
+        let mut out = [
+            ("queue", Summary::new()),
+            ("prefill", Summary::new()),
+            ("handoff", Summary::new()),
+            ("decode", Summary::new()),
+        ];
+        for o in self.outcomes.iter().filter(|o| !o.failed) {
+            out[0].1.add(o.phases.queue_s);
+            out[1].1.add(o.phases.prefill_s);
+            out[2].1.add(o.phases.handoff_s);
+            out[3].1.add(o.phases.decode_s);
+        }
+        out
+    }
+
+    /// Export request-level metrics into the unified registry under
+    /// their stable names (DESIGN.md §Observability).
+    pub fn export_metrics(&self, reg: &mut MetricsRegistry) {
+        reg.inc("xllm_requests_total", self.n_requests() as u64);
+        reg.inc("xllm_requests_completed_total", self.n_completed() as u64);
+        reg.inc("xllm_requests_failed_total", (self.n_requests() - self.n_completed()) as u64);
+        let (mut inp, mut out) = (0u64, 0u64);
+        for o in self.outcomes.iter().filter(|o| !o.failed) {
+            inp += o.input_tokens;
+            out += o.output_tokens;
+            reg.observe("xllm_ttft_seconds", LATENCY_BUCKETS_S, o.ttft());
+            reg.observe("xllm_e2e_seconds", LATENCY_BUCKETS_S, o.e2e());
+            if o.output_tokens > 1 {
+                reg.observe("xllm_tpot_seconds", TPOT_BUCKETS_S, o.tpot());
+            }
+            reg.observe("xllm_phase_queue_seconds", LATENCY_BUCKETS_S, o.phases.queue_s);
+            reg.observe("xllm_phase_prefill_seconds", LATENCY_BUCKETS_S, o.phases.prefill_s);
+            reg.observe("xllm_phase_handoff_seconds", LATENCY_BUCKETS_S, o.phases.handoff_s);
+            reg.observe("xllm_phase_decode_seconds", LATENCY_BUCKETS_S, o.phases.decode_s);
+        }
+        reg.inc("xllm_tokens_input_total", inp);
+        reg.inc("xllm_tokens_output_total", out);
+        reg.set_gauge("xllm_output_tokens_per_second", self.output_throughput());
+    }
 }
 
 #[cfg(test)]
@@ -181,6 +256,7 @@ mod tests {
             input_tokens: inp,
             output_tokens: out,
             failed: false,
+            phases: PhaseBreakdown::default(),
         }
     }
 
@@ -243,5 +319,64 @@ mod tests {
         r.record(bad);
         assert!((r.output_throughput() - 50.0).abs() < 1e-9);
         assert_eq!(r.n_completed(), 1);
+    }
+
+    #[test]
+    fn late_failure_does_not_deflate_throughput() {
+        // regression: horizon() used to take max(finish_s) over ALL
+        // outcomes, so one request failing long after the last real
+        // completion stretched the horizon and sank every rate
+        let mut r = ServingReport::new();
+        r.record(outcome(0.0, 0.1, 1.0, 10, 50));
+        r.record(outcome(0.0, 0.2, 2.0, 10, 50));
+        let before = r.output_throughput();
+        let mut bad = outcome(0.5, 0.5, 100.0, 10, 0); // fails at t=100
+        bad.failed = true;
+        r.record(bad);
+        assert!(
+            (r.output_throughput() - before).abs() < 1e-12,
+            "a late failure changed throughput: {} -> {}",
+            before,
+            r.output_throughput()
+        );
+        assert!((r.request_rate() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phase_summaries_cover_completed_only() {
+        let mut r = ServingReport::new();
+        let mut a = outcome(0.0, 0.5, 1.5, 10, 5);
+        a.phases =
+            PhaseBreakdown { queue_s: 0.1, prefill_s: 0.4, handoff_s: 0.0, decode_s: 1.0 };
+        r.record(a);
+        let mut bad = outcome(0.0, 0.1, 9.0, 10, 0);
+        bad.failed = true;
+        bad.phases.queue_s = 9.0;
+        r.record(bad);
+        let phases = r.phase_summaries();
+        assert_eq!(phases[0].0, "queue");
+        assert_eq!(phases[0].1.len(), 1, "failed request excluded");
+        assert!((phases[0].1.mean() - 0.1).abs() < 1e-12);
+        assert!((phases[3].1.mean() - 1.0).abs() < 1e-12);
+        assert!((a.phases.total_s() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn export_metrics_reconciles_with_report() {
+        let mut r = ServingReport::new();
+        r.record(outcome(0.0, 0.1, 1.0, 10, 50));
+        r.record(outcome(0.0, 0.2, 2.0, 20, 30));
+        let mut bad = outcome(0.0, 0.1, 1.0, 5, 0);
+        bad.failed = true;
+        r.record(bad);
+        let mut reg = MetricsRegistry::new();
+        r.export_metrics(&mut reg);
+        assert_eq!(reg.counter("xllm_requests_total"), 3);
+        assert_eq!(reg.counter("xllm_requests_completed_total"), 2);
+        assert_eq!(reg.counter("xllm_requests_failed_total"), 1);
+        assert_eq!(reg.counter("xllm_tokens_input_total"), 30);
+        assert_eq!(reg.counter("xllm_tokens_output_total"), 80);
+        assert_eq!(reg.histogram("xllm_ttft_seconds").unwrap().count, 2);
+        assert_eq!(reg.histogram("xllm_phase_decode_seconds").unwrap().count, 2);
     }
 }

@@ -1,0 +1,306 @@
+//! Exporters: Chrome trace-event JSON (Perfetto-loadable) and
+//! Prometheus text-format exposition.
+//!
+//! # Chrome trace layout
+//!
+//! One *process* (pid) per fleet replica (`pid = replica + 1`; pid 0 is
+//! the control plane / standalone run), one *thread* (tid) per instance
+//! within the replica (`tid = instance + 1`; tid 0 carries
+//! replica-level events).  Lifecycle spans become `"X"` complete events
+//! (internal Begin/End pairs are matched per `(replica, request,
+//! phase)` in emission order — an `X` needs no cross-track pairing, so
+//! a span that *ends* on a different instance than it began still
+//! renders), instants become `"i"` events, and metadata events name
+//! every process/thread.  Timestamps are virtual-clock microseconds.
+//!
+//! Event order in the output is deterministic regardless of how a
+//! threaded fleet interleaved its emissions: events are sorted by
+//! `(time, pid, tid, request, kind)` before serialization.
+
+use crate::obs::metrics::MetricsRegistry;
+use crate::obs::trace::{SpanPhase, TraceEvent, TraceEventKind};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+fn pid(ev: &TraceEvent) -> usize {
+    ev.replica.map_or(0, |r| r + 1)
+}
+
+fn tid(ev: &TraceEvent) -> usize {
+    ev.instance.map_or(0, |i| i + 1)
+}
+
+fn kind_rank(k: &TraceEventKind) -> (u8, u8) {
+    match k {
+        TraceEventKind::Begin(p) => (0, *p as u8),
+        TraceEventKind::Complete(p, _) => (1, *p as u8),
+        TraceEventKind::Instant(i) => (2, *i as u8),
+        TraceEventKind::End(p) => (3, *p as u8),
+    }
+}
+
+/// Render a recorded event stream as Chrome trace-event JSON.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    let mut evs: Vec<&TraceEvent> = events.iter().collect();
+    evs.sort_by(|a, b| {
+        a.t_s
+            .total_cmp(&b.t_s)
+            .then_with(|| pid(a).cmp(&pid(b)))
+            .then_with(|| tid(a).cmp(&tid(b)))
+            .then_with(|| a.req.cmp(&b.req))
+            .then_with(|| kind_rank(&a.kind).cmp(&kind_rank(&b.kind)))
+            .then_with(|| a.seq.cmp(&b.seq))
+    });
+
+    // match Begin/End pairs into X events per (replica, req, phase) —
+    // pairing follows each replica's emission order (sink seq), which a
+    // shared threaded sink preserves per replica
+    let mut spans: Vec<(usize, usize, Option<u64>, SpanPhase, f64, f64)> = Vec::new();
+    let mut open: BTreeMap<(usize, u64, u8), (f64, usize, usize, SpanPhase)> = BTreeMap::new();
+    let mut pairing: Vec<&TraceEvent> = events.iter().collect();
+    pairing.sort_by_key(|e| (pid(e), e.seq));
+    let mut t_max = 0.0f64;
+    for ev in &pairing {
+        t_max = t_max.max(ev.t_s);
+        let key = |p: &SpanPhase| (pid(ev), ev.req.unwrap_or(u64::MAX), *p as u8);
+        match &ev.kind {
+            TraceEventKind::Begin(p) => {
+                open.insert(key(p), (ev.t_s, pid(ev), tid(ev), *p));
+            }
+            TraceEventKind::End(p) => {
+                if let Some((t0, epid, etid, phase)) = open.remove(&key(p)) {
+                    spans.push((epid, etid, ev.req, phase, t0, ev.t_s - t0));
+                }
+            }
+            TraceEventKind::Complete(p, d) => {
+                spans.push((pid(ev), tid(ev), ev.req, *p, ev.t_s, *d));
+                t_max = t_max.max(ev.t_s + d);
+            }
+            TraceEventKind::Instant(_) => {}
+        }
+    }
+    // unclosed spans (truncated run): extend to the last event time
+    for ((_, rq, _), (t0, epid, etid, phase)) in open {
+        let req = if rq == u64::MAX { None } else { Some(rq) };
+        spans.push((epid, etid, req, phase, t0, (t_max - t0).max(0.0)));
+    }
+    spans.sort_by(|a, b| {
+        a.4.total_cmp(&b.4)
+            .then_with(|| a.0.cmp(&b.0))
+            .then_with(|| a.1.cmp(&b.1))
+            .then_with(|| a.2.cmp(&b.2))
+            .then_with(|| (a.3 as u8).cmp(&(b.3 as u8)))
+    });
+
+    let us = |t: f64| (t * 1e6).round();
+    let mut arr = Json::arr();
+
+    // metadata: name every (pid) process and (pid, tid) thread seen
+    let mut pids: Vec<usize> = Vec::new();
+    let mut tids: Vec<(usize, usize)> = Vec::new();
+    for ev in &evs {
+        if !pids.contains(&pid(ev)) {
+            pids.push(pid(ev));
+        }
+        if !tids.contains(&(pid(ev), tid(ev))) {
+            tids.push((pid(ev), tid(ev)));
+        }
+    }
+    pids.sort_unstable();
+    tids.sort_unstable();
+    for p in pids {
+        let name =
+            if p == 0 { "control-plane".to_string() } else { format!("replica {}", p - 1) };
+        arr = arr.push(
+            Json::obj()
+                .set("ph", "M")
+                .set("name", "process_name")
+                .set("pid", p)
+                .set("tid", 0u64)
+                .set("args", Json::obj().set("name", name)),
+        );
+    }
+    for (p, t) in tids {
+        let name = if t == 0 { "events".to_string() } else { format!("instance {}", t - 1) };
+        arr = arr.push(
+            Json::obj()
+                .set("ph", "M")
+                .set("name", "thread_name")
+                .set("pid", p)
+                .set("tid", t)
+                .set("args", Json::obj().set("name", name)),
+        );
+    }
+
+    for (epid, etid, req, phase, t0, dur) in spans {
+        let mut args = Json::obj();
+        if let Some(r) = req {
+            args = args.set("req", r);
+        }
+        arr = arr.push(
+            Json::obj()
+                .set("ph", "X")
+                .set("name", phase.name())
+                .set("cat", "lifecycle")
+                .set("pid", epid)
+                .set("tid", etid)
+                .set("ts", us(t0))
+                .set("dur", us(t0 + dur) - us(t0))
+                .set("args", args),
+        );
+    }
+    for ev in &evs {
+        if let TraceEventKind::Instant(k) = ev.kind {
+            let mut args = Json::obj();
+            if let Some(r) = ev.req {
+                args = args.set("req", r);
+            }
+            arr = arr.push(
+                Json::obj()
+                    .set("ph", "i")
+                    .set("name", k.name())
+                    .set("cat", "lifecycle")
+                    .set("s", "t")
+                    .set("pid", pid(ev))
+                    .set("tid", tid(ev))
+                    .set("ts", us(ev.t_s))
+                    .set("args", args),
+            );
+        }
+    }
+
+    Json::obj()
+        .set("traceEvents", arr)
+        .set("displayTimeUnit", "ms")
+        .to_string()
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Metric family for the `# TYPE` line: registry names may carry an
+/// inline label set (`name{label="v"}`), which belongs on the sample
+/// line but not the type declaration.
+fn family(name: &str) -> &str {
+    name.split('{').next().unwrap_or(name)
+}
+
+/// Render the registry as Prometheus text exposition format.
+pub fn prometheus_text(reg: &MetricsRegistry) -> String {
+    let mut out = String::new();
+    let mut typed: Vec<String> = Vec::new();
+    let mut type_line = |out: &mut String, name: &str, kind: &str| {
+        let fam = family(name);
+        if !typed.iter().any(|t| t == fam) {
+            typed.push(fam.to_string());
+            out.push_str(&format!("# TYPE {fam} {kind}\n"));
+        }
+    };
+    for (name, v) in reg.counters() {
+        type_line(&mut out, name, "counter");
+        out.push_str(&format!("{name} {v}\n"));
+    }
+    for (name, v) in reg.gauges() {
+        type_line(&mut out, name, "gauge");
+        out.push_str(&format!("{name} {}\n", fmt_f64(v)));
+    }
+    for (name, h) in reg.histograms() {
+        type_line(&mut out, name, "histogram");
+        for (i, b) in h.bounds.iter().enumerate() {
+            out.push_str(&format!(
+                "{name}_bucket{{le=\"{}\"}} {}\n",
+                fmt_f64(*b),
+                h.cumulative(i)
+            ));
+        }
+        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+        out.push_str(&format!("{name}_sum {}\n", fmt_f64(h.sum)));
+        out.push_str(&format!("{name}_count {}\n", h.count));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::LATENCY_BUCKETS_S;
+    use crate::obs::trace::{InstantKind, TraceHandle};
+
+    #[test]
+    fn chrome_trace_pairs_spans_and_names_tracks() {
+        let h = TraceHandle::recording();
+        let r0 = h.for_replica(0);
+        r0.instant(0.0, Some(0), Some(1), InstantKind::Arrival);
+        r0.begin(0.0, Some(0), Some(1), SpanPhase::Queue);
+        r0.end(0.25, Some(0), Some(1), SpanPhase::Queue);
+        r0.begin(0.25, Some(0), Some(1), SpanPhase::Prefill);
+        r0.end(0.75, Some(1), Some(1), SpanPhase::Prefill); // ends elsewhere
+        r0.complete(0.75, Some(1), Some(1), SpanPhase::KvHandoff, 0.05);
+        h.instant(1.0, None, None, InstantKind::ScaleUp);
+        let json = chrome_trace_json(&h.drain());
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"ph\":\"M\""));
+        assert!(json.contains("\"process_name\""));
+        assert!(json.contains("\"replica 0\""));
+        assert!(json.contains("\"control-plane\""));
+        assert!(json.contains("\"instance 0\""));
+        // the prefill Begin/End pair becomes one X of 500ms on pid 1
+        assert!(json.contains("\"ph\":\"X\",\"name\":\"prefill\""));
+        assert!(json.contains("\"dur\":500000"));
+        assert!(json.contains("\"ph\":\"i\",\"name\":\"scale_up\""));
+        assert!(json.contains("\"ph\":\"X\",\"name\":\"kv_handoff\""));
+    }
+
+    #[test]
+    fn chrome_trace_is_deterministic_under_interleaving() {
+        let build = |flip: bool| {
+            let h = TraceHandle::recording();
+            let (a, b) = (h.for_replica(0), h.for_replica(1));
+            let emit_a = || {
+                a.begin(0.1, Some(0), Some(1), SpanPhase::Prefill);
+                a.end(0.2, Some(0), Some(1), SpanPhase::Prefill);
+            };
+            let emit_b = || {
+                b.begin(0.1, Some(0), Some(5), SpanPhase::Decode);
+                b.end(0.3, Some(0), Some(5), SpanPhase::Decode);
+            };
+            if flip {
+                emit_b();
+                emit_a();
+            } else {
+                emit_a();
+                emit_b();
+            }
+            chrome_trace_json(&h.drain())
+        };
+        assert_eq!(build(false), build(true), "sink interleaving must not change the export");
+    }
+
+    #[test]
+    fn prometheus_text_format() {
+        let mut reg = MetricsRegistry::new();
+        reg.inc("xllm_requests_total", 42);
+        reg.set_gauge("xllm_replicas_final", 3.0);
+        reg.observe("xllm_ttft_seconds", LATENCY_BUCKETS_S, 0.2);
+        reg.observe("xllm_ttft_seconds", LATENCY_BUCKETS_S, 99.0);
+        let text = prometheus_text(&reg);
+        assert!(text.contains("# TYPE xllm_requests_total counter\nxllm_requests_total 42\n"));
+        assert!(text.contains("# TYPE xllm_replicas_final gauge\nxllm_replicas_final 3\n"));
+        assert!(text.contains("# TYPE xllm_ttft_seconds histogram\n"));
+        assert!(text.contains("xllm_ttft_seconds_bucket{le=\"0.25\"} 1\n"));
+        assert!(text.contains("xllm_ttft_seconds_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("xllm_ttft_seconds_count 2\n"));
+        // every line is either a comment or `name[{labels}] value`
+        for line in text.lines() {
+            assert!(
+                line.starts_with("# ") || line.split(' ').count() == 2,
+                "malformed exposition line: {line}"
+            );
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! Verbosity-gated progress logging (stderr).
+//!
+//! One global level, set once by the CLI from `--quiet` / `-v`:
+//! `0` = errors only, `1` = default progress notices, `2` = verbose.
+//! Everything goes to stderr so command stdout (the JSON result) stays
+//! machine-readable — logging never touches simulation state, so it
+//! cannot perturb determinism.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub const QUIET: u8 = 0;
+pub const INFO: u8 = 1;
+pub const DEBUG: u8 = 2;
+
+static VERBOSITY: AtomicU8 = AtomicU8::new(INFO);
+
+/// Set the global verbosity (CLI: `--quiet` → 0, default → 1, `-v` → 2).
+pub fn set_verbosity(level: u8) {
+    VERBOSITY.store(level, Ordering::Relaxed);
+}
+
+pub fn verbosity() -> u8 {
+    VERBOSITY.load(Ordering::Relaxed)
+}
+
+/// Default-visible progress notice (suppressed by `--quiet`).
+pub fn info(msg: impl AsRef<str>) {
+    if verbosity() >= INFO {
+        eprintln!("{}", msg.as_ref());
+    }
+}
+
+/// Verbose-only detail (shown with `-v`).
+pub fn debug(msg: impl AsRef<str>) {
+    if verbosity() >= DEBUG {
+        eprintln!("{}", msg.as_ref());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verbosity_round_trips() {
+        let prev = verbosity();
+        set_verbosity(QUIET);
+        assert_eq!(verbosity(), QUIET);
+        set_verbosity(DEBUG);
+        assert_eq!(verbosity(), DEBUG);
+        set_verbosity(prev);
+    }
+}

@@ -1,0 +1,156 @@
+//! The unified metrics registry: counters, gauges, and fixed-bucket
+//! histograms under stable `xllm_*` names.
+//!
+//! Deterministic by construction — no wall clock, insertion via sorted
+//! maps, fixed bucket bounds — so two runs of the same seed export the
+//! same text byte for byte.  The legacy counter structs
+//! (`ControlCounters`, `ServerStats`, `PolicyCounters`) stay the
+//! increment surface; each exports into the registry under its stable
+//! names post-run and can be reconstructed from a registry as a view
+//! (round-trip pinned by tests).
+
+use std::collections::BTreeMap;
+
+/// Bucket bounds (seconds) for request-level latencies: TTFT, E2E, and
+/// the per-phase breakdown.
+pub const LATENCY_BUCKETS_S: &[f64] =
+    &[0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0];
+
+/// Bucket bounds (seconds) for per-token latency (TPOT).
+pub const TPOT_BUCKETS_S: &[f64] =
+    &[0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0];
+
+/// A fixed-bucket cumulative histogram (Prometheus semantics: bucket
+/// counts are cumulative over `le` bounds, plus `+Inf`, `sum`, `count`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    /// Upper bounds of the finite buckets, ascending.
+    pub bounds: Vec<f64>,
+    /// Non-cumulative counts per finite bucket plus a final overflow
+    /// bucket (`+Inf`); cumulated at export time.
+    pub counts: Vec<u64>,
+    pub sum: f64,
+    pub count: u64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Histogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Histogram { bounds: bounds.to_vec(), counts: vec![0; bounds.len() + 1], sum: 0.0, count: 0 }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let idx = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    /// Cumulative count at the bucket with upper bound `self.bounds[i]`.
+    pub fn cumulative(&self, i: usize) -> u64 {
+        self.counts[..=i].iter().sum()
+    }
+}
+
+/// The unified registry.  Names should be `snake_case` with an `xllm_`
+/// prefix and a `_total` suffix for counters (Prometheus conventions).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Add `v` to the gauge (fleet aggregation over replicas).
+    pub fn add_gauge(&mut self, name: &str, v: f64) {
+        *self.gauges.entry(name.to_string()).or_insert(0.0) += v;
+    }
+
+    /// Observe `v` into the named histogram, creating it with `bounds`
+    /// on first use (later calls keep the original bounds).
+    pub fn observe(&mut self, name: &str, bounds: &[f64], v: f64) {
+        self.histograms.entry(name.to_string()).or_insert_with(|| Histogram::new(bounds)).observe(v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn gauges(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.gauges.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn histograms(&self) -> impl Iterator<Item = (&str, &Histogram)> {
+        self.histograms.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let mut h = Histogram::new(&[0.1, 1.0]);
+        h.observe(0.05);
+        h.observe(0.5);
+        h.observe(0.5);
+        h.observe(100.0);
+        assert_eq!(h.count, 4);
+        assert_eq!(h.cumulative(0), 1);
+        assert_eq!(h.cumulative(1), 3);
+        assert_eq!(h.counts[2], 1, "overflow lands in +Inf");
+        assert!((h.sum - 101.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn registry_accumulates_and_reads_back() {
+        let mut r = MetricsRegistry::new();
+        r.inc("xllm_requests_total", 3);
+        r.inc("xllm_requests_total", 2);
+        r.set_gauge("xllm_replicas_final", 4.0);
+        r.observe("xllm_ttft_seconds", LATENCY_BUCKETS_S, 0.2);
+        assert_eq!(r.counter("xllm_requests_total"), 5);
+        assert_eq!(r.counter("missing"), 0);
+        assert!((r.gauge("xllm_replicas_final") - 4.0).abs() < 1e-12);
+        assert_eq!(r.histogram("xllm_ttft_seconds").unwrap().count, 1);
+    }
+
+    #[test]
+    fn deterministic_iteration_order() {
+        let mut r = MetricsRegistry::new();
+        r.inc("b_total", 1);
+        r.inc("a_total", 1);
+        let names: Vec<&str> = r.counters().map(|(k, _)| k).collect();
+        assert_eq!(names, vec!["a_total", "b_total"], "sorted, insertion-order independent");
+    }
+}

@@ -1,0 +1,34 @@
+//! Cluster-wide observability: request-lifecycle tracing, the unified
+//! metrics registry, and the Perfetto/Prometheus exporters.
+//!
+//! Three pieces (DESIGN.md §Observability):
+//!
+//! * [`trace`] — a [`TraceSink`] behind a cloneable [`TraceHandle`]
+//!   that the orchestrator, executors, and control plane emit typed
+//!   lifecycle events through.  Off by default with zero overhead: the
+//!   handle is an `Option` check and emission never touches simulation
+//!   state, so sink-off runs are bit-identical to the pre-tracing code
+//!   (pinned by `tests/obs_trace.rs`).
+//! * [`metrics`] — a deterministic [`MetricsRegistry`] (counters,
+//!   gauges, fixed-bucket histograms; no wall clock) that the legacy
+//!   counter structs (`ControlCounters`, `ServerStats`,
+//!   `PolicyCounters`) export into under stable `xllm_*` names.
+//! * [`export`] — Chrome trace-event JSON (one track per
+//!   replica/instance, loadable in Perfetto) and Prometheus text
+//!   exposition, wired to `--trace-out` / `--metrics-out` on the
+//!   `simulate` / `serve` / `fleet` subcommands.
+//!
+//! [`log`] is the small verbosity-gated stderr logger behind
+//! `--quiet` / `-v`.
+
+pub mod export;
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use export::{chrome_trace_json, prometheus_text};
+pub use metrics::{Histogram, MetricsRegistry, LATENCY_BUCKETS_S, TPOT_BUCKETS_S};
+pub use trace::{
+    check_nesting, InstantKind, RecordingSink, SpanPhase, TraceEvent, TraceEventKind, TraceHandle,
+    TraceSink,
+};

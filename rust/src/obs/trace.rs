@@ -1,0 +1,399 @@
+//! Request-lifecycle tracing: typed span/instant events on the sim clock.
+//!
+//! The orchestrator, executors, and control plane emit [`TraceEvent`]s
+//! through a [`TraceHandle`].  The default handle is *off*: every
+//! emission method is a single `Option` check and returns immediately,
+//! so sink-off runs are bit-identical to a build without tracing (the
+//! events never exist and nothing else observes them).  A recording
+//! handle shares one [`RecordingSink`] across all replicas (threaded
+//! fleets included — the sink sits behind a mutex and each replica's
+//! own events stay in its emission order).
+//!
+//! Span discipline per request: at most one lifecycle span open at a
+//! time, phases paired Begin/End in emission order.  Spans whose
+//! duration is known at emission (KV handoff, device iterations) are
+//! recorded as [`TraceEventKind::Complete`] and never open anything.
+//! [`check_nesting`] verifies the discipline; the integration tests pin
+//! it across preemption, fault recovery, and fleet failover.
+
+use std::sync::{Arc, Mutex};
+
+/// Lifecycle span phases, in canonical request order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanPhase {
+    /// Waiting for dispatch (arrival → first submitted work; re-opened
+    /// after encode completes and after fault-recovery recompute).
+    Queue,
+    /// Multimodal image encode.
+    Encode,
+    /// Chunked prefill (first chunk submit → last chunk complete).
+    Prefill,
+    /// Cross-instance KV transfer (always a `Complete` span).
+    KvHandoff,
+    /// Decode (first decode submit → completion).
+    Decode,
+    /// One device iteration on an instance (always a `Complete` span,
+    /// request-agnostic: the instance-utilization track).
+    Iteration,
+}
+
+impl SpanPhase {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanPhase::Queue => "queue",
+            SpanPhase::Encode => "encode",
+            SpanPhase::Prefill => "prefill",
+            SpanPhase::KvHandoff => "kv_handoff",
+            SpanPhase::Decode => "decode",
+            SpanPhase::Iteration => "iteration",
+        }
+    }
+}
+
+/// Point events: lifecycle milestones and control-plane actions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum InstantKind {
+    Arrival,
+    FirstToken,
+    Completion,
+    Failure,
+    /// A planned request was pushed out of its batch (co-location
+    /// admission control / batcher preemption / recovery recompute).
+    Preemption,
+    /// A request's KV moved to another instance or replica.
+    Migration,
+    /// An instance changed pool role (P↔D).
+    RoleFlip,
+    /// An instance fault fired (sim-level fault injection).
+    Fault,
+    /// A faulted instance came back.
+    Recovery,
+    ScaleUp,
+    ScaleDown,
+    /// A replica's lease expired and its work was re-dispatched.
+    Failover,
+    /// Planned hot-prefix KV rebalancing started staging.
+    Rebalance,
+    /// A spawned replica was pre-staged with hot chains.
+    WarmStart,
+    /// Executor policy: EPLB routing table re-plan committed.
+    EplbReplan,
+    /// Executor policy: online decode-cost calibration update.
+    Calibration,
+}
+
+impl InstantKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            InstantKind::Arrival => "arrival",
+            InstantKind::FirstToken => "first_token",
+            InstantKind::Completion => "completion",
+            InstantKind::Failure => "failure",
+            InstantKind::Preemption => "preemption",
+            InstantKind::Migration => "migration",
+            InstantKind::RoleFlip => "role_flip",
+            InstantKind::Fault => "fault",
+            InstantKind::Recovery => "recovery",
+            InstantKind::ScaleUp => "scale_up",
+            InstantKind::ScaleDown => "scale_down",
+            InstantKind::Failover => "failover",
+            InstantKind::Rebalance => "rebalance",
+            InstantKind::WarmStart => "warm_start",
+            InstantKind::EplbReplan => "eplb_replan",
+            InstantKind::Calibration => "calibration",
+        }
+    }
+}
+
+/// What a [`TraceEvent`] records.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceEventKind {
+    Begin(SpanPhase),
+    End(SpanPhase),
+    /// A span whose duration is known at emission: `t_s` is the start,
+    /// the payload the duration in (virtual) seconds.
+    Complete(SpanPhase, f64),
+    Instant(InstantKind),
+}
+
+/// One trace event on the virtual clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// Virtual time of the event (span start for `Complete`).
+    pub t_s: f64,
+    /// Monotonic per-sink record number — preserves each replica's
+    /// emission order through the shared sink (ties on `t_s` resolve by
+    /// `seq` within a replica).
+    pub seq: u64,
+    /// Fleet replica that emitted the event (`None` = control plane or
+    /// a standalone run).
+    pub replica: Option<usize>,
+    /// Instance within the replica, where attributable.
+    pub instance: Option<usize>,
+    /// Request the event belongs to (`None` for instance/fleet events).
+    pub req: Option<u64>,
+    pub kind: TraceEventKind,
+}
+
+/// Consumer of trace events.  `Send` so a shared sink can sit behind
+/// replicas stepping on worker threads.
+pub trait TraceSink: Send {
+    fn record(&mut self, ev: TraceEvent);
+    /// Take every event recorded so far (exporters call this once).
+    fn drain(&mut self) -> Vec<TraceEvent> {
+        Vec::new()
+    }
+}
+
+/// The default recording sink: an in-memory event log.
+#[derive(Default)]
+pub struct RecordingSink {
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceSink for RecordingSink {
+    fn record(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+
+    fn drain(&mut self) -> Vec<TraceEvent> {
+        std::mem::take(&mut self.events)
+    }
+}
+
+/// Cheap, cloneable emission handle.  Off by default — every emission
+/// is one `Option` check, no allocation, no lock.  Cloning shares the
+/// underlying sink; [`TraceHandle::for_replica`] stamps a replica id
+/// onto the clone handed to that replica's orchestrator.
+#[derive(Clone, Default)]
+pub struct TraceHandle {
+    sink: Option<Arc<Mutex<SinkState>>>,
+    replica: Option<usize>,
+}
+
+struct SinkState {
+    sink: Box<dyn TraceSink>,
+    next_seq: u64,
+}
+
+impl std::fmt::Debug for TraceHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "TraceHandle({}, replica: {:?})",
+            if self.sink.is_some() { "on" } else { "off" },
+            self.replica
+        )
+    }
+}
+
+impl TraceHandle {
+    /// The no-op handle (also what `Default` gives you).
+    pub fn off() -> TraceHandle {
+        TraceHandle::default()
+    }
+
+    /// A handle recording into a fresh in-memory [`RecordingSink`].
+    pub fn recording() -> TraceHandle {
+        TraceHandle::with_sink(Box::new(RecordingSink::default()))
+    }
+
+    /// A handle recording into a caller-supplied sink.
+    pub fn with_sink(sink: Box<dyn TraceSink>) -> TraceHandle {
+        TraceHandle {
+            sink: Some(Arc::new(Mutex::new(SinkState { sink, next_seq: 0 }))),
+            replica: None,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Clone with the replica attribution stamped on (fleet use).
+    pub fn for_replica(&self, id: usize) -> TraceHandle {
+        TraceHandle { sink: self.sink.clone(), replica: Some(id) }
+    }
+
+    fn emit(&self, t_s: f64, instance: Option<usize>, req: Option<u64>, kind: TraceEventKind) {
+        let Some(sink) = &self.sink else { return };
+        let mut st = sink.lock().expect("trace sink lock");
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.sink.record(TraceEvent { t_s, seq, replica: self.replica, instance, req, kind });
+    }
+
+    pub fn begin(&self, t_s: f64, instance: Option<usize>, req: Option<u64>, phase: SpanPhase) {
+        self.emit(t_s, instance, req, TraceEventKind::Begin(phase));
+    }
+
+    pub fn end(&self, t_s: f64, instance: Option<usize>, req: Option<u64>, phase: SpanPhase) {
+        self.emit(t_s, instance, req, TraceEventKind::End(phase));
+    }
+
+    /// Record a span with a known duration (start `t_s`, length `dur_s`).
+    pub fn complete(
+        &self,
+        t_s: f64,
+        instance: Option<usize>,
+        req: Option<u64>,
+        phase: SpanPhase,
+        dur_s: f64,
+    ) {
+        self.emit(t_s, instance, req, TraceEventKind::Complete(phase, dur_s));
+    }
+
+    pub fn instant(&self, t_s: f64, instance: Option<usize>, req: Option<u64>, kind: InstantKind) {
+        self.emit(t_s, instance, req, TraceEventKind::Instant(kind));
+    }
+
+    /// Drain the shared sink (all replicas' events).
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        match &self.sink {
+            Some(s) => s.lock().expect("trace sink lock").sink.drain(),
+            None => Vec::new(),
+        }
+    }
+}
+
+/// Verify the span discipline over a recorded event stream: per
+/// `(replica, request)`, spans pair Begin→End in emission order with at
+/// most one open at a time, `End.t ≥ Begin.t`, `Complete` durations are
+/// non-negative, and nothing is left open.  Returns the first violation
+/// as a readable message.
+pub fn check_nesting(events: &[TraceEvent]) -> Result<(), String> {
+    use std::collections::BTreeMap;
+    // (replica+1 or 0, req) -> (open phase, begin time, begin seq)
+    let mut open: BTreeMap<(usize, u64), (SpanPhase, f64, u64)> = BTreeMap::new();
+    let mut by_key: BTreeMap<(usize, u64), Vec<&TraceEvent>> = BTreeMap::new();
+    for ev in events {
+        if let TraceEventKind::Complete(p, d) = ev.kind {
+            if d < 0.0 {
+                return Err(format!("negative {} span duration {d} at t={}", p.name(), ev.t_s));
+            }
+        }
+        let Some(req) = ev.req else { continue };
+        by_key.entry((ev.replica.map_or(0, |r| r + 1), req)).or_default().push(ev);
+    }
+    for (key, mut evs) in by_key {
+        // each replica's events are recorded in emission order; sort by
+        // the sink seq so shared-sink interleaving cannot reorder a
+        // single request's lifecycle
+        evs.sort_by_key(|e| e.seq);
+        for ev in evs {
+            match ev.kind {
+                TraceEventKind::Begin(p) => {
+                    if let Some((prev, t0, _)) = open.get(&key) {
+                        return Err(format!(
+                            "request {key:?}: Begin({}) at t={} while {} open since t={t0}",
+                            p.name(),
+                            ev.t_s,
+                            prev.name()
+                        ));
+                    }
+                    open.insert(key, (p, ev.t_s, ev.seq));
+                }
+                TraceEventKind::End(p) => match open.remove(&key) {
+                    Some((prev, t0, _)) if prev == p => {
+                        if ev.t_s < t0 - 1e-12 {
+                            return Err(format!(
+                                "request {key:?}: {} span ends at t={} before its begin t={t0}",
+                                p.name(),
+                                ev.t_s
+                            ));
+                        }
+                    }
+                    Some((prev, t0, s)) => {
+                        open.insert(key, (prev, t0, s));
+                        return Err(format!(
+                            "request {key:?}: End({}) at t={} does not match open span {}",
+                            p.name(),
+                            ev.t_s,
+                            prev.name()
+                        ));
+                    }
+                    None => {
+                        return Err(format!(
+                            "request {key:?}: orphan End({}) at t={}",
+                            p.name(),
+                            ev.t_s
+                        ));
+                    }
+                },
+                TraceEventKind::Complete(..) | TraceEventKind::Instant(..) => {}
+            }
+        }
+    }
+    if let Some((key, (p, t0, _))) = open.into_iter().next() {
+        return Err(format!("request {key:?}: {} span opened at t={t0} never closed", p.name()));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: f64, seq: u64, req: u64, kind: TraceEventKind) -> TraceEvent {
+        TraceEvent { t_s: t, seq, replica: None, instance: Some(0), req: Some(req), kind }
+    }
+
+    #[test]
+    fn off_handle_records_nothing() {
+        let h = TraceHandle::off();
+        assert!(!h.enabled());
+        h.begin(0.0, None, Some(1), SpanPhase::Queue);
+        h.instant(0.0, None, Some(1), InstantKind::Arrival);
+        assert!(h.drain().is_empty());
+    }
+
+    #[test]
+    fn recording_preserves_emission_order_and_stamps_seq() {
+        let h = TraceHandle::recording();
+        let r0 = h.for_replica(0);
+        r0.begin(0.5, Some(1), Some(7), SpanPhase::Prefill);
+        r0.end(0.9, Some(1), Some(7), SpanPhase::Prefill);
+        h.instant(1.0, None, None, InstantKind::ScaleUp);
+        let evs = h.drain();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].seq, 0);
+        assert_eq!(evs[1].seq, 1);
+        assert_eq!(evs[0].replica, Some(0));
+        assert_eq!(evs[2].replica, None);
+        assert!(h.drain().is_empty(), "drain takes the events");
+    }
+
+    #[test]
+    fn nesting_accepts_a_clean_lifecycle() {
+        let evs = vec![
+            ev(0.0, 0, 1, TraceEventKind::Instant(InstantKind::Arrival)),
+            ev(0.0, 1, 1, TraceEventKind::Begin(SpanPhase::Queue)),
+            ev(0.2, 2, 1, TraceEventKind::End(SpanPhase::Queue)),
+            ev(0.2, 3, 1, TraceEventKind::Begin(SpanPhase::Prefill)),
+            ev(0.5, 4, 1, TraceEventKind::End(SpanPhase::Prefill)),
+            ev(0.5, 5, 1, TraceEventKind::Complete(SpanPhase::KvHandoff, 0.01)),
+            ev(0.6, 6, 1, TraceEventKind::Begin(SpanPhase::Decode)),
+            ev(1.0, 7, 1, TraceEventKind::End(SpanPhase::Decode)),
+            ev(1.0, 8, 1, TraceEventKind::Instant(InstantKind::Completion)),
+        ];
+        check_nesting(&evs).unwrap();
+    }
+
+    #[test]
+    fn nesting_rejects_overlap_orphan_and_unclosed() {
+        let overlap = vec![
+            ev(0.0, 0, 1, TraceEventKind::Begin(SpanPhase::Queue)),
+            ev(0.1, 1, 1, TraceEventKind::Begin(SpanPhase::Prefill)),
+        ];
+        assert!(check_nesting(&overlap).is_err());
+        let orphan = vec![ev(0.0, 0, 1, TraceEventKind::End(SpanPhase::Decode))];
+        assert!(check_nesting(&orphan).is_err());
+        let unclosed = vec![ev(0.0, 0, 1, TraceEventKind::Begin(SpanPhase::Queue))];
+        assert!(check_nesting(&unclosed).is_err());
+        let mismatch = vec![
+            ev(0.0, 0, 1, TraceEventKind::Begin(SpanPhase::Queue)),
+            ev(0.1, 1, 1, TraceEventKind::End(SpanPhase::Decode)),
+        ];
+        assert!(check_nesting(&mismatch).is_err());
+    }
+}

@@ -39,6 +39,7 @@ use crate::engine::specdecode::{accept_greedy, SpecConfig, SpecStats};
 use crate::engine::xtensor::{MapStats, XTensorManager};
 use crate::metrics::ServingReport;
 use crate::model::{cpu_host, ModelSpec};
+use crate::obs::{self, InstantKind, MetricsRegistry, TraceHandle};
 use crate::runtime::{
     argmax, select_mode, BatchKv, GraphStats, LaunchMode, ModelDims, PrefillOutput, Runtime,
 };
@@ -93,6 +94,51 @@ pub struct ServerStats {
     /// Measured decode iterations fed back into the roofline cost
     /// model's learned factors (§3.1 online calibration).
     pub calibration_updates: u64,
+}
+
+impl ServerStats {
+    /// Publish under the stable `xllm_server_*` metric names.
+    pub fn export_metrics(&self, reg: &mut MetricsRegistry) {
+        reg.inc("xllm_server_prefills_total", self.prefills);
+        reg.inc("xllm_server_decode_steps_total", self.decode_steps);
+        reg.inc("xllm_server_tokens_generated_total", self.tokens_generated);
+        reg.inc("xllm_server_spec_rounds_total", self.spec.rounds);
+        reg.inc("xllm_server_spec_proposed_total", self.spec.proposed);
+        reg.inc("xllm_server_spec_accepted_total", self.spec.accepted);
+        reg.inc("xllm_server_spec_bonus_total", self.spec.bonus);
+        reg.inc("xllm_server_kv_blocks_stashed_total", self.kv_blocks_stashed);
+        reg.inc("xllm_server_kv_blocks_exported_total", self.kv_blocks_exported);
+        reg.inc("xllm_server_kv_blocks_imported_total", self.kv_blocks_imported);
+        reg.inc("xllm_server_kv_block_restores_total", self.kv_block_restores);
+        reg.inc("xllm_server_graph_full_hits_total", self.graph_full_hits);
+        reg.inc("xllm_server_graph_padded_hits_total", self.graph_padded_hits);
+        reg.inc("xllm_server_graph_eager_fallbacks_total", self.graph_eager_fallbacks);
+        reg.inc("xllm_server_calibration_updates_total", self.calibration_updates);
+    }
+
+    /// The old struct view over the registry names (tests pin the
+    /// round-trip so neither side drifts).
+    pub fn from_registry(reg: &MetricsRegistry) -> ServerStats {
+        ServerStats {
+            prefills: reg.counter("xllm_server_prefills_total"),
+            decode_steps: reg.counter("xllm_server_decode_steps_total"),
+            tokens_generated: reg.counter("xllm_server_tokens_generated_total"),
+            spec: SpecStats {
+                rounds: reg.counter("xllm_server_spec_rounds_total"),
+                proposed: reg.counter("xllm_server_spec_proposed_total"),
+                accepted: reg.counter("xllm_server_spec_accepted_total"),
+                bonus: reg.counter("xllm_server_spec_bonus_total"),
+            },
+            kv_blocks_stashed: reg.counter("xllm_server_kv_blocks_stashed_total"),
+            kv_blocks_exported: reg.counter("xllm_server_kv_blocks_exported_total"),
+            kv_blocks_imported: reg.counter("xllm_server_kv_blocks_imported_total"),
+            kv_block_restores: reg.counter("xllm_server_kv_block_restores_total"),
+            graph_full_hits: reg.counter("xllm_server_graph_full_hits_total"),
+            graph_padded_hits: reg.counter("xllm_server_graph_padded_hits_total"),
+            graph_eager_fallbacks: reg.counter("xllm_server_graph_eager_fallbacks_total"),
+            calibration_updates: reg.counter("xllm_server_calibration_updates_total"),
+        }
+    }
 }
 
 /// A request admitted into a batch slot.
@@ -739,11 +785,13 @@ pub struct PjrtExecutor {
     /// [`Executor::admitted`]); admitted never overwrites these.
     queued: HashSet<RequestId>,
     /// Decode-only batch shapes in flight on the worker backend, keyed
-    /// by submission seq: (n_seqs, kv_tokens) for §3.1 calibration when
-    /// the measured time joins at `poll_complete`.
-    pending_shapes: HashMap<u64, (u64, u64)>,
+    /// by submission seq: (n_seqs, kv_tokens, submit time) for §3.1
+    /// calibration when the measured time joins at `poll_complete`.
+    pending_shapes: HashMap<u64, (u64, u64, f64)>,
     /// Measured decode iterations fed into `CostModel::learn_decode`.
     calibration_updates: u64,
+    /// Lifecycle trace emission (off by default; calibration instants).
+    trace: TraceHandle,
     /// The worker channel broke (thread died); reported at collect.
     worker_lost: bool,
 }
@@ -808,6 +856,7 @@ impl PjrtExecutor {
             queued: HashSet::new(),
             pending_shapes: HashMap::new(),
             calibration_updates: 0,
+            trace: TraceHandle::off(),
             worker_lost: false,
         })
     }
@@ -877,6 +926,10 @@ impl Executor for PjrtExecutor {
         &self.cost
     }
 
+    fn set_trace(&mut self, trace: TraceHandle) {
+        self.trace = trace;
+    }
+
     fn submit_iteration(
         &mut self,
         instance: InstanceId,
@@ -897,6 +950,7 @@ impl Executor for PjrtExecutor {
                 if let Some((n, kv)) = decode_only_shape(work) {
                     self.cost.learn_decode(n, kv, device_s);
                     self.calibration_updates += 1;
+                    self.trace.instant(now_s, Some(instance), None, InstantKind::Calibration);
                 }
                 let out = IterationOutcome { host_s: 0.0, device_s };
                 self.inline_last = Some((seq, out));
@@ -904,8 +958,8 @@ impl Executor for PjrtExecutor {
             }
             Backend::Worker(h) => {
                 h.send(Cmd::Submit { seq, now_s, work: work.clone() });
-                if let Some(shape) = decode_only_shape(work) {
-                    self.pending_shapes.insert(seq, shape);
+                if let Some((n, kv)) = decode_only_shape(work) {
+                    self.pending_shapes.insert(seq, (n, kv, now_s));
                 }
                 // the estimate orders the completion event in virtual
                 // time; the measured span arrives at poll_complete
@@ -934,9 +988,10 @@ impl Executor for PjrtExecutor {
                     }
                     // §3.1: the measured span just joined — feed it back
                     // so later submit estimates track the real engine
-                    if let Some((n, kv)) = self.pending_shapes.remove(&seq) {
+                    if let Some((n, kv, t)) = self.pending_shapes.remove(&seq) {
                         self.cost.learn_decode(n, kv, device_s);
                         self.calibration_updates += 1;
+                        self.trace.instant(t, Some(ticket.instance), None, InstantKind::Calibration);
                     }
                     IterationOutcome { host_s: 0.0, device_s }
                 }
@@ -1160,7 +1215,7 @@ impl ReplicaFactory for PjrtReplicaFactory {
                 Err(e) => {
                     // mid-run spawn declined (e.g. the artifacts dir went
                     // away): the fleet keeps serving at its current size
-                    eprintln!("# pjrt replica spawn declined: {e:#}");
+                    obs::log::info(format!("# pjrt replica spawn declined: {e:#}"));
                     return None;
                 }
             },
@@ -1200,6 +1255,7 @@ pub struct Server {
     pub report: ServingReport,
     page_stats: MapStats,
     graph_stats: GraphStats,
+    trace: TraceHandle,
 }
 
 impl Server {
@@ -1216,11 +1272,18 @@ impl Server {
             report: ServingReport::new(),
             page_stats: MapStats::default(),
             graph_stats: GraphStats::default(),
+            trace: TraceHandle::off(),
         })
     }
 
     pub fn model_dims(&self) -> ModelDims {
         self.dims
+    }
+
+    /// Install a lifecycle trace sink; the next [`Self::run_to_completion`]
+    /// emits request spans and engine instants into it.
+    pub fn set_trace(&mut self, trace: TraceHandle) {
+        self.trace = trace;
     }
 
     /// Enqueue a request.
@@ -1271,7 +1334,8 @@ impl Server {
         }
 
         let ocfg = engine_orchestrator_config(&self.cfg, self.dims, false);
-        let orch = Orchestrator::new(ocfg, exec);
+        let mut orch = Orchestrator::new(ocfg, exec);
+        orch.set_trace(self.trace.clone());
         let (res, mut exec) = orch.run(specs);
         let collected = exec.collect();
         let worker_lost = exec.worker_lost;

@@ -59,7 +59,8 @@ use crate::coordinator::orchestrator::{
     Executor, InFlightSnapshot, KvChainPayload, Orchestrator, RunResult, DEFAULT_MAX_EVENTS,
     DEFAULT_PREFIX_BLOCK_TOKENS,
 };
-use crate::metrics::{RequestOutcome, ServingReport};
+use crate::metrics::{PhaseBreakdown, RequestOutcome, ServingReport};
+use crate::obs::{InstantKind, MetricsRegistry, TraceHandle};
 use crate::service::colocation::ColocationConfig;
 use crate::service::fault::{plan_recovery, InterruptedRequest, RecoveryAction};
 use crate::service::kvstore::{Tier, TransferEngine};
@@ -116,6 +117,11 @@ pub struct ControlPlaneConfig {
     pub threads: usize,
     /// Cap on control-plane scheduling turns (safety net).
     pub max_events: u64,
+    /// Lifecycle trace sink.  Off by default (zero overhead); when set,
+    /// every replica orchestrator gets a [`TraceHandle::for_replica`]
+    /// clone and the control plane emits its own cluster-scope instants
+    /// (scale, failover, rebalance) on the shared sink.
+    pub trace: TraceHandle,
 }
 
 impl Default for ControlPlaneConfig {
@@ -131,6 +137,7 @@ impl Default for ControlPlaneConfig {
             scaler: None,
             threads: 1,
             max_events: DEFAULT_MAX_EVENTS,
+            trace: TraceHandle::off(),
         }
     }
 }
@@ -175,6 +182,49 @@ pub struct ControlCounters {
     /// Total staging + transfer time charged for planned rebalances and
     /// warm starts.
     pub rebalance_staging_s: f64,
+}
+
+impl ControlCounters {
+    /// Publish under the stable `xllm_ctl_*` metric names.
+    pub fn export_metrics(&self, reg: &mut MetricsRegistry) {
+        reg.inc("xllm_ctl_routed_cache_hits_total", self.routed_by_cache_hit);
+        reg.inc("xllm_ctl_failovers_total", self.failovers);
+        reg.inc("xllm_ctl_redispatched_requests_total", self.redispatched_requests);
+        reg.inc("xllm_ctl_redispatched_tokens_total", self.redispatched_tokens);
+        reg.inc("xllm_ctl_redispatch_migrations_total", self.redispatch_migrations);
+        reg.inc("xllm_ctl_offline_steered_total", self.offline_steered);
+        reg.inc("xllm_ctl_unroutable_total", self.unroutable);
+        reg.inc("xllm_ctl_heartbeats_total", self.heartbeats);
+        reg.inc("xllm_ctl_lease_expiries_total", self.lease_expiries);
+        reg.inc("xllm_ctl_scale_ups_total", self.scale_ups);
+        reg.inc("xllm_ctl_scale_downs_total", self.scale_downs);
+        reg.inc("xllm_ctl_kv_rebalances_total", self.kv_rebalances);
+        reg.inc("xllm_ctl_warm_starts_total", self.warm_starts);
+        reg.inc("xllm_ctl_kv_blocks_shipped_total", self.kv_blocks_shipped);
+        reg.set_gauge("xllm_ctl_rebalance_staging_seconds", self.rebalance_staging_s);
+    }
+
+    /// The old struct view over the registry names (tests pin the
+    /// round-trip so neither side drifts).
+    pub fn from_registry(reg: &MetricsRegistry) -> ControlCounters {
+        ControlCounters {
+            routed_by_cache_hit: reg.counter("xllm_ctl_routed_cache_hits_total"),
+            failovers: reg.counter("xllm_ctl_failovers_total"),
+            redispatched_requests: reg.counter("xllm_ctl_redispatched_requests_total"),
+            redispatched_tokens: reg.counter("xllm_ctl_redispatched_tokens_total"),
+            redispatch_migrations: reg.counter("xllm_ctl_redispatch_migrations_total"),
+            offline_steered: reg.counter("xllm_ctl_offline_steered_total"),
+            unroutable: reg.counter("xllm_ctl_unroutable_total"),
+            heartbeats: reg.counter("xllm_ctl_heartbeats_total"),
+            lease_expiries: reg.counter("xllm_ctl_lease_expiries_total"),
+            scale_ups: reg.counter("xllm_ctl_scale_ups_total"),
+            scale_downs: reg.counter("xllm_ctl_scale_downs_total"),
+            kv_rebalances: reg.counter("xllm_ctl_kv_rebalances_total"),
+            warm_starts: reg.counter("xllm_ctl_warm_starts_total"),
+            kv_blocks_shipped: reg.counter("xllm_ctl_kv_blocks_shipped_total"),
+            rebalance_staging_s: reg.gauge("xllm_ctl_rebalance_staging_seconds"),
+        }
+    }
 }
 
 /// Aggregated fleet run output.
@@ -256,7 +306,9 @@ impl<X: Executor> ControlPlane<X> {
         let scaler = cfg.scaler.map(FleetScaler::new);
         let replicas = replicas
             .into_iter()
-            .map(|mut orch| {
+            .enumerate()
+            .map(|(id, mut orch)| {
+                orch.set_trace(cfg.trace.for_replica(id));
                 orch.start(Vec::new()); // empty workload: arrivals come via submit
                 Replica { orch: Some(orch), alive: true, result: None }
             })
@@ -546,6 +598,7 @@ impl<X: Executor> ControlPlane<X> {
     /// Every lease gone: the request has nowhere to run.
     fn mark_lost(&mut self, spec: RequestSpec, now: f64) {
         self.counters.unroutable += 1;
+        self.cfg.trace.instant(now, None, None, InstantKind::Failure);
         self.lost.record(RequestOutcome {
             arrival_s: spec.arrival_s,
             first_token_s: now,
@@ -553,6 +606,7 @@ impl<X: Executor> ControlPlane<X> {
             input_tokens: spec.input_tokens,
             output_tokens: 0,
             failed: true,
+            phases: PhaseBreakdown::default(),
         });
     }
 
@@ -670,10 +724,12 @@ impl<X: Executor> ControlPlane<X> {
         let Some(mut orch) = spawn(id) else {
             return; // factory declined (e.g. backend lost its artifacts)
         };
+        orch.set_trace(self.cfg.trace.for_replica(id));
         orch.start_at(Vec::new(), now);
         self.replicas.push(Replica { orch: Some(orch), alive: true, result: None });
         self.registry.write().expect("registry lock").register(id, now);
         self.counters.scale_ups += 1;
+        self.cfg.trace.instant(now, Some(id), None, InstantKind::ScaleUp);
         // warm start (§3.4 proactive movement): pre-stage the hottest
         // prefix chains onto the spawned replica while it waits for its
         // first heartbeat — the staging delay runs concurrently with the
@@ -688,6 +744,7 @@ impl<X: Executor> ControlPlane<X> {
                 let best = self.index.read().expect("index lock").best_match(&chain);
                 let Some((src, _, _)) = best else { continue };
                 self.counters.warm_starts += 1;
+                self.cfg.trace.instant(now, Some(id), None, InstantKind::WarmStart);
                 self.stage_chain(chain, src, id);
             }
         }
@@ -709,6 +766,7 @@ impl<X: Executor> ControlPlane<X> {
             s.forget_replica(r);
         }
         self.counters.scale_downs += 1;
+        self.cfg.trace.instant(now, Some(r), None, InstantKind::ScaleDown);
         let drained = orch.drain_in_flight();
         let (result, mut executor) = orch.finish();
         self.replicas[r].result = Some(result);
@@ -724,6 +782,7 @@ impl<X: Executor> ControlPlane<X> {
     /// transfer cost now, land the chain on the target when it elapses.
     fn start_rebalance(&mut self, chain: Vec<u64>, from: usize, to: usize) {
         self.counters.kv_rebalances += 1;
+        self.cfg.trace.instant(self.clock.now(), Some(to), None, InstantKind::Rebalance);
         self.stage_chain(chain, from, to);
     }
 
@@ -773,6 +832,7 @@ impl<X: Executor> ControlPlane<X> {
             s.forget_replica(r);
         }
         self.counters.failovers += 1;
+        self.cfg.trace.instant(now, Some(r), None, InstantKind::Failover);
         let drained = orch.drain_in_flight();
         let (result, _executor) = orch.finish();
         self.replicas[r].result = Some(result);
@@ -1211,6 +1271,58 @@ mod tests {
         assert!(res.all_accounted(), "{} recorded != {n}", res.report.n_requests());
         assert_eq!(res.report.n_completed(), n, "survivors must finish everything");
         assert_eq!(res.counters.failovers, 1);
+    }
+
+    #[test]
+    fn control_counters_round_trip_the_registry() {
+        let c = ControlCounters {
+            routed_by_cache_hit: 1,
+            failovers: 2,
+            redispatched_requests: 3,
+            redispatched_tokens: 4,
+            redispatch_migrations: 5,
+            offline_steered: 6,
+            unroutable: 7,
+            heartbeats: 8,
+            lease_expiries: 9,
+            scale_ups: 10,
+            scale_downs: 11,
+            kv_rebalances: 12,
+            warm_starts: 13,
+            kv_blocks_shipped: 14,
+            rebalance_staging_s: 1.5,
+        };
+        let mut reg = MetricsRegistry::new();
+        c.export_metrics(&mut reg);
+        let back = ControlCounters::from_registry(&reg);
+        assert_eq!(format!("{c:?}"), format!("{back:?}"));
+    }
+
+    #[test]
+    fn traced_fleet_failover_keeps_spans_nested() {
+        use crate::obs::{check_nesting, TraceEventKind};
+        let workload: Vec<RequestSpec> =
+            (0..10).map(|i| RequestSpec::text(i as f64 * 0.05, 256, 400)).collect();
+        let trace = TraceHandle::recording();
+        let cfg = ControlPlaneConfig {
+            replica_faults: vec![(1.0, 0)],
+            trace: trace.clone(),
+            ..Default::default()
+        };
+        let res = ControlPlane::new(cfg, fleet(2)).run(workload);
+        assert_eq!(res.counters.failovers, 1);
+        let events = trace.drain();
+        assert!(!events.is_empty(), "traced run must record events");
+        // both replica tracks present, and the cluster-scope Failover
+        // instant rides the control-plane track (replica = None)
+        assert!(events.iter().any(|e| e.replica == Some(0)));
+        assert!(events.iter().any(|e| e.replica == Some(1)));
+        assert!(events
+            .iter()
+            .any(|e| e.replica.is_none()
+                && matches!(e.kind, TraceEventKind::Instant(InstantKind::Failover))));
+        // span discipline holds across the crash + re-dispatch
+        check_nesting(&events).expect("failover trace must stay well-nested");
     }
 
     #[test]

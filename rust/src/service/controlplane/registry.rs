@@ -112,6 +112,26 @@ impl InstanceRegistry {
     pub fn meta(&self) -> &MetaStore {
         &self.meta
     }
+
+    /// Publish the live-fleet view as `xllm_registry_*` gauges: the
+    /// live-replica count plus each live replica's last published load
+    /// (labels in replica-id order, so the exposition is deterministic).
+    pub fn export_metrics(&self, reg: &mut crate::obs::MetricsRegistry) {
+        let alive = self.alive();
+        reg.set_gauge("xllm_registry_replicas_live", alive.len() as f64);
+        for r in alive {
+            let Some(l) = self.loads.get(&r) else { continue };
+            reg.set_gauge(
+                &format!("xllm_registry_queued_prefill_tokens{{replica=\"{r}\"}}"),
+                l.queued_prefill_tokens as f64,
+            );
+            reg.set_gauge(
+                &format!("xllm_registry_queued_requests{{replica=\"{r}\"}}"),
+                l.n_queued as f64,
+            );
+            reg.set_gauge(&format!("xllm_registry_kv_used{{replica=\"{r}\"}}"), l.kv_used as f64);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -166,6 +166,13 @@ impl FleetScaler {
         }
     }
 
+    /// Publish the tracker state as `xllm_scaler_*` gauges.
+    pub fn export_metrics(&self, reg: &mut crate::obs::MetricsRegistry) {
+        reg.set_gauge("xllm_scaler_tracked_chains", self.hot.len() as f64);
+        let routes: u64 = self.hot.values().map(|s| s.per_replica.values().sum::<u64>()).sum();
+        reg.set_gauge("xllm_scaler_tracked_routes", routes as f64);
+    }
+
     /// Plan this tick's actions against the live registry/index state.
     /// At most one scale action and one rebalance per tick.
     pub fn plan(

@@ -143,6 +143,11 @@ impl ClusterSim {
         ClusterSim { orch: Orchestrator::new(cfg.orchestrator_config(), executor) }
     }
 
+    /// Install a lifecycle trace sink on the orchestrator + executor.
+    pub fn set_trace(&mut self, trace: crate::obs::TraceHandle) {
+        self.orch.set_trace(trace);
+    }
+
     /// Run the workload to completion; returns metrics + counters.
     pub fn run(self, workload: Vec<RequestSpec>) -> SimResult {
         self.orch.run(workload).0
@@ -355,7 +360,7 @@ mod debug_tests {
     fn debug_scaling() {
         let mut rng = Rng::new(4);
         let w = scenario("sharegpt").unwrap().generate(10.0, 60.0, &mut rng);
-        println!("requests: {}", w.len());
+        crate::obs::log::info(format!("requests: {}", w.len()));
         for n in [1usize, 4] {
             let cfg = ClusterConfig::new(
                 n,
@@ -366,7 +371,7 @@ mod debug_tests {
             let sim = ClusterSim::new(cfg);
             let res = sim.run(w.clone());
             let e2e = res.report.e2e_summary();
-            println!(
+            crate::obs::log::info(format!(
                 "n={} tput={:.0} iters={} completed={} mean_e2e={:.2} p99_ttft={:.2} per_inst={:?}",
                 n,
                 res.report.output_throughput(),
@@ -375,7 +380,7 @@ mod debug_tests {
                 e2e.mean(),
                 res.report.ttft_summary().percentile(99.0),
                 res.per_instance,
-            );
+            ));
         }
     }
 }

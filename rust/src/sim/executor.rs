@@ -37,6 +37,7 @@ use crate::engine::policies::EnginePolicies;
 use crate::engine::specdecode::{
     draft_cost_fraction, expected_tokens_per_round, verify_cost_multiplier, SpecConfig,
 };
+use crate::obs::{InstantKind, MetricsRegistry, TraceHandle};
 use crate::runtime::{select_mode, LaunchMode};
 use crate::service::epd::dual_stream_encode_exposure;
 use crate::sim::roofline::CostModel;
@@ -210,6 +211,30 @@ pub struct PolicyCounters {
     pub graph_fallbacks: u64,
 }
 
+impl PolicyCounters {
+    /// Export into the unified registry under stable `xllm_policy_*`
+    /// names.
+    pub fn export_metrics(&self, reg: &mut MetricsRegistry) {
+        reg.inc("xllm_policy_eplb_replans_total", self.eplb_replans);
+        reg.inc("xllm_policy_weight_switches_total", self.weight_switches);
+        reg.inc("xllm_policy_graph_compiles_total", self.graph_compiles);
+        reg.inc("xllm_policy_graph_hits_total", self.graph_hits);
+        reg.inc("xllm_policy_graph_fallbacks_total", self.graph_fallbacks);
+    }
+
+    /// Reconstruct the legacy counter view from a registry (round-trip
+    /// of [`PolicyCounters::export_metrics`]).
+    pub fn from_registry(reg: &MetricsRegistry) -> PolicyCounters {
+        PolicyCounters {
+            eplb_replans: reg.counter("xllm_policy_eplb_replans_total"),
+            weight_switches: reg.counter("xllm_policy_weight_switches_total"),
+            graph_compiles: reg.counter("xllm_policy_graph_compiles_total"),
+            graph_hits: reg.counter("xllm_policy_graph_hits_total"),
+            graph_fallbacks: reg.counter("xllm_policy_graph_fallbacks_total"),
+        }
+    }
+}
+
 /// Price one planned iteration's device time with the roofline model
 /// (shared with `server::PjrtExecutor`, which uses it as the submit-time
 /// estimate while the real measurement is in flight).
@@ -257,6 +282,8 @@ pub struct RooflineExecutor {
     /// Engine-policy state; `None` (the default) prices every iteration
     /// exactly as the seed executor did, bit for bit.
     policy: Option<PolicyState>,
+    /// Policy-event trace emission (EPLB replans); off by default.
+    trace: TraceHandle,
 }
 
 impl RooflineExecutor {
@@ -269,6 +296,7 @@ impl RooflineExecutor {
             seq: 0,
             seed,
             policy: None,
+            trace: TraceHandle::off(),
         }
     }
 
@@ -352,7 +380,11 @@ impl Executor for RooflineExecutor {
         ticket.est
     }
 
-    fn on_control_tick(&mut self, _now_s: f64) {
+    fn set_trace(&mut self, trace: TraceHandle) {
+        self.trace = trace;
+    }
+
+    fn on_control_tick(&mut self, now_s: f64) {
         let Some(p) = &mut self.policy else { return };
         let Some(e) = &mut p.eplb else { return };
         // no routed traffic since the last tick: imbalance over an
@@ -381,6 +413,7 @@ impl Executor for RooflineExecutor {
             }
             e.table = table;
             e.replans += 1;
+            self.trace.instant(now_s, None, None, InstantKind::EplbReplan);
         }
         // cost multiplier: achieved imbalance vs the static assumption
         // already priced into the roofline's MoE FLOP term
@@ -525,6 +558,20 @@ mod tests {
         let a = on.begin_iteration(0, 0.0, &work);
         let b = off.begin_iteration(0, 0.0, &work);
         assert!(a <= b, "balanced cores + Eq.(1) overlap must not slow decode: {a} vs {b}");
+    }
+
+    #[test]
+    fn policy_counters_round_trip_the_registry() {
+        let c = PolicyCounters {
+            eplb_replans: 3,
+            weight_switches: 2,
+            graph_compiles: 5,
+            graph_hits: 9,
+            graph_fallbacks: 1,
+        };
+        let mut reg = MetricsRegistry::new();
+        c.export_metrics(&mut reg);
+        assert_eq!(PolicyCounters::from_registry(&reg), c);
     }
 
     #[test]

@@ -276,3 +276,85 @@ fn fleet_scales_over_one_replica_under_load() {
     assert!(r1.all_accounted() && r3.all_accounted());
     assert!(e3 < e1 / 1.5, "3 replicas mean E2E {e3} !< {e1}/1.5");
 }
+
+#[test]
+fn traced_failover_and_preemption_spans_stay_nested() {
+    // ISSUE 7: every request's lifecycle spans must pair Begin/End with
+    // at most one open at a time, across a mid-run replica crash (spans
+    // closed at drain, re-opened on the survivor under a fresh id) and
+    // any preemptions the re-dispatch causes.
+    use xllm::obs::{check_nesting, InstantKind, TraceEventKind, TraceHandle};
+
+    let mut rng = Rng::new(0xBEEF);
+    let w = scenario("skewed-prefix").unwrap().generate(30.0, 3.0, &mut rng);
+    let n = w.len();
+
+    let trace = TraceHandle::recording();
+    let mut cfg = FleetConfig::new(template(), 3);
+    cfg.control.replica_faults = vec![(10.0, 1)];
+    cfg.control.trace = trace.clone();
+    let res = run_fleet(cfg, w);
+    assert_eq!(res.report.n_completed(), n, "failover must lose nothing");
+    assert_eq!(res.counters.failovers, 1);
+
+    let events = trace.drain();
+    assert!(!events.is_empty(), "a traced fleet run must record events");
+    check_nesting(&events).expect("spans must stay well-nested across failover");
+
+    // all three replica tracks show up, plus the control-plane track's
+    // Failover instant
+    for r in 0..3 {
+        assert!(
+            events.iter().any(|e| e.replica == Some(r)),
+            "replica {r} must emit trace events"
+        );
+    }
+    assert!(events.iter().any(|e| e.replica.is_none()
+        && matches!(e.kind, TraceEventKind::Instant(InstantKind::Failover))));
+    // arrivals and completions both present: full request lifecycles
+    let arrivals = events
+        .iter()
+        .filter(|e| matches!(e.kind, TraceEventKind::Instant(InstantKind::Arrival)))
+        .count();
+    let completions = events
+        .iter()
+        .filter(|e| matches!(e.kind, TraceEventKind::Instant(InstantKind::Completion)))
+        .count();
+    assert!(arrivals >= n, "every routed request must emit an Arrival ({arrivals} < {n})");
+    assert_eq!(completions, n, "every completed request must emit a Completion");
+}
+
+#[test]
+fn traced_autoscale_run_emits_scale_instants() {
+    use xllm::obs::{check_nesting, InstantKind, TraceEventKind, TraceHandle};
+    use xllm::service::controlplane::ScalerConfig as SC;
+
+    let mut rng = Rng::new(0x71DE);
+    let w = scenario("tide").unwrap().generate(30.0, 4.0, &mut rng);
+
+    let trace = TraceHandle::recording();
+    let mut cfg = FleetConfig::new(template(), 1);
+    cfg.control.scaler = Some(SC {
+        capacity_target_tokens: 2048,
+        min_replicas: 1,
+        max_replicas: 4,
+        cooldown_s: 0.5,
+        ..Default::default()
+    });
+    cfg.control.trace = trace.clone();
+    let res = run_fleet(cfg, w);
+    assert!(res.counters.scale_ups >= 1, "tide must grow the fleet: {:?}", res.counters);
+
+    let events = trace.drain();
+    check_nesting(&events).expect("spans must stay well-nested across scaling");
+    let ups = events
+        .iter()
+        .filter(|e| matches!(e.kind, TraceEventKind::Instant(InstantKind::ScaleUp)))
+        .count();
+    assert_eq!(ups as u64, res.counters.scale_ups, "one ScaleUp instant per scale-up");
+    if res.counters.scale_downs > 0 {
+        assert!(events
+            .iter()
+            .any(|e| matches!(e.kind, TraceEventKind::Instant(InstantKind::ScaleDown))));
+    }
+}
