@@ -8,6 +8,7 @@ use std::collections::HashMap;
 
 use crate::engine::policies::EnginePolicies;
 use crate::metrics::Slo;
+use crate::model::ShardSpec;
 
 /// Parsed command-line arguments: one subcommand + `--key value` options.
 #[derive(Debug, Clone, Default)]
@@ -98,6 +99,11 @@ pub struct ServeConfig {
     /// selection against the AOT buckets, counted in `ServerStats`);
     /// the rest are accepted for CLI symmetry with `simulate`.
     pub policies: EnginePolicies,
+    /// Device-group shape behind this replica (`--shard tp=..,pp=..`).
+    /// The real engine runs single-device today; the shard still flows
+    /// into the stand-in cost model and the control plane's load
+    /// reports, so fleet-level device accounting sees the true width.
+    pub shard: ShardSpec,
 }
 
 impl Default for ServeConfig {
@@ -112,6 +118,7 @@ impl Default for ServeConfig {
             pipeline_depth: 1,
             prefix_block_tokens: crate::coordinator::orchestrator::DEFAULT_PREFIX_BLOCK_TOKENS,
             policies: EnginePolicies::default(),
+            shard: ShardSpec::default(),
         }
     }
 }

@@ -87,6 +87,13 @@ pub struct Orchestrator<X: Executor> {
     /// everything submitted so far.  Both reduce to "now" at depth 1.
     host_free: Vec<f64>,
     device_free: Vec<f64>,
+    /// Per-instance pipeline-parallel entry frontier: when the device
+    /// group's first pp stage can accept the next iteration's
+    /// micro-batches — `device_free - ramp_s` of the newest submission
+    /// (the pp drain tail overlaps the next iteration's fill).  Tracks
+    /// `device_free` exactly while executors report `ramp_s == 0`, so
+    /// unsharded timelines are bit-identical to the two-frontier model.
+    stage_free: Vec<f64>,
     /// Where each request's prefill ran (decode placement preference).
     prefill_home: HashMap<RequestId, InstanceId>,
     prefix_cache: TieredCache,
@@ -138,6 +145,7 @@ impl<X: Executor> Orchestrator<X> {
             inflight: HashMap::new(),
             host_free: vec![0.0; n_total],
             device_free: vec![0.0; n_total],
+            stage_free: vec![0.0; n_total],
             prefill_home: HashMap::new(),
             prefix_cache,
             report: ServingReport::new(),
@@ -316,6 +324,7 @@ impl<X: Executor> Orchestrator<X> {
     /// on each heartbeat lease renewal (§3.4 load-info synchronization).
     pub fn load_report(&self) -> LoadReport {
         let mut rep = LoadReport::default();
+        rep.shard = self.executor.cost().features.shard;
         for id in 0..self.instances.len() {
             let v = self.view(id);
             rep.queued_prefill_tokens += v.queued_prefill_tokens;
@@ -812,11 +821,20 @@ impl<X: Executor> Orchestrator<X> {
         // the device starts an iteration once both the host work and the
         // previous iteration are done.  At depth 1 both frontiers are in
         // the past, so this reduces exactly to the blocking
-        // `now + host + device`.
+        // `now + host + device`.  Second pipelining axis (pp): a sharded
+        // executor reports `ramp_s > 0` — its pp drain tail — so the
+        // next iteration may enter the device group at `stage_free`
+        // (first stage idle) while completions stay clamped to
+        // `device_free` (the group is only fully done then).  With
+        // `ramp_s == 0` the stage frontier tracks the device frontier
+        // exactly and the timeline is bit-identical to the two-frontier
+        // model.
         let host_done = now.max(self.host_free[id]) + outcome.host_s;
         let ready = now.max(self.device_free[id]);
-        let done = host_done.max(self.device_free[id]) + outcome.device_s;
+        let start = host_done.max(self.stage_free[id]);
+        let done = (start + outcome.device_s).max(self.device_free[id]);
         self.host_free[id] = host_done;
+        self.stage_free[id] = done - outcome.ramp_s;
         self.device_free[id] = done;
         // instance-utilization track: one span per device iteration
         self.trace.complete(
@@ -1304,6 +1322,7 @@ impl<X: Executor> Orchestrator<X> {
         }
         self.host_free[id] = now;
         self.device_free[id] = now;
+        self.stage_free[id] = now;
         let owned = self.instances[id].owned_requests();
         for rid in owned {
             self.instances[id].evict(rid);
@@ -1582,6 +1601,52 @@ mod tests {
         let e1 = r1.report.e2e_summary().mean();
         let e2 = r2.report.e2e_summary().mean();
         assert!(e2 < e1, "pipelined E2E {e2} must beat blocking {e1}");
+    }
+
+    #[test]
+    fn pp_ramp_overlaps_iterations_at_depth2() {
+        // a sharded device group reports a drain tail (ramp_s): its first
+        // pp stage frees up early, so consecutive iterations overlap by
+        // ramp_s once the depth-2 pipeline is warm
+        let workload = vec![RequestSpec::text(0.0, 64, 32)];
+        let cfg =
+            OrchestratorConfig { n_instances: 1, pipeline_depth: 2, ..Default::default() };
+        let (flat, _) = Orchestrator::new(cfg.clone(), FixedCost::new(0.01)).run(workload.clone());
+        let (ramped, _) =
+            Orchestrator::new(cfg, FixedCost::with_ramp(0.01, 0.002)).run(workload);
+        assert_eq!(flat.report.n_completed(), 1);
+        assert_eq!(ramped.report.n_completed(), 1);
+        let e_flat = flat.report.e2e_summary().mean();
+        let e_ramp = ramped.report.e2e_summary().mean();
+        assert!(e_ramp < e_flat, "pp overlap E2E {e_ramp} must beat flat {e_flat}");
+    }
+
+    #[test]
+    fn pp_ramp_is_inert_at_depth1() {
+        // depth 1 is the blocking contract: the next submit happens at or
+        // after the previous completion, so an early stage frontier can
+        // never be the binding term — bit-identical timelines
+        let workload = vec![RequestSpec::text(0.0, 64, 32)];
+        let cfg = OrchestratorConfig { n_instances: 1, ..Default::default() };
+        let (flat, _) = Orchestrator::new(cfg.clone(), FixedCost::new(0.01)).run(workload.clone());
+        let (ramped, _) =
+            Orchestrator::new(cfg, FixedCost::with_ramp(0.01, 0.002)).run(workload);
+        assert_eq!(
+            flat.report.e2e_summary().mean().to_bits(),
+            ramped.report.e2e_summary().mean().to_bits()
+        );
+        assert_eq!(flat.iterations, ramped.iterations);
+    }
+
+    #[test]
+    fn load_report_carries_the_executor_shard() {
+        let cfg = OrchestratorConfig { n_instances: 1, ..Default::default() };
+        let mut exec = FixedCost::new(0.01);
+        exec.cost.features.shard = crate::model::ShardSpec::new(2, 2, 4);
+        let orch = Orchestrator::new(cfg, exec);
+        let rep = orch.load_report();
+        assert_eq!(rep.shard, crate::model::ShardSpec::new(2, 2, 4));
+        assert_eq!(rep.devices(), 4);
     }
 
     #[test]

@@ -108,6 +108,14 @@ pub struct IterationOutcome {
     pub host_s: f64,
     /// Device execution time (modelled or measured).
     pub device_s: f64,
+    /// Pipeline-parallel drain tail within `device_s`: the trailing
+    /// window during which the replica's first pp stage is already idle
+    /// and the *next* iteration's micro-batches may start filling the
+    /// pipeline (second pipelining axis; see DESIGN.md §Sharding).
+    /// 0.0 — the default, and always for `pp == 1` backends — keeps the
+    /// timeline exactly on the per-device frontier.  Effective only at
+    /// pipeline depth ≥ 2, like the host share.
+    pub ramp_s: f64,
 }
 
 impl IterationOutcome {
@@ -432,6 +440,16 @@ pub struct LoadReport {
     /// Fraction of in-flight requests that are online (latency-bound) —
     /// drives the cross-replica §3.1 offline steering.
     pub online_fraction: f64,
+    /// Device-group layout of this replica (`devices = tp * pp`) — the
+    /// control plane's scaler prices replicas in devices, not heads.
+    pub shard: crate::model::ShardSpec,
+}
+
+impl LoadReport {
+    /// Devices this replica occupies (`shard.tp * shard.pp`).
+    pub fn devices(&self) -> u32 {
+        self.shard.devices()
+    }
 }
 
 /// A request caught in flight when its orchestrator replica dies,

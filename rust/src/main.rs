@@ -31,7 +31,12 @@
 //! replicas on N worker threads between control events (1 = the
 //! deterministic single-queue interleave); `--backend pjrt` (fleet)
 //! runs N real `PjrtExecutor` replicas over the AOT artifacts behind
-//! the same control plane.
+//! the same control plane; `--shard tp=T,pp=P[,mb=M]` (serve, simulate,
+//! fleet) sizes each replica's device group — T-way tensor parallel per
+//! stage × P pipeline stages fed by M micro-batches (`--tp N` stays as
+//! the tensor-only shorthand); `--device-budget N` (fleet, with
+//! `--autoscale`) caps total fleet devices: the scaler trades replica
+//! count against shard width and never exceeds `Σ tp×pp ≤ N`.
 //!
 //! Observability (serve, simulate, fleet): `--trace-out PATH` records
 //! the request-lifecycle trace and writes Perfetto-loadable Chrome
@@ -143,6 +148,24 @@ fn phase_seconds_json(report: &xllm::metrics::ServingReport) -> Json {
     pj
 }
 
+/// `--shard tp=..,pp=..,mb=..` (serve, simulate, fleet).  Without it,
+/// `--tp N` keeps working as the tensor-only shorthand.
+fn shard_from_args(args: &Args) -> Result<model::ShardSpec> {
+    match args.get("shard") {
+        Some(s) => model::ShardSpec::parse(s).map_err(|e| anyhow::anyhow!(e)),
+        None => Ok(model::ShardSpec::tp(args.get_u64("tp", 1) as u32)),
+    }
+}
+
+/// The replica device-group shape as a JSON object for command results.
+fn shard_json(shard: model::ShardSpec) -> Json {
+    Json::obj()
+        .set("tp", shard.tp)
+        .set("pp", shard.pp)
+        .set("micro_batches", shard.micro_batches)
+        .set("devices", shard.devices())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let artifacts = args.get_or("artifacts", "artifacts");
     let n_requests = args.get_u64("requests", 16) as usize;
@@ -150,12 +173,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_new = args.get_u64("max-new", 24) as usize;
     let batch = args.get_u64("batch", 8) as usize;
     let speculative = args.has_flag("speculative");
+    let shard = shard_from_args(args)?;
 
     let cfg = ServeConfig {
         artifacts_dir: artifacts.clone(),
         max_batch: batch,
         max_output_tokens: max_new,
         speculative,
+        shard,
         // ≥ 2 moves the engine onto a worker thread (async pipeline §4.2)
         pipeline_depth: args.get_u64("pipeline-depth", 1).max(1) as usize,
         policies: EnginePolicies::parse(&args.get_or("engine-policies", "none"))
@@ -198,6 +223,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .set("graph_padded_hits", server.stats.graph_padded_hits)
         .set("graph_eager_fallbacks", server.stats.graph_eager_fallbacks)
         .set("calibration_updates", server.stats.calibration_updates)
+        .set("shard", shard_json(shard))
         .set("phase_seconds", phase_seconds_json(&report));
     println!("{}", out.to_string());
     if let Some(r) = results.first() {
@@ -221,7 +247,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let n = args.get_u64("instances", 4) as usize;
     let rate = args.get_f64("rate", 1.0);
     let horizon = args.get_f64("horizon", 60.0);
-    let tp = args.get_u64("tp", 1) as u32;
+    let shard = shard_from_args(args)?;
     let mode = args.get_or("mode", "colocated");
     // `--engine-features` is the paper-facing alias of `--framework`
     let framework = args
@@ -239,11 +265,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let spec = model::catalog(&model_name)
         .ok_or_else(|| anyhow::anyhow!("unknown model {model_name} (see `xllm models`)"))?;
     let features = match framework.as_str() {
-        "xllm" => EngineFeatures::xllm(tp),
-        "vllm" => EngineFeatures::vllm(tp),
-        "mindie" => EngineFeatures::mindie(tp),
+        "xllm" => EngineFeatures::xllm(shard.tp),
+        "vllm" => EngineFeatures::vllm(shard.tp),
+        "mindie" => EngineFeatures::mindie(shard.tp),
         other => bail!("unknown framework {other}"),
-    };
+    }
+    .with_shard(shard);
     let sc = scenario(&scenario_name)
         .ok_or_else(|| anyhow::anyhow!("unknown scenario {scenario_name}"))?;
 
@@ -291,6 +318,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         .set("framework", framework)
         .set("engine_policies", policies_label)
         .set("instances", n)
+        .set("shard", shard_json(shard))
         .set("requests", n_reqs)
         .set("completed", report.n_completed())
         .set("output_tok_s", report.output_throughput())
@@ -312,7 +340,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         let mut reg = MetricsRegistry::new();
         report.export_metrics(&mut reg);
         res.export_metrics(&mut reg);
-        exec.policy_counters().export_metrics(&mut reg);
+        exec.policy_counters().unwrap_or_default().export_metrics(&mut reg);
         write_metrics(p, &reg)?;
     }
     if let Some(p) = &trace_out {
@@ -334,6 +362,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let rate = args.get_f64("rate", 2.0);
     let horizon = args.get_f64("horizon", 40.0);
     let backend = args.get_or("backend", "roofline");
+    let shard = shard_from_args(args)?;
     let pipeline_depth = args.get_u64("pipeline-depth", 1).max(1) as usize;
     let policies = EnginePolicies::parse(&args.get_or("engine-policies", "none"))
         .map_err(|e| anyhow::anyhow!(e))?;
@@ -369,6 +398,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             warm_start_chains: args
                 .get_u64("warm-start-chains", d.warm_start_chains as u64)
                 as usize,
+            device_budget: args.get_u64("device-budget", d.device_budget),
         });
     }
 
@@ -400,6 +430,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                 // KV can be stashed/shipped between replicas
                 prefix_block_tokens: args.get_u64("block-tokens", 16).max(1),
                 policies,
+                shard,
                 ..ServeConfig::default()
             };
             // the global index granularity must match the replicas'
@@ -419,7 +450,8 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                 model::ascend_910b(),
                 spec,
                 EngineFeatures::xllm(1),
-            );
+            )
+            .with_shard(shard);
             template.prefix_cache = true;
             template.pipeline_depth = pipeline_depth;
             template.host_overhead_s = args.get_f64("host-overhead", 0.0).max(0.0);
@@ -435,6 +467,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         .set("scenario", scenario_name)
         .set("replicas", n_replicas)
         .set("instances_per_replica", n_instances)
+        .set("shard", shard_json(shard))
         .set("requests", n_reqs)
         .set("completed", report.n_completed())
         .set("output_tok_s", report.output_throughput())

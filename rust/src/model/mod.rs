@@ -151,6 +151,76 @@ pub const CATALOG_NAMES: &[&str] = &[
     "DeepSeek-V3",
 ];
 
+/// How a replica shards its model across a device group (DESIGN.md
+/// §Sharding): `tp`-way tensor parallelism within each pipeline stage,
+/// `pp` pipeline stages over the layer stack, and `micro_batches`
+/// micro-batches filling the pipeline per iteration.  A replica
+/// occupies `tp * pp` devices.  The default `{1, 1, 1}` is the
+/// single-device replica and must be cost-neutral everywhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Tensor-parallel degree within each pipeline stage.
+    pub tp: u32,
+    /// Pipeline-parallel stage count over the layer stack.
+    pub pp: u32,
+    /// Micro-batches per iteration filling the pp pipeline (ignored
+    /// when `pp == 1`).
+    pub micro_batches: u32,
+}
+
+impl Default for ShardSpec {
+    fn default() -> ShardSpec {
+        ShardSpec { tp: 1, pp: 1, micro_batches: 1 }
+    }
+}
+
+impl ShardSpec {
+    /// Tensor-parallel-only shard (the pre-ShardSpec `tp` scalar).
+    pub fn tp(tp: u32) -> ShardSpec {
+        ShardSpec { tp: tp.max(1), ..ShardSpec::default() }
+    }
+
+    pub fn new(tp: u32, pp: u32, micro_batches: u32) -> ShardSpec {
+        ShardSpec { tp: tp.max(1), pp: pp.max(1), micro_batches: micro_batches.max(1) }
+    }
+
+    /// Devices one replica occupies (`tp * pp`).
+    pub fn devices(&self) -> u32 {
+        self.tp.saturating_mul(self.pp)
+    }
+
+    /// Parse the CLI form `tp=4,pp=2,mb=8` (any subset of keys, any
+    /// order; `micro_batches=` accepted as an alias for `mb=`).
+    pub fn parse(s: &str) -> Result<ShardSpec, String> {
+        let mut spec = ShardSpec::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("bad shard component {part:?} (want key=value)"))?;
+            let n: u32 = val
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad shard value {val:?} in {part:?}"))?;
+            if n == 0 {
+                return Err(format!("shard degree must be >= 1 in {part:?}"));
+            }
+            match key.trim() {
+                "tp" => spec.tp = n,
+                "pp" => spec.pp = n,
+                "mb" | "micro_batches" => spec.micro_batches = n,
+                other => return Err(format!("unknown shard key {other:?} (tp/pp/mb)")),
+            }
+        }
+        Ok(spec)
+    }
+}
+
+impl std::fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "tp={},pp={},mb={}", self.tp, self.pp, self.micro_batches)
+    }
+}
+
 /// Accelerator abstraction (Ascend-shaped; see DESIGN.md §Hardware-Adaptation).
 #[derive(Debug, Clone, PartialEq)]
 pub struct HardwareSpec {
@@ -255,6 +325,29 @@ mod tests {
         let c = ascend_910c();
         assert!(c.matrix_flops > b.matrix_flops);
         assert!(c.hbm_bw > b.hbm_bw);
+    }
+
+    #[test]
+    fn shard_spec_parses_and_counts_devices() {
+        assert_eq!(ShardSpec::default(), ShardSpec { tp: 1, pp: 1, micro_batches: 1 });
+        assert_eq!(ShardSpec::default().devices(), 1);
+        assert_eq!(ShardSpec::tp(4), ShardSpec { tp: 4, pp: 1, micro_batches: 1 });
+        let s = ShardSpec::parse("tp=4,pp=2,mb=8").unwrap();
+        assert_eq!(s, ShardSpec { tp: 4, pp: 2, micro_batches: 8 });
+        assert_eq!(s.devices(), 8);
+        // subsets, aliases, whitespace
+        assert_eq!(ShardSpec::parse("pp=2").unwrap(), ShardSpec::new(1, 2, 1));
+        assert_eq!(
+            ShardSpec::parse(" tp=2 , micro_batches=4 ").unwrap(),
+            ShardSpec::new(2, 1, 4)
+        );
+        assert_eq!(ShardSpec::parse("").unwrap(), ShardSpec::default());
+        // rejects malformed input
+        assert!(ShardSpec::parse("tp").is_err());
+        assert!(ShardSpec::parse("tp=zero").is_err());
+        assert!(ShardSpec::parse("tp=0").is_err());
+        assert!(ShardSpec::parse("ep=2").is_err());
+        assert_eq!(ShardSpec::new(4, 2, 8).to_string(), "tp=4,pp=2,mb=8");
     }
 
     #[test]

@@ -819,7 +819,11 @@ impl PjrtExecutor {
         let max_prompt = core.max_prompt;
         // stand-in cost model for the orchestrator's heuristics (single
         // instance: only relative magnitudes matter)
-        let cost = CostModel::new(cpu_host(), tiny_model_spec(dims), EngineFeatures::xllm(1));
+        let cost = CostModel::new(
+            cpu_host(),
+            tiny_model_spec(dims),
+            EngineFeatures::xllm(1).with_shard(cfg.shard),
+        );
         let est_spec = if cfg.speculative && spec_m > 0 {
             Some(SpecConfig { m: spec_m, acceptance: 0.75 })
         } else {
@@ -952,7 +956,7 @@ impl Executor for PjrtExecutor {
                     self.calibration_updates += 1;
                     self.trace.instant(now_s, Some(instance), None, InstantKind::Calibration);
                 }
-                let out = IterationOutcome { host_s: 0.0, device_s };
+                let out = IterationOutcome { host_s: 0.0, device_s, ramp_s: 0.0 };
                 self.inline_last = Some((seq, out));
                 IterationTicket { instance, seq, est: out }
             }
@@ -967,7 +971,7 @@ impl Executor for PjrtExecutor {
                 IterationTicket {
                     instance,
                     seq,
-                    est: IterationOutcome { host_s: 0.0, device_s },
+                    est: IterationOutcome { host_s: 0.0, device_s, ramp_s: 0.0 },
                 }
             }
         }
@@ -993,7 +997,7 @@ impl Executor for PjrtExecutor {
                         self.calibration_updates += 1;
                         self.trace.instant(t, Some(ticket.instance), None, InstantKind::Calibration);
                     }
-                    IterationOutcome { host_s: 0.0, device_s }
+                    IterationOutcome { host_s: 0.0, device_s, ramp_s: 0.0 }
                 }
                 None => {
                     // worker died: fall back to the estimate so the

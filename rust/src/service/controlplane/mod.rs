@@ -60,6 +60,7 @@ use crate::coordinator::orchestrator::{
     DEFAULT_PREFIX_BLOCK_TOKENS,
 };
 use crate::metrics::{PhaseBreakdown, RequestOutcome, ServingReport};
+use crate::model::ShardSpec;
 use crate::obs::{InstantKind, MetricsRegistry, TraceHandle};
 use crate::service::colocation::ColocationConfig;
 use crate::service::fault::{plan_recovery, InterruptedRequest, RecoveryAction};
@@ -288,13 +289,14 @@ pub struct ControlPlane<X: Executor> {
     lost: ServingReport,
     /// Elastic-scaling policy (built from `cfg.scaler`).
     scaler: Option<FleetScaler>,
-    /// Factory for scale-up replicas (`id -> fresh orchestrator`); without
-    /// one the scaler can still decommission but never spawn.  Returning
-    /// `None` declines the spawn (e.g. the backend's artifacts became
-    /// unavailable mid-run) — the fleet keeps serving at its current
-    /// size instead of crashing.  `Send` so the whole control plane
-    /// stays movable across threads.
-    spawner: Option<Box<dyn FnMut(usize) -> Option<Orchestrator<X>> + Send>>,
+    /// Factory for scale-up replicas (`(id, shard) -> fresh
+    /// orchestrator`, the shard chosen by the scaler's device-budget
+    /// policy); without one the scaler can still decommission but never
+    /// spawn.  Returning `None` declines the spawn (e.g. the backend's
+    /// artifacts became unavailable mid-run) — the fleet keeps serving
+    /// at its current size instead of crashing.  `Send` so the whole
+    /// control plane stays movable across threads.
+    spawner: Option<Box<dyn FnMut(usize, ShardSpec) -> Option<Orchestrator<X>> + Send>>,
 }
 
 impl<X: Executor> ControlPlane<X> {
@@ -330,14 +332,15 @@ impl<X: Executor> ControlPlane<X> {
     }
 
     /// Install the replica factory the scaler uses for scale-up.  The
-    /// factory gets the new replica's id and returns an orchestrator that
-    /// has NOT been started (the control plane aligns its clock with
-    /// fleet time and registers it; it becomes routable after its first
-    /// heartbeat), or `None` to decline the spawn — the scale-up is
-    /// skipped and the fleet keeps serving at its current size.
+    /// factory gets the new replica's id plus the device-group shape the
+    /// scaler picked, and returns an orchestrator that has NOT been
+    /// started (the control plane aligns its clock with fleet time and
+    /// registers it; it becomes routable after its first heartbeat), or
+    /// `None` to decline the spawn — the scale-up is skipped and the
+    /// fleet keeps serving at its current size.
     pub fn with_spawner(
         mut self,
-        f: impl FnMut(usize) -> Option<Orchestrator<X>> + Send + 'static,
+        f: impl FnMut(usize, ShardSpec) -> Option<Orchestrator<X>> + Send + 'static,
     ) -> ControlPlane<X> {
         self.spawner = Some(Box::new(f));
         self
@@ -701,15 +704,16 @@ impl<X: Executor> ControlPlane<X> {
 
     fn apply_scale_action(&mut self, action: ScaleAction, now: f64) {
         match action {
-            ScaleAction::Up => self.scale_up(now),
+            ScaleAction::Up { shard } => self.scale_up(now, shard),
             ScaleAction::Down(r) => self.decommission_replica(r, now),
             ScaleAction::Rebalance { chain, from, to } => self.start_rebalance(chain, from, to),
         }
     }
 
-    /// Spawn a fresh replica: clock aligned to fleet time, registered
-    /// now, routable after its first heartbeat publishes a load report.
-    fn scale_up(&mut self, now: f64) {
+    /// Spawn a fresh replica with the scaler-chosen device-group shape:
+    /// clock aligned to fleet time, registered now, routable after its
+    /// first heartbeat publishes a load report.
+    fn scale_up(&mut self, now: f64, shard: ShardSpec) {
         // clamp against every live replica, including ones still pending
         // their first heartbeat (the registry cannot see those yet)
         let live = self.replicas.iter().filter(|r| r.orch.is_some()).count();
@@ -721,7 +725,7 @@ impl<X: Executor> ControlPlane<X> {
             return; // no factory: the scaler can only shrink this fleet
         };
         let id = self.replicas.len();
-        let Some(mut orch) = spawn(id) else {
+        let Some(mut orch) = spawn(id, shard) else {
             return; // factory declined (e.g. backend lost its artifacts)
         };
         orch.set_trace(self.cfg.trace.for_replica(id));
@@ -1098,7 +1102,7 @@ mod tests {
             (0..16).map(|i| RequestSpec::text(i as f64 * 0.2, 2048, 32)).collect();
         w.push(RequestSpec::text(14.0, 64, 4));
         let n = w.len();
-        let res = ControlPlane::new(cfg, vec![mk()]).with_spawner(move |_| Some(mk())).run(w);
+        let res = ControlPlane::new(cfg, vec![mk()]).with_spawner(move |_, _| Some(mk())).run(w);
         assert!(res.all_accounted());
         assert_eq!(
             res.report.n_completed(),
@@ -1159,7 +1163,7 @@ mod tests {
             })
             .collect();
         let n = w.len();
-        let res = ControlPlane::new(cfg, vec![mk()]).with_spawner(move |_| Some(mk())).run(w);
+        let res = ControlPlane::new(cfg, vec![mk()]).with_spawner(move |_, _| Some(mk())).run(w);
         assert!(res.all_accounted());
         assert_eq!(res.report.n_completed(), n, "warm start must lose nothing: {:?}", res.counters);
         assert!(res.counters.scale_ups >= 1, "burst must grow the fleet: {:?}", res.counters);

@@ -130,6 +130,10 @@ impl InstanceRegistry {
                 l.n_queued as f64,
             );
             reg.set_gauge(&format!("xllm_registry_kv_used{{replica=\"{r}\"}}"), l.kv_used as f64);
+            reg.set_gauge(
+                &format!("xllm_shard_devices{{replica=\"{r}\"}}"),
+                f64::from(l.devices()),
+            );
         }
     }
 }

@@ -31,6 +31,7 @@
 use std::cmp::Reverse;
 use std::collections::HashMap;
 
+use crate::model::ShardSpec;
 use crate::service::controlplane::index::GlobalPrefixIndex;
 use crate::service::controlplane::registry::InstanceRegistry;
 
@@ -58,6 +59,11 @@ pub struct ScalerConfig {
     /// first heartbeat, so the top shared prefixes already hit its
     /// local cache by the time it becomes routable.  0 disables.
     pub warm_start_chains: usize,
+    /// Total device budget across the fleet (`Σ tp×pp` over alive
+    /// replicas plus any spawn in flight must stay ≤ this).  Replicas
+    /// are priced in devices, not heads: a tp=4,pp=2 replica costs 8.
+    /// 0 = unlimited (replica count is still capped by `max_replicas`).
+    pub device_budget: u64,
 }
 
 impl Default for ScalerConfig {
@@ -69,6 +75,7 @@ impl Default for ScalerConfig {
             cooldown_s: 1.0,
             hot_prefix_routes: 8,
             warm_start_chains: 2,
+            device_budget: 0,
         }
     }
 }
@@ -76,8 +83,9 @@ impl Default for ScalerConfig {
 /// One control action planned by the scaler.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ScaleAction {
-    /// Spawn a fresh replica (routable after its first heartbeat).
-    Up,
+    /// Spawn a fresh replica with this device-group shape (routable
+    /// after its first heartbeat).
+    Up { shard: ShardSpec },
     /// Gracefully decommission this replica (drain + re-dispatch).
     Down(usize),
     /// Proactively migrate a hot prefix chain from `from` to `to`.
@@ -105,6 +113,11 @@ pub struct FleetScaler {
 /// so a long run over many distinct prefixes cannot grow the tracker
 /// (or the per-tick scan) without limit.
 const MAX_TRACKED_CHAINS: usize = 256;
+
+/// Fleet-wide KV utilization above which a scale-up prefers a
+/// tensor-wider replica (more HBM per replica) over another replica at
+/// the current width: the fleet is memory-bound, not queue-bound.
+const KV_PRESSURE_WIDEN: f64 = 0.85;
 
 fn backlog(registry: &InstanceRegistry, replica: usize) -> u64 {
     registry
@@ -166,11 +179,12 @@ impl FleetScaler {
         }
     }
 
-    /// Publish the tracker state as `xllm_scaler_*` gauges.
+    /// Publish the tracker state as `xllm_scaler_*`/`xllm_shard_*` gauges.
     pub fn export_metrics(&self, reg: &mut crate::obs::MetricsRegistry) {
         reg.set_gauge("xllm_scaler_tracked_chains", self.hot.len() as f64);
         let routes: u64 = self.hot.values().map(|s| s.per_replica.values().sum::<u64>()).sum();
         reg.set_gauge("xllm_scaler_tracked_routes", routes as f64);
+        reg.set_gauge("xllm_shard_device_budget", self.cfg.device_budget as f64);
     }
 
     /// Plan this tick's actions against the live registry/index state.
@@ -193,8 +207,10 @@ impl FleetScaler {
             // never shrink to zero: an empty fleet cannot scale back up
             let min = self.cfg.min_replicas.max(1);
             if n < self.cfg.max_replicas && total > target.saturating_mul(n as u64) {
-                self.last_scale_s = now_s;
-                actions.push(ScaleAction::Up);
+                if let Some(shard) = self.plan_up_shard(&alive, registry) {
+                    self.last_scale_s = now_s;
+                    actions.push(ScaleAction::Up { shard });
+                }
             } else if n > min && total <= target.saturating_mul((n - 1) as u64) / 2 {
                 // retire the least-loaded replica; ties break to the
                 // newest id (oldest replicas are the stable core)
@@ -216,6 +232,48 @@ impl FleetScaler {
             }
         }
         actions
+    }
+
+    /// Choose the device-group shape for a scale-up, or `None` when the
+    /// device budget has no room for another replica.
+    ///
+    /// The base shape copies the first alive replica's reported shard
+    /// (the fleet is homogeneous today).  A *memory*-bound fleet — KV
+    /// pools past [`KV_PRESSURE_WIDEN`] utilization in aggregate — gets
+    /// a tensor-wider group (tp×2: more HBM behind each replica); a
+    /// queue-bound fleet scales out at the current width.  Either pick
+    /// must fit the remaining `device_budget`: a widened group that
+    /// does not fit falls back to the base width, and when even the
+    /// base exceeds the budget the scale-up is suppressed.
+    fn plan_up_shard(
+        &self,
+        alive: &[usize],
+        registry: &InstanceRegistry,
+    ) -> Option<ShardSpec> {
+        let base = alive
+            .first()
+            .and_then(|&r| registry.load(r))
+            .map(|l| l.shard)
+            .unwrap_or_default();
+        let (mut kv_used, mut kv_cap, mut used_devices) = (0u64, 0u64, 0u64);
+        for &r in alive {
+            let Some(l) = registry.load(r) else { continue };
+            kv_used += l.kv_used;
+            kv_cap += l.kv_capacity;
+            used_devices += u64::from(l.devices());
+        }
+        let budget = self.cfg.device_budget;
+        let fits = |shard: ShardSpec| -> Option<ShardSpec> {
+            (budget == 0 || used_devices + u64::from(shard.devices()) <= budget)
+                .then_some(shard)
+        };
+        let memory_bound = kv_cap > 0 && kv_used as f64 > KV_PRESSURE_WIDEN * kv_cap as f64;
+        if memory_bound {
+            let wide = ShardSpec::new(base.tp.saturating_mul(2), base.pp, base.micro_batches);
+            fits(wide).or_else(|| fits(base))
+        } else {
+            fits(base)
+        }
     }
 
     /// A hot chain is worth moving when one replica absorbed at least
@@ -305,12 +363,12 @@ mod tests {
         let reg = registry(&[(0, 1500), (1, 900)]);
         let ix = GlobalPrefixIndex::new();
         let mut s = FleetScaler::new(cfg());
-        // 2400 total > 1000 * 2 replicas
-        assert_eq!(s.plan(0.0, &reg, &ix), vec![ScaleAction::Up]);
+        // 2400 total > 1000 * 2 replicas; unsharded fleet spawns at width 1
+        assert_eq!(s.plan(0.0, &reg, &ix), vec![ScaleAction::Up { shard: ShardSpec::default() }]);
         // cooldown: no immediate second action
         assert!(s.plan(0.5, &reg, &ix).is_empty());
         // after the cooldown it may act again
-        assert_eq!(s.plan(1.5, &reg, &ix), vec![ScaleAction::Up]);
+        assert_eq!(s.plan(1.5, &reg, &ix), vec![ScaleAction::Up { shard: ShardSpec::default() }]);
     }
 
     #[test]
@@ -374,6 +432,64 @@ mod tests {
         reg.deregister(2);
         let actions = s.plan(5.0, &reg, &ix);
         assert_eq!(actions, vec![ScaleAction::Rebalance { chain, from: 0, to: 1 }]);
+    }
+
+    fn sharded_registry(loads: &[(usize, u64, u64, u64, ShardSpec)]) -> InstanceRegistry {
+        let mut reg = InstanceRegistry::new(100.0);
+        for &(r, backlog, kv_used, kv_capacity, shard) in loads {
+            reg.register(r, 0.0);
+            reg.heartbeat(
+                r,
+                LoadReport {
+                    queued_prefill_tokens: backlog,
+                    kv_used,
+                    kv_capacity,
+                    shard,
+                    ..Default::default()
+                },
+                0.0,
+            );
+        }
+        reg
+    }
+
+    #[test]
+    fn device_budget_suppresses_scale_up_when_exhausted() {
+        // two tp=2,pp=2 replicas already occupy all 8 budgeted devices
+        let reg = sharded_registry(&[
+            (0, 5000, 0, 1 << 20, ShardSpec::new(2, 2, 1)),
+            (1, 5000, 0, 1 << 20, ShardSpec::new(2, 2, 1)),
+        ]);
+        let ix = GlobalPrefixIndex::new();
+        let mut s = FleetScaler::new(ScalerConfig { device_budget: 8, ..cfg() });
+        assert!(s.plan(0.0, &reg, &ix).is_empty(), "8 + 4 devices would exceed the budget");
+        // a wider budget admits the same-shape scale-out
+        let mut s = FleetScaler::new(ScalerConfig { device_budget: 12, ..cfg() });
+        assert_eq!(
+            s.plan(0.0, &reg, &ix),
+            vec![ScaleAction::Up { shard: ShardSpec::new(2, 2, 1) }]
+        );
+    }
+
+    #[test]
+    fn memory_bound_fleet_widens_tp_within_budget() {
+        // KV ~94% full: the fleet is memory-bound, so the scale-up
+        // prefers a tensor-wider replica (more HBM per replica)
+        let loads = [(0, 5000, 15_000, 16_000, ShardSpec::new(2, 1, 1))];
+        let reg = sharded_registry(&loads);
+        let ix = GlobalPrefixIndex::new();
+        let mut s = FleetScaler::new(ScalerConfig { device_budget: 8, ..cfg() });
+        assert_eq!(
+            s.plan(0.0, &reg, &ix),
+            vec![ScaleAction::Up { shard: ShardSpec::new(4, 1, 1) }]
+        );
+        // 2 devices of headroom cannot take the widened (4-device)
+        // pick — fall back to the current width
+        let mut s = FleetScaler::new(ScalerConfig { device_budget: 4, ..cfg() });
+        assert_eq!(
+            s.plan(0.0, &reg, &ix),
+            vec![ScaleAction::Up { shard: ShardSpec::new(2, 1, 1) }]
+        );
     }
 
     #[test]

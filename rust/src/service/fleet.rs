@@ -44,6 +44,20 @@ pub trait ReplicaFactory: Send {
     fn try_build(&mut self, id: usize) -> Option<Orchestrator<Self::Exec>> {
         Some(self.build(id))
     }
+
+    /// Like [`Self::try_build`], but for a scaler-chosen device-group
+    /// shape (`devices = tp × pp`): the scaler may widen a scale-up
+    /// replica when the fleet is memory-bound.  Backends that cannot
+    /// reshape (e.g. the real engine over fixed AOT artifacts) keep the
+    /// default, which ignores the shard and builds at the factory's
+    /// native shape.
+    fn try_build_sharded(
+        &mut self,
+        id: usize,
+        _shard: crate::model::ShardSpec,
+    ) -> Option<Orchestrator<Self::Exec>> {
+        self.try_build(id)
+    }
 }
 
 /// Build `n_replicas` replicas with `factory`, install the factory as
@@ -61,7 +75,9 @@ where
 {
     let replicas: Vec<Orchestrator<F::Exec>> =
         (0..n_replicas).map(|i| factory.build(i)).collect();
-    ControlPlane::new(cfg, replicas).with_spawner(move |i| factory.try_build(i)).run(workload)
+    ControlPlane::new(cfg, replicas)
+        .with_spawner(move |i, shard| factory.try_build_sharded(i, shard))
+        .run(workload)
 }
 
 #[cfg(test)]

@@ -76,7 +76,9 @@ impl ClusterConfig {
         model: ModelSpec,
         features: EngineFeatures,
     ) -> Self {
-        let kv_capacity = (hw.hbm_bytes * features.tp as f64 * 0.6
+        // KV pool spans the whole device group: tp shards each layer's
+        // KV across tp devices, pp spreads the layers across stages
+        let kv_capacity = (hw.hbm_bytes * features.shard.devices() as f64 * 0.6
             / model.kv_bytes_per_token().max(1.0)) as u64;
         ClusterConfig {
             n_instances,
@@ -104,6 +106,18 @@ impl ClusterConfig {
             seed: 0xD15EA5E,
             policies: EnginePolicies::default(),
         }
+    }
+
+    /// Re-shard the replica's device group: stamps `features.shard` and
+    /// recomputes the KV capacity for the new device count (the shard
+    /// must be set through here — or before `new` — so capacity and
+    /// cost model never disagree on the group size).
+    pub fn with_shard(mut self, shard: crate::model::ShardSpec) -> Self {
+        self.features.shard = shard;
+        let kv_capacity = (self.hw.hbm_bytes * shard.devices() as f64 * 0.6
+            / self.model.kv_bytes_per_token().max(1.0)) as u64;
+        self.batch.kv_capacity_tokens = kv_capacity.max(4096);
+        self
     }
 
     /// Split into the executor-agnostic orchestrator configuration
@@ -245,6 +259,19 @@ mod tests {
         let max = *toks.iter().max().unwrap() as f64;
         let min = *toks.iter().min().unwrap() as f64;
         assert!(max / min.max(1.0) < 2.0, "imbalanced: {toks:?}");
+    }
+
+    #[test]
+    fn shard_widens_kv_capacity_with_devices() {
+        let base = base_cfg(1);
+        let wide = base_cfg(1).with_shard(crate::model::ShardSpec::new(2, 2, 4));
+        assert_eq!(wide.features.shard.devices(), 4);
+        assert!(
+            wide.batch.kv_capacity_tokens >= 3 * base.batch.kv_capacity_tokens,
+            "4 devices should carry ~4x the KV pool: {} vs {}",
+            wide.batch.kv_capacity_tokens,
+            base.batch.kv_capacity_tokens
+        );
     }
 
     #[test]

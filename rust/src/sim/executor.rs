@@ -316,7 +316,7 @@ impl RooflineExecutor {
         if !policies.any() {
             return self;
         }
-        let n_devices = self.cost.features.tp.max(1) as usize;
+        let n_devices = self.cost.features.shard.devices().max(1) as usize;
         let eplb = if policies.eplb && self.cost.model.is_moe && n_devices >= 2 {
             let n_experts = self.cost.model.n_experts.max(1) as usize;
             Some(EplbState {
@@ -370,8 +370,16 @@ impl Executor for RooflineExecutor {
             device_s = p.scale_device_s(&self.cost, work, device_s);
         }
         let host_s = if work.is_empty() { 0.0 } else { self.host_overhead_s };
+        // pp drain tail: the window where the first pipeline stage is
+        // already free for the next iteration's micro-batches (exactly
+        // 0.0 at pp == 1 — the unsharded timeline is untouched)
+        let ramp_s = device_s * self.cost.pp_ramp_fraction();
         self.seq += 1;
-        IterationTicket { instance, seq: self.seq, est: IterationOutcome { host_s, device_s } }
+        IterationTicket {
+            instance,
+            seq: self.seq,
+            est: IterationOutcome { host_s, device_s, ramp_s },
+        }
     }
 
     fn poll_complete(&mut self, ticket: IterationTicket) -> IterationOutcome {

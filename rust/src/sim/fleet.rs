@@ -86,6 +86,22 @@ impl ReplicaFactory for RooflineReplicaFactory {
             .with_policies(t.policies);
         Orchestrator::new(t.orchestrator_config(), executor)
     }
+
+    /// Roofline replicas CAN reshape: a scale-up with a wider shard
+    /// stamps the replica from a re-sharded template (kv capacity and
+    /// the roofline's tp/pp terms follow the new device group).
+    fn try_build_sharded(
+        &mut self,
+        id: usize,
+        shard: crate::model::ShardSpec,
+    ) -> Option<Orchestrator<RooflineExecutor>> {
+        let t = self.template.clone().with_shard(shard);
+        let cost = CostModel::new(t.hw.clone(), t.model.clone(), t.features.clone());
+        let executor = RooflineExecutor::new(cost, t.spec, t.seed.wrapping_add(id as u64))
+            .with_host_overhead(t.host_overhead_s)
+            .with_policies(t.policies);
+        Some(Orchestrator::new(t.orchestrator_config(), executor))
+    }
 }
 
 /// Build the replicas and run the workload through the control plane.

@@ -21,4 +21,5 @@ pub mod roofline;
 pub use clock::{EventQueue, SimTime};
 pub use executor::RooflineExecutor;
 pub use fleet::{run_fleet, FleetConfig};
+pub use crate::model::ShardSpec;
 pub use roofline::{Bound, CostModel, EngineFeatures, GraphMode, StepBreakdown};

@@ -21,7 +21,7 @@
 //! learned factors against the real CPU-PJRT executables for the tiny
 //! model, which is the "online factor learning" loop.
 
-use crate::model::{HardwareSpec, ModelSpec};
+use crate::model::{HardwareSpec, ModelSpec, ShardSpec};
 
 /// Graph execution mode (paper Table 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -53,8 +53,11 @@ pub struct EngineFeatures {
     pub eplb: bool,
     /// Hierarchical DP load balance (§4.4.3).
     pub dp_balance: bool,
-    /// Number of accelerators devoted to one model replica (TP/EP degree).
-    pub tp: u32,
+    /// Device-group layout of one replica: tensor-parallel degree,
+    /// pipeline stages, micro-batches (the single source of truth for
+    /// parallelism — the old `tp: u32` scalar survives only as the
+    /// [`EngineFeatures::tp`] view).
+    pub shard: ShardSpec,
     /// Data-parallel groups sharing a workload (MoE attention DP).
     pub dp_groups: u32,
 }
@@ -70,7 +73,7 @@ impl EngineFeatures {
             paged_attention: false,
             eplb: true,
             dp_balance: true,
-            tp,
+            shard: ShardSpec::tp(tp),
             dp_groups: 1,
         }
     }
@@ -86,7 +89,7 @@ impl EngineFeatures {
             paged_attention: true,
             eplb: false,
             dp_balance: false,
-            tp,
+            shard: ShardSpec::tp(tp),
             dp_groups: 1,
         }
     }
@@ -103,9 +106,21 @@ impl EngineFeatures {
             paged_attention: true,
             eplb: true, // statically tuned placement (no *dynamic* updates)
             dp_balance: false,
-            tp,
+            shard: ShardSpec::tp(tp),
             dp_groups: 1,
         }
+    }
+
+    /// Deprecated scalar view of the tensor-parallel degree; read
+    /// `shard.tp` (and `shard.pp`) in new code.
+    pub fn tp(&self) -> u32 {
+        self.shard.tp
+    }
+
+    /// Builder-style shard override for the presets.
+    pub fn with_shard(mut self, shard: ShardSpec) -> Self {
+        self.shard = shard;
+        self
     }
 }
 
@@ -235,16 +250,19 @@ impl CostModel {
         }
         let bytes_per_layer = tokens * self.model.d_model as f64 * 2.0 /*fp16*/ * 2.0 /*disp+comb*/;
         let total = bytes_per_layer * self.model.n_layers as f64;
-        total / (self.hw.net_bw * self.features.tp as f64)
+        total / (self.hw.net_bw * self.features.shard.tp as f64)
     }
 
     /// Tensor-parallel AllReduce time per step (2 reduces per layer over
     /// the activations).  Fully exposed without overlap machinery; largely
     /// hidden by dual-stream / graph-fused collectives — this term is why
     /// baselines stop scaling with accelerator count (Fig 17's "clear
-    /// scaling bottleneck" for vLLM-Ascend).
+    /// scaling bottleneck" for vLLM-Ascend).  Under pipeline parallelism
+    /// the ring runs per pp stage over that stage's `n_layers / pp`
+    /// layers; summed over all pp stages the reduced volume is identical,
+    /// so the term depends on tp alone.
     fn tp_comm_s(&self, tokens: f64) -> f64 {
-        let tp = self.features.tp as f64;
+        let tp = self.features.shard.tp as f64;
         if tp <= 1.0 {
             return 0.0;
         }
@@ -259,6 +277,51 @@ impl CostModel {
             1.0
         };
         raw * exposure
+    }
+
+    /// Inter-stage point-to-point activation transfer under pipeline
+    /// parallelism: each token's activations (`d_model`, fp16) cross
+    /// `pp - 1` stage boundaries per forward pass.  Exactly 0.0 at
+    /// `pp == 1` — the single-stage replica pays nothing.
+    fn pp_comm_s(&self, tokens: f64) -> f64 {
+        let pp = self.features.shard.pp as f64;
+        if pp <= 1.0 {
+            return 0.0;
+        }
+        tokens * self.model.d_model as f64 * 2.0 * (pp - 1.0) / self.hw.net_bw
+    }
+
+    /// Pipeline-parallel makespan multiplier on the single-device step
+    /// time: pp stages each do `1/pp` of the layers, and `m` micro-batches
+    /// fill the pipeline, so the makespan is `(pp + m - 1)` stage-slots of
+    /// `T / (pp * m)` each — `T * (pp + m - 1) / (pp * m)`.  Exactly 1.0
+    /// at `pp == 1` (no stage split; micro-batching alone is a no-op on a
+    /// sequential device), approaching the ideal `1/pp` as `m` grows.
+    fn pipeline_bubble(&self) -> f64 {
+        let shard = self.features.shard;
+        if shard.pp <= 1 {
+            return 1.0;
+        }
+        let pp = shard.pp as f64;
+        let m = shard.micro_batches.max(1) as f64;
+        (pp + m - 1.0) / (pp * m)
+    }
+
+    /// Fraction of a pp-pipelined iteration's device time that is drain
+    /// tail: the last `pp - 1` of its `pp + m - 1` stage-slots, during
+    /// which stage 0 has already gone idle and can start the *next*
+    /// iteration's micro-batches.  The orchestrator timeline uses this
+    /// as `IterationOutcome::ramp_s`'s share of `device_s` — the second
+    /// pipelining axis riding the same per-instance frontiers.  0.0 at
+    /// `pp == 1`.
+    pub fn pp_ramp_fraction(&self) -> f64 {
+        let shard = self.features.shard;
+        if shard.pp <= 1 {
+            return 0.0;
+        }
+        let pp = shard.pp as f64;
+        let m = shard.micro_batches.max(1) as f64;
+        (pp - 1.0) / (pp + m - 1.0)
     }
 
     fn imbalance(&self) -> f64 {
@@ -277,11 +340,11 @@ impl CostModel {
         if self.features.op_overlap {
             eff /= OP_OVERLAP_GAIN; // overlap recovers some idle cube time
         }
-        self.hw.matrix_flops * self.features.tp as f64 * eff / self.flops_factor
+        self.hw.matrix_flops * self.features.shard.tp as f64 * eff / self.flops_factor
     }
 
     fn mem_rate(&self) -> f64 {
-        self.hw.hbm_bw * self.features.tp as f64 * MEM_EFFICIENCY / self.mem_factor
+        self.hw.hbm_bw * self.features.shard.tp as f64 * MEM_EFFICIENCY / self.mem_factor
     }
 
     /// Prefill cost for `new_tokens` prompt tokens (with `ctx` existing
@@ -305,15 +368,18 @@ impl CostModel {
             comm
         };
         // imbalance (EP hot experts / DP stragglers) delays the whole
-        // device iteration, whichever resource binds
+        // device iteration, whichever resource binds; pp stage-splits the
+        // layers and micro-batching fills the pipeline (exact 1.0 / +0.0
+        // no-ops at pp == 1, keeping the single-stage path bit-identical)
         let base = compute.max(memory)
             * self.imbalance()
             * if self.features.dual_stream && self.model.is_moe {
                 DUAL_STREAM_COMPUTE_INFLATION
             } else {
                 1.0
-            };
-        base + exposed_comm + self.tp_comm_s(t) + self.launch_overhead(false)
+            }
+            * self.pipeline_bubble();
+        base + exposed_comm + self.tp_comm_s(t) + self.pp_comm_s(t) + self.launch_overhead(false)
     }
 
     /// One decode iteration for `n_seqs` sequences with `kv_tokens` total
@@ -343,10 +409,17 @@ impl CostModel {
         } else {
             1.0
         };
-        // imbalance delays the whole iteration (straggler effect)
-        let device = compute.max(memory) * self.imbalance() * inflate * self.graph_padding()
+        // imbalance delays the whole iteration (straggler effect); the
+        // pp bubble and activation-transfer terms are exact no-ops at
+        // pp == 1 (×1.0 / +0.0), preserving single-stage bit-identity
+        let device = compute.max(memory)
+            * self.imbalance()
+            * inflate
+            * self.graph_padding()
+            * self.pipeline_bubble()
             + vec_overhead
-            + self.tp_comm_s(b);
+            + self.tp_comm_s(b)
+            + self.pp_comm_s(b);
         let launch = self.launch_overhead(true);
         let sched = self.exposed_sched(device + launch, n_seqs);
         let total = device + launch + sched + exposed_comm;
@@ -552,5 +625,79 @@ mod tests {
         let t1 = m.kv_transfer_s(1000);
         let t2 = m.kv_transfer_s(2000);
         assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tp_comm_is_exactly_zero_at_tp_one() {
+        let m = cm(EngineFeatures::xllm(1));
+        assert_eq!(m.tp_comm_s(4096.0).to_bits(), 0.0f64.to_bits());
+        assert_eq!(m.tp_comm_s(0.0).to_bits(), 0.0f64.to_bits());
+    }
+
+    #[test]
+    fn tp_comm_ring_term_is_monotone_in_tp() {
+        // ring factor 2(tp-1)/tp strictly increases in tp, so at fixed
+        // token count the exposed comm must too
+        let mut prev = cm(EngineFeatures::xllm(1)).tp_comm_s(2048.0);
+        assert_eq!(prev, 0.0);
+        for tp in 2..=16 {
+            let cur = cm(EngineFeatures::xllm(tp)).tp_comm_s(2048.0);
+            assert!(cur > prev, "tp={tp}: {cur} !> {prev}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn pp_activation_transfer_is_exactly_zero_at_pp_one() {
+        let m = cm(EngineFeatures::xllm(4)); // tp alone must not wake the pp term
+        assert_eq!(m.features.shard.pp, 1);
+        assert_eq!(m.pp_comm_s(4096.0).to_bits(), 0.0f64.to_bits());
+        let sharded =
+            cm(EngineFeatures::xllm(1).with_shard(ShardSpec::new(1, 2, 4)));
+        assert!(sharded.pp_comm_s(4096.0) > 0.0);
+        // linear in crossed boundaries: pp=3 crosses twice as many as pp=2
+        let pp3 = cm(EngineFeatures::xllm(1).with_shard(ShardSpec::new(1, 3, 4)));
+        assert!((pp3.pp_comm_s(4096.0) / sharded.pp_comm_s(4096.0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipeline_bubble_models_micro_batch_fill() {
+        // pp=1: exactly 1.0 regardless of micro_batches
+        let m1 = cm(EngineFeatures::xllm(1).with_shard(ShardSpec::new(1, 1, 8)));
+        assert_eq!(m1.pipeline_bubble().to_bits(), 1.0f64.to_bits());
+        assert_eq!(m1.pp_ramp_fraction().to_bits(), 0.0f64.to_bits());
+        // pp=2, m=4: (2+4-1)/(2*4) = 5/8; drain tail (2-1)/(2+4-1) = 1/5
+        let m2 = cm(EngineFeatures::xllm(1).with_shard(ShardSpec::new(1, 2, 4)));
+        assert!((m2.pipeline_bubble() - 0.625).abs() < 1e-12);
+        assert!((m2.pp_ramp_fraction() - 0.2).abs() < 1e-12);
+        // more micro-batches shrink the bubble toward the ideal 1/pp
+        let m8 = cm(EngineFeatures::xllm(1).with_shard(ShardSpec::new(1, 2, 16)));
+        assert!(m8.pipeline_bubble() < m2.pipeline_bubble());
+        assert!(m8.pipeline_bubble() > 0.5);
+    }
+
+    #[test]
+    fn pp_with_micro_batching_speeds_up_long_prefill() {
+        // a pp=2/m=4 device group finishes a long prompt faster than one
+        // stage, even after paying the inter-stage activation transfers
+        let flat = cm(EngineFeatures::xllm(1));
+        let piped = cm(EngineFeatures::xllm(1).with_shard(ShardSpec::new(1, 2, 4)));
+        let t_flat = flat.prefill_s(8192, 0);
+        let t_piped = piped.prefill_s(8192, 0);
+        assert!(t_piped < t_flat, "pp=2/m=4 {t_piped} !< pp=1 {t_flat}");
+    }
+
+    #[test]
+    fn presets_route_parallelism_through_shard_spec() {
+        // exactly one source of truth: the preset tp scalar lands in
+        // `shard` and the deprecated view reads back from it
+        for f in [EngineFeatures::xllm(4), EngineFeatures::vllm(4), EngineFeatures::mindie(4)] {
+            assert_eq!(f.shard, ShardSpec::tp(4));
+            assert_eq!(f.tp(), 4);
+            assert_eq!(f.shard.devices(), 4);
+        }
+        let wide = EngineFeatures::xllm(2).with_shard(ShardSpec::new(2, 2, 4));
+        assert_eq!(wide.tp(), 2);
+        assert_eq!(wide.shard.devices(), 4);
     }
 }

@@ -54,6 +54,9 @@ pub struct FixedCostExecutor {
     pub step_s: f64,
     /// Host share reported per iteration ([`IterationOutcome::host_s`]).
     pub host_s: f64,
+    /// Pipeline-parallel drain tail per iteration
+    /// ([`IterationOutcome::ramp_s`]; 0.0 = unsharded).
+    pub ramp_s: f64,
     pub iterations: u64,
     pub finished: u64,
     /// Tickets submitted but not yet completed, and its high-water mark
@@ -73,6 +76,7 @@ impl FixedCostExecutor {
             ),
             step_s,
             host_s: 0.0,
+            ramp_s: 0.0,
             iterations: 0,
             finished: 0,
             outstanding: 0,
@@ -85,6 +89,14 @@ impl FixedCostExecutor {
     pub fn with_host(step_s: f64, host_s: f64) -> FixedCostExecutor {
         let mut e = FixedCostExecutor::new(step_s);
         e.host_s = host_s;
+        e
+    }
+
+    /// [`Self::new`] with a nonzero pp drain tail per iteration (a
+    /// sharded device group whose first stage frees up `ramp_s` early).
+    pub fn with_ramp(step_s: f64, ramp_s: f64) -> FixedCostExecutor {
+        let mut e = FixedCostExecutor::new(step_s);
+        e.ramp_s = ramp_s;
         e
     }
 }
@@ -107,7 +119,11 @@ impl Executor for FixedCostExecutor {
         IterationTicket {
             instance,
             seq: self.seq,
-            est: IterationOutcome { host_s: self.host_s, device_s: self.step_s },
+            est: IterationOutcome {
+                host_s: self.host_s,
+                device_s: self.step_s,
+                ramp_s: self.ramp_s,
+            },
         }
     }
 

@@ -174,7 +174,7 @@ fn prometheus_export_is_well_formed_and_reconciles() {
     let mut reg = MetricsRegistry::new();
     res.report.export_metrics(&mut reg);
     res.export_metrics(&mut reg);
-    exec.policy_counters().export_metrics(&mut reg);
+    exec.policy_counters().unwrap_or_default().export_metrics(&mut reg);
     let text = prometheus_text(&reg);
 
     // exposition shape: every line is a comment or `name value`
