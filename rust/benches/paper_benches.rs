@@ -93,6 +93,7 @@ fn main() {
     }
     if want("perfjson") {
         bench_perfjson();
+        bench_indexops();
     }
     println!("\n# total bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
 }
@@ -1247,5 +1248,176 @@ fn bench_perfjson() {
     let path =
         std::env::var("BENCH_JSON_PATH").unwrap_or_else(|_| "../BENCH_6.json".to_string());
     std::fs::write(&path, out.to_string()).expect("writing the bench JSON");
+    println!("  wrote {path}");
+}
+
+// ---------------------------------------------------------------------
+// indexops: radix vs linear cluster prefix index — per-heartbeat publish
+// volume and best-match lookup cost at C and 10×C resident chains,
+// written to BENCH_7.json.  The headline claim is *sublinear growth*:
+// the legacy full-summary republish pays the whole resident set every
+// heartbeat (entry volume grows 10× with 10× chains) while the delta
+// publish pays only the changes since the last heartbeat (flat), and
+// the radix token walk stays O(matched tokens) regardless of how many
+// chains are resident.
+// ---------------------------------------------------------------------
+
+fn bench_indexops() {
+    use xllm::service::{hash_chain, prefix_tokens, GlobalPrefixIndex, Tier};
+
+    header("indexops — radix vs linear cluster index (writes BENCH_7.json)");
+    let block_tokens = 64u64;
+    let replicas = 4usize;
+    let depth_tokens = 512u64; // queried prefix length: 8 blocks
+    let chains_base = 200usize;
+    let scale = 10usize;
+    // steady-state heartbeat delta: a handful of residency changes per
+    // replica per beat, independent of how many chains are resident
+    let delta_changes = 8usize;
+
+    // per-replica block summaries for `chains` distinct prefix groups
+    let summaries = |chains: usize| -> Vec<Vec<(u64, Tier)>> {
+        let mut s: Vec<Vec<(u64, Tier)>> = vec![Vec::new(); replicas];
+        for c in 0..chains {
+            let toks = prefix_tokens(c as u64, depth_tokens);
+            for &h in &hash_chain(&toks, block_tokens as usize) {
+                s[c % replicas].push((h, Tier::Dram));
+            }
+        }
+        s
+    };
+
+    // (full_ns, delta_ns, linear_match_ns, radix_match_ns, full_entries,
+    //  delta_entries) per heartbeat / per lookup at `chains` residents
+    let measure = |chains: usize| -> (f64, f64, f64, f64, u64, u64) {
+        let sums = summaries(chains);
+
+        // legacy: block index fed by full-summary republish
+        let mut legacy = GlobalPrefixIndex::new();
+        for (r, s) in sums.iter().enumerate() {
+            legacy.publish(r, s);
+        }
+        // token-granular: radix mirror fed by deltas
+        let mut radix = GlobalPrefixIndex::new();
+        radix.enable_token_granular(block_tokens);
+        for (r, s) in sums.iter().enumerate() {
+            let d: Vec<(u64, Option<Tier>)> = s.iter().map(|&(h, t)| (h, Some(t))).collect();
+            radix.publish_delta(r, &d);
+        }
+        for c in 0..chains {
+            radix.record_tokens(c % replicas, &prefix_tokens(c as u64, depth_tokens));
+        }
+
+        // steady state: one heartbeat republishes each replica's view
+        let full_entries: u64 = sums.iter().map(|s| s.len() as u64).sum();
+        let delta_entries = (delta_changes * replicas) as u64;
+        let deltas: Vec<Vec<(u64, Option<Tier>)>> = sums
+            .iter()
+            .map(|s| s.iter().take(delta_changes).map(|&(h, t)| (h, Some(t))).collect())
+            .collect();
+
+        let publish_iters = 200usize;
+        let t = Instant::now();
+        for _ in 0..publish_iters {
+            for (r, s) in sums.iter().enumerate() {
+                legacy.publish(r, s);
+            }
+        }
+        let full_ns = t.elapsed().as_nanos() as f64 / publish_iters as f64;
+
+        let delta_iters = 2000usize;
+        let t = Instant::now();
+        for _ in 0..delta_iters {
+            for (r, d) in deltas.iter().enumerate() {
+                radix.publish_delta(r, d);
+            }
+        }
+        let delta_ns = t.elapsed().as_nanos() as f64 / delta_iters as f64;
+
+        // best-match lookups over every resident chain
+        let queries: Vec<Vec<u32>> =
+            (0..chains).map(|c| prefix_tokens(c as u64, depth_tokens)).collect();
+        let qchains: Vec<Vec<u64>> =
+            queries.iter().map(|t| hash_chain(t, block_tokens as usize)).collect();
+        let match_iters = 20usize;
+        let mut sink = 0usize;
+        let t = Instant::now();
+        for _ in 0..match_iters {
+            for q in &qchains {
+                sink += legacy.best_match(q).map(|(_, n, _)| n).unwrap_or(0);
+            }
+        }
+        let linear_match_ns =
+            t.elapsed().as_nanos() as f64 / (match_iters * chains) as f64;
+        let t = Instant::now();
+        for _ in 0..match_iters {
+            for q in &queries {
+                sink += radix.best_match_tokens(q).map(|(_, n, _)| n as usize).unwrap_or(0);
+            }
+        }
+        let radix_match_ns =
+            t.elapsed().as_nanos() as f64 / (match_iters * chains) as f64;
+        assert!(sink > 0, "lookups must hit");
+
+        (full_ns, delta_ns, linear_match_ns, radix_match_ns, full_entries, delta_entries)
+    };
+
+    let (f1, d1, l1, r1, fe1, de1) = measure(chains_base);
+    let (f10, d10, l10, r10, fe10, de10) = measure(chains_base * scale);
+    let growth = |a: f64, b: f64| if a > 0.0 { b / a } else { 0.0 };
+
+    println!(
+        "  heartbeat entries: full {fe1} -> {fe10} ({:.1}x)   delta {de1} -> {de10} ({:.1}x)",
+        growth(fe1 as f64, fe10 as f64),
+        growth(de1 as f64, de10 as f64)
+    );
+    println!(
+        "  heartbeat ns:      full {f1:9.0} -> {f10:9.0} ({:.1}x)   delta {d1:7.0} -> {d10:7.0} ({:.1}x)",
+        growth(f1, f10),
+        growth(d1, d10)
+    );
+    println!(
+        "  best-match ns/op:  linear {l1:7.0} -> {l10:7.0} ({:.1}x)   radix {r1:7.0} -> {r10:7.0} ({:.1}x)",
+        growth(l1, l10),
+        growth(r1, r10)
+    );
+
+    let out = Json::obj()
+        .set("bench", "BENCH_7")
+        .set("measured", true)
+        .set("block_tokens", block_tokens)
+        .set("replicas", replicas)
+        .set("prefix_tokens", depth_tokens)
+        .set("chains_base", chains_base)
+        .set("chains_10x", chains_base * scale)
+        .set(
+            "heartbeat",
+            Json::obj()
+                .set("full_entries_base", fe1)
+                .set("full_entries_10x", fe10)
+                .set("full_entry_growth_10x", growth(fe1 as f64, fe10 as f64))
+                .set("delta_entries_base", de1)
+                .set("delta_entries_10x", de10)
+                .set("delta_entry_growth_10x", growth(de1 as f64, de10 as f64))
+                .set("full_ns_base", f1)
+                .set("full_ns_10x", f10)
+                .set("full_ns_growth_10x", growth(f1, f10))
+                .set("delta_ns_base", d1)
+                .set("delta_ns_10x", d10)
+                .set("delta_ns_growth_10x", growth(d1, d10)),
+        )
+        .set(
+            "best_match",
+            Json::obj()
+                .set("linear_ns_base", l1)
+                .set("linear_ns_10x", l10)
+                .set("linear_growth_10x", growth(l1, l10))
+                .set("radix_ns_base", r1)
+                .set("radix_ns_10x", r10)
+                .set("radix_growth_10x", growth(r1, r10)),
+        );
+    let path =
+        std::env::var("BENCH7_JSON_PATH").unwrap_or_else(|_| "../BENCH_7.json".to_string());
+    std::fs::write(&path, out.to_string()).expect("writing the index bench JSON");
     println!("  wrote {path}");
 }

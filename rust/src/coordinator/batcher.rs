@@ -25,6 +25,12 @@ pub struct BatchConfig {
     /// prefills).  Backends with physical batch slots (the PJRT server)
     /// set this to their slot count; the simulator leaves it unbounded.
     pub max_seqs: usize,
+    /// Token-exact admission (LightLLM-style): prefill chunks are
+    /// admitted — and shrunk — against the instance's real free KV
+    /// tokens (capacity − resident context − one reserved growth token
+    /// per planned decode), and the `max_seqs` slot heuristic stops
+    /// binding.  Off by default; the legacy path is bit-identical.
+    pub token_admission: bool,
 }
 
 impl Default for BatchConfig {
@@ -35,6 +41,7 @@ impl Default for BatchConfig {
             max_encode_batch: 8,
             kv_capacity_tokens: 2_000_000,
             max_seqs: usize::MAX,
+            token_admission: false,
         }
     }
 }
@@ -48,6 +55,12 @@ pub struct IterationPlan {
     pub encode_ids: Vec<RequestId>,
     /// Offline requests evicted to make room for online ones.
     pub preempted: Vec<RequestId>,
+    /// Tokens admitted this iteration beyond the instance's free KV
+    /// capacity at admission time (free = capacity − resident context −
+    /// one growth token per planned decode).  Observational under the
+    /// legacy slot heuristic; zero by construction under
+    /// `token_admission`.
+    pub overcommit_tokens: u64,
 }
 
 impl IterationPlan {
@@ -100,6 +113,8 @@ pub fn plan_iteration(
 
     // (ii)+(iii) chunked prefill under the token budget: online FCFS first,
     // then offline; partially computed requests keep priority by arrival.
+    let decode_growth = plan.decode_ids.len() as u64;
+    let kv_resident = kv_tokens;
     let mut budget = cfg.token_budget;
     let mut queue_order: Vec<&&Request> = queued.iter().collect();
     queue_order.sort_by_key(|r| {
@@ -116,8 +131,9 @@ pub fn plan_iteration(
             break;
         }
         // slot admission: a prefilled sequence occupies an active slot
-        // until completion, so admit only while slots remain
-        if running.len() + plan.prefill_chunks.len() >= cfg.max_seqs {
+        // until completion, so admit only while slots remain (token
+        // admission replaces this heuristic with the KV budget below)
+        if !cfg.token_admission && running.len() + plan.prefill_chunks.len() >= cfg.max_seqs {
             break;
         }
         let want = r.prefill_remaining();
@@ -125,8 +141,15 @@ pub fn plan_iteration(
             continue;
         }
         // KV admission: the chunk's tokens must fit
-        let chunk = want.min(budget);
-        if kv_tokens + chunk > cfg.kv_capacity_tokens {
+        let mut chunk = want.min(budget);
+        if cfg.token_admission {
+            // token-exact: shrink to the real free KV tokens, reserving
+            // a growth token for every decode planned this iteration
+            chunk = chunk.min(cfg.kv_capacity_tokens.saturating_sub(kv_tokens + decode_growth));
+            if chunk == 0 {
+                continue;
+            }
+        } else if kv_tokens + chunk > cfg.kv_capacity_tokens {
             continue;
         }
         let ctx = r.context_len();
@@ -134,6 +157,11 @@ pub fn plan_iteration(
         kv_tokens += chunk;
         budget -= chunk;
     }
+
+    // admission-overcommit accounting: admitted prefill tokens beyond
+    // the free KV at admission time
+    let free = cfg.kv_capacity_tokens.saturating_sub(kv_resident + decode_growth);
+    plan.overcommit_tokens = plan.prefill_tokens().saturating_sub(free);
 
     // (iv) encode only when no prefill work was scheduled or pending
     if plan.prefill_chunks.is_empty() && queued.iter().all(|r| r.prefill_remaining() == 0) {
@@ -252,6 +280,92 @@ mod tests {
         assert_eq!(plan.decode_ids, vec![1, 2]);
         assert_eq!(plan.prefill_chunks.len(), 1, "only one slot free: {plan:?}");
         assert_eq!(plan.prefill_chunks[0].0, 3);
+    }
+
+    #[test]
+    fn token_admission_replaces_the_slot_heuristic() {
+        let d1 = decoding(online(1, 10, 5));
+        let d2 = decoding(online(2, 10, 5));
+        let p1 = online(3, 100, 5);
+        let p2 = online(4, 100, 5);
+        let cfg = BatchConfig {
+            max_seqs: 3,
+            token_budget: 1024,
+            token_admission: true,
+            ..Default::default()
+        };
+        let plan = plan_iteration(&[&d1, &d2], &[&p1, &p2], &[], &cfg);
+        assert_eq!(plan.prefill_chunks.len(), 2, "KV budget binds, not slots: {plan:?}");
+        assert_eq!(plan.overcommit_tokens, 0);
+    }
+
+    #[test]
+    fn token_admission_shrinks_chunks_to_free_kv() {
+        // 1000 resident + 1 reserved decode-growth token: 99 tokens free
+        let d = decoding(online(1, 1000, 5));
+        let p = online(2, 500, 5);
+        let cfg = BatchConfig {
+            kv_capacity_tokens: 1100,
+            token_budget: 500,
+            token_admission: true,
+            ..Default::default()
+        };
+        let plan = plan_iteration(&[&d], &[&p], &[], &cfg);
+        assert_eq!(plan.prefill_chunks, vec![(2, 99, 0)], "chunk shrinks to exact free KV");
+        assert_eq!(plan.overcommit_tokens, 0);
+    }
+
+    #[test]
+    fn legacy_admission_can_overcommit_the_decode_reserve() {
+        // legacy checks chunks against raw capacity, ignoring decode
+        // growth: with 1000 resident, one decode, and 10 free raw
+        // tokens, a 10-token chunk is one token of overcommit
+        let d = decoding(online(1, 1000, 5));
+        let p = online(2, 10, 5);
+        let cfg = BatchConfig { kv_capacity_tokens: 1010, token_budget: 10, ..Default::default() };
+        let plan = plan_iteration(&[&d], &[&p], &[], &cfg);
+        assert_eq!(plan.prefill_chunks, vec![(2, 10, 0)]);
+        assert_eq!(plan.overcommit_tokens, 1, "decode growth was not reserved");
+        // token admission shrinks the chunk and stays exact
+        let plan = plan_iteration(&[&d], &[&p], &[], &BatchConfig { token_admission: true, ..cfg });
+        assert_eq!(plan.prefill_chunks, vec![(2, 9, 0)]);
+        assert_eq!(plan.overcommit_tokens, 0);
+    }
+
+    #[test]
+    fn property_token_admission_never_overcommits() {
+        crate::testutil::check("token-admission-exact", 96, |rng| {
+            let cfg = BatchConfig {
+                kv_capacity_tokens: rng.range(1, 2048),
+                token_budget: rng.range(1, 512),
+                max_decode_seqs: rng.range(1, 8) as usize,
+                token_admission: true,
+                ..Default::default()
+            };
+            let running: Vec<Request> = (0..rng.range(0, 6))
+                .map(|i| decoding(online(i, rng.range(1, 600), 5)))
+                .collect();
+            let queued: Vec<Request> = (0..rng.range(0, 8))
+                .map(|i| online(100 + i, rng.range(1, 1000), 5))
+                .collect();
+            let run_refs: Vec<&Request> = running.iter().collect();
+            let q_refs: Vec<&Request> = queued.iter().collect();
+            let plan = plan_iteration(&run_refs, &q_refs, &[], &cfg);
+            crate::prop_assert!(
+                plan.overcommit_tokens == 0,
+                "token admission overcommitted by {}",
+                plan.overcommit_tokens
+            );
+            let resident: u64 = running.iter().map(|r| r.context_len()).sum();
+            let admitted = plan.prefill_tokens();
+            let reserve = plan.decode_ids.len() as u64;
+            crate::prop_assert!(
+                admitted <= cfg.kv_capacity_tokens.saturating_sub(resident + reserve),
+                "admitted {admitted} tokens past free capacity"
+            );
+            crate::prop_assert!(admitted <= cfg.token_budget, "budget exceeded");
+            Ok(())
+        });
     }
 
     #[test]

@@ -102,6 +102,8 @@ pub struct Orchestrator<X: Executor> {
     migrations: u64,
     recoveries: u64,
     prefix_hits: u64,
+    prefix_hit_tokens: u64,
+    admission_overcommit_tokens: u64,
     iterations: u64,
     truncated: bool,
     /// A monitor event is pending in the queue (so incremental `submit`
@@ -126,12 +128,18 @@ impl<X: Executor> Orchestrator<X> {
             .map(|id| InstanceState::new(id, executor.cost().clone(), cfg.batch))
             .collect();
         let scheduler = GlobalScheduler::new(cfg.dispatch);
-        let prefix_cache = TieredCache::new(
+        let mut prefix_cache = TieredCache::new(
             cfg.prefix_block_tokens,
             cfg.prefix_hbm_tokens,
             cfg.prefix_dram_tokens,
             cfg.prefix_ssd_tokens,
         );
+        if cfg.prefix_token_granular {
+            // token-granular replicas publish incremental summary deltas
+            // instead of full snapshots, so residency churn must be
+            // logged from the very first insert
+            prefix_cache.enable_delta_tracking();
+        }
         let n_total = instances.len();
         Orchestrator {
             executor,
@@ -153,6 +161,8 @@ impl<X: Executor> Orchestrator<X> {
             migrations: 0,
             recoveries: 0,
             prefix_hits: 0,
+            prefix_hit_tokens: 0,
+            admission_overcommit_tokens: 0,
             iterations: 0,
             truncated: false,
             monitor_live: false,
@@ -286,6 +296,8 @@ impl<X: Executor> Orchestrator<X> {
             migrations: self.migrations,
             recoveries: self.recoveries,
             prefix_hits: self.prefix_hits,
+            prefix_hit_tokens: self.prefix_hit_tokens,
+            admission_overcommit_tokens: self.admission_overcommit_tokens,
             iterations: self.iterations,
             events: self.queue.processed(),
             truncated: self.truncated,
@@ -353,6 +365,22 @@ impl<X: Executor> Orchestrator<X> {
     /// events).
     pub fn cache_summary(&self) -> Vec<(u64, Tier)> {
         self.prefix_cache.summary()
+    }
+
+    /// Drain the residency mutations logged since the last heartbeat
+    /// (token-granular fleets publish these instead of a full
+    /// [`Self::cache_summary`] snapshot — satellite fix for the
+    /// per-heartbeat full republish).  Empty unless delta tracking is on.
+    pub fn cache_summary_delta(&mut self) -> Vec<(u64, Option<Tier>)> {
+        self.prefix_cache.take_summary_delta()
+    }
+
+    /// Turn on residency delta logging (idempotent; the control plane
+    /// calls this on every replica of a token-granular fleet, including
+    /// ones whose [`OrchestratorConfig::prefix_token_granular`] was not
+    /// set by their factory).
+    pub fn enable_cache_delta_tracking(&mut self) {
+        self.prefix_cache.enable_delta_tracking();
     }
 
     /// Snapshot and forget every request that has not completed:
@@ -457,16 +485,27 @@ impl<X: Executor> Orchestrator<X> {
         // prefix cache lookup (§3.4): shared system prompts skip prefill
         if self.cfg.prefix_cache && spec.shared_prefix > 0 {
             let tokens = prefix_tokens(spec.prefix_group, spec.shared_prefix);
-            let chain = hash_chain(&tokens, self.prefix_cache.block_tokens as usize);
-            let (blocks, _) = self.prefix_cache.match_prefix(&chain);
-            let hit = (blocks as u64 * self.prefix_cache.block_tokens)
-                .min(spec.shared_prefix)
-                .min(spec.input_tokens.saturating_sub(1));
+            let hit = if self.cfg.prefix_token_granular {
+                // token-granular match: credit the exact matched token
+                // count, including a sub-block tail past the last full
+                // resident block
+                let (matched, _) = self.prefix_cache.match_prefix_tokens(&tokens);
+                self.prefix_cache.insert_tokens(&tokens, Tier::Dram);
+                matched.min(spec.shared_prefix).min(spec.input_tokens.saturating_sub(1))
+            } else {
+                let chain = hash_chain(&tokens, self.prefix_cache.block_tokens as usize);
+                let (blocks, _) = self.prefix_cache.match_prefix(&chain);
+                let hit = (blocks as u64 * self.prefix_cache.block_tokens)
+                    .min(spec.shared_prefix)
+                    .min(spec.input_tokens.saturating_sub(1));
+                self.prefix_cache.insert_chain(&chain, Tier::Dram);
+                hit
+            };
             if hit > 0 {
                 req.prefix_hit_tokens = hit;
                 self.prefix_hits += 1;
+                self.prefix_hit_tokens += hit;
             }
-            self.prefix_cache.insert_chain(&chain, Tier::Dram);
         }
 
         let multimodal = spec.is_multimodal();
@@ -761,6 +800,10 @@ impl<X: Executor> Orchestrator<X> {
                 }
             }
         }
+        // admission-overcommit accounting: prefill tokens admitted this
+        // plan beyond the instance's free KV after the decode-growth
+        // reserve (zero by construction under token-exact admission)
+        self.admission_overcommit_tokens += plan.overcommit_tokens;
         self.preemptions += plan.preempted.len() as u64;
         if !plan.preempted.is_empty() {
             let t = self.queue.now();
@@ -1551,6 +1594,30 @@ mod tests {
         orch.adopt_chain(&chain);
         let (warm, _) = orch.run(vec![spec]);
         assert_eq!(warm.prefix_hits, 1, "migrated KV must serve the prefix");
+    }
+
+    #[test]
+    fn token_granular_arrivals_credit_exact_prefix_tokens() {
+        // 300 shared tokens = 4 full 64-token blocks + a 44-token tail:
+        // block matching credits 256 per hit, the radix path all 300
+        let mk = |t: f64| {
+            let mut s = RequestSpec::text(t, 1024, 4);
+            s.prefix_group = 9;
+            s.shared_prefix = 300;
+            s
+        };
+        let workload = vec![mk(0.0), mk(0.5), mk(1.0)];
+        let block =
+            OrchestratorConfig { n_instances: 1, prefix_cache: true, ..Default::default() };
+        let token = OrchestratorConfig { prefix_token_granular: true, ..block.clone() };
+        let (rb, _) = Orchestrator::new(block, FixedCost::new(0.01)).run(workload.clone());
+        let (rt, _) = Orchestrator::new(token, FixedCost::new(0.01)).run(workload);
+        assert_eq!(rb.report.n_completed(), 3);
+        assert_eq!(rt.report.n_completed(), 3);
+        assert_eq!(rb.prefix_hits, 2);
+        assert_eq!(rt.prefix_hits, 2);
+        assert_eq!(rb.prefix_hit_tokens, 2 * 256, "block matching rounds down to full blocks");
+        assert_eq!(rt.prefix_hit_tokens, 2 * 300, "radix matching credits the sub-block tail");
     }
 
     #[test]

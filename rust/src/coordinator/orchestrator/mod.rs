@@ -320,6 +320,13 @@ pub struct OrchestratorConfig {
     /// Prefix-cache block granularity in tokens (§3.4 chain hashing —
     /// must match the control plane's global index granularity).
     pub prefix_block_tokens: u64,
+    /// Token-granular prefix matching: arrivals match against the
+    /// cache's radix index over token ids (exact matched-token credit,
+    /// including sub-block tails) instead of whole hashed blocks, and
+    /// the cache logs residency deltas for incremental heartbeat
+    /// publishes.  Off (the default) preserves the block-aligned chain
+    /// behavior bit-identically.
+    pub prefix_token_granular: bool,
     /// Prefix-cache tier capacities in tokens (HBM / DRAM / SSD).
     pub prefix_hbm_tokens: u64,
     pub prefix_dram_tokens: u64,
@@ -352,6 +359,7 @@ impl Default for OrchestratorConfig {
             monitor_interval_s: 0.25,
             prefix_cache: false,
             prefix_block_tokens: DEFAULT_PREFIX_BLOCK_TOKENS,
+            prefix_token_granular: false,
             prefix_hbm_tokens: DEFAULT_PREFIX_HBM_TOKENS,
             prefix_dram_tokens: DEFAULT_PREFIX_DRAM_TOKENS,
             prefix_ssd_tokens: DEFAULT_PREFIX_SSD_TOKENS,
@@ -380,6 +388,14 @@ pub struct RunResult {
     pub migrations: u64,
     pub recoveries: u64,
     pub prefix_hits: u64,
+    /// Prompt tokens credited against the local prefix cache at
+    /// admission (token-exact when `prefix_token_granular`, else the
+    /// block-rounded credit).
+    pub prefix_hit_tokens: u64,
+    /// Prefill tokens admitted beyond free KV after the decode-growth
+    /// reserve, summed over iterations (zero by construction under
+    /// token-exact admission).
+    pub admission_overcommit_tokens: u64,
     pub iterations: u64,
     pub events: u64,
     /// The run hit [`OrchestratorConfig::max_events`] and stopped before
@@ -410,6 +426,8 @@ impl RunResult {
         reg.inc("xllm_migrations_total", self.migrations);
         reg.inc("xllm_recoveries_total", self.recoveries);
         reg.inc("xllm_prefix_hits_total", self.prefix_hits);
+        reg.inc("xllm_index_prefix_hit_tokens_total", self.prefix_hit_tokens);
+        reg.inc("xllm_index_admission_overcommit_tokens_total", self.admission_overcommit_tokens);
         reg.inc("xllm_iterations_total", self.iterations);
         reg.inc("xllm_events_total", self.events);
         let label = |i: usize| match replica {

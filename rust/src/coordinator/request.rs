@@ -207,6 +207,7 @@ impl Request {
             input_tokens: self.spec.input_tokens,
             output_tokens: self.decoded,
             failed: matches!(self.phase, Phase::Failed),
+            prefix_hit_tokens: self.prefix_hit_tokens,
             phases: self.phase_breakdown(finish),
         })
     }

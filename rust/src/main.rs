@@ -36,7 +36,11 @@
 //! stage × P pipeline stages fed by M micro-batches (`--tp N` stays as
 //! the tensor-only shorthand); `--device-budget N` (fleet, with
 //! `--autoscale`) caps total fleet devices: the scaler trades replica
-//! count against shard width and never exceeds `Σ tp×pp ≤ N`.
+//! count against shard width and never exceeds `Σ tp×pp ≤ N`;
+//! `--token-granular` (fleet) switches the cluster index to the radix
+//! tree over token ids — token-exact prefix matching and admission,
+//! incremental heartbeat publishes, sub-chain rebalance ranges (off =
+//! block-aligned chains, bit-identical to prior builds).
 //!
 //! Observability (serve, simulate, fleet): `--trace-out PATH` records
 //! the request-lifecycle trace and writes Perfetto-loadable Chrome
@@ -378,6 +382,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             _ => RoutePolicy::CacheAware,
         },
         threads: args.get_u64("threads", 1).max(1) as usize,
+        // token-granular KV admission: radix cluster index, incremental
+        // heartbeat publishes, exact matched-token routing/charging
+        token_granular: args.has_flag("token-granular"),
         ..ControlPlaneConfig::default()
     };
     let (trace, trace_out, metrics_out) = obs_outputs(args);
@@ -399,6 +406,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                 .get_u64("warm-start-chains", d.warm_start_chains as u64)
                 as usize,
             device_budget: args.get_u64("device-budget", d.device_budget),
+            ..d
         });
     }
 
@@ -453,6 +461,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             )
             .with_shard(shard);
             template.prefix_cache = true;
+            template.token_granular = control.token_granular;
             template.pipeline_depth = pipeline_depth;
             template.host_overhead_s = args.get_f64("host-overhead", 0.0).max(0.0);
             template.policies = policies;
@@ -475,6 +484,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         .set("p99_ttft_s", report.ttft_summary().percentile(99.0))
         .set("mean_e2e_s", report.e2e_summary().mean())
         .set("cluster_prefix_hits", res.per_replica.iter().map(|r| r.prefix_hits).sum::<u64>())
+        .set("cluster_prefix_hit_tokens", res.prefix_hit_tokens())
+        .set("admission_overcommit_tokens", res.admission_overcommit_tokens())
+        .set("index_published_entries", res.counters.index_published_entries)
+        .set("token_granular", args.has_flag("token-granular"))
         .set("routed_by_cache_hit", res.counters.routed_by_cache_hit)
         .set("failovers", res.counters.failovers)
         .set("redispatched_requests", res.counters.redispatched_requests)

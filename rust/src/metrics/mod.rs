@@ -69,6 +69,10 @@ pub struct RequestOutcome {
     pub output_tokens: u64,
     /// True if the request was dropped/failed rather than completed.
     pub failed: bool,
+    /// Prompt tokens served from the prefix cache instead of being
+    /// prefilled (token-exact under token-granular matching, block-
+    /// rounded otherwise; 0 when the cache is off or missed).
+    pub prefix_hit_tokens: u64,
     /// Per-phase latency attribution (queue/prefill/handoff/decode).
     pub phases: PhaseBreakdown,
 }
@@ -176,6 +180,12 @@ impl ServingReport {
         self.outcomes.iter().filter(|o| o.meets(slo)).count() as f64 / self.horizon()
     }
 
+    /// Total prompt tokens served from prefix caches across completed
+    /// requests (the cluster hit-token rate numerator).
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        self.outcomes.iter().filter(|o| !o.failed).map(|o| o.prefix_hit_tokens).sum()
+    }
+
     pub fn ttft_summary(&self) -> Summary {
         let mut s = Summary::new();
         for o in self.outcomes.iter().filter(|o| !o.failed) {
@@ -240,6 +250,7 @@ impl ServingReport {
         }
         reg.inc("xllm_tokens_input_total", inp);
         reg.inc("xllm_tokens_output_total", out);
+        reg.inc("xllm_tokens_prefix_hit_total", self.prefix_hit_tokens());
         reg.set_gauge("xllm_output_tokens_per_second", self.output_throughput());
     }
 }
@@ -256,6 +267,7 @@ mod tests {
             input_tokens: inp,
             output_tokens: out,
             failed: false,
+            prefix_hit_tokens: 0,
             phases: PhaseBreakdown::default(),
         }
     }

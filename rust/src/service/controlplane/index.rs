@@ -14,13 +14,23 @@
 
 use std::collections::HashMap;
 
-use crate::service::kvstore::Tier;
+use crate::service::kvstore::{hash_chain, Tier};
+use crate::service::radix::ClusterRadix;
 
 /// Cluster-wide view of which replica caches which prefix blocks.
+///
+/// Token-granular mode (`enable_token_granular`) mirrors every update
+/// into a [`ClusterRadix`] — one tree for the whole fleet with
+/// per-replica tier bitsets — so `match_prefix_tokens` /
+/// `best_match_tokens` answer at arbitrary token split points in
+/// O(matched tokens), while the flat per-replica maps keep serving the
+/// block-level contracts unchanged.
 #[derive(Debug, Default)]
 pub struct GlobalPrefixIndex {
     per_replica: HashMap<usize, HashMap<u64, Tier>>,
     versions: HashMap<usize, u64>,
+    radix: Option<ClusterRadix>,
+    published_entries: u64,
 }
 
 impl GlobalPrefixIndex {
@@ -28,10 +38,61 @@ impl GlobalPrefixIndex {
         GlobalPrefixIndex::default()
     }
 
+    /// Switch on the token-granular radix mirror.  Must be called before
+    /// any entries exist; from then on publishes should flow through
+    /// `publish_delta` / `record_tokens` so both views stay in sync.
+    pub fn enable_token_granular(&mut self, block_tokens: u64) {
+        if self.radix.is_none() {
+            self.radix = Some(ClusterRadix::new(block_tokens));
+        }
+    }
+
+    pub fn token_granular(&self) -> bool {
+        self.radix.is_some()
+    }
+
+    /// Entries pushed through `publish`/`publish_delta` since start —
+    /// the observable cost of index republishing (a full `summary()`
+    /// publish pays its whole resident set; a delta pays only the
+    /// changes since the last heartbeat).
+    pub fn published_entries(&self) -> u64 {
+        self.published_entries
+    }
+
     /// Replace `replica`'s published block map (heartbeat publish);
     /// returns the new monotonic version.
     pub fn publish(&mut self, replica: usize, summary: &[(u64, Tier)]) -> u64 {
+        self.published_entries += summary.len() as u64;
         self.per_replica.insert(replica, summary.iter().copied().collect());
+        let v = self.versions.entry(replica).or_insert(0);
+        *v += 1;
+        *v
+    }
+
+    /// Incremental publish: apply residency changes in event order
+    /// (`Some(tier)` upsert, `None` eviction) instead of replacing the
+    /// whole map.  Mirrors each change into the radix (block-span bit
+    /// set/clear keyed by the boundary prefix hash).  Returns the new
+    /// version; an empty delta still bumps it (the heartbeat observed a
+    /// consistent, unchanged view).
+    pub fn publish_delta(&mut self, replica: usize, delta: &[(u64, Option<Tier>)]) -> u64 {
+        self.published_entries += delta.len() as u64;
+        let map = self.per_replica.entry(replica).or_default();
+        for &(h, tier) in delta {
+            match tier {
+                Some(t) => {
+                    map.insert(h, t);
+                }
+                None => {
+                    map.remove(&h);
+                }
+            }
+        }
+        if let Some(radix) = &mut self.radix {
+            for &(h, tier) in delta {
+                radix.apply_block(replica, h, tier);
+            }
+        }
         let v = self.versions.entry(replica).or_insert(0);
         *v += 1;
         *v
@@ -45,6 +106,38 @@ impl GlobalPrefixIndex {
         for &h in chain {
             map.entry(h).or_insert(Tier::Dram);
         }
+    }
+
+    /// Token-granular optimistic record: the routed token path lands in
+    /// the radix (structure + replica bits at any split point) *and* in
+    /// the flat map (its block chain), so block-level consumers — the
+    /// scaler's rebalance planner, failover `best_match` — see the same
+    /// dispatch the token-granular router saw.
+    pub fn record_tokens(&mut self, replica: usize, tokens: &[u32]) {
+        let Some(radix) = &mut self.radix else {
+            return;
+        };
+        radix.record_tokens(replica, tokens, Tier::Dram);
+        let bt = radix.block_tokens() as usize;
+        let chain = hash_chain(tokens, bt);
+        self.record(replica, &chain);
+    }
+
+    /// Longest token prefix `replica` holds per the radix, worst tier
+    /// along the path.  Falls back to the block-derived answer when
+    /// token granularity is off.
+    pub fn match_prefix_tokens(&self, replica: usize, tokens: &[u32]) -> (u64, Option<Tier>) {
+        match &self.radix {
+            Some(radix) => radix.match_prefix_tokens(replica, tokens),
+            None => (0, None),
+        }
+    }
+
+    /// Best replica for a token path: one radix walk over all replicas —
+    /// O(matched tokens), not O(replicas × chain length).  Same contract
+    /// as `best_match`: longest match, lowest id on ties.
+    pub fn best_match_tokens(&self, tokens: &[u32]) -> Option<(usize, u64, Tier)> {
+        self.radix.as_ref()?.best_match_tokens(tokens)
     }
 
     /// Longest prefix of `chain` the replica holds, and the slowest tier
@@ -89,6 +182,9 @@ impl GlobalPrefixIndex {
     pub fn remove(&mut self, replica: usize) {
         self.per_replica.remove(&replica);
         self.versions.remove(&replica);
+        if let Some(radix) = &mut self.radix {
+            radix.remove(replica);
+        }
     }
 
     pub fn version(&self, replica: usize) -> u64 {
@@ -179,5 +275,132 @@ mod tests {
         ix.remove(0);
         assert_eq!(ix.version(0), 0);
         assert_eq!(ix.blocks(0), 0);
+    }
+
+    #[test]
+    fn delta_publish_applies_in_event_order() {
+        let mut ix = GlobalPrefixIndex::new();
+        let c = chain(1, 3);
+        assert_eq!(ix.publish_delta(0, &[(c[0], Some(Tier::Dram)), (c[1], Some(Tier::Dram))]), 1);
+        assert_eq!(ix.match_prefix(0, &c), (2, Some(Tier::Dram)));
+        // eviction then re-insert of the same block within one delta:
+        // last event wins
+        let v = ix.publish_delta(
+            0,
+            &[(c[1], None), (c[2], Some(Tier::Ssd)), (c[1], Some(Tier::Hbm))],
+        );
+        assert_eq!(v, 2);
+        assert_eq!(ix.match_prefix(0, &c), (3, Some(Tier::Ssd)));
+        assert_eq!(ix.publish_delta(0, &[]), 3, "empty delta still bumps the version");
+        assert_eq!(ix.published_entries(), 5, "two + three entries, empty delta free");
+    }
+
+    #[test]
+    fn token_granular_record_feeds_both_views() {
+        let mut ix = GlobalPrefixIndex::new();
+        ix.enable_token_granular(16);
+        let toks = prefix_tokens(1, 40); // 2 blocks + 8-token tail
+        ix.record_tokens(2, &toks);
+        assert_eq!(ix.match_prefix_tokens(2, &toks), (40, Some(Tier::Dram)));
+        assert_eq!(ix.match_prefix_tokens(2, &toks[..19]).0, 19);
+        // flat view sees the block chain of the same dispatch
+        assert_eq!(ix.match_prefix(2, &hash_chain(&toks, 16)), (2, Some(Tier::Dram)));
+        assert_eq!(ix.best_match_tokens(&toks), Some((2, 40, Tier::Dram)));
+    }
+
+    #[test]
+    fn token_granular_dedups_shared_prefixes_at_any_split() {
+        let mut ix = GlobalPrefixIndex::new();
+        ix.enable_token_granular(16);
+        let toks = prefix_tokens(3, 48);
+        ix.record_tokens(0, &toks[..24]); // 1.5 blocks
+        ix.record_tokens(5, &toks);
+        // replica 0's credit extends past its block boundary to token 24
+        assert_eq!(ix.match_prefix_tokens(0, &toks).0, 24);
+        let (r, n, _) = ix.best_match_tokens(&toks).unwrap();
+        assert_eq!((r, n), (5, 48), "longest wins");
+        let (r, n, _) = ix.best_match_tokens(&toks[..20]).unwrap();
+        assert_eq!((r, n), (0, 20), "tie at 20 tokens breaks to the lowest id");
+    }
+
+    #[test]
+    fn property_radix_matches_linear_scan_at_block_splits() {
+        // differential oracle (satellite of ISSUE 9): drive randomized
+        // chain churn — optimistic records, authoritative residency
+        // deltas from real TieredCaches, replica removal — through a
+        // token-granular index, and after every op compare the radix
+        // answers against the old linear-scan flat maps at block-aligned
+        // splits: identical matched lengths, tiers, and best-match
+        // tie-breaks.
+        use crate::service::kvstore::TieredCache;
+        crate::testutil::check("index-radix-vs-linear", 96, |rng| {
+            let block = 8u64;
+            let n_replicas = 4usize;
+            let mut ix = GlobalPrefixIndex::new();
+            ix.enable_token_granular(block);
+            let mut caches: Vec<TieredCache> = (0..n_replicas)
+                .map(|_| {
+                    let mut c = TieredCache::new(
+                        block,
+                        block * rng.range(1, 4),
+                        block * rng.range(2, 8),
+                        block * rng.range(2, 8),
+                    );
+                    c.enable_delta_tracking();
+                    c
+                })
+                .collect();
+            for _ in 0..120 {
+                let r = rng.index(n_replicas);
+                let group = rng.range(0, 4);
+                let blocks = rng.range(1, 8);
+                let tokens = prefix_tokens(group, blocks * block);
+                match rng.range(0, 3) {
+                    0 => ix.record_tokens(r, &tokens),
+                    1 => {
+                        // the replica admits and caches the routed path,
+                        // then heartbeats a residency delta
+                        ix.record_tokens(r, &tokens);
+                        caches[r].insert_tokens(&tokens, Tier::Dram);
+                        let delta = caches[r].take_summary_delta();
+                        ix.publish_delta(r, &delta);
+                    }
+                    2 => {
+                        let (n, tier) = ix.match_prefix(r, &hash_chain(&tokens, block as usize));
+                        let (tok, ttier) = ix.match_prefix_tokens(r, &tokens);
+                        crate::prop_assert!(
+                            tok == n as u64 * block,
+                            "replica {r}: radix {tok} != linear {n} x {block}"
+                        );
+                        crate::prop_assert!(ttier == tier, "tier {ttier:?} != {tier:?}");
+                    }
+                    _ => {
+                        ix.remove(r);
+                        let mut c = TieredCache::new(block, block * 2, block * 4, block * 4);
+                        c.enable_delta_tracking();
+                        caches[r] = c;
+                    }
+                }
+                // cross-replica: best_match must agree with the radix walk
+                let probe = prefix_tokens(rng.range(0, 4), rng.range(1, 8) * block);
+                let linear = ix.best_match(&hash_chain(&probe, block as usize));
+                let radix = ix.best_match_tokens(&probe);
+                match (linear, radix) {
+                    (None, None) => {}
+                    (Some((lr, ln, lt)), Some((rr, rn, rt))) => {
+                        crate::prop_assert!(
+                            lr == rr && ln as u64 * block == rn && lt == rt,
+                            "best_match diverged: linear {:?} radix {:?}",
+                            (lr, ln, lt),
+                            (rr, rn, rt)
+                        );
+                    }
+                    (l, x) => {
+                        crate::prop_assert!(false, "presence diverged: {l:?} vs {x:?}");
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -103,6 +103,14 @@ pub struct ControlPlaneConfig {
     /// Prefix-chain granularity — must match the replicas'
     /// `OrchestratorConfig::prefix_block_tokens`.
     pub block_tokens: u64,
+    /// Token-granular cluster index: the global prefix index keeps a
+    /// radix tree over token ids with per-replica residency bitsets,
+    /// heartbeats publish incremental residency deltas instead of full
+    /// summary snapshots, routing and dispatch charging use exact
+    /// matched-token counts, and the scaler ships sub-chain token
+    /// ranges.  Off (the default) preserves the block-aligned chain
+    /// behavior bit-identically.
+    pub token_granular: bool,
     /// Cross-replica online/offline steering thresholds (§3.1).
     pub colocation: ColocationConfig,
     /// Transfer-cost model for routing and failover decisions.
@@ -133,6 +141,7 @@ impl Default for ControlPlaneConfig {
             lease_ttl_s: 0.65,
             replica_faults: Vec::new(),
             block_tokens: DEFAULT_PREFIX_BLOCK_TOKENS,
+            token_granular: false,
             colocation: ColocationConfig::default(),
             xfer: TransferEngine::default(),
             scaler: None,
@@ -183,6 +192,11 @@ pub struct ControlCounters {
     /// Total staging + transfer time charged for planned rebalances and
     /// warm starts.
     pub rebalance_staging_s: f64,
+    /// Index entries shipped by heartbeat publishes over the run (full
+    /// snapshots count every entry, delta publishes count only the
+    /// residency mutations since the previous heartbeat) — the
+    /// republish-volume measure the incremental publish satellite pins.
+    pub index_published_entries: u64,
 }
 
 impl ControlCounters {
@@ -203,6 +217,7 @@ impl ControlCounters {
         reg.inc("xllm_ctl_warm_starts_total", self.warm_starts);
         reg.inc("xllm_ctl_kv_blocks_shipped_total", self.kv_blocks_shipped);
         reg.set_gauge("xllm_ctl_rebalance_staging_seconds", self.rebalance_staging_s);
+        reg.inc("xllm_index_published_entries_total", self.index_published_entries);
     }
 
     /// The old struct view over the registry names (tests pin the
@@ -224,6 +239,7 @@ impl ControlCounters {
             warm_starts: reg.counter("xllm_ctl_warm_starts_total"),
             kv_blocks_shipped: reg.counter("xllm_ctl_kv_blocks_shipped_total"),
             rebalance_staging_s: reg.gauge("xllm_ctl_rebalance_staging_seconds"),
+            index_published_entries: reg.counter("xllm_index_published_entries_total"),
         }
     }
 }
@@ -251,6 +267,19 @@ impl FleetResult {
     /// Cluster-wide prefix-cache hits (sum over replicas).
     pub fn prefix_hits(&self) -> u64 {
         self.per_replica.iter().map(|r| r.prefix_hits).sum()
+    }
+
+    /// Cluster-wide prompt tokens served from prefix caches (token-exact
+    /// under `token_granular`, block-rounded otherwise).
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        self.per_replica.iter().map(|r| r.prefix_hit_tokens).sum()
+    }
+
+    /// Cluster-wide prefill tokens admitted beyond free KV after the
+    /// decode-growth reserve (zero by construction under token-exact
+    /// admission).
+    pub fn admission_overcommit_tokens(&self) -> u64 {
+        self.per_replica.iter().map(|r| r.admission_overcommit_tokens).sum()
     }
 
     /// Every submitted request has a recorded outcome somewhere.
@@ -305,21 +334,36 @@ impl<X: Executor> ControlPlane<X> {
         let cost = replicas[0].executor().cost().clone();
         let router = FleetRouter::new(cfg.routing);
         let registry = InstanceRegistry::new(cfg.lease_ttl_s);
-        let scaler = cfg.scaler.map(FleetScaler::new);
-        let replicas = replicas
+        // the scaler always plans against the control plane's chain
+        // granularity; token-granular fleets additionally ship sub-chain
+        // token ranges instead of whole chains
+        let scaler = cfg.scaler.map(|mut sc| {
+            sc.block_tokens = cfg.block_tokens;
+            sc.token_ranges = sc.token_ranges || cfg.token_granular;
+            FleetScaler::new(sc)
+        });
+        let token_granular = cfg.token_granular;
+        let replicas: Vec<Replica<X>> = replicas
             .into_iter()
             .enumerate()
             .map(|(id, mut orch)| {
                 orch.set_trace(cfg.trace.for_replica(id));
+                if token_granular {
+                    orch.enable_cache_delta_tracking();
+                }
                 orch.start(Vec::new()); // empty workload: arrivals come via submit
                 Replica { orch: Some(orch), alive: true, result: None }
             })
             .collect();
+        let mut index = GlobalPrefixIndex::new();
+        if token_granular {
+            index.enable_token_granular(cfg.block_tokens);
+        }
         ControlPlane {
             cfg,
             replicas,
             registry: Arc::new(RwLock::new(registry)),
-            index: Arc::new(RwLock::new(GlobalPrefixIndex::new())),
+            index: Arc::new(RwLock::new(index)),
             router,
             clock: EventQueue::new(),
             workload: Vec::new(),
@@ -609,6 +653,7 @@ impl<X: Executor> ControlPlane<X> {
             input_tokens: spec.input_tokens,
             output_tokens: 0,
             failed: true,
+            prefix_hit_tokens: 0,
             phases: PhaseBreakdown::default(),
         });
     }
@@ -616,21 +661,38 @@ impl<X: Executor> ControlPlane<X> {
     /// Hand a routed request to its replica (counters, optimistic index
     /// and load bookkeeping, admission no earlier than `earliest_s`).
     fn admit(&mut self, spec: RequestSpec, d: RouteDecision, earliest_s: f64) {
-        if d.matched_blocks > 0 {
+        if d.matched_blocks > 0 || d.matched_tokens > 0 {
             self.counters.routed_by_cache_hit += 1;
         }
         if d.offline_steered {
             self.counters.offline_steered += 1;
         }
         let chain = FleetRouter::chain_for(&spec, self.cfg.block_tokens);
-        if !chain.is_empty() {
+        if self.cfg.token_granular {
+            // optimistic: the target caches this token path on admit
+            // (feeds both the cluster radix and the flat chain view,
+            // including a sub-block prefix too short for any chain)
+            let toks = FleetRouter::tokens_for(&spec);
+            if !toks.is_empty() {
+                self.index.write().expect("index lock").record_tokens(d.replica, &toks);
+            }
+        } else if !chain.is_empty() {
             // optimistic: the target caches this chain on admit
             self.index.write().expect("index lock").record(d.replica, &chain);
+        }
+        if !chain.is_empty() {
             if let Some(s) = self.scaler.as_mut() {
                 s.note_route(&chain, d.replica);
             }
         }
-        self.registry.write().expect("registry lock").note_dispatch(d.replica, spec.input_tokens);
+        // token-exact admission math: the target only computes the
+        // unmatched prompt suffix, so only that share loads its queue
+        let charge = if self.cfg.token_granular {
+            spec.input_tokens.saturating_sub(d.matched_tokens)
+        } else {
+            spec.input_tokens
+        };
+        self.registry.write().expect("registry lock").note_dispatch(d.replica, charge);
         self.replicas[d.replica]
             .orch
             .as_mut()
@@ -642,19 +704,27 @@ impl<X: Executor> ControlPlane<X> {
     /// heartbeat publish; also run once at t=0 so the starting fleet is
     /// routable before its first tick).
     fn publish_reports(&mut self, now: f64) {
+        let token_granular = self.cfg.token_granular;
         let mut registry = self.registry.write().expect("registry lock");
         let mut index = self.index.write().expect("index lock");
         for r in 0..self.replicas.len() {
             if !self.replicas[r].alive {
                 continue; // crashed or wedged: no lease renewal
             }
-            let Some(orch) = self.replicas[r].orch.as_ref() else {
+            let Some(orch) = self.replicas[r].orch.as_mut() else {
                 continue;
             };
             let report = orch.load_report();
-            let summary = orch.cache_summary();
             registry.heartbeat(r, report, now);
-            index.publish(r, &summary);
+            if token_granular {
+                // incremental publish: only the residency mutations since
+                // the previous heartbeat, replayed in event order (the
+                // satellite fix for the full-summary republish)
+                let delta = orch.cache_summary_delta();
+                index.publish_delta(r, &delta);
+            } else {
+                index.publish(r, &orch.cache_summary());
+            }
         }
     }
 
@@ -706,7 +776,9 @@ impl<X: Executor> ControlPlane<X> {
         match action {
             ScaleAction::Up { shard } => self.scale_up(now, shard),
             ScaleAction::Down(r) => self.decommission_replica(r, now),
-            ScaleAction::Rebalance { chain, from, to } => self.start_rebalance(chain, from, to),
+            ScaleAction::Rebalance { chain, from, to, token_lo, token_hi } => {
+                self.start_rebalance(chain, from, to, token_lo, token_hi)
+            }
         }
     }
 
@@ -729,6 +801,9 @@ impl<X: Executor> ControlPlane<X> {
             return; // factory declined (e.g. backend lost its artifacts)
         };
         orch.set_trace(self.cfg.trace.for_replica(id));
+        if self.cfg.token_granular {
+            orch.enable_cache_delta_tracking();
+        }
         orch.start_at(Vec::new(), now);
         self.replicas.push(Replica { orch: Some(orch), alive: true, result: None });
         self.registry.write().expect("registry lock").register(id, now);
@@ -749,7 +824,7 @@ impl<X: Executor> ControlPlane<X> {
                 let Some((src, _, _)) = best else { continue };
                 self.counters.warm_starts += 1;
                 self.cfg.trace.instant(now, Some(id), None, InstantKind::WarmStart);
-                self.stage_chain(chain, src, id);
+                self.stage_chain(chain, src, id, 0);
             }
         }
     }
@@ -784,10 +859,23 @@ impl<X: Executor> ControlPlane<X> {
 
     /// Begin a planned hot-prefix migration: charge the staging +
     /// transfer cost now, land the chain on the target when it elapses.
-    fn start_rebalance(&mut self, chain: Vec<u64>, from: usize, to: usize) {
+    /// `[token_lo, token_hi)` is the sub-chain range the scaler planned
+    /// to ship — in token-range mode the target already holds the chain
+    /// below `token_lo`, so only the missing suffix is billed; legacy
+    /// plans always cover the whole chain (`lo = 0`).
+    fn start_rebalance(
+        &mut self,
+        mut chain: Vec<u64>,
+        from: usize,
+        to: usize,
+        token_lo: u64,
+        token_hi: u64,
+    ) {
         self.counters.kv_rebalances += 1;
         self.cfg.trace.instant(self.clock.now(), Some(to), None, InstantKind::Rebalance);
-        self.stage_chain(chain, from, to);
+        let bt = self.cfg.block_tokens.max(1);
+        chain.truncate((token_hi / bt) as usize);
+        self.stage_chain(chain, from, to, token_lo);
     }
 
     /// Shared staging mechanics for planned rebalancing and scale-up
@@ -800,11 +888,21 @@ impl<X: Executor> ControlPlane<X> {
     /// prefix hits.  When the source backend can ship real blocks
     /// ([`Executor::export_chain`]), the payload rides the staging event
     /// and lands in the target's engine core at adoption.
-    fn stage_chain(&mut self, mut chain: Vec<u64>, from: usize, to: usize) {
+    ///
+    /// `skip_tokens` is the prefix the target already holds (token-range
+    /// rebalancing): those blocks still land logically via `adopt_chain`
+    /// but are not billed for transfer — only the missing suffix moves.
+    /// Legacy callers pass 0 and bill the whole staged chain.
+    fn stage_chain(&mut self, mut chain: Vec<u64>, from: usize, to: usize, skip_tokens: u64) {
         let (matched, tier) = self.index.read().expect("index lock").match_prefix(from, &chain);
         chain.truncate(matched);
         if chain.is_empty() {
             return; // the source no longer holds any of it
+        }
+        let skip_blocks = (skip_tokens / self.cfg.block_tokens.max(1)).min(chain.len() as u64);
+        let ship_blocks = chain.len() as u64 - skip_blocks;
+        if ship_blocks == 0 {
+            return; // the target already holds everything the plan covers
         }
         let payload = self
             .replicas
@@ -813,7 +911,7 @@ impl<X: Executor> ControlPlane<X> {
             .and_then(|o| o.executor_mut().export_chain(&chain));
         let tier = tier.unwrap_or(Tier::Dram);
         let bytes =
-            chain.len() as f64 * self.cfg.block_tokens as f64 * self.cost.model.kv_bytes_per_token();
+            ship_blocks as f64 * self.cfg.block_tokens as f64 * self.cost.model.kv_bytes_per_token();
         let delay = self.cfg.xfer.load_to_hbm_s(tier, bytes) + self.cfg.xfer.migrate_s(bytes);
         self.counters.rebalance_staging_s += delay;
         self.clock.schedule_in(delay, CtlEv::RebalanceDone { to, chain, payload });
@@ -944,6 +1042,8 @@ impl<X: Executor> ControlPlane<X> {
     }
 
     fn finish(mut self, truncated: bool) -> FleetResult {
+        self.counters.index_published_entries =
+            self.index.read().expect("index lock").published_entries();
         let mut report = ServingReport::new();
         report.merge(&self.lost);
         let n_replicas_final = self.replicas.iter().filter(|r| r.orch.is_some()).count();
@@ -1211,6 +1311,68 @@ mod tests {
     }
 
     #[test]
+    fn token_granular_fleet_beats_block_rounding_with_zero_overcommit() {
+        use crate::coordinator::BatchConfig;
+        // 300-token shared prefix (NOT a multiple of the 64-token
+        // block): block-granular credit rounds down to 256 per hit,
+        // token-granular credits all 300 — pinned at pipeline depth 2
+        // together with zero admission overcommit and the smaller
+        // incremental republish volume
+        let mk_fleet = |token: bool| -> Vec<Orchestrator<FixedCost>> {
+            (0..2)
+                .map(|_| {
+                    let cfg = OrchestratorConfig {
+                        n_instances: 1,
+                        prefix_cache: true,
+                        prefix_token_granular: token,
+                        pipeline_depth: 2,
+                        batch: BatchConfig { token_admission: token, ..BatchConfig::default() },
+                        ..Default::default()
+                    };
+                    Orchestrator::new(cfg, FixedCost::new(0.01))
+                })
+                .collect()
+        };
+        let w: Vec<RequestSpec> = (0..12)
+            .map(|i| {
+                let mut s = RequestSpec::text(i as f64 * 0.3, 512, 4);
+                s.prefix_group = 2;
+                s.shared_prefix = 300;
+                s
+            })
+            .collect();
+        let n = w.len();
+        let legacy =
+            ControlPlane::new(ControlPlaneConfig::default(), mk_fleet(false)).run(w.clone());
+        let cfg = ControlPlaneConfig { token_granular: true, ..Default::default() };
+        let token = ControlPlane::new(cfg, mk_fleet(true)).run(w);
+        assert!(legacy.all_accounted() && token.all_accounted());
+        assert_eq!(legacy.report.n_completed(), n);
+        assert_eq!(token.report.n_completed(), n);
+        assert!(
+            token.prefix_hit_tokens() > legacy.prefix_hit_tokens(),
+            "token-exact credit must beat block rounding on an unaligned prefix: \
+             token {} vs block {}",
+            token.prefix_hit_tokens(),
+            legacy.prefix_hit_tokens()
+        );
+        assert_eq!(
+            token.admission_overcommit_tokens(),
+            0,
+            "token-exact admission never overcommits"
+        );
+        assert!(
+            token.counters.index_published_entries < legacy.counters.index_published_entries,
+            "incremental publish must ship fewer entries than full republish: \
+             delta {} vs full {}",
+            token.counters.index_published_entries,
+            legacy.counters.index_published_entries
+        );
+        assert!(token.counters.index_published_entries > 0, "deltas must actually publish");
+        assert!(token.counters.routed_by_cache_hit > 0);
+    }
+
+    #[test]
     fn fleet_run_is_deterministic() {
         let workload: Vec<RequestSpec> = (0..8)
             .map(|i| {
@@ -1295,6 +1457,7 @@ mod tests {
             warm_starts: 13,
             kv_blocks_shipped: 14,
             rebalance_staging_s: 1.5,
+            index_published_entries: 16,
         };
         let mut reg = MetricsRegistry::new();
         c.export_metrics(&mut reg);

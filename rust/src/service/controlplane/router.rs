@@ -50,6 +50,9 @@ pub struct RouteDecision {
     pub replica: usize,
     /// Prefix blocks the chosen replica already caches (per the index).
     pub matched_blocks: usize,
+    /// Exact matched tokens when the index runs token-granular (0 under
+    /// the legacy block-only index).
+    pub matched_tokens: u64,
     /// The offline tide rule narrowed the candidate set.
     pub offline_steered: bool,
 }
@@ -106,7 +109,21 @@ impl FleetRouter {
         )
     }
 
+    /// The request's raw prefix token stream (empty when it shares no
+    /// prefix) — what the token-granular index matches against.
+    pub fn tokens_for(spec: &RequestSpec) -> Vec<u32> {
+        if spec.shared_prefix == 0 {
+            return Vec::new();
+        }
+        prefix_tokens(spec.prefix_group, spec.shared_prefix)
+    }
+
     /// Route one request; `None` only when no replica holds a lease.
+    ///
+    /// When the index runs token-granular, candidates additionally carry
+    /// their exact radix-matched token count (prompt_tokens −
+    /// matched_tokens is what the pick will really prefill), so the
+    /// latency estimate stops rounding down to block boundaries.
     pub fn route(&mut self, spec: &RequestSpec, ctx: &RouterCtx) -> Option<RouteDecision> {
         let alive = ctx.registry.alive();
         if alive.is_empty() {
@@ -114,25 +131,43 @@ impl FleetRouter {
         }
         let (cands, offline_steered) = offline_candidates(spec, &alive, ctx);
         let chain = Self::chain_for(spec, ctx.block_tokens);
+        let token_granular = ctx.index.token_granular();
+        let toks = if token_granular { Self::tokens_for(spec) } else { Vec::new() };
         // matched_blocks reports the picked replica's index match under
         // BOTH policies, so cache-hit accounting is comparable across
         // the cache-aware/round-robin ablation
-        let (replica, matched_blocks) = match self.policy {
+        let (replica, matched_blocks, matched_tokens) = match self.policy {
             RoutePolicy::RoundRobin => {
                 let pick = self.rr_pick(&cands);
-                (pick, ctx.index.match_prefix(pick, &chain).0)
+                let tok =
+                    if token_granular { ctx.index.match_prefix_tokens(pick, &toks).0 } else { 0 };
+                (pick, ctx.index.match_prefix(pick, &chain).0, tok)
             }
             RoutePolicy::CacheAware => {
                 let rcs: Vec<RouteCandidate> = cands
                     .iter()
                     .map(|&i| {
-                        let (matched_blocks, hit_tier) = ctx.index.match_prefix(i, &chain);
+                        let (matched_blocks, mut hit_tier) = ctx.index.match_prefix(i, &chain);
+                        let mut matched_tokens = 0;
+                        if token_granular {
+                            let (mt, tt) = ctx.index.match_prefix_tokens(i, &toks);
+                            if mt > 0 {
+                                matched_tokens = mt;
+                                hit_tier = tt;
+                            }
+                        }
                         let queued_prefill_tokens = ctx
                             .registry
                             .load(i)
                             .map(|l| l.queued_prefill_tokens)
                             .unwrap_or(0);
-                        RouteCandidate { instance: i, matched_blocks, hit_tier, queued_prefill_tokens }
+                        RouteCandidate {
+                            instance: i,
+                            matched_blocks,
+                            matched_tokens,
+                            hit_tier,
+                            queued_prefill_tokens,
+                        }
                     })
                     .collect();
                 let (pick, _) = kvstore::route(
@@ -143,15 +178,15 @@ impl FleetRouter {
                     ctx.cost,
                     ctx.xfer,
                 )?;
-                let matched = rcs
-                    .iter()
-                    .find(|c| c.instance == pick)
-                    .map(|c| c.matched_blocks)
-                    .unwrap_or(0);
-                (pick, matched)
+                let picked = rcs.iter().find(|c| c.instance == pick);
+                (
+                    pick,
+                    picked.map(|c| c.matched_blocks).unwrap_or(0),
+                    picked.map(|c| c.matched_tokens).unwrap_or(0),
+                )
             }
         };
-        Some(RouteDecision { replica, matched_blocks, offline_steered })
+        Some(RouteDecision { replica, matched_blocks, matched_tokens, offline_steered })
     }
 }
 
@@ -418,6 +453,32 @@ mod tests {
         };
         let spec = RequestSpec::text(0.0, 64, 4);
         assert_eq!(FleetRouter::new(RoutePolicy::CacheAware).route(&spec, &ctx), None);
+    }
+
+    #[test]
+    fn token_granular_routing_sees_sub_block_hits() {
+        let (reg, mut ix) = setup(2);
+        ix.enable_token_granular(64);
+        let c = cost();
+        let xfer = TransferEngine::default();
+        let coloc = ColocationConfig::default();
+        let mut spec = RequestSpec::text(0.0, 1024, 16);
+        spec.prefix_group = 4;
+        spec.shared_prefix = 300; // 4 blocks + a 44-token tail
+        let toks = FleetRouter::tokens_for(&spec);
+        ix.record_tokens(1, &toks);
+        let ctx = RouterCtx {
+            registry: &reg,
+            index: &ix,
+            cost: &c,
+            xfer: &xfer,
+            coloc: &coloc,
+            block_tokens: 64,
+        };
+        let d = FleetRouter::new(RoutePolicy::CacheAware).route(&spec, &ctx).unwrap();
+        assert_eq!(d.replica, 1, "the replica holding the prefix must win");
+        assert_eq!(d.matched_tokens, 300, "token-exact, past the 256-token block floor");
+        assert_eq!(d.matched_blocks, 4);
     }
 
     #[test]

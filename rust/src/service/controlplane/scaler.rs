@@ -64,6 +64,15 @@ pub struct ScalerConfig {
     /// are priced in devices, not heads: a tp=4,pp=2 replica costs 8.
     /// 0 = unlimited (replica count is still capped by `max_replicas`).
     pub device_budget: u64,
+    /// Plan rebalances as sub-chain token ranges: the target adopts only
+    /// the suffix it is missing — `(chain, token_lo, token_hi)` — so a
+    /// partially-warm replica is a valid target and the transfer ships
+    /// fewer bytes.  Off = whole chains to fully-cold targets only (the
+    /// legacy behavior).
+    pub token_ranges: bool,
+    /// Chain granularity in tokens, for expressing block matches as
+    /// token ranges; must equal the fleet's prefix block size.
+    pub block_tokens: u64,
 }
 
 impl Default for ScalerConfig {
@@ -76,6 +85,8 @@ impl Default for ScalerConfig {
             hot_prefix_routes: 8,
             warm_start_chains: 2,
             device_budget: 0,
+            token_ranges: false,
+            block_tokens: 64,
         }
     }
 }
@@ -88,8 +99,11 @@ pub enum ScaleAction {
     Up { shard: ShardSpec },
     /// Gracefully decommission this replica (drain + re-dispatch).
     Down(usize),
-    /// Proactively migrate a hot prefix chain from `from` to `to`.
-    Rebalance { chain: Vec<u64>, from: usize, to: usize },
+    /// Proactively migrate a hot prefix chain from `from` to `to` —
+    /// the token range `[token_lo, token_hi)` of it.  Whole-chain plans
+    /// use `token_lo == 0`; under `ScalerConfig::token_ranges` the range
+    /// starts at the target's existing coverage.
+    Rebalance { chain: Vec<u64>, from: usize, to: usize, token_lo: u64, token_hi: u64 },
 }
 
 /// Route concentration stats for one prefix chain.
@@ -320,15 +334,31 @@ impl FleetScaler {
         }
         let (_, key, from) = best?;
         let chain = self.hot[&key].chain.clone();
-        let to = alive
-            .iter()
-            .copied()
-            .filter(|&r| r != from && index.match_prefix(r, &chain).0 == 0)
-            .min_by_key(|&r| (backlog(registry, r), r))?;
+        let bt = self.cfg.block_tokens.max(1);
+        let (to, token_lo, token_hi) = if self.cfg.token_ranges {
+            // sub-chain shipping: any replica missing part of the
+            // source's resident prefix is a target; plan exactly the
+            // missing token range
+            let hi = index.match_prefix(from, &chain).0 as u64 * bt;
+            let to = alive
+                .iter()
+                .copied()
+                .filter(|&r| r != from && (index.match_prefix(r, &chain).0 as u64) * bt < hi)
+                .min_by_key(|&r| (backlog(registry, r), r))?;
+            let lo = index.match_prefix(to, &chain).0 as u64 * bt;
+            (to, lo, hi)
+        } else {
+            let to = alive
+                .iter()
+                .copied()
+                .filter(|&r| r != from && index.match_prefix(r, &chain).0 == 0)
+                .min_by_key(|&r| (backlog(registry, r), r))?;
+            (to, 0, chain.len() as u64 * bt)
+        };
         // reset this chain's stats so the migration gets a window to
         // take effect before it can re-trigger
         self.hot.remove(&key);
-        Some(ScaleAction::Rebalance { chain, from, to })
+        Some(ScaleAction::Rebalance { chain, from, to, token_lo, token_hi })
     }
 }
 
@@ -431,7 +461,10 @@ mod tests {
         // tick the surviving hot stats fire the deferred rebalance
         reg.deregister(2);
         let actions = s.plan(5.0, &reg, &ix);
-        assert_eq!(actions, vec![ScaleAction::Rebalance { chain, from: 0, to: 1 }]);
+        assert_eq!(
+            actions,
+            vec![ScaleAction::Rebalance { chain, from: 0, to: 1, token_lo: 0, token_hi: 128 }]
+        );
     }
 
     fn sharded_registry(loads: &[(usize, u64, u64, u64, ShardSpec)]) -> InstanceRegistry {
@@ -533,7 +566,13 @@ mod tests {
         let actions = s.plan(0.0, &reg, &ix);
         assert_eq!(
             actions,
-            vec![ScaleAction::Rebalance { chain: chain.clone(), from: 0, to: 2 }]
+            vec![ScaleAction::Rebalance {
+                chain: chain.clone(),
+                from: 0,
+                to: 2,
+                token_lo: 0,
+                token_hi: 192,
+            }]
         );
         // stats were reset: the same tick's decision does not repeat
         assert!(s.plan(0.0, &reg, &ix).is_empty());
@@ -565,6 +604,35 @@ mod tests {
         let mut s = FleetScaler::new(ScalerConfig { hot_prefix_routes: 1, ..cfg() });
         s.note_route(&chain, 0);
         let actions = s.plan(5.0, &reg, &ix);
-        assert_eq!(actions, vec![ScaleAction::Rebalance { chain, from: 0, to: 2 }]);
+        assert_eq!(
+            actions,
+            vec![ScaleAction::Rebalance { chain, from: 0, to: 2, token_lo: 0, token_hi: 128 }]
+        );
+    }
+
+    #[test]
+    fn token_ranges_ship_only_the_missing_suffix() {
+        let reg = registry(&[(0, 1500), (1, 10)]);
+        let mut ix = GlobalPrefixIndex::new();
+        let chain = vec![5u64, 6, 7, 8];
+        ix.record(0, &chain);
+        ix.record(1, &chain[..1]); // the target already holds block 1
+        // legacy planning needs a fully-cold target: with only a
+        // partially-warm one available, nothing moves
+        let mut s = FleetScaler::new(ScalerConfig { hot_prefix_routes: 1, ..cfg() });
+        s.note_route(&chain, 0);
+        assert!(s.plan(5.0, &reg, &ix).is_empty());
+        // token-range planning ships exactly the missing [64, 256)
+        let mut s = FleetScaler::new(ScalerConfig {
+            hot_prefix_routes: 1,
+            token_ranges: true,
+            ..cfg()
+        });
+        s.note_route(&chain, 0);
+        let actions = s.plan(5.0, &reg, &ix);
+        assert_eq!(
+            actions,
+            vec![ScaleAction::Rebalance { chain, from: 0, to: 1, token_lo: 64, token_hi: 256 }]
+        );
     }
 }

@@ -17,6 +17,7 @@
 
 use std::collections::HashMap;
 
+use crate::service::radix::{hash_step, TokenRadix, HASH_SEED};
 use crate::sim::CostModel;
 
 /// Storage tier, fastest first.
@@ -66,6 +67,14 @@ pub struct TieredCache {
     clock: u64,
     pub hits: u64,
     pub misses: u64,
+    /// Token-granular structural index over every inserted token path
+    /// (populated only via `insert_tokens`; block-hash inserts leave it
+    /// empty, so the default chain paths never pay for it).
+    radix: TokenRadix,
+    /// When set, every residency change is appended to `delta` so the
+    /// control plane can publish increments instead of full summaries.
+    track_deltas: bool,
+    delta: Vec<(u64, Option<Tier>)>,
 }
 
 impl TieredCache {
@@ -82,12 +91,40 @@ impl TieredCache {
             clock: 0,
             hits: 0,
             misses: 0,
+            radix: TokenRadix::new(),
+            track_deltas: false,
+            delta: Vec::new(),
         }
     }
 
     fn tick(&mut self) -> u64 {
         self.clock += 1;
         self.clock
+    }
+
+    /// Start recording residency deltas for incremental publish.  Off by
+    /// default so callers that never drain `take_summary_delta` don't
+    /// accumulate an unbounded log.
+    pub fn enable_delta_tracking(&mut self) {
+        self.track_deltas = true;
+    }
+
+    fn note(&mut self, h: u64, tier: Option<Tier>) {
+        if self.track_deltas {
+            self.delta.push((h, tier));
+        }
+    }
+
+    /// Residency changes since the last call, in event order (an upsert
+    /// is `Some(tier)`, an eviction `None`).  Feed to
+    /// `GlobalPrefixIndex::publish_delta`.
+    pub fn take_summary_delta(&mut self) -> Vec<(u64, Option<Tier>)> {
+        std::mem::take(&mut self.delta)
+    }
+
+    /// Nodes in the token-granular structural index (bench/metrics).
+    pub fn radix_nodes(&self) -> usize {
+        self.radix.n_nodes()
     }
 
     /// Longest cached prefix (in blocks) of the hash chain, and the
@@ -117,6 +154,69 @@ impl TieredCache {
         (n, worst)
     }
 
+    /// Token-granular prefix match: the longest matched *token* count at
+    /// any split point, not just block boundaries, with tier = worst
+    /// tier along the matched path.  The radix gives structural
+    /// coverage; residency is validated lazily against the live block
+    /// table by recomputing the rolling block hashes along the walk
+    /// (bumping LRU like `match_prefix`).  Tail tokens past the last
+    /// full block count only when every preceding block is resident —
+    /// their KV rides in DRAM, so a block-less match reports `Dram`.
+    /// On a block-aligned path this returns exactly
+    /// `match_prefix(chain).0 * block_tokens` with the same tier.
+    pub fn match_prefix_tokens(&mut self, tokens: &[u32]) -> (u64, Option<Tier>) {
+        let covered = self.radix.matched_tokens(tokens);
+        let now = self.tick();
+        let bt = self.block_tokens as usize;
+        let mut worst: Option<Tier> = None;
+        let mut matched = 0usize;
+        let mut broken = false;
+        let mut h: u64 = HASH_SEED;
+        for (i, &t) in tokens[..covered].iter().enumerate() {
+            h = hash_step(h, t);
+            if (i + 1) % bt == 0 {
+                match self.blocks.get_mut(&h) {
+                    Some(meta) => {
+                        meta.last_access = now;
+                        worst = Some(match worst {
+                            Some(w) if w >= meta.tier => w,
+                            _ => meta.tier,
+                        });
+                        matched = i + 1;
+                    }
+                    None => {
+                        broken = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if !broken {
+            matched = covered;
+            if matched > 0 && worst.is_none() {
+                worst = Some(Tier::Dram);
+            }
+        }
+        if matched > 0 {
+            self.hits += 1;
+        } else if !tokens.is_empty() {
+            self.misses += 1;
+        }
+        (matched as u64, if matched > 0 { worst } else { None })
+    }
+
+    /// Insert a token path: blocks land in the tiered block table (same
+    /// residency/eviction as `insert_chain`), the full path — including
+    /// the sub-block tail — lands in the structural radix.
+    pub fn insert_tokens(&mut self, tokens: &[u32], tier: Tier) {
+        if tokens.is_empty() {
+            return;
+        }
+        self.radix.insert(tokens);
+        let chain = hash_chain(tokens, self.block_tokens as usize);
+        self.insert_chain(&chain, tier);
+    }
+
     fn evict_lru_from(&mut self, tier: Tier) -> Option<u64> {
         let victim = self
             .blocks
@@ -140,6 +240,7 @@ impl TieredCache {
                 // HBM copy implies a DRAM copy exists: drop the HBM copy
                 self.used_blocks[0] -= 1;
                 self.blocks.get_mut(&h).unwrap().tier = Tier::Dram;
+                self.note(h, Some(Tier::Dram));
                 // note: DRAM occupancy already counted when inserted
             }
             Tier::Dram => {
@@ -147,13 +248,16 @@ impl TieredCache {
                 if self.used_blocks[2] < self.cap_blocks[2] {
                     self.used_blocks[2] += 1;
                     self.blocks.get_mut(&h).unwrap().tier = Tier::Ssd;
+                    self.note(h, Some(Tier::Ssd));
                 } else {
                     self.blocks.remove(&h);
+                    self.note(h, None);
                 }
             }
             Tier::Ssd => {
                 self.used_blocks[2] -= 1;
                 self.blocks.remove(&h);
+                self.note(h, None);
             }
         }
     }
@@ -189,6 +293,7 @@ impl TieredCache {
                 let m = self.blocks.get_mut(&h).unwrap();
                 m.tier = Tier::Hbm;
                 m.last_access = now;
+                self.note(h, Some(Tier::Hbm));
             } else if tier == Tier::Dram && meta.tier == Tier::Ssd {
                 while self.used_blocks[1] >= self.cap_blocks[1] {
                     if self.evict_lru_from(Tier::Dram).is_none() {
@@ -200,6 +305,7 @@ impl TieredCache {
                 let m = self.blocks.get_mut(&h).unwrap();
                 m.tier = Tier::Dram;
                 m.last_access = now;
+                self.note(h, Some(Tier::Dram));
             }
             return;
         }
@@ -233,6 +339,7 @@ impl TieredCache {
             t = Tier::Ssd;
         }
         self.blocks.insert(h, BlockMeta { tier: t, last_access: now });
+        self.note(h, Some(t));
     }
 
     /// Insert a whole chain (prefix store after a prefill).
@@ -324,6 +431,9 @@ pub struct RouteCandidate {
     pub instance: usize,
     /// Blocks of the request's chain cached here.
     pub matched_blocks: usize,
+    /// Exact matched tokens from a token-granular index; 0 means
+    /// "unknown — derive from `matched_blocks`" (the legacy path).
+    pub matched_tokens: u64,
     /// Slowest tier holding the matched prefix.
     pub hit_tier: Option<Tier>,
     /// Prompt tokens queued ahead on this instance.
@@ -348,7 +458,11 @@ pub fn route(
     candidates
         .iter()
         .map(|c| {
-            let matched_tokens = (c.matched_blocks as u64 * block_tokens).min(input_tokens);
+            let matched_tokens = if c.matched_tokens > 0 {
+                c.matched_tokens.min(input_tokens)
+            } else {
+                (c.matched_blocks as u64 * block_tokens).min(input_tokens)
+            };
             let missing = input_tokens - matched_tokens;
             let queue_s = cost.prefill_s(c.queued_prefill_tokens, 0);
             let prefill = if missing > 0 { cost.prefill_s(missing, matched_tokens) } else { 0.0 };
@@ -436,12 +550,14 @@ mod tests {
             RouteCandidate {
                 instance: 0,
                 matched_blocks: 0,
+                matched_tokens: 0,
                 hit_tier: None,
                 queued_prefill_tokens: 0,
             },
             RouteCandidate {
                 instance: 1,
                 matched_blocks: 60,
+                matched_tokens: 0,
                 hit_tier: Some(Tier::Dram),
                 queued_prefill_tokens: 0,
             },
@@ -462,12 +578,14 @@ mod tests {
             RouteCandidate {
                 instance: 0,
                 matched_blocks: 0,
+                matched_tokens: 0,
                 hit_tier: None,
                 queued_prefill_tokens: 0,
             },
             RouteCandidate {
                 instance: 1,
                 matched_blocks: 64,
+                matched_tokens: 0,
                 hit_tier: Some(Tier::Ssd),
                 queued_prefill_tokens: 2_000_000, // massive queue
             },
@@ -507,6 +625,7 @@ mod tests {
         let cand = |i| RouteCandidate {
             instance: i,
             matched_blocks: 8,
+            matched_tokens: 0,
             hit_tier: Some(Tier::Dram),
             queued_prefill_tokens: 512,
         };
@@ -574,6 +693,147 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn token_match_credits_sub_block_tail() {
+        let mut c = cache(); // block 16
+        let toks = prefix_tokens(1, 40); // 2 blocks + 8-token tail
+        c.insert_tokens(&toks, Tier::Dram);
+        assert_eq!(c.match_prefix_tokens(&toks), (40, Some(Tier::Dram)));
+        assert_eq!(c.match_prefix_tokens(&toks[..23]).0, 23, "any split point");
+        // a sub-block path with no resident block still matches, served
+        // from DRAM
+        let short = prefix_tokens(2, 10);
+        c.insert_tokens(&short, Tier::Dram);
+        assert_eq!(c.match_prefix_tokens(&short), (10, Some(Tier::Dram)));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn token_match_requires_resident_blocks() {
+        // DRAM holds 2 blocks, no SSD spill: inserting 3 blocks evicts
+        // the first, and the token match must not credit past the hole —
+        // not even the structural tail.
+        let mut c = TieredCache::new(16, 0, 16 * 2, 0);
+        let toks = prefix_tokens(1, 56); // 3 blocks + 8 tail
+        c.insert_tokens(&toks, Tier::Dram);
+        assert_eq!(c.contains(hash_chain(&toks, 16)[0]), None, "first block evicted");
+        assert_eq!(c.match_prefix_tokens(&toks), (0, None));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn property_token_match_agrees_with_block_match_when_aligned() {
+        // differential oracle: a token-granular cache driven with
+        // block-aligned paths must be indistinguishable from the block
+        // cache — matched tokens, tier, hit/miss counters, residency
+        crate::testutil::check("kv-token-vs-block", 96, |rng| {
+            let block = 8u64;
+            let (hbm, dram, ssd) =
+                (block * rng.range(1, 6), block * rng.range(2, 10), block * rng.range(2, 10));
+            let mut by_block = TieredCache::new(block, hbm, dram, ssd);
+            let mut by_token = TieredCache::new(block, hbm, dram, ssd);
+            for _ in 0..150 {
+                let group = rng.range(0, 5);
+                let blocks = rng.range(1, 10);
+                let tokens = prefix_tokens(group, blocks * block);
+                let chain = hash_chain(&tokens, block as usize);
+                match rng.range(0, 1) {
+                    0 => {
+                        let tier = if rng.range(0, 1) == 0 { Tier::Hbm } else { Tier::Dram };
+                        by_block.insert_chain(&chain, tier);
+                        by_token.insert_tokens(&tokens, tier);
+                    }
+                    _ => {
+                        let (n, tier) = by_block.match_prefix(&chain);
+                        let (tok, ttier) = by_token.match_prefix_tokens(&tokens);
+                        crate::prop_assert!(
+                            tok == n as u64 * block,
+                            "token match {tok} != block match {n} x {block}"
+                        );
+                        crate::prop_assert!(ttier == tier, "tier {ttier:?} != {tier:?}");
+                    }
+                }
+                crate::prop_assert!(
+                    (by_block.hits, by_block.misses) == (by_token.hits, by_token.misses),
+                    "hit/miss counters diverged"
+                );
+                crate::prop_assert!(
+                    by_block.summary() == by_token.summary(),
+                    "residency diverged"
+                );
+                by_block.check_invariants()?;
+                by_token.check_invariants()?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn delta_log_replays_to_the_full_summary() {
+        let mut tracked = TieredCache::new(16, 16, 16 * 2, 16 * 2);
+        tracked.enable_delta_tracking();
+        let mut replayed: std::collections::HashMap<u64, Tier> = Default::default();
+        let mut apply = |replayed: &mut std::collections::HashMap<u64, Tier>,
+                         delta: Vec<(u64, Option<Tier>)>| {
+            for (h, t) in delta {
+                match t {
+                    Some(t) => {
+                        replayed.insert(h, t);
+                    }
+                    None => {
+                        replayed.remove(&h);
+                    }
+                }
+            }
+        };
+        tracked.insert(1, Tier::Hbm);
+        tracked.insert(2, Tier::Hbm); // demotes 1's HBM copy
+        apply(&mut replayed, tracked.take_summary_delta());
+        let want: Vec<(u64, Tier)> = tracked.summary();
+        let mut got: Vec<(u64, Tier)> = replayed.iter().map(|(h, t)| (*h, *t)).collect();
+        got.sort_unstable();
+        assert_eq!(got, want, "replaying the delta reproduces the summary");
+        assert!(tracked.take_summary_delta().is_empty(), "drained");
+        tracked.insert(3, Tier::Hbm); // DRAM full: 1 demotes to SSD
+        tracked.insert(4, Tier::Hbm);
+        apply(&mut replayed, tracked.take_summary_delta());
+        let want: Vec<(u64, Tier)> = tracked.summary();
+        let mut got: Vec<(u64, Tier)> = replayed.iter().map(|(h, t)| (*h, *t)).collect();
+        got.sort_unstable();
+        assert_eq!(got, want, "evictions and tier moves replay too");
+        tracked.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn route_uses_exact_matched_tokens_when_present() {
+        let cost = CostModel::new(
+            ascend_910b(),
+            catalog("Qwen3-8B").unwrap(),
+            EngineFeatures::xllm(1),
+        );
+        let xfer = TransferEngine::default();
+        // same block count, but instance 1's token-granular match covers
+        // 1020 of 1024 tokens vs instance 0's block-rounded 960
+        let cands = [
+            RouteCandidate {
+                instance: 0,
+                matched_blocks: 60,
+                matched_tokens: 0,
+                hit_tier: Some(Tier::Dram),
+                queued_prefill_tokens: 0,
+            },
+            RouteCandidate {
+                instance: 1,
+                matched_blocks: 60,
+                matched_tokens: 1020,
+                hit_tier: Some(Tier::Dram),
+                queued_prefill_tokens: 0,
+            },
+        ];
+        let (pick, _) = route(&cands, 64, 1024, 16, &cost, &xfer).unwrap();
+        assert_eq!(pick, 1, "exact token match must beat the block-rounded estimate");
     }
 
     #[test]

@@ -5,6 +5,10 @@
 //!   the dynamic PD disaggregation policy (§3.2) lives in
 //!   `coordinator::scheduler` + `coordinator::pools`.
 //! * [`kvstore`]      — global multi-level KV cache management (§3.4).
+//! * [`radix`]        — token-granular radix indexes: the local
+//!   structural trie inside [`kvstore::TieredCache`] and the cluster
+//!   radix tree with per-replica tier bitsets behind
+//!   [`controlplane::GlobalPrefixIndex`].
 //! * [`meta`]         — the ETCD-substitute metadata service (§3.4).
 //! * [`fault`]        — fast fault recovery (§3.5).
 //! * [`controlplane`] — the distributed control plane composing the
@@ -23,6 +27,7 @@ pub mod fault;
 pub mod fleet;
 pub mod kvstore;
 pub mod meta;
+pub mod radix;
 
 pub use colocation::{ColocationConfig, PoolChoice};
 pub use controlplane::{
@@ -34,3 +39,4 @@ pub use fault::{FailureDetector, RecoveryAction};
 pub use fleet::{run_fleet_with, ReplicaFactory};
 pub use kvstore::{hash_chain, prefix_tokens, Tier, TieredCache, TransferEngine};
 pub use meta::{MetaEvent, MetaStore};
+pub use radix::{ClusterRadix, ReplicaSet, TokenRadix};

@@ -1,0 +1,621 @@
+//! Radix (compressed-trie) indexes over token ids (paper §3.4,
+//! LightLLM's TokenAttention).
+//!
+//! Two structures share the same edge-compressed arena layout:
+//!
+//! * [`TokenRadix`] — the *local* structural index inside a
+//!   [`TieredCache`]: which token paths have ever been inserted.  It
+//!   carries no residency state of its own; `TieredCache` validates a
+//!   structural match lazily against its live block table by
+//!   recomputing the rolling block hashes along the walk, so eviction
+//!   needs no radix bookkeeping at all.
+//!
+//! * [`ClusterRadix`] — the *global* index: one tree for the whole
+//!   fleet, with three per-node replica bitsets (one per storage tier).
+//!   A replica matches a prefix to depth `d` iff its bit is set on
+//!   every node along the path (path contiguity), so clearing one
+//!   block's bits truncates every deeper match without touching
+//!   descendants, and `best_match` is one walk that intersects
+//!   survivor sets — O(matched tokens), not O(replicas × chain length).
+//!
+//! Edges never cross block boundaries (insertion segments paths at
+//! every `block_tokens` multiple), so each full block ends at a node
+//! and the node records the rolling hash of the whole prefix up to
+//! that boundary (`end_hash`).  The `boundary` map from hash to node
+//! is what lets hash-keyed delta publishes (block added / evicted /
+//! tier moved) land on the tree without re-walking token streams.
+//!
+//! Residency is tracked at block granularity: evicting a block clears
+//! the replica's bits on every node inside that block's token span.
+//! Paths that diverge *mid-block* share interior nodes, so such an
+//! eviction can also truncate a sibling's match — under-crediting,
+//! never over-crediting (conservative for admission).  Token streams
+//! derived from [`prefix_tokens`] diverge only at position 0, so the
+//! case never arises in practice here.
+//!
+//! [`TieredCache`]: crate::service::kvstore::TieredCache
+//! [`prefix_tokens`]: crate::service::kvstore::prefix_tokens
+
+use std::collections::HashMap;
+
+use crate::service::kvstore::Tier;
+
+/// Seed of the rolling FNV-1a prefix hash (must match
+/// [`crate::service::kvstore::hash_chain`] exactly — the radix
+/// recomputes the same chain hashes along its walks).
+pub const HASH_SEED: u64 = 0xcbf29ce484222325;
+
+/// One rolling-hash step (one token).
+#[inline]
+pub fn hash_step(h: u64, t: u32) -> u64 {
+    (h ^ (t as u64 + 1)).wrapping_mul(0x100000001b3)
+}
+
+fn lcp(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
+}
+
+// ---------------------------------------------------------------------
+// TokenRadix: local structural index
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct TokenNode {
+    edge: Vec<u32>,
+    /// (first token of the child's edge, child id), sorted by token so
+    /// walks are deterministic.
+    children: Vec<(u32, usize)>,
+}
+
+/// Compressed trie over token ids: pure structure, no residency.
+#[derive(Debug, Clone)]
+pub struct TokenRadix {
+    nodes: Vec<TokenNode>,
+}
+
+impl Default for TokenRadix {
+    fn default() -> Self {
+        TokenRadix::new()
+    }
+}
+
+impl TokenRadix {
+    pub fn new() -> TokenRadix {
+        TokenRadix { nodes: vec![TokenNode { edge: Vec::new(), children: Vec::new() }] }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn child(&self, node: usize, t: u32) -> Option<usize> {
+        self.nodes[node].children.iter().find(|&&(f, _)| f == t).map(|&(_, c)| c)
+    }
+
+    fn attach(&mut self, parent: usize, child: usize) {
+        let f = self.nodes[child].edge[0];
+        self.nodes[parent].children.push((f, child));
+        self.nodes[parent].children.sort_unstable_by_key(|&(t, _)| t);
+    }
+
+    /// Split `node`'s edge at `at` (0 < at < edge len): `node` keeps the
+    /// head, a new child takes the tail and the old children.
+    fn split(&mut self, node: usize, at: usize) {
+        let tail = self.nodes[node].edge.split_off(at);
+        let moved = std::mem::take(&mut self.nodes[node].children);
+        let id = self.nodes.len();
+        self.nodes.push(TokenNode { edge: tail, children: moved });
+        self.attach(node, id);
+    }
+
+    /// Insert a token path (idempotent; shared prefixes dedup).
+    pub fn insert(&mut self, tokens: &[u32]) {
+        let mut node = 0usize;
+        let mut i = 0usize;
+        while i < tokens.len() {
+            match self.child(node, tokens[i]) {
+                None => {
+                    let id = self.nodes.len();
+                    self.nodes
+                        .push(TokenNode { edge: tokens[i..].to_vec(), children: Vec::new() });
+                    self.attach(node, id);
+                    return;
+                }
+                Some(c) => {
+                    let n = lcp(&self.nodes[c].edge, &tokens[i..]);
+                    if n < self.nodes[c].edge.len() {
+                        self.split(c, n);
+                    }
+                    node = c;
+                    i += n;
+                }
+            }
+        }
+    }
+
+    /// Longest prefix of `tokens` structurally present (may end
+    /// mid-edge — token-granular, not block-granular).
+    pub fn matched_tokens(&self, tokens: &[u32]) -> usize {
+        let mut node = 0usize;
+        let mut i = 0usize;
+        while i < tokens.len() {
+            let Some(c) = self.child(node, tokens[i]) else { break };
+            let n = lcp(&self.nodes[c].edge, &tokens[i..]);
+            i += n;
+            if n < self.nodes[c].edge.len() {
+                break;
+            }
+            node = c;
+        }
+        i
+    }
+}
+
+// ---------------------------------------------------------------------
+// ClusterRadix: global index with per-replica tier bitsets
+// ---------------------------------------------------------------------
+
+/// Growable replica bitset (replica ids are dense, but long elastic
+/// runs can mint ids past 64 — the word vector grows on demand).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ReplicaSet {
+    words: Vec<u64>,
+}
+
+impl ReplicaSet {
+    pub fn set(&mut self, r: usize) {
+        let w = r / 64;
+        if self.words.len() <= w {
+            self.words.resize(w + 1, 0);
+        }
+        self.words[w] |= 1 << (r % 64);
+    }
+
+    pub fn clear(&mut self, r: usize) {
+        if let Some(x) = self.words.get_mut(r / 64) {
+            *x &= !(1 << (r % 64));
+        }
+    }
+
+    pub fn contains(&self, r: usize) -> bool {
+        self.words.get(r / 64).is_some_and(|w| w & (1 << (r % 64)) != 0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|w| *w == 0)
+    }
+
+    pub fn union_with(&mut self, o: &ReplicaSet) {
+        if self.words.len() < o.words.len() {
+            self.words.resize(o.words.len(), 0);
+        }
+        for (a, b) in self.words.iter_mut().zip(&o.words) {
+            *a |= b;
+        }
+    }
+
+    pub fn intersect_with(&mut self, o: &ReplicaSet) {
+        for (i, a) in self.words.iter_mut().enumerate() {
+            *a &= o.words.get(i).copied().unwrap_or(0);
+        }
+    }
+
+    /// Lowest set replica id (the deterministic tie-break).
+    pub fn lowest(&self) -> Option<usize> {
+        for (i, w) in self.words.iter().enumerate() {
+            if *w != 0 {
+                return Some(i * 64 + w.trailing_zeros() as usize);
+            }
+        }
+        None
+    }
+}
+
+#[derive(Debug, Clone)]
+struct ClusterNode {
+    edge: Vec<u32>,
+    children: Vec<(u32, usize)>,
+    parent: usize,
+    /// Token depth of the start of this node's edge.
+    start: usize,
+    /// Rolling prefix hash at this node's end, iff the end is exactly a
+    /// block boundary (then `boundary[hash] == this node`).
+    end_hash: Option<u64>,
+    /// Per-tier replica residency (a replica's bit lives in at most one
+    /// tier set per node).
+    bits: [ReplicaSet; 3],
+}
+
+/// Cluster-wide radix tree: which replica holds which token prefix, at
+/// which tier.  Mirrors the flat per-replica hash maps of
+/// `GlobalPrefixIndex` but supports token-granular matching and
+/// single-walk `best_match`.
+#[derive(Debug, Clone)]
+pub struct ClusterRadix {
+    nodes: Vec<ClusterNode>,
+    boundary: HashMap<u64, usize>,
+    block_tokens: usize,
+}
+
+impl ClusterRadix {
+    pub fn new(block_tokens: u64) -> ClusterRadix {
+        ClusterRadix {
+            nodes: vec![ClusterNode {
+                edge: Vec::new(),
+                children: Vec::new(),
+                parent: 0,
+                start: 0,
+                end_hash: None,
+                bits: Default::default(),
+            }],
+            boundary: HashMap::new(),
+            block_tokens: block_tokens.max(1) as usize,
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn block_tokens(&self) -> u64 {
+        self.block_tokens as u64
+    }
+
+    fn child(&self, node: usize, t: u32) -> Option<usize> {
+        self.nodes[node].children.iter().find(|&&(f, _)| f == t).map(|&(_, c)| c)
+    }
+
+    fn attach(&mut self, parent: usize, child: usize) {
+        let f = self.nodes[child].edge[0];
+        self.nodes[parent].children.push((f, child));
+        self.nodes[parent].children.sort_unstable_by_key(|&(t, _)| t);
+    }
+
+    /// Split `node` at `at`: the new tail child inherits the bits (a
+    /// resident whole edge implies both halves are resident), the old
+    /// children, and the end-of-edge hash registration.
+    fn split(&mut self, node: usize, at: usize) {
+        let tail = self.nodes[node].edge.split_off(at);
+        let moved = std::mem::take(&mut self.nodes[node].children);
+        let end_hash = self.nodes[node].end_hash.take();
+        let bits = self.nodes[node].bits.clone();
+        let start = self.nodes[node].start + at;
+        let id = self.nodes.len();
+        self.nodes.push(ClusterNode {
+            edge: tail,
+            children: moved,
+            parent: node,
+            start,
+            end_hash,
+            bits,
+        });
+        let moved_ids: Vec<usize> = self.nodes[id].children.iter().map(|&(_, c)| c).collect();
+        for c in moved_ids {
+            self.nodes[c].parent = id;
+        }
+        if let Some(h) = end_hash {
+            self.boundary.insert(h, id);
+        }
+        self.attach(node, id);
+    }
+
+    /// The replica's tier at `node`, if resident there.
+    fn tier_at(&self, node: usize, replica: usize) -> Option<Tier> {
+        for (i, s) in self.nodes[node].bits.iter().enumerate() {
+            if s.contains(replica) {
+                return Some(match i {
+                    0 => Tier::Hbm,
+                    1 => Tier::Dram,
+                    _ => Tier::Ssd,
+                });
+            }
+        }
+        None
+    }
+
+    /// Optimistic mark: set the replica at `tier` unless it already
+    /// holds this node at some tier (mirrors the flat map's
+    /// `entry().or_insert()` — optimism never downgrades).
+    fn mark(&mut self, node: usize, replica: usize, tier: Tier) {
+        if self.tier_at(node, replica).is_some() {
+            return;
+        }
+        self.nodes[node].bits[tier as usize].set(replica);
+    }
+
+    /// Authoritative mark: move the replica to exactly `tier`.
+    fn mark_move(&mut self, node: usize, replica: usize, tier: Tier) {
+        for s in &mut self.nodes[node].bits {
+            s.clear(replica);
+        }
+        self.nodes[node].bits[tier as usize].set(replica);
+    }
+
+    fn clear_at(&mut self, node: usize, replica: usize) {
+        for s in &mut self.nodes[node].bits {
+            s.clear(replica);
+        }
+    }
+
+    /// Record that `replica` holds the whole token path (optimistically
+    /// in `tier` where it holds nothing yet).  Creates structure as
+    /// needed, segmenting fresh edges at block boundaries and
+    /// registering boundary hashes.
+    pub fn record_tokens(&mut self, replica: usize, tokens: &[u32], tier: Tier) {
+        let bt = self.block_tokens;
+        let mut node = 0usize;
+        let mut i = 0usize;
+        let mut h = HASH_SEED;
+        while i < tokens.len() {
+            match self.child(node, tokens[i]) {
+                None => {
+                    // create the remaining path, one block segment at a time
+                    let mut parent = node;
+                    let mut j = i;
+                    while j < tokens.len() {
+                        let e = ((j / bt + 1) * bt).min(tokens.len());
+                        let id = self.nodes.len();
+                        self.nodes.push(ClusterNode {
+                            edge: tokens[j..e].to_vec(),
+                            children: Vec::new(),
+                            parent,
+                            start: j,
+                            end_hash: None,
+                            bits: Default::default(),
+                        });
+                        self.attach(parent, id);
+                        for &t in &tokens[j..e] {
+                            h = hash_step(h, t);
+                        }
+                        if e % bt == 0 {
+                            self.nodes[id].end_hash = Some(h);
+                            self.boundary.insert(h, id);
+                        }
+                        self.mark(id, replica, tier);
+                        parent = id;
+                        j = e;
+                    }
+                    return;
+                }
+                Some(c) => {
+                    let n = lcp(&self.nodes[c].edge, &tokens[i..]);
+                    if n < self.nodes[c].edge.len() {
+                        self.split(c, n);
+                    }
+                    for &t in &tokens[i..i + n] {
+                        h = hash_step(h, t);
+                    }
+                    self.mark(c, replica, tier);
+                    node = c;
+                    i += n;
+                }
+            }
+        }
+    }
+
+    /// Apply one block-level delta for `replica`: `Some(tier)` = the
+    /// block (identified by its boundary prefix hash) is now resident
+    /// at `tier`; `None` = evicted.  Bits are updated on every node
+    /// inside the block's token span; unknown hashes (structure never
+    /// routed through this index) are skipped — conservative.
+    pub fn apply_block(&mut self, replica: usize, hash: u64, tier: Option<Tier>) {
+        let Some(&node) = self.boundary.get(&hash) else { return };
+        let end = self.nodes[node].start + self.nodes[node].edge.len();
+        let block_start = end.saturating_sub(self.block_tokens);
+        let mut n = node;
+        while n != 0 && self.nodes[n].start >= block_start {
+            match tier {
+                Some(t) => self.mark_move(n, replica, t),
+                None => self.clear_at(n, replica),
+            }
+            n = self.nodes[n].parent;
+        }
+    }
+
+    /// Forget a replica entirely (failover / decommission).
+    pub fn remove(&mut self, replica: usize) {
+        for node in &mut self.nodes {
+            for s in &mut node.bits {
+                s.clear(replica);
+            }
+        }
+    }
+
+    /// Longest token prefix `replica` holds (path-contiguous), plus the
+    /// slowest tier along the matched path.
+    pub fn match_prefix_tokens(&self, replica: usize, tokens: &[u32]) -> (u64, Option<Tier>) {
+        let mut node = 0usize;
+        let mut i = 0usize;
+        let mut worst: Option<Tier> = None;
+        while i < tokens.len() {
+            let Some(c) = self.child(node, tokens[i]) else { break };
+            let Some(t) = self.tier_at(c, replica) else { break };
+            let n = lcp(&self.nodes[c].edge, &tokens[i..]);
+            if n == 0 {
+                break;
+            }
+            worst = Some(match worst {
+                Some(w) if w >= t => w,
+                _ => t,
+            });
+            i += n;
+            if n < self.nodes[c].edge.len() {
+                break;
+            }
+            node = c;
+        }
+        (i as u64, if i > 0 { worst } else { None })
+    }
+
+    /// Best replica for the token path: one walk intersecting the
+    /// survivor sets node by node.  Returns `(replica, matched_tokens,
+    /// worst_tier)` — longest match, lowest replica id on ties (the
+    /// same contract as the linear-scan `best_match`).
+    pub fn best_match_tokens(&self, tokens: &[u32]) -> Option<(usize, u64, Tier)> {
+        let mut node = 0usize;
+        let mut i = 0usize;
+        let mut survivors: Option<ReplicaSet> = None;
+        let mut best: Option<(ReplicaSet, usize)> = None;
+        while i < tokens.len() {
+            let Some(c) = self.child(node, tokens[i]) else { break };
+            let n = lcp(&self.nodes[c].edge, &tokens[i..]);
+            if n == 0 {
+                break;
+            }
+            let mut present = self.nodes[c].bits[0].clone();
+            present.union_with(&self.nodes[c].bits[1]);
+            present.union_with(&self.nodes[c].bits[2]);
+            let s = match survivors {
+                None => present,
+                Some(mut s) => {
+                    s.intersect_with(&present);
+                    s
+                }
+            };
+            if s.is_empty() {
+                break;
+            }
+            i += n;
+            best = Some((s.clone(), i));
+            survivors = Some(s);
+            if n < self.nodes[c].edge.len() {
+                break;
+            }
+            node = c;
+        }
+        let (s, matched) = best?;
+        let replica = s.lowest()?;
+        let (got, tier) = self.match_prefix_tokens(replica, &tokens[..matched]);
+        debug_assert_eq!(got as usize, matched, "survivor walk disagrees with its witness");
+        tier.map(|t| (replica, matched as u64, t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::kvstore::{hash_chain, prefix_tokens};
+
+    #[test]
+    fn token_radix_matches_at_any_split_point() {
+        let mut r = TokenRadix::new();
+        let a = prefix_tokens(1, 100);
+        r.insert(&a);
+        assert_eq!(r.matched_tokens(&a), 100);
+        assert_eq!(r.matched_tokens(&a[..37]), 37, "split points are token-granular");
+        let longer = prefix_tokens(1, 140);
+        assert_eq!(r.matched_tokens(&longer), 100, "match stops at the stored frontier");
+        assert_eq!(r.matched_tokens(&prefix_tokens(2, 64)), 0, "groups diverge at 0");
+    }
+
+    #[test]
+    fn token_radix_dedups_shared_prefixes() {
+        let mut r = TokenRadix::new();
+        r.insert(&prefix_tokens(1, 96));
+        let before = r.n_nodes();
+        r.insert(&prefix_tokens(1, 96));
+        assert_eq!(r.n_nodes(), before, "idempotent insert");
+        r.insert(&prefix_tokens(1, 160));
+        assert_eq!(r.matched_tokens(&prefix_tokens(1, 160)), 160);
+        // extending an existing path adds at most a handful of nodes
+        assert!(r.n_nodes() <= before + 2, "extension must reuse the shared prefix");
+    }
+
+    #[test]
+    fn token_radix_splits_mid_edge() {
+        let mut r = TokenRadix::new();
+        r.insert(&[1, 2, 3, 4, 5]);
+        r.insert(&[1, 2, 9, 9]);
+        assert_eq!(r.matched_tokens(&[1, 2, 3, 4, 5]), 5);
+        assert_eq!(r.matched_tokens(&[1, 2, 9, 9]), 4);
+        assert_eq!(r.matched_tokens(&[1, 2, 7]), 2);
+    }
+
+    #[test]
+    fn replica_set_grows_and_tiebreaks() {
+        let mut s = ReplicaSet::default();
+        assert!(s.is_empty());
+        s.set(70);
+        s.set(3);
+        assert!(s.contains(70) && s.contains(3) && !s.contains(4));
+        assert_eq!(s.lowest(), Some(3), "lowest id wins ties");
+        s.clear(3);
+        assert_eq!(s.lowest(), Some(70));
+        let mut o = ReplicaSet::default();
+        o.set(70);
+        o.set(2);
+        s.union_with(&o);
+        assert_eq!(s.lowest(), Some(2));
+        let mut t = ReplicaSet::default();
+        t.set(70);
+        s.intersect_with(&t);
+        assert_eq!(s.lowest(), Some(70));
+    }
+
+    #[test]
+    fn cluster_radix_boundary_hashes_match_hash_chain() {
+        let mut r = ClusterRadix::new(16);
+        let toks = prefix_tokens(3, 64);
+        r.record_tokens(0, &toks, Tier::Dram);
+        let chain = hash_chain(&toks, 16);
+        for h in chain {
+            assert!(r.boundary.contains_key(&h), "every block boundary is registered");
+        }
+    }
+
+    #[test]
+    fn cluster_match_is_token_granular_and_worst_tier() {
+        let mut r = ClusterRadix::new(16);
+        let toks = prefix_tokens(1, 40); // 2 blocks + 8-token tail
+        r.record_tokens(0, &toks, Tier::Dram);
+        assert_eq!(r.match_prefix_tokens(0, &toks), (40, Some(Tier::Dram)));
+        assert_eq!(r.match_prefix_tokens(0, &toks[..23]).0, 23);
+        assert_eq!(r.match_prefix_tokens(1, &toks), (0, None));
+        // authoritative tier move of block 2 governs the worst tier
+        let chain = hash_chain(&toks, 16);
+        r.apply_block(0, chain[1], Some(Tier::Ssd));
+        assert_eq!(r.match_prefix_tokens(0, &toks), (40, Some(Tier::Ssd)));
+    }
+
+    #[test]
+    fn cluster_eviction_truncates_path_contiguously() {
+        let mut r = ClusterRadix::new(16);
+        let toks = prefix_tokens(1, 48);
+        r.record_tokens(0, &toks, Tier::Dram);
+        let chain = hash_chain(&toks, 16);
+        r.apply_block(0, chain[1], None); // evict the middle block
+        assert_eq!(r.match_prefix_tokens(0, &toks).0, 16, "match stops at the hole");
+        // re-adding restores the deeper blocks (their bits survived)
+        r.apply_block(0, chain[1], Some(Tier::Dram));
+        assert_eq!(r.match_prefix_tokens(0, &toks).0, 48);
+    }
+
+    #[test]
+    fn best_match_prefers_longest_then_lowest_id() {
+        let mut r = ClusterRadix::new(16);
+        let toks = prefix_tokens(1, 64);
+        r.record_tokens(4, &toks[..32], Tier::Dram);
+        r.record_tokens(1, &toks, Tier::Dram);
+        r.record_tokens(7, &toks, Tier::Dram);
+        assert_eq!(r.best_match_tokens(&toks), Some((1, 64, Tier::Dram)));
+        r.remove(1);
+        assert_eq!(r.best_match_tokens(&toks), Some((7, 64, Tier::Dram)));
+        r.remove(7);
+        assert_eq!(r.best_match_tokens(&toks), Some((4, 32, Tier::Dram)));
+        r.remove(4);
+        assert_eq!(r.best_match_tokens(&toks), None);
+    }
+
+    #[test]
+    fn best_match_walk_drops_replicas_at_their_own_frontier() {
+        let mut r = ClusterRadix::new(16);
+        let toks = prefix_tokens(2, 80);
+        r.record_tokens(0, &toks[..16], Tier::Dram);
+        r.record_tokens(3, &toks[..48], Tier::Hbm);
+        let (rep, n, tier) = r.best_match_tokens(&toks).unwrap();
+        assert_eq!((rep, n, tier), (3, 48, Tier::Hbm));
+        // replica 0 wins only when the query stays inside its coverage
+        let (rep, n, _) = r.best_match_tokens(&toks[..16]).unwrap();
+        assert_eq!((rep, n), (0, 16), "tie at 16 tokens breaks to the lowest id");
+    }
+}

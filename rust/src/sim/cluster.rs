@@ -51,6 +51,12 @@ pub struct ClusterConfig {
     pub monitor_interval_s: f64,
     /// Enable the global prefix cache (§3.4).
     pub prefix_cache: bool,
+    /// Token-granular KV admission: prefix matches credit exact token
+    /// counts via the cache's radix index, and the batcher admits
+    /// prefill against real free KV tokens instead of the `max_seqs`
+    /// slot heuristic.  Off (the default) keeps the block-aligned
+    /// behavior bit-identical.
+    pub token_granular: bool,
     /// Iterations kept in flight per instance (§4.2 async scheduling);
     /// 1 = the blocking contract.
     pub pipeline_depth: usize,
@@ -100,6 +106,7 @@ impl ClusterConfig {
             recovery: RecoveryModel::default(),
             monitor_interval_s: 0.25,
             prefix_cache: false,
+            token_granular: false,
             pipeline_depth: 1,
             host_overhead_s: 0.0,
             max_events: DEFAULT_MAX_EVENTS,
@@ -129,13 +136,17 @@ impl ClusterConfig {
             mode: self.mode,
             dispatch: self.dispatch,
             slo: self.slo,
-            batch: self.batch,
+            batch: BatchConfig {
+                token_admission: self.batch.token_admission || self.token_granular,
+                ..self.batch
+            },
             colocation: self.colocation,
             epd: self.epd,
             faults: self.faults.clone(),
             recovery: self.recovery,
             monitor_interval_s: self.monitor_interval_s,
             prefix_cache: self.prefix_cache,
+            prefix_token_granular: self.token_granular,
             pipeline_depth: self.pipeline_depth.max(1),
             max_events: self.max_events,
             ..OrchestratorConfig::default()

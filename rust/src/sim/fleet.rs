@@ -54,6 +54,7 @@ impl FleetConfig {
     fn control_plane_config(&self) -> ControlPlaneConfig {
         ControlPlaneConfig {
             block_tokens: self.template.orchestrator_config().prefix_block_tokens,
+            token_granular: self.control.token_granular || self.template.token_granular,
             colocation: self
                 .template
                 .colocation
