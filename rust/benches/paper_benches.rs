@@ -94,6 +94,7 @@ fn main() {
     if want("perfjson") {
         bench_perfjson();
         bench_indexops();
+        bench_streamscale();
     }
     println!("\n# total bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
 }
@@ -1419,5 +1420,151 @@ fn bench_indexops() {
     let path =
         std::env::var("BENCH7_JSON_PATH").unwrap_or_else(|_| "../BENCH_7.json".to_string());
     std::fs::write(&path, out.to_string()).expect("writing the index bench JSON");
+    println!("  wrote {path}");
+}
+
+// ---------------------------------------------------------------------
+// streamscale: the streaming million-request workload engine —
+// wall-clock requests/s and events/s must hold ~flat from 10k to 1M
+// pulled arrivals (O(live) memory: bounded live-request high-water),
+// and SLO-aware autoscaling must beat the backlog policy on goodput
+// per replica-second on the same tide stream.  Written to BENCH_8.json.
+// ---------------------------------------------------------------------
+
+fn bench_streamscale() {
+    use xllm::service::controlplane::{ScalePolicy, ScalerConfig};
+    use xllm::sim::fleet::{run_fleet_stream, FleetConfig};
+
+    header("streamscale — streaming fleet scale + SLO-goodput scaling (writes BENCH_8.json)");
+    let template = || {
+        let mut cfg = ClusterConfig::new(
+            1,
+            ascend_910b(),
+            catalog("Qwen3-8B").unwrap(),
+            EngineFeatures::xllm(1),
+        );
+        cfg.prefix_cache = true;
+        cfg
+    };
+    let sc = scenario("tide").unwrap();
+
+    // (a) streaming scale: same open-loop tide stream, 10k vs 1M pulled
+    // arrivals over a fixed 4-replica fleet.  Arrivals are pulled one at
+    // a time and reports run sketch-only, so the only per-request state
+    // is the live window — throughput per wall second must not decay
+    // with the request count.
+    let rate = 8.0;
+    let run_n = |n: usize| {
+        let mut rng = Rng::new(0x8001);
+        let cfg = FleetConfig::new(template(), 4);
+        let stream = sc.stream_unbounded(rate, &mut rng).with_limit(n);
+        let t0 = Instant::now();
+        let res = run_fleet_stream(cfg, stream);
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(res.all_accounted(), "streaming run lost requests at n={n}");
+        assert!(!res.truncated, "streaming run truncated at n={n}");
+        let events: u64 = res.per_replica.iter().map(|r| r.events).sum();
+        (res, wall, events)
+    };
+    let (small_n, large_n) = (10_000usize, 1_000_000usize);
+    let (small, wall_s, ev_s) = run_n(small_n);
+    let (large, wall_l, ev_l) = run_n(large_n);
+    let rps_small = small_n as f64 / wall_s.max(1e-9);
+    let rps_large = large_n as f64 / wall_l.max(1e-9);
+    let eps_small = ev_s as f64 / wall_s.max(1e-9);
+    let eps_large = ev_l as f64 / wall_l.max(1e-9);
+    println!(
+        "  {:>9} requests: {:>9.0} req/s wall  {:>9.0} events/s  live high-water {:>6}  ({:.1}s)",
+        small_n, rps_small, eps_small, small.live_high_water, wall_s
+    );
+    println!(
+        "  {:>9} requests: {:>9.0} req/s wall  {:>9.0} events/s  live high-water {:>6}  ({:.1}s)",
+        large_n, rps_large, eps_large, large.live_high_water, wall_l
+    );
+    println!(
+        "  throughput ratio 1M/10k: {:.2}x (flat = streaming holds O(live) state)",
+        rps_large / rps_small.max(1e-9)
+    );
+
+    // (b) SLO-goodput autoscaling: identical 20k-request tide stream,
+    // one elastic fleet per policy.  The backlog rule's token target is
+    // far under one typical prompt, so it over-provisions through the
+    // flood; the SLO rule spends replicas only on predicted TTFT risk.
+    let scaled = |policy: ScalePolicy| {
+        let mut cfg = FleetConfig::new(template(), 1);
+        cfg.control.scaler = Some(ScalerConfig {
+            policy,
+            slo_ttft_target_s: 1.0,
+            capacity_target_tokens: 512,
+            min_replicas: 1,
+            max_replicas: 4,
+            cooldown_s: 1.0,
+            ..Default::default()
+        });
+        let mut rng = Rng::new(0x8002);
+        let res = run_fleet_stream(cfg, sc.stream_unbounded(rate, &mut rng).with_limit(20_000));
+        assert!(res.all_accounted(), "scaled run lost requests");
+        res
+    };
+    let backlog = scaled(ScalePolicy::Backlog);
+    let slo = scaled(ScalePolicy::Slo);
+    let policy_row = |name: &str, r: &xllm::service::controlplane::FleetResult| {
+        println!(
+            "  {:>8}: goodput/replica-s {:.4}  replica-s {:>9.0}  ups {} downs {}  predicted violations {}",
+            name,
+            r.goodput_per_replica_second(),
+            r.replica_seconds,
+            r.counters.scale_ups,
+            r.counters.scale_downs,
+            r.counters.slo_violations_predicted
+        );
+        Json::obj()
+            .set("goodput_per_replica_s", r.goodput_per_replica_second())
+            .set("replica_seconds", r.replica_seconds)
+            .set("scale_ups", r.counters.scale_ups)
+            .set("scale_downs", r.counters.scale_downs)
+            .set("slo_violations_predicted", r.counters.slo_violations_predicted)
+            .set("live_high_water", r.live_high_water)
+    };
+    let backlog_json = policy_row("backlog", &backlog);
+    let slo_json = policy_row("slo", &slo);
+
+    let out = Json::obj()
+        .set("bench", "BENCH_8")
+        .set("measured", true)
+        .set("scenario", "tide")
+        .set("model", "Qwen3-8B")
+        .set("rate_req_s", rate)
+        .set(
+            "streaming",
+            Json::obj()
+                .set("replicas", 4)
+                .set("requests_small", small_n)
+                .set("requests_large", large_n)
+                .set("wall_s_small", wall_s)
+                .set("wall_s_large", wall_l)
+                .set("req_per_s_small", rps_small)
+                .set("req_per_s_large", rps_large)
+                .set("events_per_s_small", eps_small)
+                .set("events_per_s_large", eps_large)
+                .set("throughput_ratio_large_vs_small", rps_large / rps_small.max(1e-9))
+                .set("live_high_water_small", small.live_high_water)
+                .set("live_high_water_large", large.live_high_water),
+        )
+        .set(
+            "goodput",
+            Json::obj()
+                .set("requests", 20_000u64)
+                .set("backlog", backlog_json)
+                .set("slo", slo_json)
+                .set(
+                    "slo_vs_backlog_ratio",
+                    slo.goodput_per_replica_second()
+                        / backlog.goodput_per_replica_second().max(1e-12),
+                ),
+        );
+    let path =
+        std::env::var("BENCH8_JSON_PATH").unwrap_or_else(|_| "../BENCH_8.json".to_string());
+    std::fs::write(&path, out.to_string()).expect("writing the streaming bench JSON");
     println!("  wrote {path}");
 }

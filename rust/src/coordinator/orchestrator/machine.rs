@@ -23,7 +23,7 @@
 //! live state and the timeline charges `host + device` per iteration:
 //! exactly the pre-async blocking behavior, event for event.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 
 use crate::coordinator::orchestrator::{
     ColocationMode, DecodeWork, EncodeWork, Executor, InFlightSnapshot, IterationTicket,
@@ -78,8 +78,17 @@ pub struct Orchestrator<X: Executor> {
     instances: Vec<InstanceState>,
     pools: ElasticPools,
     scheduler: GlobalScheduler,
+    /// Live (non-terminal) requests only: terminal entries are dropped
+    /// at record time, so resident state tracks in-flight work — not
+    /// total submissions — and a streaming replica can serve unbounded
+    /// request counts in bounded memory.
     requests: HashMap<RequestId, Request>,
-    specs: Vec<RequestSpec>,
+    /// Specs of requests not yet recorded, keyed by request id (the
+    /// BTreeMap keeps [`Self::drain_in_flight`] deterministic).  Ids
+    /// come from `submitted_total`, which never decreases.
+    specs: BTreeMap<usize, RequestSpec>,
+    /// Requests ever handed to this replica (terminal ones included).
+    submitted_total: usize,
     /// Per-instance FIFO of in-flight iterations (≤ `pipeline_depth`).
     inflight: HashMap<InstanceId, VecDeque<InFlight>>,
     /// Per-instance host / device timeline frontiers: when the host is
@@ -149,7 +158,8 @@ impl<X: Executor> Orchestrator<X> {
             pools,
             scheduler,
             requests: HashMap::new(),
-            specs: Vec::new(),
+            specs: BTreeMap::new(),
+            submitted_total: 0,
             inflight: HashMap::new(),
             host_free: vec![0.0; n_total],
             device_free: vec![0.0; n_total],
@@ -206,11 +216,11 @@ impl<X: Executor> Orchestrator<X> {
     /// relative to every other replica's head event.
     pub fn start_at(&mut self, workload: Vec<RequestSpec>, now_s: f64) {
         self.queue.advance_to(now_s);
-        self.specs = workload;
-        for i in 0..self.specs.len() {
-            let spec = self.specs[i];
+        self.specs = workload.into_iter().enumerate().collect();
+        self.submitted_total = self.specs.len();
+        for (&i, spec) in &self.specs {
             self.queue.schedule_at(spec.arrival_s, Ev::Arrive(i));
-            self.executor.admitted(i as RequestId, &spec);
+            self.executor.admitted(i as RequestId, spec);
         }
         for (t, inst) in self.cfg.faults.clone() {
             self.queue.schedule_at(t, Ev::Fault(inst));
@@ -239,8 +249,12 @@ impl<X: Executor> Orchestrator<X> {
     /// in the request's E2E.  Monitoring is revived if the replica had
     /// drained.
     pub fn submit_at(&mut self, spec: RequestSpec, earliest_s: f64) {
-        let i = self.specs.len();
-        self.specs.push(spec);
+        // ids come from the monotone submission counter, never from the
+        // live map's size — terminal entries are removed, and a reused
+        // id would collide with an in-flight request
+        let i = self.submitted_total;
+        self.submitted_total += 1;
+        self.specs.insert(i, spec);
         self.executor.admitted(i as RequestId, &spec);
         self.queue.schedule_at(spec.arrival_s.max(earliest_s), Ev::Arrive(i));
         if !self.monitor_live {
@@ -383,6 +397,16 @@ impl<X: Executor> Orchestrator<X> {
         self.prefix_cache.enable_delta_tracking();
     }
 
+    /// Switch the serving report to streaming (sketch-only) mode:
+    /// outcomes are folded into fixed-size histogram sketches instead of
+    /// being retained per-request, so report memory is O(1) in request
+    /// count.  Aggregates (counts, throughput, horizon, per-tier
+    /// goodput) are unchanged; only the per-outcome summaries go away.
+    /// Call before any request is recorded.
+    pub fn enable_streaming_report(&mut self) {
+        self.report.set_streaming();
+    }
+
     /// Snapshot and forget every request that has not completed:
     /// pending arrivals, queued prefills, running decodes.  Called by
     /// the control plane when this replica's lease expires, so the
@@ -391,9 +415,11 @@ impl<X: Executor> Orchestrator<X> {
     pub fn drain_in_flight(&mut self) -> Vec<InFlightSnapshot> {
         let now = self.queue.now();
         let mut out = Vec::new();
-        for (idx, spec) in self.specs.iter().enumerate() {
+        for (&idx, spec) in &self.specs {
             let id = idx as RequestId;
             match self.requests.get(&id) {
+                // terminal entries are removed at record time, so this
+                // arm only guards a not-yet-cleaned state (none today)
                 Some(r) if matches!(r.phase, Phase::Done | Phase::Failed) => {}
                 Some(r) => {
                     // the snapshot leaves this replica: close its span so
@@ -420,7 +446,7 @@ impl<X: Executor> Orchestrator<X> {
     }
 
     fn all_done(&self) -> bool {
-        self.report.n_requests() >= self.specs.len()
+        self.report.n_requests() >= self.submitted_total
     }
 
     fn view(&self, id: InstanceId) -> InstanceView {
@@ -473,12 +499,16 @@ impl<X: Executor> Orchestrator<X> {
             self.report.record(o);
         }
         self.executor.finished(rid, now);
+        // terminal cleanup, mirroring complete_request
+        self.prefill_home.remove(&rid);
+        self.requests.remove(&rid);
+        self.specs.remove(&(rid as usize));
     }
 
     // --- arrival -------------------------------------------------------
 
     fn on_arrive(&mut self, idx: usize) {
-        let spec = self.specs[idx];
+        let spec = self.specs[&idx];
         let id = idx as RequestId;
         let mut req = Request::new(id, spec, self.cfg.slo);
 
@@ -1283,6 +1313,12 @@ impl<X: Executor> Orchestrator<X> {
             }
         }
         self.executor.finished(rid, now);
+        // terminal: drop all per-request state — live memory tracks
+        // in-flight requests, not total submissions.  Look-ahead bubbles
+        // referencing this id hit the same `get → None → continue` path
+        // they already took for phase-terminal entries.
+        self.requests.remove(&rid);
+        self.specs.remove(&(rid as usize));
     }
 
     // --- monitoring / role switching -----------------------------------
@@ -1532,6 +1568,40 @@ mod tests {
         );
         let (res, _) = orch.finish();
         assert_eq!(res.report.n_requests(), 0, "drained requests never hit the report");
+    }
+
+    #[test]
+    fn terminal_requests_free_their_state() {
+        // streaming replica over well-spaced arrivals: live per-request
+        // state must track in-flight work, not total submissions, while
+        // the sketch aggregates stay identical to a retaining run
+        let cfg = OrchestratorConfig { n_instances: 2, ..Default::default() };
+        let workload: Vec<RequestSpec> =
+            (0..40).map(|i| RequestSpec::text(i as f64 * 0.5, 64, 4)).collect();
+        let n = workload.len();
+        let (want, _) = Orchestrator::new(cfg.clone(), FixedCost::new(0.01)).run(workload.clone());
+        let mut orch = Orchestrator::new(cfg, FixedCost::new(0.01));
+        orch.enable_streaming_report();
+        orch.start(workload);
+        let mut live_high = 0usize;
+        loop {
+            live_high = live_high.max(orch.requests.len()).max(orch.specs.len());
+            if !orch.step() {
+                break;
+            }
+        }
+        let (res, _) = orch.finish();
+        assert_eq!(res.report.n_completed(), n);
+        assert!(res.report.outcomes.is_empty(), "streaming report retains no outcomes");
+        assert!(
+            (res.report.sketch.ttft_mean() - want.report.sketch.ttft_mean()).abs() < 1e-12,
+            "sketch aggregates must not depend on retention"
+        );
+        assert!((res.report.horizon() - want.report.horizon()).abs() < 1e-12);
+        assert!(
+            live_high < n / 2,
+            "live state must stay bounded by in-flight work: peak {live_high} of {n}"
+        );
     }
 
     #[test]

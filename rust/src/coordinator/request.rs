@@ -209,6 +209,7 @@ impl Request {
             failed: matches!(self.phase, Phase::Failed),
             prefix_hit_tokens: self.prefix_hit_tokens,
             phases: self.phase_breakdown(finish),
+            tier: self.spec.tier,
         })
     }
 }

@@ -40,7 +40,14 @@
 //! `--token-granular` (fleet) switches the cluster index to the radix
 //! tree over token ids — token-exact prefix matching and admission,
 //! incremental heartbeat publishes, sub-chain rebalance ranges (off =
-//! block-aligned chains, bit-identical to prior builds).
+//! block-aligned chains, bit-identical to prior builds);
+//! `--requests N` (fleet, roofline) streams N open-loop arrivals
+//! through the fleet instead of materializing a horizon-bounded
+//! workload — reports run sketch-only, so memory stays O(live
+//! requests) even at millions of arrivals; `--scale-policy
+//! slo|backlog` (fleet, with `--autoscale`) picks the capacity signal:
+//! token-backlog thresholds (default) or predicted-TTFT SLO violation
+//! (`--slo-ttft S` sets the defended target).
 //!
 //! Observability (serve, simulate, fleet): `--trace-out PATH` records
 //! the request-lifecycle trace and writes Perfetto-loadable Chrome
@@ -355,9 +362,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
 fn cmd_fleet(args: &Args) -> Result<()> {
     use xllm::server::PjrtReplicaFactory;
-    use xllm::service::controlplane::{ControlPlaneConfig, RoutePolicy, ScalerConfig};
+    use xllm::service::controlplane::{
+        ControlPlaneConfig, RoutePolicy, ScalePolicy, ScalerConfig,
+    };
     use xllm::service::fleet::run_fleet_with;
-    use xllm::sim::fleet::{run_fleet, FleetConfig};
+    use xllm::sim::fleet::{run_fleet, run_fleet_stream, FleetConfig};
 
     let scenario_name = args.get_or("scenario", "skewed-prefix");
     let model_name = args.get_or("model", "Qwen3-8B");
@@ -396,6 +405,11 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     if args.has_flag("autoscale") {
         let d = ScalerConfig::default();
         control.scaler = Some(ScalerConfig {
+            policy: match args.get_or("scale-policy", "backlog").as_str() {
+                "slo" => ScalePolicy::Slo,
+                _ => ScalePolicy::Backlog,
+            },
+            slo_ttft_target_s: args.get_f64("slo-ttft", d.slo_ttft_target_s),
             capacity_target_tokens: args
                 .get_u64("capacity-target", d.capacity_target_tokens),
             min_replicas: args.get_u64("min-replicas", 1) as usize,
@@ -410,13 +424,23 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         });
     }
 
+    // --requests N switches to the open-loop streaming path: arrivals
+    // are pulled one at a time and the report runs sketch-only, so a
+    // million-request run holds O(live requests) memory, not O(N)
+    let requests_cap = args.get_u64("requests", 0) as usize;
     let mut rng = Rng::new(args.get_u64("seed", 7));
-    let workload = sc.generate(horizon, rate, &mut rng);
-    let n_reqs = workload.len();
+    let workload = if requests_cap == 0 {
+        sc.generate(horizon, rate, &mut rng)
+    } else {
+        Vec::new()
+    };
     let threads = control.threads;
 
     let res = match backend.as_str() {
         "pjrt" => {
+            if requests_cap > 0 {
+                bail!("--requests streaming is roofline-only (the AOT engine workload must be clamped up front)");
+            }
             // real engines: N PjrtExecutor replicas behind the same
             // control plane (skips gracefully without artifacts)
             let artifacts = args.get_or("artifacts", "artifacts");
@@ -467,22 +491,64 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             template.policies = policies;
             let mut cfg = FleetConfig::new(template, n_replicas);
             cfg.control = control;
-            run_fleet(cfg, workload)
+            if requests_cap > 0 {
+                run_fleet_stream(cfg, sc.stream_unbounded(rate, &mut rng).with_limit(requests_cap))
+            } else {
+                run_fleet(cfg, workload)
+            }
         }
         other => bail!("unknown fleet backend {other} (roofline|pjrt)"),
     };
     let report = &res.report;
+    let streaming = !report.retains_outcomes();
+    // retained runs keep the exact per-outcome summaries (bit-identical
+    // to prior builds); streaming runs read the sketch — means exact,
+    // p99 within one log-bucket width
+    let (mean_ttft, p99_ttft, mean_e2e) = if streaming {
+        (report.sketch.ttft_mean(), report.sketch.ttft_p(99.0), report.sketch.e2e_mean())
+    } else {
+        (
+            report.ttft_summary().mean(),
+            report.ttft_summary().percentile(99.0),
+            report.e2e_summary().mean(),
+        )
+    };
+    let phase_seconds = if streaming {
+        let mut pj = Json::obj();
+        for (name, mean_s) in report.sketch.phase_means() {
+            pj = pj.set(name, mean_s);
+        }
+        pj
+    } else {
+        phase_seconds_json(report)
+    };
+    let mut goodput = Json::obj();
+    for t in report.tier_goodput() {
+        goodput = goodput.set(
+            &format!("tier{}", t.tier),
+            Json::obj()
+                .set("total", t.total)
+                .set("good", t.good)
+                .set("attainment", t.attainment)
+                .set("goodput_per_s", t.goodput_per_s),
+        );
+    }
     let out = Json::obj()
         .set("scenario", scenario_name)
         .set("replicas", n_replicas)
         .set("instances_per_replica", n_instances)
         .set("shard", shard_json(shard))
-        .set("requests", n_reqs)
+        .set("requests", res.submitted)
+        .set("streamed", streaming)
         .set("completed", report.n_completed())
         .set("output_tok_s", report.output_throughput())
-        .set("mean_ttft_s", report.ttft_summary().mean())
-        .set("p99_ttft_s", report.ttft_summary().percentile(99.0))
-        .set("mean_e2e_s", report.e2e_summary().mean())
+        .set("mean_ttft_s", mean_ttft)
+        .set("p99_ttft_s", p99_ttft)
+        .set("mean_e2e_s", mean_e2e)
+        .set("goodput", goodput)
+        .set("live_high_water", res.live_high_water)
+        .set("replica_seconds", res.replica_seconds)
+        .set("goodput_per_replica_s", res.goodput_per_replica_second())
         .set("cluster_prefix_hits", res.per_replica.iter().map(|r| r.prefix_hits).sum::<u64>())
         .set("cluster_prefix_hit_tokens", res.prefix_hit_tokens())
         .set("admission_overcommit_tokens", res.admission_overcommit_tokens())
@@ -494,6 +560,8 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         .set("redispatched_tokens", res.counters.redispatched_tokens)
         .set("offline_steered", res.counters.offline_steered)
         .set("unroutable", res.counters.unroutable)
+        .set("scale_policy", args.get_or("scale-policy", "backlog"))
+        .set("slo_violations_predicted", res.counters.slo_violations_predicted)
         .set("scale_ups", res.counters.scale_ups)
         .set("scale_downs", res.counters.scale_downs)
         .set("kv_rebalances", res.counters.kv_rebalances)
@@ -506,7 +574,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         .set("backend", backend)
         .set("threads", threads)
         .set("truncated", res.truncated)
-        .set("phase_seconds", phase_seconds_json(report));
+        .set("phase_seconds", phase_seconds);
     println!("{}", out.to_string());
     if let Some(p) = &metrics_out {
         let mut reg = MetricsRegistry::new();

@@ -4,8 +4,22 @@
 //! throughput under a TPOT (or E2E) constraint, request rate, SLO
 //! attainment, and goodput (requests/s that met their SLO).
 
-use crate::obs::{MetricsRegistry, LATENCY_BUCKETS_S, TPOT_BUCKETS_S};
+use crate::obs::{Histogram, MetricsRegistry, LATENCY_BUCKETS_S, TPOT_BUCKETS_S};
 use crate::util::Summary;
+
+/// Number of tenant service tiers (see [`tier_slo`]).
+pub const N_TIERS: usize = 3;
+
+/// Per-tier TTFT/TPOT targets for multi-tenant goodput accounting
+/// (§3.1 enterprise traffic): tier 0 is premium interactive, tier 1
+/// standard, tier 2 (and anything higher) relaxed best-effort.
+pub fn tier_slo(tier: u8) -> Slo {
+    match tier {
+        0 => Slo::interactive(1.0, 0.05),
+        1 => Slo::interactive(2.5, 0.1),
+        _ => Slo::interactive(10.0, 0.25),
+    }
+}
 
 /// SLO targets for a request class (seconds). `f64::INFINITY` = unconstrained.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -75,6 +89,8 @@ pub struct RequestOutcome {
     pub prefix_hit_tokens: u64,
     /// Per-phase latency attribution (queue/prefill/handoff/decode).
     pub phases: PhaseBreakdown,
+    /// Tenant tier (indexes [`tier_slo`] for per-tier goodput).
+    pub tier: u8,
 }
 
 impl RequestOutcome {
@@ -102,10 +118,183 @@ impl RequestOutcome {
     }
 }
 
+/// Mergeable fixed-bucket log-histogram sketch of a report: everything
+/// the fleet JSON and exposition need, in O(1) memory per report no
+/// matter how many requests pass through.  Updated on *every* record
+/// (retaining reports carry both representations), and exact for
+/// counts, token sums, horizon endpoints, and per-tier goodput; only
+/// the latency quantiles are approximate (within one bucket width —
+/// the estimate is the upper bound of the bucket holding the rank).
+#[derive(Debug, Clone)]
+pub struct ReportSketch {
+    pub ttft: Histogram,
+    pub tpot: Histogram,
+    pub e2e: Histogram,
+    /// Canonical phase order: queue, prefill, handoff, decode.
+    pub phases: [Histogram; 4],
+    pub n_requests: u64,
+    pub n_failed: u64,
+    pub input_tokens: u64,
+    pub output_tokens: u64,
+    pub prefix_hit_tokens: u64,
+    /// Earliest arrival over ALL outcomes (failed included), `INFINITY`
+    /// when empty — mirrors the exact horizon fold.
+    pub min_arrival_s: f64,
+    /// Latest finish over completed outcomes, `0.0` when empty.
+    pub max_finish_s: f64,
+    /// Requests per tier (completed or failed).
+    pub tier_total: [u64; N_TIERS],
+    /// Completed requests per tier meeting their own tier's SLO,
+    /// evaluated exactly at record time.
+    pub tier_good: [u64; N_TIERS],
+}
+
+impl Default for ReportSketch {
+    fn default() -> Self {
+        ReportSketch {
+            ttft: Histogram::new(LATENCY_BUCKETS_S),
+            tpot: Histogram::new(TPOT_BUCKETS_S),
+            e2e: Histogram::new(LATENCY_BUCKETS_S),
+            phases: [
+                Histogram::new(LATENCY_BUCKETS_S),
+                Histogram::new(LATENCY_BUCKETS_S),
+                Histogram::new(LATENCY_BUCKETS_S),
+                Histogram::new(LATENCY_BUCKETS_S),
+            ],
+            n_requests: 0,
+            n_failed: 0,
+            input_tokens: 0,
+            output_tokens: 0,
+            prefix_hit_tokens: 0,
+            min_arrival_s: f64::INFINITY,
+            max_finish_s: 0.0,
+            tier_total: [0; N_TIERS],
+            tier_good: [0; N_TIERS],
+        }
+    }
+}
+
+impl ReportSketch {
+    fn record(&mut self, o: &RequestOutcome) {
+        self.n_requests += 1;
+        self.min_arrival_s = self.min_arrival_s.min(o.arrival_s);
+        let tier = (o.tier as usize).min(N_TIERS - 1);
+        self.tier_total[tier] += 1;
+        if o.failed {
+            self.n_failed += 1;
+            return;
+        }
+        self.max_finish_s = self.max_finish_s.max(o.finish_s);
+        self.input_tokens += o.input_tokens;
+        self.output_tokens += o.output_tokens;
+        self.prefix_hit_tokens += o.prefix_hit_tokens;
+        self.ttft.observe(o.ttft());
+        self.e2e.observe(o.e2e());
+        if o.output_tokens > 1 {
+            self.tpot.observe(o.tpot());
+        }
+        self.phases[0].observe(o.phases.queue_s);
+        self.phases[1].observe(o.phases.prefill_s);
+        self.phases[2].observe(o.phases.handoff_s);
+        self.phases[3].observe(o.phases.decode_s);
+        if o.meets(&tier_slo(o.tier)) {
+            self.tier_good[tier] += 1;
+        }
+    }
+
+    fn merge(&mut self, other: &ReportSketch) {
+        self.ttft.merge(&other.ttft);
+        self.tpot.merge(&other.tpot);
+        self.e2e.merge(&other.e2e);
+        for (a, b) in self.phases.iter_mut().zip(other.phases.iter()) {
+            a.merge(b);
+        }
+        self.n_requests += other.n_requests;
+        self.n_failed += other.n_failed;
+        self.input_tokens += other.input_tokens;
+        self.output_tokens += other.output_tokens;
+        self.prefix_hit_tokens += other.prefix_hit_tokens;
+        self.min_arrival_s = self.min_arrival_s.min(other.min_arrival_s);
+        self.max_finish_s = self.max_finish_s.max(other.max_finish_s);
+        for t in 0..N_TIERS {
+            self.tier_total[t] += other.tier_total[t];
+            self.tier_good[t] += other.tier_good[t];
+        }
+    }
+
+    /// Sketch TTFT quantile (`q` in [0, 100]; upper-bucket-bound
+    /// estimate, within one bucket width of exact).
+    pub fn ttft_p(&self, q: f64) -> f64 {
+        self.ttft.quantile(q)
+    }
+
+    pub fn tpot_p(&self, q: f64) -> f64 {
+        self.tpot.quantile(q)
+    }
+
+    pub fn e2e_p(&self, q: f64) -> f64 {
+        self.e2e.quantile(q)
+    }
+
+    /// Exact means (histogram sums are exact).
+    pub fn ttft_mean(&self) -> f64 {
+        self.ttft.mean()
+    }
+
+    pub fn tpot_mean(&self) -> f64 {
+        self.tpot.mean()
+    }
+
+    pub fn e2e_mean(&self) -> f64 {
+        self.e2e.mean()
+    }
+
+    /// Mean per-phase seconds in canonical order, named.
+    pub fn phase_means(&self) -> [(&'static str, f64); 4] {
+        [
+            ("queue", self.phases[0].mean()),
+            ("prefill", self.phases[1].mean()),
+            ("handoff", self.phases[2].mean()),
+            ("decode", self.phases[3].mean()),
+        ]
+    }
+}
+
+/// One tier's goodput row for reports and fleet JSON.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierGoodput {
+    pub tier: u8,
+    /// Requests of this tier seen (completed or failed).
+    pub total: u64,
+    /// Completed requests that met the tier's own SLO.
+    pub good: u64,
+    /// `good / total` (1.0 when the tier saw no traffic).
+    pub attainment: f64,
+    /// `good / horizon` — SLO-meeting requests per second.
+    pub goodput_per_s: f64,
+}
+
 /// Aggregated serving metrics over a run.
-#[derive(Debug, Clone, Default)]
+///
+/// Two representations live here: the per-request `outcomes` vector
+/// (retained by default — exact summaries, golden paths untouched) and
+/// a constant-size [`ReportSketch`] that is ALWAYS updated.  A report
+/// created with [`ServingReport::streaming`] skips outcome retention,
+/// so a million-request run carries a few histograms instead of a
+/// million records; counts, throughputs, horizon, and per-tier goodput
+/// come from the sketch either way (the sketch is exact for all of
+/// them), and only the `*_summary()` sample accessors need retention.
+#[derive(Debug, Clone)]
 pub struct ServingReport {
     pub outcomes: Vec<RequestOutcome>,
+    pub sketch: ReportSketch,
+    retain: bool,
+}
+
+impl Default for ServingReport {
+    fn default() -> Self {
+        ServingReport { outcomes: Vec::new(), sketch: ReportSketch::default(), retain: true }
+    }
 }
 
 impl ServingReport {
@@ -113,53 +302,70 @@ impl ServingReport {
         Self::default()
     }
 
+    /// O(1)-memory report: the sketch only, no per-request retention.
+    pub fn streaming() -> Self {
+        ServingReport { outcomes: Vec::new(), sketch: ReportSketch::default(), retain: false }
+    }
+
+    /// Switch an (empty or populated) report to streaming mode,
+    /// dropping any retained outcomes.
+    pub fn set_streaming(&mut self) {
+        self.retain = false;
+        self.outcomes = Vec::new();
+    }
+
+    /// True when per-request outcomes are retained (exact summaries
+    /// available); false for O(1) streaming reports.
+    pub fn retains_outcomes(&self) -> bool {
+        self.retain
+    }
+
     pub fn record(&mut self, o: RequestOutcome) {
-        self.outcomes.push(o);
+        self.sketch.record(&o);
+        if self.retain {
+            self.outcomes.push(o);
+        }
     }
 
     /// Fold another report's outcomes into this one (cluster-level
     /// aggregation: the control plane merges per-replica reports).
+    /// Sketches merge unconditionally; outcomes only into a retaining
+    /// report (merging a streaming source into a retaining sink keeps
+    /// the sink's exact accessors consistent with its *own* outcomes
+    /// only — fleets in streaming mode use streaming sinks).
     pub fn merge(&mut self, other: &ServingReport) {
-        self.outcomes.extend(other.outcomes.iter().copied());
+        self.sketch.merge(&other.sketch);
+        if self.retain {
+            self.outcomes.extend(other.outcomes.iter().copied());
+        }
     }
 
     pub fn n_requests(&self) -> usize {
-        self.outcomes.len()
+        self.sketch.n_requests as usize
     }
 
     pub fn n_completed(&self) -> usize {
-        self.outcomes.iter().filter(|o| !o.failed).count()
+        (self.sketch.n_requests - self.sketch.n_failed) as usize
     }
 
-    fn horizon(&self) -> f64 {
-        let start = self.outcomes.iter().map(|o| o.arrival_s).fold(f64::INFINITY, f64::min);
+    /// Serving horizon: first arrival to last completion.
+    pub fn horizon(&self) -> f64 {
         // failed requests contribute no useful work, so their (possibly
         // very late) failure time must not stretch the horizon and
         // deflate every throughput/goodput rate computed over it
-        let end = self
-            .outcomes
-            .iter()
-            .filter(|o| !o.failed)
-            .map(|o| o.finish_s)
-            .fold(0.0, f64::max);
-        (end - start).max(1e-9)
+        // (the sketch tracks min-arrival over ALL outcomes and
+        // max-finish over completed ones, matching the historical fold)
+        (self.sketch.max_finish_s - self.sketch.min_arrival_s).max(1e-9)
     }
 
     /// Output-token throughput (tokens/s over the run horizon).
     pub fn output_throughput(&self) -> f64 {
-        let toks: u64 = self.outcomes.iter().filter(|o| !o.failed).map(|o| o.output_tokens).sum();
-        toks as f64 / self.horizon()
+        self.sketch.output_tokens as f64 / self.horizon()
     }
 
     /// Total-token (input+output) throughput.
     pub fn total_throughput(&self) -> f64 {
-        let toks: u64 = self
-            .outcomes
-            .iter()
-            .filter(|o| !o.failed)
-            .map(|o| o.input_tokens + o.output_tokens)
-            .sum();
-        toks as f64 / self.horizon()
+        (self.sketch.input_tokens + self.sketch.output_tokens) as f64 / self.horizon()
     }
 
     /// Completed requests per second.
@@ -167,23 +373,56 @@ impl ServingReport {
         self.n_completed() as f64 / self.horizon()
     }
 
-    /// Fraction of requests that met the SLO.
+    /// Fraction of requests that met the SLO.  Exact over retained
+    /// outcomes; a streaming report falls back to per-tier attainment
+    /// against each request's OWN tier SLO (the argument is ignored —
+    /// in the streaming world the tier target is the SLO).
     pub fn slo_attainment(&self, slo: &Slo) -> f64 {
-        if self.outcomes.is_empty() {
+        if self.retain {
+            if self.outcomes.is_empty() {
+                return 1.0;
+            }
+            return self.outcomes.iter().filter(|o| o.meets(slo)).count() as f64
+                / self.outcomes.len() as f64;
+        }
+        if self.sketch.n_requests == 0 {
             return 1.0;
         }
-        self.outcomes.iter().filter(|o| o.meets(slo)).count() as f64 / self.outcomes.len() as f64
+        let good: u64 = self.sketch.tier_good.iter().sum();
+        good as f64 / self.sketch.n_requests as f64
     }
 
     /// Goodput: SLO-meeting requests per second (DistServe's metric).
+    /// Streaming fallback mirrors [`Self::slo_attainment`].
     pub fn goodput(&self, slo: &Slo) -> f64 {
-        self.outcomes.iter().filter(|o| o.meets(slo)).count() as f64 / self.horizon()
+        if self.retain {
+            return self.outcomes.iter().filter(|o| o.meets(slo)).count() as f64 / self.horizon();
+        }
+        let good: u64 = self.sketch.tier_good.iter().sum();
+        good as f64 / self.horizon()
+    }
+
+    /// Per-tier goodput rows (only tiers that saw traffic), from the
+    /// exact at-record-time counters — identical in retaining and
+    /// streaming modes.
+    pub fn tier_goodput(&self) -> Vec<TierGoodput> {
+        let horizon = self.horizon();
+        (0..N_TIERS)
+            .filter(|&t| self.sketch.tier_total[t] > 0)
+            .map(|t| TierGoodput {
+                tier: t as u8,
+                total: self.sketch.tier_total[t],
+                good: self.sketch.tier_good[t],
+                attainment: self.sketch.tier_good[t] as f64 / self.sketch.tier_total[t] as f64,
+                goodput_per_s: self.sketch.tier_good[t] as f64 / horizon,
+            })
+            .collect()
     }
 
     /// Total prompt tokens served from prefix caches across completed
     /// requests (the cluster hit-token rate numerator).
     pub fn prefix_hit_tokens(&self) -> u64 {
-        self.outcomes.iter().filter(|o| !o.failed).map(|o| o.prefix_hit_tokens).sum()
+        self.sketch.prefix_hit_tokens
     }
 
     pub fn ttft_summary(&self) -> Summary {
@@ -229,29 +468,29 @@ impl ServingReport {
     }
 
     /// Export request-level metrics into the unified registry under
-    /// their stable names (DESIGN.md §Observability).
+    /// their stable names (DESIGN.md §Observability).  Entirely
+    /// sketch-driven, so the export is O(buckets) regardless of request
+    /// count and identical between retaining and streaming reports:
+    /// the sketch histograms observed the same values in the same
+    /// sequential order the old per-outcome loop replayed.
     pub fn export_metrics(&self, reg: &mut MetricsRegistry) {
         reg.inc("xllm_requests_total", self.n_requests() as u64);
         reg.inc("xllm_requests_completed_total", self.n_completed() as u64);
         reg.inc("xllm_requests_failed_total", (self.n_requests() - self.n_completed()) as u64);
-        let (mut inp, mut out) = (0u64, 0u64);
-        for o in self.outcomes.iter().filter(|o| !o.failed) {
-            inp += o.input_tokens;
-            out += o.output_tokens;
-            reg.observe("xllm_ttft_seconds", LATENCY_BUCKETS_S, o.ttft());
-            reg.observe("xllm_e2e_seconds", LATENCY_BUCKETS_S, o.e2e());
-            if o.output_tokens > 1 {
-                reg.observe("xllm_tpot_seconds", TPOT_BUCKETS_S, o.tpot());
-            }
-            reg.observe("xllm_phase_queue_seconds", LATENCY_BUCKETS_S, o.phases.queue_s);
-            reg.observe("xllm_phase_prefill_seconds", LATENCY_BUCKETS_S, o.phases.prefill_s);
-            reg.observe("xllm_phase_handoff_seconds", LATENCY_BUCKETS_S, o.phases.handoff_s);
-            reg.observe("xllm_phase_decode_seconds", LATENCY_BUCKETS_S, o.phases.decode_s);
-        }
-        reg.inc("xllm_tokens_input_total", inp);
-        reg.inc("xllm_tokens_output_total", out);
+        reg.merge_histogram("xllm_ttft_seconds", &self.sketch.ttft);
+        reg.merge_histogram("xllm_e2e_seconds", &self.sketch.e2e);
+        reg.merge_histogram("xllm_tpot_seconds", &self.sketch.tpot);
+        reg.merge_histogram("xllm_phase_queue_seconds", &self.sketch.phases[0]);
+        reg.merge_histogram("xllm_phase_prefill_seconds", &self.sketch.phases[1]);
+        reg.merge_histogram("xllm_phase_handoff_seconds", &self.sketch.phases[2]);
+        reg.merge_histogram("xllm_phase_decode_seconds", &self.sketch.phases[3]);
+        reg.inc("xllm_tokens_input_total", self.sketch.input_tokens);
+        reg.inc("xllm_tokens_output_total", self.sketch.output_tokens);
         reg.inc("xllm_tokens_prefix_hit_total", self.prefix_hit_tokens());
         reg.set_gauge("xllm_output_tokens_per_second", self.output_throughput());
+        for tg in self.tier_goodput() {
+            reg.inc(&format!("xllm_goodput_requests_total{{tier=\"{}\"}}", tg.tier), tg.good);
+        }
     }
 }
 
@@ -269,6 +508,7 @@ mod tests {
             failed: false,
             prefix_hit_tokens: 0,
             phases: PhaseBreakdown::default(),
+            tier: 0,
         }
     }
 
@@ -390,5 +630,93 @@ mod tests {
         assert_eq!(reg.counter("xllm_tokens_output_total"), 80);
         assert_eq!(reg.histogram("xllm_ttft_seconds").unwrap().count, 2);
         assert_eq!(reg.histogram("xllm_phase_decode_seconds").unwrap().count, 2);
+        assert_eq!(reg.counter("xllm_goodput_requests_total{tier=\"0\"}"), 2);
+    }
+
+    /// Bucket index of `v` in `bounds` (Inf slot = bounds.len()).
+    fn bucket_of(bounds: &[f64], v: f64) -> usize {
+        bounds.iter().position(|&b| v <= b).unwrap_or(bounds.len())
+    }
+
+    #[test]
+    fn sketch_quantiles_land_within_one_bucket_of_exact() {
+        let mut r = ServingReport::new();
+        // spread of TTFTs across several latency buckets
+        let ttfts = [0.003, 0.02, 0.04, 0.08, 0.15, 0.3, 0.7, 1.2, 2.5, 7.0];
+        for (i, &ft) in ttfts.iter().enumerate() {
+            r.record(outcome(0.0, ft, ft + 1.0, 10, 20 + i as u64));
+        }
+        for q in [50.0, 90.0, 99.0] {
+            let exact = {
+                let mut s = r.ttft_summary();
+                s.percentile(q)
+            };
+            let approx = r.sketch.ttft_p(q);
+            let (be, ba) =
+                (bucket_of(LATENCY_BUCKETS_S, exact), bucket_of(LATENCY_BUCKETS_S, approx));
+            assert!(
+                (be as i64 - ba as i64).abs() <= 1,
+                "p{q}: exact {exact} (bucket {be}) vs sketch {approx} (bucket {ba})"
+            );
+            assert!(approx >= exact, "upper-bound estimate must not undershoot");
+        }
+        // histogram sums are exact, so the sketch mean is the exact mean
+        assert!((r.sketch.ttft_mean() - r.ttft_summary().mean()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streaming_report_matches_retaining_aggregates_without_outcomes() {
+        let mut exact = ServingReport::new();
+        let mut stream = ServingReport::streaming();
+        for i in 0..100u64 {
+            let mut o = outcome(i as f64 * 0.1, i as f64 * 0.1 + 0.2, i as f64 * 0.1 + 1.0, 10, 20);
+            o.tier = (i % 3) as u8;
+            if i % 10 == 9 {
+                o.failed = true;
+            }
+            exact.record(o);
+            stream.record(o);
+        }
+        assert!(stream.outcomes.is_empty(), "streaming report must not retain outcomes");
+        assert!(!stream.retains_outcomes());
+        assert_eq!(stream.n_requests(), exact.n_requests());
+        assert_eq!(stream.n_completed(), exact.n_completed());
+        assert_eq!(stream.prefix_hit_tokens(), exact.prefix_hit_tokens());
+        assert!((stream.output_throughput() - exact.output_throughput()).abs() < 1e-12);
+        assert!((stream.request_rate() - exact.request_rate()).abs() < 1e-12);
+        assert_eq!(stream.tier_goodput(), exact.tier_goodput());
+        // merging streaming reports composes sketches exactly
+        let mut merged = ServingReport::streaming();
+        merged.merge(&stream);
+        merged.merge(&ServingReport::streaming());
+        assert_eq!(merged.n_requests(), stream.n_requests());
+        assert_eq!(merged.sketch.ttft.count, stream.sketch.ttft.count);
+        assert_eq!(merged.tier_goodput(), stream.tier_goodput());
+    }
+
+    #[test]
+    fn tier_goodput_scores_each_tier_against_its_own_slo() {
+        let mut r = ServingReport::new();
+        // tier 0 (1.0s TTFT / 50ms TPOT): one hit, one TTFT miss
+        let mut a = outcome(0.0, 0.5, 0.9, 10, 20);
+        a.tier = 0;
+        r.record(a);
+        let mut b = outcome(0.0, 2.0, 2.4, 10, 20);
+        b.tier = 0;
+        r.record(b);
+        // tier 2 (10s / 250ms): the same slow request is good
+        let mut c = outcome(0.0, 2.0, 2.4, 10, 20);
+        c.tier = 2;
+        r.record(c);
+        let rows = r.tier_goodput();
+        assert_eq!(rows.len(), 2);
+        assert_eq!((rows[0].tier, rows[0].total, rows[0].good), (0, 2, 1));
+        assert_eq!((rows[1].tier, rows[1].total, rows[1].good), (2, 1, 1));
+        assert!((rows[0].attainment - 0.5).abs() < 1e-12);
+        // tiers out of range clamp into the best-effort bucket
+        let mut d = outcome(0.0, 0.1, 0.5, 10, 20);
+        d.tier = 9;
+        r.record(d);
+        assert_eq!(r.sketch.tier_total[N_TIERS - 1], 2);
     }
 }

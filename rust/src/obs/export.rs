@@ -303,4 +303,36 @@ mod tests {
             );
         }
     }
+
+    #[test]
+    fn labeled_counters_share_one_type_line() {
+        // per-tier goodput counters carry an inline label set; the
+        // exposition must declare the family ONCE and keep the labels on
+        // the sample lines (duplicate TYPE lines are a scrape error)
+        let mut reg = MetricsRegistry::new();
+        reg.inc("xllm_goodput_requests_total{tier=\"0\"}", 10);
+        reg.inc("xllm_goodput_requests_total{tier=\"1\"}", 7);
+        reg.inc("xllm_goodput_requests_total{tier=\"2\"}", 3);
+        reg.inc("xllm_slo_violations_predicted_total", 2);
+        let text = prometheus_text(&reg);
+        let type_lines = text
+            .lines()
+            .filter(|l| l.starts_with("# TYPE xllm_goodput_requests_total "))
+            .count();
+        assert_eq!(type_lines, 1, "one TYPE line per family, not per label set:\n{text}");
+        assert!(text.contains("# TYPE xllm_goodput_requests_total counter\n"));
+        assert!(text.contains("xllm_goodput_requests_total{tier=\"0\"} 10\n"));
+        assert!(text.contains("xllm_goodput_requests_total{tier=\"1\"} 7\n"));
+        assert!(text.contains("xllm_goodput_requests_total{tier=\"2\"} 3\n"));
+        assert!(text.contains(
+            "# TYPE xllm_slo_violations_predicted_total counter\n\
+             xllm_slo_violations_predicted_total 2\n"
+        ));
+        for line in text.lines() {
+            assert!(
+                line.starts_with("# ") || line.split(' ').count() == 2,
+                "malformed exposition line: {line}"
+            );
+        }
+    }
 }

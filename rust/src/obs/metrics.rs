@@ -50,6 +50,47 @@ impl Histogram {
     pub fn cumulative(&self, i: usize) -> u64 {
         self.counts[..=i].iter().sum()
     }
+
+    /// Fold `other` (same bounds) into this histogram.  Sums and counts
+    /// add bucket-wise, so merging per-replica histograms yields the
+    /// histogram of the union of observations.
+    pub fn merge(&mut self, other: &Histogram) {
+        debug_assert_eq!(self.bounds, other.bounds, "merging histograms with different bounds");
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.sum += other.sum;
+        self.count += other.count;
+    }
+
+    /// Quantile estimate for `q` in [0, 100]: the upper bound of the
+    /// first bucket whose cumulative count reaches the ceil-rank.  Never
+    /// undershoots the exact sample quantile and is within one bucket
+    /// width of it; observations in the overflow bucket report the last
+    /// finite bound.  Empty histogram → 0.0.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return self.bounds[i.min(self.bounds.len() - 1)];
+            }
+        }
+        self.bounds[self.bounds.len() - 1]
+    }
+
+    /// Exact mean of all observations (`sum` is exact, only bucket
+    /// placement is lossy).  Empty histogram → 0.0.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum / self.count as f64
+    }
 }
 
 /// The unified registry.  Names should be `snake_case` with an `xllm_`
@@ -83,6 +124,17 @@ impl MetricsRegistry {
     /// on first use (later calls keep the original bounds).
     pub fn observe(&mut self, name: &str, bounds: &[f64], v: f64) {
         self.histograms.entry(name.to_string()).or_insert_with(|| Histogram::new(bounds)).observe(v);
+    }
+
+    /// Fold a pre-aggregated histogram (e.g. a report sketch) into the
+    /// named registry histogram, creating it with matching bounds on
+    /// first use.  O(buckets) — this is how streaming reports export
+    /// without replaying per-request observations.
+    pub fn merge_histogram(&mut self, name: &str, h: &Histogram) {
+        self.histograms
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(&h.bounds))
+            .merge(h);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
@@ -143,6 +195,45 @@ mod tests {
         assert_eq!(r.counter("missing"), 0);
         assert!((r.gauge("xllm_replicas_final") - 4.0).abs() < 1e-12);
         assert_eq!(r.histogram("xllm_ttft_seconds").unwrap().count, 1);
+    }
+
+    #[test]
+    fn histogram_merge_is_bucketwise_addition() {
+        let mut a = Histogram::new(&[0.1, 1.0]);
+        a.observe(0.05);
+        a.observe(0.5);
+        let mut b = Histogram::new(&[0.1, 1.0]);
+        b.observe(0.5);
+        b.observe(100.0);
+        a.merge(&b);
+        assert_eq!(a.count, 4);
+        assert_eq!(a.counts, vec![1, 2, 1]);
+        assert!((a.sum - 101.05).abs() < 1e-9);
+        // merging through the registry creates-then-folds
+        let mut r = MetricsRegistry::new();
+        r.merge_histogram("h", &a);
+        r.merge_histogram("h", &b);
+        assert_eq!(r.histogram("h").unwrap().count, 6);
+    }
+
+    #[test]
+    fn histogram_quantile_upper_bounds_the_rank_bucket() {
+        let mut h = Histogram::new(&[0.1, 1.0, 10.0]);
+        for _ in 0..9 {
+            h.observe(0.05); // bucket le=0.1
+        }
+        h.observe(5.0); // bucket le=10.0
+        assert!((h.quantile(50.0) - 0.1).abs() < 1e-12);
+        assert!((h.quantile(90.0) - 0.1).abs() < 1e-12);
+        assert!((h.quantile(99.0) - 10.0).abs() < 1e-12);
+        // overflow observations clamp to the last finite bound
+        let mut o = Histogram::new(&[0.1]);
+        o.observe(99.0);
+        assert!((o.quantile(99.0) - 0.1).abs() < 1e-12);
+        // empty histogram is safe
+        assert_eq!(Histogram::new(&[1.0]).quantile(50.0), 0.0);
+        assert_eq!(Histogram::new(&[1.0]).mean(), 0.0);
+        assert!((h.mean() - (9.0 * 0.05 + 5.0) / 10.0).abs() < 1e-12);
     }
 
     #[test]

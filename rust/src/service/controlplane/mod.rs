@@ -49,16 +49,17 @@ pub mod scaler;
 pub use index::GlobalPrefixIndex;
 pub use registry::{InstanceRegistry, LoadReport};
 pub use router::{FleetRouter, RouteDecision, RoutePolicy, RouterCtx};
-pub use scaler::{FleetScaler, ScaleAction, ScalerConfig};
+pub use scaler::{FleetScaler, ScaleAction, ScalePolicy, ScalerConfig};
 
-use std::cmp::Ordering;
-use std::collections::HashSet;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashSet};
 use std::sync::{Arc, RwLock};
 
 use crate::coordinator::orchestrator::{
     Executor, InFlightSnapshot, KvChainPayload, Orchestrator, RunResult, DEFAULT_MAX_EVENTS,
     DEFAULT_PREFIX_BLOCK_TOKENS,
 };
+use crate::coordinator::predictor::TtftPredictor;
 use crate::metrics::{PhaseBreakdown, RequestOutcome, ServingReport};
 use crate::model::ShardSpec;
 use crate::obs::{InstantKind, MetricsRegistry, TraceHandle};
@@ -75,6 +76,11 @@ use crate::workload::RequestSpec;
 enum CtlEv {
     /// Global request `workload[i]` arrives and must be routed.
     Arrive(usize),
+    /// A pulled arrival from the streaming source (`run_stream`): the
+    /// spec rides the event itself, and routing it pulls + schedules the
+    /// next one (one-ahead), so arrival state stays O(1) in workload
+    /// length.
+    ArriveSpec(RequestSpec),
     /// Periodic heartbeat: replicas publish load + cache summaries,
     /// lapsed leases are swept, and the elastic scaler takes its tick.
     Heartbeat,
@@ -197,6 +203,10 @@ pub struct ControlCounters {
     /// residency mutations since the previous heartbeat) — the
     /// republish-volume measure the incremental publish satellite pins.
     pub index_published_entries: u64,
+    /// Replica-heartbeats where the SLO scaling policy predicted a TTFT
+    /// target violation from the published queue depth (scale-up signal;
+    /// stays 0 under the backlog policy).
+    pub slo_violations_predicted: u64,
 }
 
 impl ControlCounters {
@@ -218,6 +228,7 @@ impl ControlCounters {
         reg.inc("xllm_ctl_kv_blocks_shipped_total", self.kv_blocks_shipped);
         reg.set_gauge("xllm_ctl_rebalance_staging_seconds", self.rebalance_staging_s);
         reg.inc("xllm_index_published_entries_total", self.index_published_entries);
+        reg.inc("xllm_slo_violations_predicted_total", self.slo_violations_predicted);
     }
 
     /// The old struct view over the registry names (tests pin the
@@ -240,6 +251,7 @@ impl ControlCounters {
             kv_blocks_shipped: reg.counter("xllm_ctl_kv_blocks_shipped_total"),
             rebalance_staging_s: reg.gauge("xllm_ctl_rebalance_staging_seconds"),
             index_published_entries: reg.counter("xllm_index_published_entries_total"),
+            slo_violations_predicted: reg.counter("xllm_slo_violations_predicted_total"),
         }
     }
 }
@@ -259,6 +271,14 @@ pub struct FleetResult {
     /// Replicas still live when the run finished (after autoscaling;
     /// `per_replica.len()` is every replica that ever existed).
     pub n_replicas_final: usize,
+    /// Peak concurrently-live (routed but not yet recorded) requests,
+    /// sampled at heartbeats — the bounded-live-state measure for
+    /// streaming runs (stays far below `submitted` on a drained fleet).
+    pub live_high_water: usize,
+    /// Integral of the alive-replica count over fleet time: the
+    /// denominator for goodput-per-replica-second comparisons across
+    /// scaling policies.
+    pub replica_seconds: f64,
     /// The control plane or any replica hit its event cap.
     pub truncated: bool,
 }
@@ -286,6 +306,17 @@ impl FleetResult {
     pub fn all_accounted(&self) -> bool {
         self.report.n_requests() == self.submitted
     }
+
+    /// SLO-attaining completions per replica-second of fleet capacity —
+    /// the efficiency measure the scaling policies compete on (serving
+    /// the same goodput with fewer replica-seconds scores higher).
+    pub fn goodput_per_replica_second(&self) -> f64 {
+        if self.replica_seconds <= 0.0 {
+            return 0.0;
+        }
+        let good: u64 = self.report.tier_goodput().iter().map(|t| t.good).sum();
+        good as f64 / self.replica_seconds
+    }
 }
 
 struct Replica<X: Executor> {
@@ -311,9 +342,32 @@ pub struct ControlPlane<X: Executor> {
     router: FleetRouter,
     clock: EventQueue<CtlEv>,
     workload: Vec<RequestSpec>,
+    /// Pull-based arrival source (`run_stream`): at most one pending
+    /// `ArriveSpec` at a time, pulled one-ahead as arrivals route.
+    stream: Option<Box<dyn Iterator<Item = RequestSpec> + Send>>,
+    /// Requests handed to the fleet so far (workload length for `run`,
+    /// running count of pulled arrivals for `run_stream`).
+    submitted: usize,
+    /// Streaming mode: replica + lost reports keep sketches only.
+    streaming: bool,
     /// Routing/failover cost model (cloned from the replicas' executor).
     cost: CostModel,
     counters: ControlCounters,
+    /// Queue-depth TTFT predictor driving the SLO scaling policy.
+    predictor: TtftPredictor,
+    /// Min-heap over `(head_event_time.to_bits(), replica)` for the
+    /// single-threaded interleave: picking the next replica to step is
+    /// O(log n) instead of an O(n) scan per event.  Entries are lazily
+    /// invalidated — every mutation that can move a replica's head event
+    /// pushes a fresh entry, and stale ones are popped on surfacing.
+    replica_heap: BinaryHeap<Reverse<(u64, usize)>>,
+    /// Heap maintenance is only paid inside `run_interleaved`.
+    use_heap: bool,
+    /// Peak live (routed, unrecorded) requests, sampled at heartbeats.
+    live_high_water: usize,
+    /// Integral of alive-replica count over fleet time.
+    replica_seconds: f64,
+    last_sample_s: f64,
     /// Failed outcomes for requests no replica could take.
     lost: ServingReport,
     /// Elastic-scaling policy (built from `cfg.scaler`).
@@ -367,8 +421,17 @@ impl<X: Executor> ControlPlane<X> {
             router,
             clock: EventQueue::new(),
             workload: Vec::new(),
+            stream: None,
+            submitted: 0,
+            streaming: false,
             cost,
             counters: ControlCounters::default(),
+            predictor: TtftPredictor::new(),
+            replica_heap: BinaryHeap::new(),
+            use_heap: false,
+            live_high_water: 0,
+            replica_seconds: 0.0,
+            last_sample_s: 0.0,
             lost: ServingReport::new(),
             scaler,
             spawner: None,
@@ -417,7 +480,52 @@ impl<X: Executor> ControlPlane<X> {
         for (g, spec) in workload.iter().enumerate() {
             self.clock.schedule_at(spec.arrival_s, CtlEv::Arrive(g));
         }
+        self.submitted = workload.len();
         self.workload = workload;
+        self.start_fleet();
+        let truncated = if self.cfg.threads >= 2 {
+            self.run_threaded()
+        } else {
+            self.run_interleaved()
+        };
+        self.finish(truncated)
+    }
+
+    /// Serve a pull-based arrival stream to completion.  Arrivals are
+    /// pulled one-ahead — exactly one pending `ArriveSpec` event exists
+    /// at any time — and every report sink runs in streaming (sketch-
+    /// only) mode, so control-plane memory stays O(live requests) no
+    /// matter how many requests the stream yields.  For any finite
+    /// stream this completes the same requests `run(stream.collect())`
+    /// would; it just never materializes the workload.
+    pub fn run_stream(
+        mut self,
+        stream: impl Iterator<Item = RequestSpec> + Send + 'static,
+    ) -> FleetResult {
+        self.streaming = true;
+        self.lost.set_streaming();
+        for rep in &mut self.replicas {
+            if let Some(orch) = rep.orch.as_mut() {
+                orch.enable_streaming_report();
+            }
+        }
+        let mut stream: Box<dyn Iterator<Item = RequestSpec> + Send> = Box::new(stream);
+        if let Some(spec) = stream.next() {
+            self.clock.schedule_at(spec.arrival_s.max(0.0), CtlEv::ArriveSpec(spec));
+        }
+        self.stream = Some(stream);
+        self.start_fleet();
+        let truncated = if self.cfg.threads >= 2 {
+            self.run_threaded()
+        } else {
+            self.run_interleaved()
+        };
+        self.finish(truncated)
+    }
+
+    /// Shared startup: fault injections, registration, the t=0 report
+    /// publish, and the first heartbeat tick.
+    fn start_fleet(&mut self) {
         for (t, r) in self.cfg.replica_faults.clone() {
             self.clock.schedule_at(t, CtlEv::Fault(r));
         }
@@ -433,42 +541,64 @@ impl<X: Executor> ControlPlane<X> {
         // before any arrival can be routed
         self.publish_reports(0.0);
         self.clock.schedule_at(self.cfg.heartbeat_s, CtlEv::Heartbeat);
-
-        let truncated = if self.cfg.threads >= 2 {
-            self.run_threaded()
-        } else {
-            self.run_interleaved()
-        };
-        self.finish(truncated)
     }
 
     /// The deterministic default: one global event order across the
     /// control queue and every replica queue.  Returns `true` when the
     /// turn cap was hit.
+    ///
+    /// Picking the next replica is a heap pop, not an O(n_replicas)
+    /// scan per event — at fleet scale the scan dominated the whole
+    /// interleave (every replica event paid for inspecting every other
+    /// replica).  Heap entries carry `(time.to_bits(), id)`; `to_bits`
+    /// is order-preserving for the non-negative times the clock emits,
+    /// and the tuple order reproduces the scan's tie-break exactly
+    /// (earliest time, then lowest replica id, control queue winning
+    /// ties against replicas).  Entries are lazily invalidated: every
+    /// mutation that can move a replica's head event pushes a fresh
+    /// entry ([`Self::push_replica_event`]), and an entry that no longer
+    /// matches its replica's actual head time is discarded when it
+    /// surfaces.
     fn run_interleaved(&mut self) -> bool {
+        self.use_heap = true;
+        self.replica_heap.clear();
+        for i in 0..self.replicas.len() {
+            self.push_replica_event(i);
+        }
         let mut turns = 0u64;
         loop {
             turns += 1;
             if turns > self.cfg.max_events {
+                self.use_heap = false;
                 return true;
             }
-            // advance whichever head event is earliest: the control
-            // queue or a live replica's queue (ties: control first,
-            // then lowest replica id — deterministic)
             let tc = self.clock.peek_time();
-            let tr = self
-                .replicas
-                .iter()
-                .enumerate()
-                .filter(|(_, rep)| rep.alive)
-                .filter_map(|(i, rep)| {
-                    rep.orch.as_ref().and_then(|o| o.next_event_time()).map(|t| (t, i))
-                })
-                .min_by(|a, b| {
-                    a.0.partial_cmp(&b.0).unwrap_or(Ordering::Equal).then_with(|| a.1.cmp(&b.1))
+            let tr = loop {
+                let Some(&Reverse((bits, i))) = self.replica_heap.peek() else {
+                    break None;
+                };
+                let cur = self.replicas.get(i).and_then(|rep| {
+                    if rep.alive {
+                        rep.orch.as_ref().and_then(|o| o.next_event_time())
+                    } else {
+                        None
+                    }
                 });
+                match cur {
+                    Some(t) if t.to_bits() == bits => break Some((t, i)),
+                    // stale (the event was consumed, moved, or the
+                    // replica died) — the current head, if any, was
+                    // pushed at the mutation that moved it
+                    _ => {
+                        self.replica_heap.pop();
+                    }
+                }
+            };
             match (tc, tr) {
-                (None, None) => return false,
+                (None, None) => {
+                    self.use_heap = false;
+                    return false;
+                }
                 (Some(_), None) => self.control_event(),
                 (None, Some((_, i))) => self.step_replica(i),
                 (Some(c), Some((t, i))) => {
@@ -477,6 +607,24 @@ impl<X: Executor> ControlPlane<X> {
                     } else {
                         self.step_replica(i);
                     }
+                }
+            }
+        }
+    }
+
+    /// Record replica `i`'s current head event in the interleave heap
+    /// (no-op outside `run_interleaved` and for dead/idle replicas).
+    /// Called wherever a replica's head event can move: after stepping
+    /// it, after `submit_at` lands a request on it, after a staged
+    /// chain adoption, and at spawn.
+    fn push_replica_event(&mut self, i: usize) {
+        if !self.use_heap {
+            return;
+        }
+        if let Some(rep) = self.replicas.get(i) {
+            if rep.alive {
+                if let Some(t) = rep.orch.as_ref().and_then(|o| o.next_event_time()) {
+                    self.replica_heap.push(Reverse((t.to_bits(), i)));
                 }
             }
         }
@@ -575,6 +723,17 @@ impl<X: Executor> ControlPlane<X> {
                 let spec = self.workload[g];
                 self.route_spec(spec, t, t);
             }
+            CtlEv::ArriveSpec(spec) => {
+                self.submitted += 1;
+                self.route_spec(spec, t, t);
+                // one-ahead: pull the next arrival only now, so the
+                // stream is never materialized (clamped to fleet time —
+                // the generators emit nondecreasing arrivals, but a
+                // hostile stream must not rewind the clock)
+                if let Some(next) = self.stream.as_mut().and_then(|s| s.next()) {
+                    self.clock.schedule_at(next.arrival_s.max(t), CtlEv::ArriveSpec(next));
+                }
+            }
             CtlEv::Fault(r) => {
                 // silent crash: the replica stops executing and stops
                 // heartbeating; the lease sweep detects it (§3.5).
@@ -599,6 +758,7 @@ impl<X: Executor> ControlPlane<X> {
                             orch.executor_mut().import_chain(p);
                         }
                     }
+                    self.push_replica_event(to);
                 }
             }
         }
@@ -614,6 +774,7 @@ impl<X: Executor> ControlPlane<X> {
             let now = self.clock.now();
             self.fail_replica(i, now);
         }
+        self.push_replica_event(i);
     }
 
     /// Route one request (fresh arrival or failover re-dispatch).
@@ -655,6 +816,7 @@ impl<X: Executor> ControlPlane<X> {
             failed: true,
             prefix_hit_tokens: 0,
             phases: PhaseBreakdown::default(),
+            tier: spec.tier,
         });
     }
 
@@ -698,6 +860,7 @@ impl<X: Executor> ControlPlane<X> {
             .as_mut()
             .expect("routed replica is alive")
             .submit_at(spec, earliest_s);
+        self.push_replica_event(d.replica);
     }
 
     /// Collect load reports + cache summaries from live replicas (the
@@ -730,6 +893,15 @@ impl<X: Executor> ControlPlane<X> {
 
     fn on_heartbeat(&mut self, now: f64) {
         self.counters.heartbeats += 1;
+        // capacity + live-state sampling: replica-seconds integrate the
+        // alive count between ticks (the goodput-per-replica-second
+        // denominator), and the live high-water mark is the streaming
+        // bounded-memory witness
+        let n_alive = self.replicas.iter().filter(|r| r.alive && r.orch.is_some()).count();
+        self.replica_seconds += n_alive as f64 * (now - self.last_sample_s).max(0.0);
+        self.last_sample_s = now;
+        let live = self.submitted.saturating_sub(self.recorded());
+        self.live_high_water = self.live_high_water.max(live);
         self.publish_reports(now);
         let dead = self.registry.write().expect("registry lock").sweep(now);
         for r in dead {
@@ -740,11 +912,20 @@ impl<X: Executor> ControlPlane<X> {
         }
         // elastic-scaling tick (§3.1): plan against the state just
         // published, then apply (spawn / decommission / rebalance)
+        let policy = self.cfg.scaler.map(|s| s.policy).unwrap_or_default();
         let mut actions = Vec::new();
         if let Some(s) = self.scaler.as_mut() {
             let registry = self.registry.read().expect("registry lock");
             let index = self.index.read().expect("index lock");
-            actions = s.plan(now, &registry, &index);
+            actions = match policy {
+                ScalePolicy::Backlog => s.plan(now, &registry, &index),
+                ScalePolicy::Slo => {
+                    let (acts, violations) =
+                        s.plan_slo(now, &registry, &index, &self.cost, &self.predictor);
+                    self.counters.slo_violations_predicted += violations;
+                    acts
+                }
+            };
         }
         for a in actions {
             self.apply_scale_action(a, now);
@@ -804,8 +985,12 @@ impl<X: Executor> ControlPlane<X> {
         if self.cfg.token_granular {
             orch.enable_cache_delta_tracking();
         }
+        if self.streaming {
+            orch.enable_streaming_report();
+        }
         orch.start_at(Vec::new(), now);
         self.replicas.push(Replica { orch: Some(orch), alive: true, result: None });
+        self.push_replica_event(id);
         self.registry.write().expect("registry lock").register(id, now);
         self.counters.scale_ups += 1;
         self.cfg.trace.instant(now, Some(id), None, InstantKind::ScaleUp);
@@ -1027,9 +1212,10 @@ impl<X: Executor> ControlPlane<X> {
         }
     }
 
-    /// Every submitted request has an outcome recorded somewhere
-    /// (completed/failed on a replica, or lost as unroutable).
-    fn accounted_all(&self) -> bool {
+    /// Outcomes recorded anywhere in the fleet: completed/failed on a
+    /// live replica, finalized in a dead replica's result, or lost as
+    /// unroutable.
+    fn recorded(&self) -> usize {
         let mut recorded = self.lost.n_requests();
         for rep in &self.replicas {
             recorded += match (&rep.result, &rep.orch) {
@@ -1038,13 +1224,24 @@ impl<X: Executor> ControlPlane<X> {
                 (None, None) => 0,
             };
         }
-        recorded >= self.workload.len()
+        recorded
+    }
+
+    /// Every submitted request has an outcome recorded somewhere.
+    fn accounted_all(&self) -> bool {
+        self.recorded() >= self.submitted
     }
 
     fn finish(mut self, truncated: bool) -> FleetResult {
         self.counters.index_published_entries =
             self.index.read().expect("index lock").published_entries();
-        let mut report = ServingReport::new();
+        // close the replica-second integral at the last event time, so
+        // runs shorter than one heartbeat still report capacity
+        let end = self.clock.now();
+        let n_alive = self.replicas.iter().filter(|r| r.alive && r.orch.is_some()).count();
+        self.replica_seconds += n_alive as f64 * (end - self.last_sample_s).max(0.0);
+        let mut report =
+            if self.streaming { ServingReport::streaming() } else { ServingReport::new() };
         report.merge(&self.lost);
         let n_replicas_final = self.replicas.iter().filter(|r| r.orch.is_some()).count();
         let mut per_replica = Vec::with_capacity(self.replicas.len());
@@ -1062,8 +1259,10 @@ impl<X: Executor> ControlPlane<X> {
             report,
             per_replica,
             counters: self.counters,
-            submitted: self.workload.len(),
+            submitted: self.submitted,
             n_replicas_final,
+            live_high_water: self.live_high_water,
+            replica_seconds: self.replica_seconds,
             truncated,
         }
     }
@@ -1458,6 +1657,7 @@ mod tests {
             kv_blocks_shipped: 14,
             rebalance_staging_s: 1.5,
             index_published_entries: 16,
+            slo_violations_predicted: 17,
         };
         let mut reg = MetricsRegistry::new();
         c.export_metrics(&mut reg);
@@ -1490,6 +1690,104 @@ mod tests {
                 && matches!(e.kind, TraceEventKind::Instant(InstantKind::Failover))));
         // span discipline holds across the crash + re-dispatch
         check_nesting(&events).expect("failover trace must stay well-nested");
+    }
+
+    #[test]
+    fn streaming_run_matches_the_collected_run() {
+        // run_stream over an iterator must complete exactly the same
+        // requests as run() over the collected Vec — the streaming mode
+        // only changes what is *retained*, not what is *served*
+        // 0.07 spacing keeps arrivals off the 0.25 heartbeat grid — a
+        // coinciding arrival+heartbeat would order differently across
+        // the two modes (run() enqueues all arrivals up front)
+        let workload: Vec<RequestSpec> = (0..12)
+            .map(|i| {
+                let mut s = RequestSpec::text(i as f64 * 0.07, 256, 16);
+                s.prefix_group = 1 + (i % 2);
+                s.shared_prefix = 128;
+                s
+            })
+            .collect();
+        let n = workload.len();
+        let collected =
+            ControlPlane::new(ControlPlaneConfig::default(), fleet(3)).run(workload.clone());
+        let streamed = ControlPlane::new(ControlPlaneConfig::default(), fleet(3))
+            .run_stream(workload.into_iter());
+        assert_eq!(streamed.submitted, n);
+        assert!(streamed.all_accounted());
+        assert_eq!(streamed.report.n_completed(), collected.report.n_completed());
+        assert_eq!(streamed.report.n_requests(), collected.report.n_requests());
+        assert!(
+            (streamed.report.horizon() - collected.report.horizon()).abs() < 1e-9,
+            "streamed horizon {} vs collected {}",
+            streamed.report.horizon(),
+            collected.report.horizon()
+        );
+        assert_eq!(
+            streamed.counters.routed_by_cache_hit,
+            collected.counters.routed_by_cache_hit
+        );
+        let i1: Vec<u64> = collected.per_replica.iter().map(|r| r.iterations).collect();
+        let i2: Vec<u64> = streamed.per_replica.iter().map(|r| r.iterations).collect();
+        assert_eq!(i1, i2, "per-replica work must be identical across modes");
+        // the streaming sinks kept no per-request state…
+        assert!(!streamed.report.retains_outcomes());
+        assert!(streamed.report.outcomes.is_empty());
+        // …but the sketch aggregates still agree with the retained run
+        assert!(
+            (streamed.report.sketch.ttft_mean() - collected.report.sketch.ttft_mean()).abs()
+                < 1e-12
+        );
+        // live state was bounded and capacity was metered
+        assert!(streamed.live_high_water <= n);
+        assert!(streamed.replica_seconds > 0.0);
+    }
+
+    #[test]
+    fn slo_policy_scales_up_and_counts_predicted_violations() {
+        let mk = || {
+            let cfg = OrchestratorConfig {
+                n_instances: 1,
+                prefix_cache: true,
+                ..Default::default()
+            };
+            Orchestrator::new(cfg, FixedCost::new(0.05))
+        };
+        let cfg = ControlPlaneConfig {
+            scaler: Some(ScalerConfig {
+                policy: ScalePolicy::Slo,
+                slo_ttft_target_s: 0.2,
+                min_replicas: 1,
+                max_replicas: 3,
+                cooldown_s: 0.3,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        // sustained burst: queued prefill backlog pushes predicted TTFT
+        // past the 0.2s target, so the SLO policy must grow the fleet
+        let w: Vec<RequestSpec> =
+            (0..16).map(|i| RequestSpec::text(i as f64 * 0.2, 2048, 32)).collect();
+        let n = w.len();
+        let res = ControlPlane::new(cfg, vec![mk()]).with_spawner(move |_, _| Some(mk())).run(w);
+        assert!(res.all_accounted());
+        assert_eq!(
+            res.report.n_completed(),
+            n,
+            "SLO scaling must lose nothing: {:?}",
+            res.counters
+        );
+        assert!(
+            res.counters.scale_ups >= 1,
+            "predicted violations must grow the fleet: {:?}",
+            res.counters
+        );
+        assert!(
+            res.counters.slo_violations_predicted >= 1,
+            "the violation counter must see the burst: {:?}",
+            res.counters
+        );
+        assert!(res.goodput_per_replica_second() > 0.0);
     }
 
     #[test]

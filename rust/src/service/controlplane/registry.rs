@@ -21,13 +21,23 @@ pub use crate::coordinator::orchestrator::LoadReport;
 pub struct InstanceRegistry {
     meta: MetaStore,
     loads: HashMap<usize, LoadReport>,
+    /// Sorted cache of the alive set (lease held AND first heartbeat
+    /// seen).  Membership only changes in `heartbeat`/`sweep`/
+    /// `deregister`, so those maintain it incrementally and `alive()`
+    /// is a clone instead of a rebuild-and-sort over the meta map —
+    /// the routing hot path calls it per request.
+    alive_cache: Vec<usize>,
 }
 
 impl InstanceRegistry {
     /// `ttl_s`: a replica silent for longer than this is declared dead
     /// at the next sweep.
     pub fn new(ttl_s: f64) -> InstanceRegistry {
-        InstanceRegistry { meta: MetaStore::new(ttl_s), loads: HashMap::new() }
+        InstanceRegistry {
+            meta: MetaStore::new(ttl_s),
+            loads: HashMap::new(),
+            alive_cache: Vec::new(),
+        }
     }
 
     /// Register a replica (lease starts at `now_s`).
@@ -57,7 +67,12 @@ impl InstanceRegistry {
         if !self.meta.heartbeat(replica, report.kv_used, now_s) {
             return false;
         }
-        self.loads.insert(replica, report);
+        if self.loads.insert(replica, report).is_none() {
+            // first heartbeat: the replica just became routable
+            if let Err(pos) = self.alive_cache.binary_search(&replica) {
+                self.alive_cache.insert(pos, replica);
+            }
+        }
         true
     }
 
@@ -78,6 +93,9 @@ impl InstanceRegistry {
         dead.sort_unstable();
         for d in &dead {
             self.loads.remove(d);
+            if let Ok(pos) = self.alive_cache.binary_search(d) {
+                self.alive_cache.remove(pos);
+            }
         }
         dead
     }
@@ -89,15 +107,28 @@ impl InstanceRegistry {
     pub fn deregister(&mut self, replica: usize) {
         self.loads.remove(&replica);
         self.meta.deregister(replica);
+        if let Ok(pos) = self.alive_cache.binary_search(&replica) {
+            self.alive_cache.remove(pos);
+        }
     }
 
     /// Replica ids holding a live lease, ascending (deterministic
-    /// routing order).
+    /// routing order).  O(n) clone of the maintained cache — no
+    /// rebuild/sort per call.
     pub fn alive(&self) -> Vec<usize> {
-        let mut ids: Vec<usize> =
-            self.meta.alive().into_iter().filter(|i| self.loads.contains_key(i)).collect();
-        ids.sort_unstable();
-        ids
+        self.alive_cache.clone()
+    }
+
+    /// Number of routable replicas without materializing the id list.
+    pub fn n_alive(&self) -> usize {
+        self.alive_cache.len()
+    }
+
+    /// Copy the alive ids (ascending) into `out` without allocating —
+    /// the router's per-request path reuses one scratch buffer.
+    pub fn alive_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend_from_slice(&self.alive_cache);
     }
 
     pub fn is_alive(&self, replica: usize) -> bool {
@@ -227,6 +258,39 @@ mod tests {
         assert_eq!(r.sweep(0.6), vec![1]);
         assert_eq!(r.alive(), vec![0]);
         assert!(!r.heartbeat(1, report(0), 0.7), "expired lease cannot renew");
+    }
+
+    #[test]
+    fn alive_cache_tracks_every_membership_transition() {
+        // the cached list must agree with a from-scratch rebuild after
+        // any interleaving of heartbeat / sweep / deregister
+        let mut r = InstanceRegistry::new(0.6);
+        let rebuild = |r: &InstanceRegistry| -> Vec<usize> {
+            let mut ids: Vec<usize> =
+                r.meta().alive().into_iter().filter(|i| r.load(*i).is_some()).collect();
+            ids.sort_unstable();
+            ids
+        };
+        for i in 0..5 {
+            r.register(i, 0.0);
+        }
+        assert_eq!(r.alive(), rebuild(&r));
+        for i in [3, 0, 4] {
+            r.heartbeat(i, report(i as u64), 0.1);
+        }
+        assert_eq!(r.alive(), vec![0, 3, 4]);
+        assert_eq!(r.alive(), rebuild(&r));
+        assert_eq!(r.n_alive(), 3);
+        // re-heartbeat must not duplicate
+        r.heartbeat(3, report(9), 0.2);
+        assert_eq!(r.alive(), vec![0, 3, 4]);
+        r.deregister(3);
+        assert_eq!(r.alive(), rebuild(&r));
+        // replicas 1/2 never heartbeated and 4 goes silent: one sweep
+        r.heartbeat(0, report(0), 1.0);
+        r.sweep(1.0);
+        assert_eq!(r.alive(), vec![0]);
+        assert_eq!(r.alive(), rebuild(&r));
     }
 
     #[test]

@@ -70,11 +70,24 @@ pub struct FleetRouter {
     /// modulus changes under the cursor (e.g. with an odd-phase cursor a
     /// 2-candidate narrowing picks index 1 every single time).
     rr_last: HashMap<usize, u64>,
+    /// Per-call scratch buffers, reused across requests: `route()` is
+    /// the control plane's per-request hot path, and rebuilding these
+    /// three Vecs allocated O(n_replicas) fresh on every single route.
+    scratch_alive: Vec<usize>,
+    scratch_cands: Vec<usize>,
+    scratch_rcs: Vec<RouteCandidate>,
 }
 
 impl FleetRouter {
     pub fn new(policy: RoutePolicy) -> FleetRouter {
-        FleetRouter { policy, rr_clock: 0, rr_last: HashMap::new() }
+        FleetRouter {
+            policy,
+            rr_clock: 0,
+            rr_last: HashMap::new(),
+            scratch_alive: Vec::new(),
+            scratch_cands: Vec::new(),
+            scratch_rcs: Vec::new(),
+        }
     }
 
     /// Round-robin pick: the least-recently-routed candidate (ties break
@@ -125,28 +138,40 @@ impl FleetRouter {
     /// matched_tokens is what the pick will really prefill), so the
     /// latency estimate stops rounding down to block boundaries.
     pub fn route(&mut self, spec: &RequestSpec, ctx: &RouterCtx) -> Option<RouteDecision> {
-        let alive = ctx.registry.alive();
-        if alive.is_empty() {
-            return None;
-        }
-        let (cands, offline_steered) = offline_candidates(spec, &alive, ctx);
-        let chain = Self::chain_for(spec, ctx.block_tokens);
-        let token_granular = ctx.index.token_granular();
-        let toks = if token_granular { Self::tokens_for(spec) } else { Vec::new() };
-        // matched_blocks reports the picked replica's index match under
-        // BOTH policies, so cache-hit accounting is comparable across
-        // the cache-aware/round-robin ablation
-        let (replica, matched_blocks, matched_tokens) = match self.policy {
-            RoutePolicy::RoundRobin => {
-                let pick = self.rr_pick(&cands);
-                let tok =
-                    if token_granular { ctx.index.match_prefix_tokens(pick, &toks).0 } else { 0 };
-                (pick, ctx.index.match_prefix(pick, &chain).0, tok)
-            }
-            RoutePolicy::CacheAware => {
-                let rcs: Vec<RouteCandidate> = cands
-                    .iter()
-                    .map(|&i| {
+        // scratch buffers are taken out of self for the duration of the
+        // call (borrow-splitting) and restored before every return
+        let mut alive = std::mem::take(&mut self.scratch_alive);
+        ctx.registry.alive_into(&mut alive);
+        let mut cands = std::mem::take(&mut self.scratch_cands);
+        let offline_steered = offline_candidates(spec, &alive, ctx, &mut cands);
+        let decision = if cands.is_empty() {
+            None
+        } else {
+            let chain = Self::chain_for(spec, ctx.block_tokens);
+            let token_granular = ctx.index.token_granular();
+            let toks = if token_granular { Self::tokens_for(spec) } else { Vec::new() };
+            // matched_blocks reports the picked replica's index match
+            // under BOTH policies, so cache-hit accounting is comparable
+            // across the cache-aware/round-robin ablation
+            match self.policy {
+                RoutePolicy::RoundRobin => {
+                    let pick = self.rr_pick(&cands);
+                    let tok = if token_granular {
+                        ctx.index.match_prefix_tokens(pick, &toks).0
+                    } else {
+                        0
+                    };
+                    Some(RouteDecision {
+                        replica: pick,
+                        matched_blocks: ctx.index.match_prefix(pick, &chain).0,
+                        matched_tokens: tok,
+                        offline_steered,
+                    })
+                }
+                RoutePolicy::CacheAware => {
+                    let mut rcs = std::mem::take(&mut self.scratch_rcs);
+                    rcs.clear();
+                    rcs.extend(cands.iter().map(|&i| {
                         let (matched_blocks, mut hit_tier) = ctx.index.match_prefix(i, &chain);
                         let mut matched_tokens = 0;
                         if token_granular {
@@ -168,52 +193,61 @@ impl FleetRouter {
                             hit_tier,
                             queued_prefill_tokens,
                         }
-                    })
-                    .collect();
-                let (pick, _) = kvstore::route(
-                    &rcs,
-                    chain.len(),
-                    spec.input_tokens,
-                    ctx.block_tokens,
-                    ctx.cost,
-                    ctx.xfer,
-                )?;
-                let picked = rcs.iter().find(|c| c.instance == pick);
-                (
-                    pick,
-                    picked.map(|c| c.matched_blocks).unwrap_or(0),
-                    picked.map(|c| c.matched_tokens).unwrap_or(0),
-                )
+                    }));
+                    let picked = kvstore::route(
+                        &rcs,
+                        chain.len(),
+                        spec.input_tokens,
+                        ctx.block_tokens,
+                        ctx.cost,
+                        ctx.xfer,
+                    )
+                    .map(|(pick, _)| {
+                        let c = rcs.iter().find(|c| c.instance == pick);
+                        RouteDecision {
+                            replica: pick,
+                            matched_blocks: c.map(|c| c.matched_blocks).unwrap_or(0),
+                            matched_tokens: c.map(|c| c.matched_tokens).unwrap_or(0),
+                            offline_steered,
+                        }
+                    });
+                    self.scratch_rcs = rcs;
+                    picked
+                }
             }
         };
-        Some(RouteDecision { replica, matched_blocks, matched_tokens, offline_steered })
+        self.scratch_alive = alive;
+        self.scratch_cands = cands;
+        decision
     }
 }
 
 /// The §3.1 tide rule at fleet scope: offline requests prefer replicas
 /// whose in-flight mix is already mostly offline, unless every replica
-/// is latency-busy (then the full set stays eligible).
+/// is latency-busy (then the full set stays eligible).  Writes the
+/// candidate set into `out` (scratch, cleared here); returns whether
+/// the offline narrowing applied.
 fn offline_candidates(
     spec: &RequestSpec,
     alive: &[usize],
     ctx: &RouterCtx,
-) -> (Vec<usize>, bool) {
+    out: &mut Vec<usize>,
+) -> bool {
+    out.clear();
     if spec.class == RequestClass::Offline {
-        let relaxed: Vec<usize> = alive
-            .iter()
-            .copied()
-            .filter(|&i| {
-                ctx.registry
-                    .load(i)
-                    .map(|l| l.online_fraction < ctx.coloc.relaxed_idle_threshold)
-                    .unwrap_or(false)
-            })
-            .collect();
-        if !relaxed.is_empty() && relaxed.len() < alive.len() {
-            return (relaxed, true);
+        out.extend(alive.iter().copied().filter(|&i| {
+            ctx.registry
+                .load(i)
+                .map(|l| l.online_fraction < ctx.coloc.relaxed_idle_threshold)
+                .unwrap_or(false)
+        }));
+        if !out.is_empty() && out.len() < alive.len() {
+            return true;
         }
+        out.clear();
     }
-    (alive.to_vec(), false)
+    out.extend_from_slice(alive);
+    false
 }
 
 #[cfg(test)]

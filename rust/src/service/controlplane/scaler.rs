@@ -31,13 +31,44 @@
 use std::cmp::Reverse;
 use std::collections::HashMap;
 
+use crate::coordinator::predictor::TtftPredictor;
 use crate::model::ShardSpec;
 use crate::service::controlplane::index::GlobalPrefixIndex;
 use crate::service::controlplane::registry::InstanceRegistry;
+use crate::sim::roofline::CostModel;
+
+/// Which signal drives elastic capacity decisions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScalePolicy {
+    /// Token-backlog thresholds against `capacity_target_tokens` (the
+    /// original policy and the default: simple, oscillation-free, no
+    /// model of latency).
+    #[default]
+    Backlog,
+    /// Scale on *predicted* SLO violation: the control plane's
+    /// [`TtftPredictor`] estimates each replica's next-request TTFT
+    /// from its queued prefill backlog; capacity grows when the worst
+    /// replica is predicted past `slo_ttft_target_s` and shrinks only
+    /// when the evicted backlog provably stays under it.  Spends
+    /// replicas exactly where the SLO is at risk instead of tracking a
+    /// token count that may or may not correlate with latency.
+    Slo,
+}
 
 /// Elastic-scaling policy knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct ScalerConfig {
+    /// Capacity signal: backlog thresholds (default) or predicted-TTFT
+    /// SLO violation (see [`ScalePolicy`]).
+    pub policy: ScalePolicy,
+    /// TTFT the SLO policy defends (seconds).  Only read under
+    /// `ScalePolicy::Slo`; the default matches the premium interactive
+    /// tier (`tier_slo(0)`).
+    pub slo_ttft_target_s: f64,
+    /// Representative prompt length used when predicting the TTFT a
+    /// *new* arrival would see on a replica (the predictor needs an
+    /// input size; the scaler has no concrete request in hand).
+    pub typical_input_tokens: u64,
     /// Per-replica backlog target in tokens (queued prefill + resident
     /// decode context).  Scale up when the fleet backlog exceeds
     /// `target × n_alive`; scale down when it would comfortably fit in
@@ -78,6 +109,9 @@ pub struct ScalerConfig {
 impl Default for ScalerConfig {
     fn default() -> Self {
         ScalerConfig {
+            policy: ScalePolicy::Backlog,
+            slo_ttft_target_s: 1.0,
+            typical_input_tokens: 512,
             capacity_target_tokens: 4096,
             min_replicas: 1,
             max_replicas: 8,
@@ -132,6 +166,12 @@ const MAX_TRACKED_CHAINS: usize = 256;
 /// tensor-wider replica (more HBM per replica) over another replica at
 /// the current width: the fleet is memory-bound, not queue-bound.
 const KV_PRESSURE_WIDEN: f64 = 0.85;
+
+/// Headroom factor for SLO-policy scale-down: the survivors' predicted
+/// TTFT (with the victim's redistributed backlog charged) must stay
+/// under `target / SLO_DOWN_MARGIN`, not merely under the target —
+/// shrinking onto the violation boundary would flap straight back up.
+const SLO_DOWN_MARGIN: f64 = 1.5;
 
 fn backlog(registry: &InstanceRegistry, replica: usize) -> u64 {
     registry
@@ -246,6 +286,78 @@ impl FleetScaler {
             }
         }
         actions
+    }
+
+    /// SLO-policy tick ([`ScalePolicy::Slo`]): capacity follows
+    /// *predicted* TTFT, not token backlog.  Scale up when any alive
+    /// replica's predicted next-arrival TTFT exceeds the target; scale
+    /// down only when the fleet is violation-free AND redistributing
+    /// the cheapest victim's backlog provably keeps every survivor
+    /// under `target / SLO_DOWN_MARGIN`.  Returns the planned actions
+    /// plus the number of replicas predicted in violation (feeds
+    /// `xllm_slo_violations_predicted_total`).  Cooldown, shard
+    /// selection, and hot-chain rebalancing are shared with the
+    /// backlog policy.
+    pub fn plan_slo(
+        &mut self,
+        now_s: f64,
+        registry: &InstanceRegistry,
+        index: &GlobalPrefixIndex,
+        cost: &CostModel,
+        predictor: &TtftPredictor,
+    ) -> (Vec<ScaleAction>, u64) {
+        let mut actions = Vec::new();
+        let alive = registry.alive();
+        if alive.is_empty() {
+            return (actions, 0);
+        }
+        let n = alive.len();
+        let typical = self.cfg.typical_input_tokens;
+        let predicted = |r: usize, extra_queued: u64| -> f64 {
+            let queued = registry.load(r).map(|l| l.queued_prefill_tokens).unwrap_or(0);
+            predictor.predict(cost, queued + extra_queued, typical)
+        };
+        let target = self.cfg.slo_ttft_target_s.max(1e-9);
+        let violations = alive.iter().filter(|&&r| predicted(r, 0) > target).count() as u64;
+        if now_s - self.last_scale_s >= self.cfg.cooldown_s {
+            let min = self.cfg.min_replicas.max(1);
+            if violations > 0 && n < self.cfg.max_replicas {
+                if let Some(shard) = self.plan_up_shard(&alive, registry) {
+                    self.last_scale_s = now_s;
+                    actions.push(ScaleAction::Up { shard });
+                }
+            } else if violations == 0 && n > min {
+                // candidate victim: least backlog, ties to the newest id
+                // (same ordering as the backlog policy)
+                let victim = alive
+                    .iter()
+                    .copied()
+                    .min_by_key(|&r| (backlog(registry, r), Reverse(r)))
+                    .expect("alive is non-empty");
+                // its queued work lands on the survivors; charge each
+                // one an even share (ceil) and demand predicted TTFT
+                // headroom, not just non-violation — shrinking on a
+                // knife's edge would flap right back up
+                let moved = backlog(registry, victim);
+                let share = moved.div_ceil((n - 1) as u64);
+                let safe = alive
+                    .iter()
+                    .copied()
+                    .filter(|&r| r != victim)
+                    .all(|r| predicted(r, share) <= target / SLO_DOWN_MARGIN);
+                if safe {
+                    self.last_scale_s = now_s;
+                    actions.push(ScaleAction::Down(victim));
+                }
+            }
+        }
+        if actions.is_empty() {
+            let total: u64 = alive.iter().map(|&r| backlog(registry, r)).sum();
+            if let Some(rb) = self.plan_rebalance(&alive, total, registry, index) {
+                actions.push(rb);
+            }
+        }
+        (actions, violations)
     }
 
     /// Choose the device-group shape for a scale-up, or `None` when the
@@ -465,6 +577,55 @@ mod tests {
             actions,
             vec![ScaleAction::Rebalance { chain, from: 0, to: 1, token_lo: 0, token_hi: 128 }]
         );
+    }
+
+    fn cost() -> CostModel {
+        use crate::model::{ascend_910b, catalog};
+        use crate::sim::EngineFeatures;
+        CostModel::new(ascend_910b(), catalog("Qwen3-8B").unwrap(), EngineFeatures::xllm(1))
+    }
+
+    fn slo_cfg(target_s: f64) -> ScalerConfig {
+        ScalerConfig { policy: ScalePolicy::Slo, slo_ttft_target_s: target_s, ..cfg() }
+    }
+
+    #[test]
+    fn slo_policy_scales_up_on_predicted_violation() {
+        let reg = registry(&[(0, 50_000), (1, 1_000)]);
+        let ix = GlobalPrefixIndex::new();
+        let cost = cost();
+        let p = TtftPredictor::new();
+        // target below replica 0's predicted TTFT → predicted violation
+        let worst = p.predict(&cost, 50_000, 512);
+        let mut s = FleetScaler::new(slo_cfg(worst * 0.5));
+        let (actions, violations) = s.plan_slo(0.0, &reg, &ix, &cost, &p);
+        assert_eq!(actions, vec![ScaleAction::Up { shard: ShardSpec::default() }]);
+        assert!(violations >= 1, "the loaded replica must count as a predicted violation");
+        // cooldown holds exactly like the backlog policy
+        let (actions, _) = s.plan_slo(0.5, &reg, &ix, &cost, &p);
+        assert!(actions.is_empty());
+    }
+
+    #[test]
+    fn slo_policy_shrinks_only_with_predicted_headroom() {
+        let ix = GlobalPrefixIndex::new();
+        let cost = cost();
+        let p = TtftPredictor::new();
+        // ample headroom: nearly idle fleet far under a loose target
+        let reg = registry(&[(0, 2000), (1, 100), (2, 10)]);
+        let loose = p.predict(&cost, 4000, 512) * 10.0;
+        let mut s = FleetScaler::new(slo_cfg(loose));
+        let (actions, violations) = s.plan_slo(0.0, &reg, &ix, &cost, &p);
+        assert_eq!(actions, vec![ScaleAction::Down(2)], "least-loaded replica drains");
+        assert_eq!(violations, 0);
+        // no violation, but redistributing the victim's backlog would
+        // eat the SLO_DOWN_MARGIN headroom → hold steady
+        let reg = registry(&[(0, 10_000), (1, 10_000)]);
+        let tight = p.predict(&cost, 10_000, 512) * 1.05;
+        let mut s = FleetScaler::new(slo_cfg(tight));
+        let (actions, violations) = s.plan_slo(0.0, &reg, &ix, &cost, &p);
+        assert!(actions.is_empty(), "knife-edge shrink must be refused: {actions:?}");
+        assert_eq!(violations, 0);
     }
 
     fn sharded_registry(loads: &[(usize, u64, u64, u64, ShardSpec)]) -> InstanceRegistry {

@@ -80,6 +80,26 @@ where
         .run(workload)
 }
 
+/// [`run_fleet_with`] over a pull-based arrival stream: arrivals are
+/// pulled one at a time (never materialized into a `Vec`) and every
+/// report sink runs in streaming (sketch-only) mode, so fleet memory is
+/// O(live requests) — the million-request entry point.
+pub fn run_fleet_stream_with<F>(
+    cfg: ControlPlaneConfig,
+    n_replicas: usize,
+    mut factory: F,
+    stream: impl Iterator<Item = RequestSpec> + Send + 'static,
+) -> FleetResult
+where
+    F: ReplicaFactory + 'static,
+{
+    let replicas: Vec<Orchestrator<F::Exec>> =
+        (0..n_replicas).map(|i| factory.build(i)).collect();
+    ControlPlane::new(cfg, replicas)
+        .with_spawner(move |i, shard| factory.try_build_sharded(i, shard))
+        .run_stream(stream)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -15,7 +15,7 @@
 //! `workload::scenarios` (e.g. `skewed-prefix`).
 
 use crate::service::controlplane::{ControlPlaneConfig, FleetResult};
-use crate::service::fleet::{run_fleet_with, ReplicaFactory};
+use crate::service::fleet::{run_fleet_stream_with, run_fleet_with, ReplicaFactory};
 use crate::sim::cluster::ClusterConfig;
 use crate::sim::executor::RooflineExecutor;
 use crate::sim::roofline::CostModel;
@@ -112,6 +112,20 @@ pub fn run_fleet(cfg: FleetConfig, workload: Vec<RequestSpec>) -> FleetResult {
     run_fleet_with(cp_cfg, cfg.n_replicas, factory, workload)
 }
 
+/// [`run_fleet`] over a pull-based arrival stream: requests are pulled
+/// one at a time and every report runs in sketch-only streaming mode, so
+/// fleet memory stays O(live requests) regardless of how many arrivals
+/// the stream yields — the million-request entry point (`xllm fleet
+/// --requests N`).
+pub fn run_fleet_stream(
+    cfg: FleetConfig,
+    stream: impl Iterator<Item = RequestSpec> + Send + 'static,
+) -> FleetResult {
+    let cp_cfg = cfg.control_plane_config();
+    let factory = RooflineReplicaFactory { template: cfg.template };
+    run_fleet_stream_with(cp_cfg, cfg.n_replicas, factory, stream)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,6 +178,81 @@ mod tests {
             res.counters.offline_steered > 0,
             "mixed load must trigger the cross-replica tide rule: {:?}",
             res.counters
+        );
+    }
+
+    #[test]
+    fn streamed_fleet_matches_the_collected_fleet() {
+        let sc = scenario("tide").unwrap();
+        let mut rng = Rng::new(11);
+        let w = sc.generate(20.0, 2.0, &mut rng);
+        let n = w.len();
+        let collected = run_fleet(FleetConfig::new(template(1), 2), w);
+
+        let mut rng = Rng::new(11);
+        let stream = sc.stream(20.0, 2.0, &mut rng);
+        let streamed = run_fleet_stream(FleetConfig::new(template(1), 2), stream);
+
+        assert!(streamed.all_accounted());
+        assert_eq!(streamed.submitted, n);
+        assert_eq!(streamed.report.n_completed(), collected.report.n_completed());
+        assert!(
+            !streamed.report.retains_outcomes(),
+            "streaming runs must not retain per-request outcomes"
+        );
+        assert!(streamed.report.outcomes.is_empty());
+        assert!((streamed.report.horizon() - collected.report.horizon()).abs() < 1e-9);
+        assert_eq!(
+            streamed.counters.routed_by_cache_hit,
+            collected.counters.routed_by_cache_hit,
+            "identical arrivals must route identically"
+        );
+        assert!(streamed.live_high_water <= n);
+        assert!(streamed.replica_seconds > 0.0);
+    }
+
+    #[test]
+    fn slo_scaling_beats_backlog_on_goodput_per_replica_second() {
+        use crate::service::controlplane::{ScalePolicy, ScalerConfig};
+        let sc = scenario("tide").unwrap();
+        // the backlog policy's token-count rule is deliberately set
+        // aggressive (one ~800-token prompt already exceeds the target)
+        // so it over-provisions through the flood; the SLO policy spends
+        // replicas only where predicted TTFT is actually at risk
+        let mut backlog_cfg = FleetConfig::new(template(1), 1);
+        backlog_cfg.control.scaler = Some(ScalerConfig {
+            capacity_target_tokens: 512,
+            min_replicas: 1,
+            max_replicas: 4,
+            cooldown_s: 0.5,
+            ..Default::default()
+        });
+        let mut slo_cfg = backlog_cfg.clone();
+        if let Some(s) = slo_cfg.control.scaler.as_mut() {
+            s.policy = ScalePolicy::Slo;
+            s.slo_ttft_target_s = 1.0;
+        }
+
+        let mut rng = Rng::new(42);
+        let backlog = run_fleet_stream(backlog_cfg, sc.stream(40.0, 3.0, &mut rng));
+        let mut rng = Rng::new(42);
+        let slo = run_fleet_stream(slo_cfg, sc.stream(40.0, 3.0, &mut rng));
+
+        assert!(backlog.all_accounted(), "backlog run lost requests");
+        assert!(slo.all_accounted(), "slo run lost requests");
+        assert!(
+            backlog.counters.scale_ups >= 1,
+            "the token-capacity rule must over-provision on tide: {:?}",
+            backlog.counters
+        );
+        let (bg, sg) =
+            (backlog.goodput_per_replica_second(), slo.goodput_per_replica_second());
+        assert!(
+            sg > bg,
+            "SLO-aware scaling must beat backlog on goodput per replica-second: \
+             slo={sg:.4} vs backlog={bg:.4} (replica_seconds {:.1} vs {:.1})",
+            slo.replica_seconds,
+            backlog.replica_seconds,
         );
     }
 

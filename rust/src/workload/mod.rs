@@ -9,7 +9,9 @@
 //! §Substitutions.
 
 pub mod scenarios;
+pub mod stream;
 pub mod traces;
 
 pub use scenarios::{scenario, Scenario};
-pub use traces::{ArrivalProcess, RequestClass, RequestSpec};
+pub use stream::ArrivalStream;
+pub use traces::{ArrivalIter, ArrivalProcess, RequestClass, RequestSpec};

@@ -7,7 +7,12 @@
 //! shapes for JingYan / customer service).
 
 use crate::util::Rng;
+use crate::workload::stream::ArrivalStream;
 use crate::workload::traces::{ArrivalProcess, LengthDist, RequestClass, RequestSpec};
+
+/// The default multi-tenant mix: a quarter premium interactive, half
+/// standard, a quarter relaxed (see [`crate::metrics::tier_slo`]).
+pub const DEFAULT_TIER_MIX: [u8; 4] = [0, 1, 1, 2];
 
 /// A named, reproducible workload.
 #[derive(Debug, Clone)]
@@ -24,28 +29,51 @@ pub struct Scenario {
     pub prefix_len: u64,
     /// Number of distinct shared prefixes.
     pub prefix_groups: u64,
+    /// Repeating tenant-tier assignment (request `i` gets
+    /// `tier_mix[i % 4]`; offline scenarios are all best-effort).
+    /// Deterministic by index — consumes no randomness — so tiers ride
+    /// along without perturbing any seeded draw sequence.
+    pub tier_mix: [u8; 4],
 }
 
 impl Scenario {
     /// Generate the request list over `[0, horizon_s)` at `rate` req/s
     /// (overrides the scenario's nominal rate, keeping its *shape*).
+    ///
+    /// Thin collect-adapter over [`Self::stream`]: the pull-based
+    /// stream is the single source of truth for the draw sequence, and
+    /// syncing its field lane back into `rng` preserves the historical
+    /// post-generation RNG state bit for bit.
     pub fn generate(&self, horizon_s: f64, rate: f64, rng: &mut Rng) -> Vec<RequestSpec> {
-        let arrivals = self.scaled_arrivals(rate).arrivals(horizon_s, rng);
-        arrivals
-            .into_iter()
-            .map(|t| {
-                let shared = rng.chance(self.prefix_share);
-                RequestSpec {
-                    arrival_s: t,
-                    input_tokens: self.input_len.sample(rng).max(1),
-                    output_tokens: self.output_len.sample(rng).max(1),
-                    class: self.class,
-                    image_patches: self.image_patches,
-                    prefix_group: if shared { 1 + rng.range(0, self.prefix_groups.max(1) - 1) } else { 0 },
-                    shared_prefix: if shared { self.prefix_len } else { 0 },
-                }
-            })
-            .collect()
+        let mut stream = self.stream(horizon_s, rate, rng);
+        let out: Vec<RequestSpec> = (&mut stream).collect();
+        *rng = stream.into_field_rng();
+        out
+    }
+
+    /// Pull-based request stream over `[0, horizon_s)` at `rate` req/s:
+    /// O(1) memory, bit-identical specs/order to [`Self::generate`]
+    /// (see `workload::stream` for the two-lane determinism story).
+    pub fn stream(&self, horizon_s: f64, rate: f64, rng: &mut Rng) -> ArrivalStream {
+        ArrivalStream::replaying(self.clone(), self.scaled_arrivals(rate), horizon_s, rng)
+    }
+
+    /// Unbounded open-loop stream at `rate` req/s (horizon = ∞) for
+    /// request-count-driven runs (`xllm fleet --requests N`); cap with
+    /// [`ArrivalStream::with_limit`].  Deterministic per seed, but its
+    /// lane split differs from `generate()` (which cannot express an
+    /// infinite horizon).
+    pub fn stream_unbounded(&self, rate: f64, rng: &mut Rng) -> ArrivalStream {
+        ArrivalStream::open_loop(self.clone(), self.scaled_arrivals(rate), rng)
+    }
+
+    /// Tenant tier for request index `i` (deterministic, RNG-free).
+    pub fn tier_for(&self, i: usize) -> u8 {
+        if self.class == RequestClass::Offline {
+            2
+        } else {
+            self.tier_mix[i % self.tier_mix.len()]
+        }
     }
 
     fn scaled_arrivals(&self, rate: f64) -> ArrivalProcess {
@@ -88,6 +116,7 @@ pub fn scenario(name: &str) -> Option<Scenario> {
             prefix_share: 0.0,
             prefix_len: 0,
             prefix_groups: 0,
+            tier_mix: DEFAULT_TIER_MIX,
         },
         // Fig 15 variants: [2500,1500] and [1500,2500]
         "sharegpt-2500-1500" => Scenario {
@@ -113,6 +142,7 @@ pub fn scenario(name: &str) -> Option<Scenario> {
             prefix_share: 0.0,
             prefix_len: 0,
             prefix_groups: 0,
+            tier_mix: DEFAULT_TIER_MIX,
         },
         // Azure Code: bursty arrivals, long prompts, short outputs (§5.2).
         "azure-code" => Scenario {
@@ -130,6 +160,7 @@ pub fn scenario(name: &str) -> Option<Scenario> {
             prefix_share: 0.3,
             prefix_len: 256,
             prefix_groups: 8,
+            tier_mix: DEFAULT_TIER_MIX,
         },
         // Azure Conversation: stable arrivals, conversational lengths.
         "azure-conv" => Scenario {
@@ -142,6 +173,7 @@ pub fn scenario(name: &str) -> Option<Scenario> {
             prefix_share: 0.5,
             prefix_len: 512,
             prefix_groups: 4,
+            tier_mix: DEFAULT_TIER_MIX,
         },
         // JingYan AI shopping assistant: conversational logs (§5.1.2).
         "jingyan" => Scenario {
@@ -154,6 +186,7 @@ pub fn scenario(name: &str) -> Option<Scenario> {
             prefix_share: 0.7,
             prefix_len: 384,
             prefix_groups: 6,
+            tier_mix: DEFAULT_TIER_MIX,
         },
         // JingYan DeepSeek-V3 setting (Table 4): 6800 in / 400 out.
         "jingyan-6800-400" => Scenario {
@@ -166,6 +199,7 @@ pub fn scenario(name: &str) -> Option<Scenario> {
             prefix_share: 0.0,
             prefix_len: 0,
             prefix_groups: 0,
+            tier_mix: DEFAULT_TIER_MIX,
         },
         // Customer service dialogues (Fig 17; E2E = 10 s).
         "customer-service" => Scenario {
@@ -178,6 +212,7 @@ pub fn scenario(name: &str) -> Option<Scenario> {
             prefix_share: 0.8,
             prefix_len: 512,
             prefix_groups: 3,
+            tier_mix: DEFAULT_TIER_MIX,
         },
         // Merchant assistant (Fig 18; E2E = 1 s): three short tasks.
         "merchant-search-terms" => Scenario {
@@ -190,6 +225,7 @@ pub fn scenario(name: &str) -> Option<Scenario> {
             prefix_share: 0.9,
             prefix_len: 128,
             prefix_groups: 1,
+            tier_mix: DEFAULT_TIER_MIX,
         },
         "merchant-arrangement" => Scenario {
             name: "merchant-arrangement",
@@ -214,6 +250,7 @@ pub fn scenario(name: &str) -> Option<Scenario> {
             prefix_share: 0.6,
             prefix_len: 200,
             prefix_groups: 2,
+            tier_mix: DEFAULT_TIER_MIX,
         },
         // TextCaps-like multimodal captioning (Fig 22).
         "textcaps" => Scenario {
@@ -226,6 +263,7 @@ pub fn scenario(name: &str) -> Option<Scenario> {
             prefix_share: 0.0,
             prefix_len: 0,
             prefix_groups: 0,
+            tier_mix: DEFAULT_TIER_MIX,
         },
         // Skewed shared-prefix traffic (control-plane experiments,
         // §3.4): many distinct system prompts, nearly every request
@@ -241,6 +279,7 @@ pub fn scenario(name: &str) -> Option<Scenario> {
             prefix_share: 0.9,
             prefix_len: 512,
             prefix_groups: 12,
+            tier_mix: DEFAULT_TIER_MIX,
         },
         // Bursty tidal traffic (elastic-scaling experiments, §3.1): one
         // compressed day/night swing with a strong amplitude, so a fixed
@@ -259,6 +298,45 @@ pub fn scenario(name: &str) -> Option<Scenario> {
             prefix_share: 0.5,
             prefix_len: 256,
             prefix_groups: 4,
+            tier_mix: DEFAULT_TIER_MIX,
+        },
+        // Open-loop diurnal traffic (§3.1 "hourly/daily tidal
+        // variation"): the tide shape stretched to a long day/night
+        // period for streaming million-request runs — the swing is slow
+        // enough that the SLO-aware scaler sees sustained load trends
+        // rather than per-heartbeat noise.  Premium-heavy tenant mix.
+        "diurnal" => Scenario {
+            name: "diurnal",
+            arrivals: ArrivalProcess::Tidal { mean_rate: 1.0, amplitude: 0.7, period_s: 240.0 },
+            input_len: LengthDist::LogNormal { median: 700.0, sigma: 0.6, lo: 64, hi: 4096 },
+            output_len: LengthDist::LogNormal { median: 180.0, sigma: 0.5, lo: 16, hi: 512 },
+            class: RequestClass::Online,
+            image_patches: 0,
+            prefix_share: 0.5,
+            prefix_len: 256,
+            prefix_groups: 4,
+            tier_mix: [0, 0, 1, 2],
+        },
+        // Flash-crowd traffic (the Azure-Code burst shape pushed to a
+        // viral spike): rare but violent rate multiplications that a
+        // backlog-target scaler chases too late — the stress workload
+        // for predicted-SLO scaling.  Standard-heavy tenant mix.
+        "flash-crowd" => Scenario {
+            name: "flash-crowd",
+            arrivals: ArrivalProcess::Bursty {
+                rate: 1.0,
+                burst_factor: 12.0,
+                burst_prob: 0.02,
+                burst_len_s: 6.0,
+            },
+            input_len: LengthDist::LogNormal { median: 600.0, sigma: 0.7, lo: 32, hi: 4096 },
+            output_len: LengthDist::LogNormal { median: 120.0, sigma: 0.5, lo: 8, hi: 512 },
+            class: RequestClass::Online,
+            image_patches: 0,
+            prefix_share: 0.6,
+            prefix_len: 256,
+            prefix_groups: 6,
+            tier_mix: [1, 0, 1, 2],
         },
         // Offline batch analytics (co-location experiments, §3.1/Fig 23).
         "offline-docs" => Scenario {
@@ -271,6 +349,7 @@ pub fn scenario(name: &str) -> Option<Scenario> {
             prefix_share: 0.0,
             prefix_len: 0,
             prefix_groups: 0,
+            tier_mix: DEFAULT_TIER_MIX,
         },
         _ => return None,
     })
@@ -294,6 +373,8 @@ pub const SCENARIO_NAMES: &[&str] = &[
     "textcaps",
     "skewed-prefix",
     "tide",
+    "diurnal",
+    "flash-crowd",
     "offline-docs",
 ];
 

@@ -1,0 +1,221 @@
+//! Pull-based workload streaming: `ArrivalStream` yields `RequestSpec`s
+//! one at a time in O(1) memory, replacing the pre-materialized
+//! `Vec<RequestSpec>` for million-request open-loop runs.
+//!
+//! # Determinism contract (two-lane RNG replay)
+//!
+//! The historical `Scenario::generate` consumes the caller's RNG in two
+//! phases: every arrival-time draw first, then per-request field draws
+//! (prefix-share chance, input sample, output sample, group pick) in
+//! request order.  A naive lazy generator would interleave the two and
+//! produce a *different* request sequence from the same seed.
+//!
+//! [`ArrivalStream`] reproduces the legacy order exactly with two RNG
+//! lanes split from one seed state:
+//!
+//! 1. clone the caller's RNG as the **arrival lane** (pre-arrival state);
+//! 2. advance the caller's RNG through the whole arrival pass once
+//!    without storing anything ([`ArrivalProcess::advance`], O(1)
+//!    memory), leaving it at the post-arrival state — the **field
+//!    lane**;
+//! 3. lazily replay arrivals from the arrival lane while drawing each
+//!    request's fields from the field lane in legacy per-request order.
+//!
+//! Draining the stream therefore yields bit-identical specs in the same
+//! order as `generate()`, and `generate()` itself is now a collect of
+//! this stream that syncs the final field-lane state back into the
+//! caller's RNG — so every existing scenario, golden fixture, and seed
+//! keeps its exact behavior.  The arrival pass runs twice (once to
+//! advance, once to replay); that trade buys O(1) memory at unchanged
+//! output.
+//!
+//! For *unbounded* runs (`--requests N` at fleet scope) the advance
+//! pass cannot terminate, so [`Scenario::stream_unbounded`] forks two
+//! independent lanes instead — deterministic per seed, but its draw
+//! order is its own (documented, not bit-comparable to `generate()`,
+//! which cannot express an infinite horizon anyway).
+
+use crate::util::Rng;
+use crate::workload::scenarios::Scenario;
+use crate::workload::traces::{ArrivalIter, ArrivalProcess, RequestSpec};
+
+/// Lazy request generator: O(1) state (one arrival cursor + two RNG
+/// lanes + a counter), no matter how many requests it emits.
+#[derive(Debug, Clone)]
+pub struct ArrivalStream {
+    scenario: Scenario,
+    arrivals: ArrivalIter,
+    fields: Rng,
+    emitted: usize,
+    limit: Option<usize>,
+}
+
+impl ArrivalStream {
+    /// Finite-horizon stream that is bit-identical to the legacy
+    /// `generate()` (see the module docs for the two-lane replay).
+    /// `rng` is left at the post-arrival (field-lane) state; callers
+    /// that need the legacy post-generation state take it back via
+    /// [`Self::into_field_rng`] after draining.
+    pub(crate) fn replaying(
+        scenario: Scenario,
+        proc: ArrivalProcess,
+        horizon_s: f64,
+        rng: &mut Rng,
+    ) -> ArrivalStream {
+        let arrival_rng = rng.clone();
+        proc.advance(horizon_s, rng);
+        ArrivalStream {
+            scenario,
+            arrivals: proc.iter(horizon_s, arrival_rng),
+            fields: rng.clone(),
+            emitted: 0,
+            limit: None,
+        }
+    }
+
+    /// Unbounded open-loop stream (horizon = ∞) over two forked lanes;
+    /// cap with [`Self::with_limit`] or `Iterator::take`.
+    pub(crate) fn open_loop(
+        scenario: Scenario,
+        proc: ArrivalProcess,
+        rng: &mut Rng,
+    ) -> ArrivalStream {
+        let arrival_rng = rng.fork();
+        let fields = rng.fork();
+        ArrivalStream {
+            scenario,
+            arrivals: proc.iter(f64::INFINITY, arrival_rng),
+            fields,
+            emitted: 0,
+            limit: None,
+        }
+    }
+
+    /// Stop after `n` requests (the `--requests N` cap).
+    pub fn with_limit(mut self, n: usize) -> ArrivalStream {
+        self.limit = Some(n);
+        self
+    }
+
+    /// Requests emitted so far.
+    pub fn emitted(&self) -> usize {
+        self.emitted
+    }
+
+    /// The field-lane RNG — after draining a replaying stream this is
+    /// exactly the state the legacy eager `generate()` left its caller
+    /// with.
+    pub fn into_field_rng(self) -> Rng {
+        self.fields
+    }
+}
+
+impl Iterator for ArrivalStream {
+    type Item = RequestSpec;
+
+    fn next(&mut self) -> Option<RequestSpec> {
+        if let Some(cap) = self.limit {
+            if self.emitted >= cap {
+                return None;
+            }
+        }
+        let t = self.arrivals.next()?;
+        let sc = &self.scenario;
+        let rng = &mut self.fields;
+        // legacy per-request draw order: share chance, input sample,
+        // output sample, then the group pick iff shared
+        let shared = rng.chance(sc.prefix_share);
+        let spec = RequestSpec {
+            arrival_s: t,
+            input_tokens: sc.input_len.sample(rng).max(1),
+            output_tokens: sc.output_len.sample(rng).max(1),
+            class: sc.class,
+            image_patches: sc.image_patches,
+            prefix_group: if shared { 1 + rng.range(0, sc.prefix_groups.max(1) - 1) } else { 0 },
+            shared_prefix: if shared { sc.prefix_len } else { 0 },
+            // tier assignment consumes NO randomness (deterministic
+            // cycle over the scenario's tenant mix) so adding tiers
+            // cannot perturb any legacy draw sequence
+            tier: sc.tier_for(self.emitted),
+        };
+        self.emitted += 1;
+        Some(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::util::Rng;
+    use crate::workload::scenarios::{scenario, SCENARIO_NAMES};
+
+    /// Satellite pin: for every named scenario, draining the stream
+    /// with the seed RNG yields the exact request sequence (and final
+    /// RNG state) the eager generate() produces.
+    #[test]
+    fn stream_is_bit_identical_to_generate_for_every_scenario() {
+        for name in SCENARIO_NAMES {
+            let sc = scenario(name).unwrap();
+            let mut eager_rng = Rng::new(0xA11CE);
+            let eager = sc.generate(45.0, 3.0, &mut eager_rng);
+
+            let mut stream_rng = Rng::new(0xA11CE);
+            let mut stream = sc.stream(45.0, 3.0, &mut stream_rng);
+            let mut lazy = Vec::new();
+            for spec in &mut stream {
+                lazy.push(spec);
+            }
+            assert_eq!(eager, lazy, "{name}: stream and generate disagree");
+            let mut final_rng = stream.into_field_rng();
+            assert_eq!(
+                eager_rng.next_u64(),
+                final_rng.next_u64(),
+                "{name}: post-generation RNG states diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn stream_is_lazy_and_resumable_mid_drain() {
+        let sc = scenario("tide").unwrap();
+        let mut rng = Rng::new(7);
+        let all = sc.generate(40.0, 4.0, &mut rng);
+        let mut rng = Rng::new(7);
+        let mut stream = sc.stream(40.0, 4.0, &mut rng);
+        let head: Vec<_> = stream.by_ref().take(5).collect();
+        let tail: Vec<_> = stream.collect();
+        assert_eq!(&all[..5], head.as_slice());
+        assert_eq!(&all[5..], tail.as_slice());
+    }
+
+    #[test]
+    fn unbounded_stream_caps_at_the_request_limit() {
+        let sc = scenario("tide").unwrap();
+        let mut rng = Rng::new(99);
+        let specs: Vec<_> = sc.stream_unbounded(5.0, &mut rng).with_limit(10_000).collect();
+        assert_eq!(specs.len(), 10_000);
+        assert!(specs.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        assert!(
+            specs.last().unwrap().arrival_s > 1000.0,
+            "10k requests at ~5/s must stream far past any one-shot horizon"
+        );
+        // deterministic per seed
+        let mut rng2 = Rng::new(99);
+        let again: Vec<_> = sc.stream_unbounded(5.0, &mut rng2).with_limit(10_000).collect();
+        assert_eq!(specs, again);
+    }
+
+    #[test]
+    fn tiers_cycle_deterministically_and_offline_is_relaxed() {
+        let sc = scenario("tide").unwrap();
+        let mut rng = Rng::new(3);
+        let specs = sc.generate(40.0, 4.0, &mut rng);
+        let tiers: std::collections::HashSet<u8> = specs.iter().map(|s| s.tier).collect();
+        assert!(tiers.len() >= 2, "tenant mix must span tiers, got {tiers:?}");
+        for (i, s) in specs.iter().enumerate() {
+            assert_eq!(s.tier, sc.tier_for(i));
+        }
+        let mut rng = Rng::new(3);
+        let offline = scenario("offline-docs").unwrap().generate(30.0, 2.0, &mut rng);
+        assert!(offline.iter().all(|s| s.tier == 2), "offline class is best-effort tier");
+    }
+}

@@ -22,6 +22,11 @@ pub struct RequestSpec {
     /// of `shared_prefix` tokens (system prompts etc.).
     pub prefix_group: u64,
     pub shared_prefix: u64,
+    /// Multi-tenant service tier (0 = premium interactive, 1 = standard,
+    /// 2 = relaxed / best-effort).  Per-tier TTFT/TPOT targets live in
+    /// [`crate::metrics::tier_slo`]; the tier changes *reporting*
+    /// (per-tier goodput) and the SLO-aware scaler, never scheduling.
+    pub tier: u8,
 }
 
 impl RequestSpec {
@@ -34,11 +39,18 @@ impl RequestSpec {
             image_patches: 0,
             prefix_group: 0,
             shared_prefix: 0,
+            tier: 0,
         }
     }
 
     pub fn offline(mut self) -> Self {
         self.class = RequestClass::Offline;
+        self.tier = 2;
+        self
+    }
+
+    pub fn with_tier(mut self, tier: u8) -> Self {
+        self.tier = tier;
         self
     }
 
@@ -66,61 +78,36 @@ pub enum ArrivalProcess {
 
 impl ArrivalProcess {
     /// Generate arrival times covering `[0, horizon_s)`.
+    ///
+    /// Thin collect-adapter over [`ArrivalIter`]: the lazy iterator is
+    /// the single source of truth for the draw sequence, so collecting
+    /// it is bit-identical to the historical eager loop (the caller's
+    /// RNG is left at the post-generation state either way).
     pub fn arrivals(&self, horizon_s: f64, rng: &mut Rng) -> Vec<f64> {
-        let mut out = Vec::new();
-        match *self {
-            ArrivalProcess::Poisson { rate } => {
-                let mut t = 0.0;
-                loop {
-                    t += rng.exp(1.0 / rate.max(1e-9));
-                    if t >= horizon_s {
-                        break;
-                    }
-                    out.push(t);
-                }
-            }
-            ArrivalProcess::Uniform { rate } => {
-                let dt = 1.0 / rate.max(1e-9);
-                let mut t = dt;
-                while t < horizon_s {
-                    out.push(t);
-                    t += dt;
-                }
-            }
-            ArrivalProcess::Bursty { rate, burst_factor, burst_prob, burst_len_s } => {
-                let mut t: f64 = 0.0;
-                let mut burst_until = -1.0;
-                loop {
-                    let in_burst = t < burst_until;
-                    let r = if in_burst { rate * burst_factor } else { rate };
-                    t += rng.exp(1.0 / r.max(1e-9));
-                    if t >= horizon_s {
-                        break;
-                    }
-                    if !in_burst && rng.chance(burst_prob * (1.0 / r).min(1.0)) {
-                        burst_until = t + burst_len_s;
-                    }
-                    out.push(t);
-                }
-            }
-            ArrivalProcess::Tidal { mean_rate, amplitude, period_s } => {
-                // thinning over the sinusoidal intensity
-                let peak = mean_rate * (1.0 + amplitude);
-                let mut t = 0.0;
-                loop {
-                    t += rng.exp(1.0 / peak.max(1e-9));
-                    if t >= horizon_s {
-                        break;
-                    }
-                    let phase = 2.0 * std::f64::consts::PI * t / period_s;
-                    let intensity = mean_rate * (1.0 + amplitude * phase.sin());
-                    if rng.chance((intensity / peak).clamp(0.0, 1.0)) {
-                        out.push(t);
-                    }
-                }
-            }
-        }
+        let mut it = self.iter(horizon_s, rng.clone());
+        let out: Vec<f64> = (&mut it).collect();
+        *rng = it.into_rng();
         out
+    }
+
+    /// Lazy O(1)-state arrival iterator over `[0, horizon_s)`, owning
+    /// its RNG lane.  `horizon_s = f64::INFINITY` yields an unbounded
+    /// open-loop process (cap with `Iterator::take`).
+    pub fn iter(&self, horizon_s: f64, rng: Rng) -> ArrivalIter {
+        ArrivalIter { proc: *self, horizon_s, rng, t: 0.0, burst_until: -1.0, done: false }
+    }
+
+    /// Advance `rng` through every draw [`Self::arrivals`] would make
+    /// over a *finite* horizon, without materializing the arrivals;
+    /// returns how many there were.  This is the O(1)-memory replay
+    /// pass that lets a stream split one seed RNG into an arrival lane
+    /// and a field lane (see `workload::stream`).
+    pub fn advance(&self, horizon_s: f64, rng: &mut Rng) -> usize {
+        debug_assert!(horizon_s.is_finite(), "advance() requires a finite horizon");
+        let mut it = self.iter(horizon_s, rng.clone());
+        let n = (&mut it).count();
+        *rng = it.into_rng();
+        n
     }
 
     /// Instantaneous expected rate at time `t` (for monitoring tests).
@@ -131,6 +118,90 @@ impl ArrivalProcess {
             ArrivalProcess::Tidal { mean_rate, amplitude, period_s } => {
                 let phase = 2.0 * std::f64::consts::PI * t / period_s;
                 mean_rate * (1.0 + amplitude * phase.sin())
+            }
+        }
+    }
+}
+
+/// Pull-based arrival generator: one `(t, burst_until)` cursor plus an
+/// owned RNG lane, so a million-request open-loop workload costs the
+/// same memory as a ten-request one.  The draw order per emitted (or,
+/// for the thinned tidal process, rejected) arrival is exactly the
+/// historical eager loop's — [`ArrivalProcess::arrivals`] is now a
+/// collect of this iterator, which pins the equivalence structurally.
+#[derive(Debug, Clone)]
+pub struct ArrivalIter {
+    proc: ArrivalProcess,
+    horizon_s: f64,
+    rng: Rng,
+    t: f64,
+    burst_until: f64,
+    done: bool,
+}
+
+impl ArrivalIter {
+    /// The RNG lane at its current position (post-generation state once
+    /// the iterator is drained; used to hand the lane back to a caller).
+    pub fn into_rng(self) -> Rng {
+        self.rng
+    }
+}
+
+impl Iterator for ArrivalIter {
+    type Item = f64;
+
+    fn next(&mut self) -> Option<f64> {
+        if self.done {
+            return None;
+        }
+        match self.proc {
+            ArrivalProcess::Poisson { rate } => {
+                self.t += self.rng.exp(1.0 / rate.max(1e-9));
+                if self.t >= self.horizon_s {
+                    self.done = true;
+                    return None;
+                }
+                Some(self.t)
+            }
+            ArrivalProcess::Uniform { rate } => {
+                let dt = 1.0 / rate.max(1e-9);
+                self.t += dt;
+                if self.t >= self.horizon_s {
+                    self.done = true;
+                    return None;
+                }
+                Some(self.t)
+            }
+            ArrivalProcess::Bursty { rate, burst_factor, burst_prob, burst_len_s } => {
+                let in_burst = self.t < self.burst_until;
+                let r = if in_burst { rate * burst_factor } else { rate };
+                self.t += self.rng.exp(1.0 / r.max(1e-9));
+                if self.t >= self.horizon_s {
+                    self.done = true;
+                    return None;
+                }
+                if !in_burst && self.rng.chance(burst_prob * (1.0 / r).min(1.0)) {
+                    self.burst_until = self.t + burst_len_s;
+                }
+                Some(self.t)
+            }
+            ArrivalProcess::Tidal { mean_rate, amplitude, period_s } => {
+                // thinning over the sinusoidal intensity: rejected
+                // candidates consume draws but emit nothing, so loop
+                // until an accept (or the horizon)
+                let peak = mean_rate * (1.0 + amplitude);
+                loop {
+                    self.t += self.rng.exp(1.0 / peak.max(1e-9));
+                    if self.t >= self.horizon_s {
+                        self.done = true;
+                        return None;
+                    }
+                    let phase = 2.0 * std::f64::consts::PI * self.t / period_s;
+                    let intensity = mean_rate * (1.0 + amplitude * phase.sin());
+                    if self.rng.chance((intensity / peak).clamp(0.0, 1.0)) {
+                        return Some(self.t);
+                    }
+                }
             }
         }
     }
@@ -233,6 +304,39 @@ mod tests {
         let p = ArrivalProcess::Tidal { mean_rate: 10.0, amplitude: 0.9, period_s: 100.0 };
         assert!(p.rate_at(25.0) > 18.0); // peak
         assert!(p.rate_at(75.0) < 2.0); // trough
+    }
+
+    #[test]
+    fn advance_replays_the_exact_draw_count_and_rng_state() {
+        let procs = [
+            ArrivalProcess::Poisson { rate: 6.0 },
+            ArrivalProcess::Uniform { rate: 4.0 },
+            ArrivalProcess::Bursty {
+                rate: 3.0,
+                burst_factor: 8.0,
+                burst_prob: 0.05,
+                burst_len_s: 5.0,
+            },
+            ArrivalProcess::Tidal { mean_rate: 4.0, amplitude: 0.9, period_s: 40.0 },
+        ];
+        for p in procs {
+            let mut eager = Rng::new(77);
+            let v = p.arrivals(50.0, &mut eager);
+            let mut advanced = Rng::new(77);
+            let n = p.advance(50.0, &mut advanced);
+            assert_eq!(n, v.len(), "{p:?}");
+            // both RNGs must sit at the same post-generation state
+            assert_eq!(eager.next_u64(), advanced.next_u64(), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn unbounded_iter_streams_past_any_horizon() {
+        let tidal = ArrivalProcess::Tidal { mean_rate: 5.0, amplitude: 0.8, period_s: 30.0 };
+        let v: Vec<f64> = tidal.iter(f64::INFINITY, Rng::new(13)).take(5000).collect();
+        assert_eq!(v.len(), 5000, "the open-loop iterator never runs dry");
+        assert!(v.windows(2).all(|w| w[0] <= w[1]));
+        assert!(v[4999] > 900.0, "5000 arrivals at ~5/s must span far past a finite horizon");
     }
 
     #[test]
